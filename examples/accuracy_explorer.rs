@@ -1,0 +1,60 @@
+//! Golden-zone explorer: decimal accuracy of each posit format vs IEEE
+//! FP32 across the magnitude axis — the "golden zone" of §II-B made
+//! visible, plus the §V-D range table for the paper's three formats.
+//!
+//! Run: `cargo run --release --example accuracy_explorer`
+
+use posar::posit::{self, P16, P32, P8};
+
+fn decimal_accuracy(v: f64, spec: posit::PositSpec) -> f64 {
+    // -log10 of the relative error of representing v.
+    let q = posit::to_f64(spec, posit::from_f64(spec, v));
+    let rel = ((q - v) / v).abs();
+    if rel == 0.0 {
+        17.0
+    } else {
+        -rel.log10()
+    }
+}
+
+fn fp32_accuracy(v: f64) -> f64 {
+    let q = (v as f32) as f64;
+    let rel = ((q - v) / v).abs();
+    if rel == 0.0 {
+        17.0
+    } else {
+        -rel.log10()
+    }
+}
+
+fn main() {
+    println!("decimal digits of accuracy by magnitude (higher is better)\n");
+    println!(
+        "{:>10} {:>8} {:>8} {:>8} {:>8}",
+        "value", "FP32", "P(8,1)", "P(16,2)", "P(32,3)"
+    );
+    for e in (-24..=24i32).step_by(4) {
+        // Sample a non-dyadic mantissa so nothing is exactly representable.
+        let v = 1.2345678901234 * 2f64.powi(e * 2);
+        println!(
+            "{:>10} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            format!("2^{}", 2 * e),
+            fp32_accuracy(v),
+            decimal_accuracy(v, P8),
+            decimal_accuracy(v, P16),
+            decimal_accuracy(v, P32),
+        );
+    }
+
+    println!("\nformat ranges (§V-D):");
+    for spec in [P8, P16, P32] {
+        println!(
+            "  Posit({:>2},{}): minpos = 2^{:<4} maxpos = 2^{}",
+            spec.ps,
+            spec.es,
+            -spec.max_scale(),
+            spec.max_scale()
+        );
+    }
+    println!("  (the golden zone is where the posit rows beat the FP32 column)");
+}

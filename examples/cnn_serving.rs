@@ -1,0 +1,68 @@
+//! End-to-end serving driver (deliverable (b)/e2e): load the AOT-compiled
+//! CNN variants, serve the canonical test set through the router/batcher
+//! with concurrent clients, and report Top-1 + latency/throughput per
+//! numeric format — the deployment shape of the paper's §V-C experiment.
+//!
+//! Needs `make artifacts` first. Run:
+//! `cargo run --release --example cnn_serving [n_requests] [clients]`
+
+use posar::cnn::weights::set_or_generate;
+use posar::coordinator::{Coordinator, ServeConfig};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(160);
+    let clients: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(4);
+
+    let cfg = ServeConfig::default();
+    let coord = Coordinator::start(&cfg, None)?;
+    println!("variants: {:?}", coord.variants());
+    let (set, canonical) = set_or_generate(n_requests);
+    let n = set.len().min(n_requests);
+    println!(
+        "streaming {n} requests x {} clients per variant ({})",
+        clients,
+        if canonical { "canonical test set" } else { "generated data" }
+    );
+
+    let t0 = Instant::now();
+    let mut report = Vec::new();
+    for variant in coord.variants() {
+        let correct = AtomicUsize::new(0);
+        let next = AtomicUsize::new(0);
+        let tv = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let reply = coord
+                        .infer(&variant, set.sample(i).to_vec())
+                        .expect("inference failed");
+                    if reply.class == set.labels[i] as usize {
+                        correct.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        let dt = tv.elapsed();
+        report.push((
+            variant.clone(),
+            correct.load(Ordering::Relaxed) as f64 / n as f64,
+            n as f64 / dt.as_secs_f64(),
+        ));
+    }
+
+    println!("\nvariant   top1     req/s");
+    for (v, top1, rps) in &report {
+        println!("{v:<9} {top1:<8.4} {rps:.1}");
+    }
+    println!("\n{}", coord.metrics().render());
+    println!("total wall time {:.2?}", t0.elapsed());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Offline elasticity workflow (§IV-A *Elasticity* + §V-D): given a
+//! workload, (1) trace its dynamic range, (2) compute the smallest posit
+//! covering the range, then (3) *validate by running* — the paper's
+//! punchline is that step 2 alone is NOT sufficient (LR fits P16's range
+//! but still fails), so the sweep is what picks the deployed format.
+//!
+//! Run: `cargo run --release --example elastic_sweep`
+
+use posar::bench_suite::{kmeans, linreg};
+use posar::posit::PositSpec;
+use posar::sim::{Fpu, Machine, Posar};
+
+fn main() {
+    for (name, wrong_expected) in [("KM", false), ("LR", true)] {
+        println!("=== workload: {name} ===");
+        // Step 1: dynamic range on the FP32 reference hardware.
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu).with_tracer();
+        run(name, &mut m);
+        let t = m.tracer.clone().unwrap();
+        println!(
+            "dynamic range: min(0,1] = {:?}, max[1,inf) = {:?}",
+            t.min_01, t.max_1inf
+        );
+        // Step 2: smallest covering posit.
+        let cover = t.min_covering_posit().expect("coverable");
+        println!(
+            "smallest covering format: Posit({},{})",
+            cover.ps, cover.es
+        );
+        // Step 3: accuracy sweep across sizes.
+        println!("validation sweep:");
+        let mut recommended = None;
+        for ps in [8u32, 12, 16, 20, 24, 32] {
+            let es = match ps {
+                0..=11 => 1,
+                12..=23 => 2,
+                _ => 3,
+            };
+            let spec = PositSpec::new(ps, es);
+            let be = Posar::new(spec);
+            let mut m = Machine::new(&be);
+            let ok = validate(name, &mut m);
+            println!(
+                "  Posit({ps:>2},{es}): {}  ({} cycles)",
+                if ok { "correct" } else { "WRONG" },
+                m.cycles
+            );
+            if ok && recommended.is_none() {
+                recommended = Some(spec);
+            }
+        }
+        match recommended {
+            Some(s) => println!(
+                "=> deploy Posit({},{}) — range analysis alone would have said Posit({},{}){}\n",
+                s.ps,
+                s.es,
+                cover.ps,
+                cover.es,
+                if wrong_expected && s.ps > cover.ps {
+                    " (range analysis under-sizes this workload — the paper's §V-D point)"
+                } else {
+                    ""
+                }
+            ),
+            None => println!("=> no tested posit size passes\n"),
+        }
+    }
+}
+
+fn run(name: &str, m: &mut Machine) {
+    match name {
+        "KM" => {
+            kmeans::run(m, true);
+        }
+        _ => {
+            linreg::run(m);
+        }
+    }
+}
+
+fn validate(name: &str, m: &mut Machine) -> bool {
+    match name {
+        "KM" => kmeans::run(m, false).assign == kmeans::reference().assign,
+        _ => {
+            let (got, _) = linreg::run(m);
+            let (want, _) = linreg::reference();
+            linreg::coefficients_match(&got, &want)
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Quickstart: posit arithmetic in 30 lines — make a few posits, do
+//! arithmetic, inspect the bit patterns, and run one paper benchmark on
+//! both arithmetic units.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use posar::bench_suite::mathconst::{e_euler, exact_fraction_digits};
+use posar::posit::{Posit, P16, P32, P8};
+use posar::sim::{Fpu, Machine, Posar};
+
+fn main() {
+    // --- posit values ------------------------------------------------
+    let a = Posit::from_f64(P16, 3.125);
+    let b = Posit::from_f64(P16, -0.2);
+    println!("a      = {a}  (bits {:#06x})", a.bits);
+    println!("b      = {b}  (bits {:#06x})", b.bits);
+    println!("a + b  = {}", a + b);
+    println!("a * b  = {}", a * b);
+    println!("a / b  = {}", a / b);
+
+    // The same value in the paper's three formats:
+    for spec in [P8, P16, P32] {
+        let p = Posit::from_f64(spec, std::f64::consts::PI);
+        println!(
+            "pi as Posit({:>2},{}) = {:<12} ({} bits of memory)",
+            spec.ps,
+            spec.es,
+            p.to_f64(),
+            spec.ps
+        );
+    }
+
+    // --- one paper experiment (Table III/IV, e row) -------------------
+    let fpu = Fpu::new();
+    let posar = Posar::new(P32);
+    let mut mf = Machine::new(&fpu);
+    let mut mp = Machine::new(&posar);
+    let ef = e_euler(&mut mf, 20);
+    let ep = e_euler(&mut mp, 20);
+    println!("\ne (Euler, 20 iters):");
+    println!(
+        "  FP32        = {ef:.9} ({} digits, {} cycles)",
+        exact_fraction_digits(ef, std::f64::consts::E),
+        mf.cycles
+    );
+    println!(
+        "  Posit(32,3) = {ep:.9} ({} digits, {} cycles, speedup {:.2})",
+        exact_fraction_digits(ep, std::f64::consts::E),
+        mp.cycles,
+        mf.cycles as f64 / mp.cycles as f64
+    );
+}

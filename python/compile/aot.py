@@ -1,0 +1,126 @@
+"""AOT build: dataset + training + HLO-text export (runs once under
+`make artifacts`; Python never touches the request path).
+
+Outputs in artifacts/:
+  cnn_weights.bin         trained parameters (f32 LE; layout in
+                          rust/src/cnn/weights.rs)
+  cnn_testset.bin         canonical test set (n, features, labels)
+  cnn_<variant>.hlo.txt   one XLA program per variant
+                          (fp32 / p8 / p16 / p32 / hybrid), batch = BATCH
+  quant_p16.hlo.txt       standalone L1 quantization kernel
+  manifest.json           shapes + metadata for the Rust runtime
+
+HLO *text* is the interchange format (not `.serialize()`): jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # int64/f64 lanes in the kernel
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import dataset, model, train  # noqa: E402
+from .kernels.posit_quant import quantize_pallas  # noqa: E402
+
+#: Serving batch size baked into the exported executables.
+BATCH = 16
+#: Canonical test-set size (the paper uses the 10k Cifar-10 test set; we
+#: scale to keep the simulator runs tractable).
+TEST_N = 2000
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides big weight constants as `constant({...})`, which the text
+    parser silently accepts and materializes as garbage -> NaN outputs.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.get_hlo_module().to_string(opts)
+
+
+def save_params(path, params):
+    with open(path, "wb") as f:
+        for key in ("w1", "b1", "w2", "b2"):
+            f.write(np.ascontiguousarray(params[key], dtype="<f4").tobytes())
+
+
+def save_set(path, feats, labels):
+    with open(path, "wb") as f:
+        f.write(np.uint32(len(labels)).tobytes())
+        f.write(np.ascontiguousarray(feats, dtype="<f4").tobytes())
+        f.write(labels.astype(np.uint8).tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="marker artifact path (directory is derived)")
+    ap.add_argument("--test-n", type=int, default=TEST_N)
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    print("[aot] training CNN tail on the synthetic dataset ...")
+    params = train.train(seed=7)
+    feats, labels = dataset.generate(seed=1234, n=args.test_n)
+    acc = train.accuracy(params, feats, labels)
+    print(f"[aot] FP32 training-head Top-1 on the test set: {acc:.4f}")
+
+    save_params(os.path.join(outdir, "cnn_weights.bin"), params)
+    save_set(os.path.join(outdir, "cnn_testset.bin"), feats, labels)
+
+    spec = jax.ShapeDtypeStruct((BATCH, dataset.FEAT), jnp.float32)
+    manifest = {
+        "batch": BATCH,
+        "feat": dataset.FEAT,
+        "classes": dataset.CLASSES,
+        "test_n": int(len(labels)),
+        "fp32_top1": acc,
+        "variants": {},
+    }
+    for name in model.VARIANTS:
+        fn = model.make_variant(params, name)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        fname = f"cnn_{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        manifest["variants"][name] = fname
+        print(f"[aot] wrote {fname} ({len(text)} chars)")
+
+    # Standalone L1 kernel export (P16 — the paper's sweet spot).
+    qfn = lambda x: (quantize_pallas(x, 16, 2),)
+    lowered = jax.jit(qfn).lower(jax.ShapeDtypeStruct((BATCH, 1024), jnp.float32))
+    with open(os.path.join(outdir, "quant_p16.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    print("[aot] wrote quant_p16.hlo.txt")
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # The Makefile's stamp artifact: the fp32 model doubles as `model.hlo.txt`.
+    import shutil
+
+    shutil.copyfile(
+        os.path.join(outdir, "cnn_fp32.hlo.txt"), os.path.abspath(args.out)
+    )
+    print(f"[aot] done -> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

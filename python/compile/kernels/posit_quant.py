@@ -1,0 +1,49 @@
+"""L1 — Pallas posit-quantization kernel.
+
+The numeric-format hot-spot of the system: round an f32 tensor to the
+nearest posit(ps, es) and back (what the POSAR register file does to
+every value). The kernel is pure integer bit manipulation — on a real
+TPU this is VPU work, tiled over VMEM blocks via BlockSpec; here it is
+lowered with `interpret=True` so the emitted HLO runs on any PJRT
+backend (see DESIGN.md §6, Hardware adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..posit_np import _decode_bits, _quantize_bits
+
+# VMEM-friendly lane count per block (f32 + int64 temporaries of a block
+# stay well under a TPU core's ~16 MB VMEM at this size).
+BLOCK = 512
+
+
+def _kernel(ps: int, es: int):
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        bits = _quantize_bits(jnp, x, ps, es)
+        o_ref[...] = _decode_bits(jnp, bits, ps, es).astype(jnp.float32)
+
+    return kernel
+
+
+def quantize_pallas(x, ps: int, es: int):
+    """f32 array (any shape) -> posit-rounded f32 array via the Pallas
+    kernel. Flattens to (n/BLOCK, BLOCK) blocks; the tail is padded."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    padded = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    flat = jnp.pad(flat, (0, padded - n))
+    blocks = padded // BLOCK
+    out = pl.pallas_call(
+        _kernel(ps, es),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,  # CPU-PJRT executable; real-TPU lowering would
+        # emit a Mosaic custom-call the CPU plugin cannot run.
+    )(flat)
+    return out[:n].reshape(shape)

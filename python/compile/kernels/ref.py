@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the posit quantization kernel (L1 correctness
+reference). Identical algorithm to `posit_np`, expressed in jax.numpy so
+it can live inside jitted graphs; pytest compares the Pallas kernel
+against this and against the numpy/exhaustive oracles.
+"""
+
+import jax.numpy as jnp
+
+from ..posit_np import _decode_bits, _quantize_bits
+
+
+def quantize_ref(x, ps: int, es: int):
+    """jnp: f32 array -> posit bits (int64)."""
+    return _quantize_bits(jnp, x, ps, es)
+
+
+def decode_ref(pattern, ps: int, es: int):
+    """jnp: posit bits -> f64."""
+    return _decode_bits(jnp, pattern, ps, es)
+
+
+def roundtrip_ref(x, ps: int, es: int):
+    """jnp: f32 -> posit -> f32 round-trip (the register-file rounding)."""
+    return decode_ref(quantize_ref(x, ps, es), ps, es).astype(jnp.float32)

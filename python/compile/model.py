@@ -1,0 +1,101 @@
+"""L2 — the Cifar-10 CNN tail in JAX (paper Figure 4, from `relu3`).
+
+`relu3 → pool3 (3×3/2 clipped average) → ip1 → ip2 → prob (softmax)`,
+with the L1 posit-quantization kernel applied to every layer boundary for
+the posit variants — the layer-granular emulation of a posit datapath
+(the Rust simulator is the per-op oracle; EXPERIMENTS.md compares both).
+
+Each variant is jitted and AOT-lowered by `aot.py` to HLO text that the
+Rust runtime executes via PJRT. Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset
+from .kernels.posit_quant import quantize_pallas
+
+#: The paper's three formats + hybrid, keyed like the Rust side.
+FORMATS = {"p8": (8, 1), "p16": (16, 2), "p32": (32, 3)}
+
+
+def pool_matrix():
+    """The clipped 3×3/2 average pool as a sparse-as-dense [FEAT, POOLED]
+    matrix (fixed, data-independent — shared with train.py)."""
+    pm = np.zeros((dataset.FEAT, dataset.POOLED), dtype=np.float32)
+    for p, idx in enumerate(dataset.pool_indices()):
+        for i in idx:
+            pm[i, p] = 1.0 / len(idx)
+    return jnp.asarray(pm)
+
+
+def _pool3(x):
+    """relu3 + pool3: clipped 3×3 stride-2 average over [B, FEAT] feature
+    maps (Caffe AVE ceil-mode; window counts 9/6/4 at edges — identical
+    to `pool_matrix` and to the Rust simulator, but expressed with
+    reduce_window so the exported HLO stays small)."""
+    b = x.shape[0]
+    m = jnp.maximum(x, 0.0).reshape(b, dataset.CHAN, dataset.SIDE, dataset.SIDE)
+    s = jax.lax.reduce_window(
+        m,
+        0.0,
+        jax.lax.add,
+        window_dimensions=(1, 1, 3, 3),
+        window_strides=(1, 1, 2, 2),
+        padding=((0, 0), (0, 0), (0, 1), (0, 1)),
+    )
+    counts = np.full((4, 4), 9.0, np.float32)
+    counts[3, :] = 6.0
+    counts[:, 3] = 6.0
+    counts[3, 3] = 4.0
+    return (s / jnp.asarray(counts)).reshape(b, dataset.POOLED)
+
+
+def forward_fp32(params, x):
+    """FP32 reference forward: x [B, FEAT] -> probs [B, CLASSES]."""
+    pooled = _pool3(x)  # relu3 + pool3
+    h = pooled @ params["w1"].T + params["b1"]  # ip1
+    logits = h @ params["w2"].T + params["b2"]  # ip2
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=1, keepdims=True)  # prob
+
+
+def forward_posit(params, x, ps: int, es: int, store_ps=None, store_es=None):
+    """Posit-variant forward: inputs, parameters and every layer output
+    pass through the L1 quantization kernel. `store_*` implements the
+    §V-C hybrid mode: parameters are first rounded to the (smaller)
+    storage format, then to the compute format on load."""
+    q = lambda t: quantize_pallas(t, ps, es)
+
+    def qp(t):
+        if store_ps is not None:
+            t = quantize_pallas(t, store_ps, store_es)
+        return q(t)
+
+    x = q(x)
+    w1, b1 = qp(params["w1"]), qp(params["b1"])
+    w2, b2 = qp(params["w2"]), qp(params["b2"])
+    pooled = q(_pool3(x))
+    h = q(pooled @ w1.T + b1)
+    logits = q(h @ w2.T + b2)
+    z = q(logits - jnp.max(logits, axis=1, keepdims=True))
+    e = q(jnp.exp(z))
+    return q(e / jnp.sum(e, axis=1, keepdims=True))
+
+
+def make_variant(params, name: str):
+    """Closure for one exported variant: x -> (probs,)."""
+    p = {k: jnp.asarray(v) for k, v in params.items()}
+    if name == "fp32":
+        return lambda x: (forward_fp32(p, x),)
+    if name == "hybrid":
+        # P8 storage, P16 compute (§V-C: Top-1 68.47%, above FP32).
+        return lambda x: (forward_posit(p, x, 16, 2, store_ps=8, store_es=1),)
+    ps, es = FORMATS[name]
+    return lambda x: (forward_posit(p, x, ps, es),)
+
+
+#: Every variant exported to artifacts/ (one PJRT executable each).
+VARIANTS = ["fp32", "p8", "p16", "p32", "hybrid"]

@@ -1,0 +1,149 @@
+"""Vectorized posit(ps, es) quantization — the numeric core of the L1
+kernel, shared by the Pallas kernel, the pure-jnp reference and the
+pytest suite.
+
+Implements the same algorithm as the Rust library (`rust/src/posit/`):
+Algorithm 1/2 of the paper with round-to-nearest-even via guard (b_{n+1})
+and sticky (bm) bits, maxpos/minpos saturation and NaR for non-reals.
+Operates on int64 lanes so it lowers cleanly through Pallas/XLA.
+
+Functions are written against a module-like namespace `xp` (numpy or
+jax.numpy) so the identical code serves both the oracle and the kernel.
+"""
+
+import numpy as np
+
+
+def _quantize_bits(xp, x, ps: int, es: int):
+    """f32/f64 array -> posit bit patterns (int64, low `ps` bits)."""
+    xf = x.astype(xp.float64)
+    sign = xf < 0
+    a = xp.abs(xf)
+    is_nar = ~xp.isfinite(xf)
+    is_zero = a == 0
+
+    # Unpack the f64: a > 0 finite. (f32 subnormals become f64 normals.)
+    bits = a.view(np.int64) if xp is np else _bitcast_i64(xp, a)
+    E = ((bits >> 52) & 0x7FF) - 1023
+    mant52 = bits & ((1 << 52) - 1)
+
+    # Regime/exponent split of the total scale.
+    k = E >> es  # arithmetic shift = floor division by 2^es
+    e = E - (k << es)
+
+    # Regime pattern and payload budget.
+    kpos = k >= 0
+    rn = xp.where(kpos, k + 1, -k)
+    rs = rn + 1
+    k_c = xp.clip(k, -(ps - 1), ps - 1)  # keep shifts in range
+    regime = xp.where(
+        kpos,
+        ((xp.int64(1) << (xp.clip(k_c + 1, 0, ps - 1)).astype(xp.int64)) - 1) << 1,
+        xp.int64(1),
+    )
+    avail = xp.clip(ps - 1 - rs, 0, None).astype(xp.int64)
+
+    # Payload = exponent ++ fraction at es+52 bits; keep the top `avail`.
+    payload = (e << 52) | mant52
+    plen = es + 52
+    shift = (plen - avail).astype(xp.int64)
+    kept = payload >> shift
+    guard = (payload >> (shift - 1)) & 1
+    below = payload & ((xp.int64(1) << xp.clip(shift - 1, 0, 62)) - 1)
+    sticky = below != 0
+
+    pattern = (regime << avail) | kept
+    round_up = (guard == 1) & (sticky | ((pattern & 1) == 1))
+    pattern = pattern + round_up.astype(xp.int64)
+
+    # Saturation (Algorithm 2 lines 5-8): never round to 0 or NaR.
+    maxpos = (xp.int64(1) << (ps - 1)) - 1
+    pattern = xp.where(k >= ps - 2, maxpos, pattern)
+    pattern = xp.where(k < -(ps - 2), xp.int64(1), pattern)
+
+    # Two's complement for negatives, then specials.
+    mask = (xp.int64(1) << ps) - 1
+    pattern = xp.where(sign, (-pattern) & mask, pattern & mask)
+    pattern = xp.where(is_zero, xp.int64(0), pattern)
+    pattern = xp.where(is_nar, xp.int64(1) << (ps - 1), pattern)
+    return pattern
+
+
+def _decode_bits(xp, pattern, ps: int, es: int):
+    """posit bit patterns (int64) -> f64 values (NaR -> NaN)."""
+    nar_pat = np.int64(1) << (ps - 1)
+    mask = (np.int64(1) << ps) - 1
+    p = pattern & mask
+    is_zero = p == 0
+    is_nar = p == nar_pat
+    sign = (p >> (ps - 1)) & 1
+    mag = xp.where(sign == 1, (-p) & mask, p)
+
+    # Regime run length in O(1) (§Perf L1 iteration): flip the body so
+    # the run becomes zeros, then locate the terminator with the exponent
+    # field of an exact int→f64 conversion (values < 2^32, so the f64
+    # exponent is floor(log2) exactly) — the software LZC.
+    r0 = (mag >> (ps - 2)) & 1
+    body_mask = (np.int64(1) << (ps - 1)) - 1
+    body = mag & body_mask
+    y = xp.where(r0 == 1, body ^ body_mask, body)
+    yf = y.astype(xp.float64)
+    ybits = yf.view(np.int64) if xp is np else _bitcast_i64(xp, yf)
+    top = ((ybits >> 52) & 0x7FF) - 1023  # floor(log2 y) for y > 0
+    rn = xp.where(y > 0, (ps - 2) - top, ps - 1).astype(xp.int64)
+    k = xp.where(r0 == 1, rn - 1, -rn)
+    rs = xp.minimum(rn + 1, ps - 1)
+
+    rem = xp.clip(ps - 1 - rs, 0, None)
+    ers = xp.minimum(xp.full_like(p, es), rem)
+    lo = xp.clip(ps - 1 - rs - ers, 0, None)
+    e = ((mag >> lo) & ((xp.int64(1) << ers) - 1)) << (es - ers)
+    frs = xp.clip(rem - es, 0, None)
+    frac_field = mag & ((xp.int64(1) << frs) - 1)
+
+    scale = (k << es) + e
+    frac = (frac_field | (xp.int64(1) << frs)).astype(xp.float64)
+    val = _ldexp(xp, frac, scale - frs)
+    val = xp.where(sign == 1, -val, val)
+    val = xp.where(is_zero, 0.0, val)
+    val = xp.where(is_nar, xp.float64(np.nan), val)
+    return val
+
+
+def _ldexp(xp, m, k):
+    # Exact power-of-two scaling; |k| <= 300 for ps <= 32.
+    return m * (2.0 ** k.astype(xp.float64))
+
+
+def _bitcast_i64(xp, a):
+    import jax
+
+    return jax.lax.bitcast_convert_type(a, xp.int64)
+
+
+def quantize_np(x, ps: int, es: int):
+    """numpy: f32 array -> posit bits (int64)."""
+    return _quantize_bits(np, np.asarray(x), ps, es)
+
+
+def decode_np(pattern, ps: int, es: int):
+    """numpy: posit bits -> f64 values."""
+    return _decode_bits(np, np.asarray(pattern, dtype=np.int64), ps, es)
+
+
+def roundtrip_np(x, ps: int, es: int):
+    """numpy: f32 -> posit -> f32 (the quantization the POSAR register
+    file applies to every value)."""
+    return decode_np(quantize_np(x, ps, es), ps, es).astype(np.float32)
+
+
+def exhaustive_values(ps: int, es: int):
+    """All finite posit values of a format, sorted, with their patterns
+    (oracle for the nearest-value test)."""
+    pats = np.arange(1 << ps, dtype=np.int64)
+    vals = decode_np(pats, ps, es)
+    keep = ~np.isnan(vals)
+    v = vals[keep]
+    p = pats[keep]
+    order = np.argsort(v, kind="stable")
+    return v[order], p[order]

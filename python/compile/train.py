@@ -1,0 +1,73 @@
+"""Build-time training of the CNN tail (the paper's trained Caffe
+parameters, regenerated on our synthetic substitute dataset).
+
+The head is two stacked inner products (ip1: 1024 -> 64, ip2: 64 -> 10,
+no intervening nonlinearity — the Caffe cifar10_quick tail), so the
+optimal composite map is linear. We fit it in closed form (ridge
+regression to one-hot targets) and factor it through the 64-wide ip1
+bottleneck by SVD: deterministic, no SGD hyperparameters, and the
+factor weights span several orders of magnitude — the wide dynamic
+range the paper's Posit(8,1) failure analysis depends on (§V-C).
+
+Runs once inside `make artifacts`.
+"""
+
+import numpy as np
+
+from . import dataset
+
+
+def _pool_matrix_np():
+    pm = np.zeros((dataset.FEAT, dataset.POOLED), dtype=np.float64)
+    for p, idx in enumerate(dataset.pool_indices()):
+        for i in idx:
+            pm[i, p] = 1.0 / len(idx)
+    return pm
+
+
+def train(seed: int = 7, n_train: int = 4000, ridge: float = 1.0):
+    """Fit and return {w1, b1, w2, b2} (float32), via ridge + SVD."""
+    feats, labels = dataset.generate(seed, n_train)
+    pm = _pool_matrix_np()
+    x = feats.astype(np.float64) @ pm  # [n, POOLED]
+    xb = np.concatenate([x, np.ones((len(labels), 1))], axis=1)
+    y = np.eye(dataset.CLASSES)[labels]
+
+    w = np.linalg.solve(
+        xb.T @ xb + ridge * np.eye(xb.shape[1]), xb.T @ y
+    )  # [POOLED+1, CLASSES]
+    w_lin, bias = w[:-1], w[-1]
+
+    # Factor W = U S Vᵀ through the 64-wide ip1. Rank <= CLASSES, so the
+    # top-10 singular directions carry everything; the remaining 54
+    # hidden units receive small seeded noise (as real training leaves
+    # non-informative filters near their init).
+    u, s, vt = np.linalg.svd(w_lin, full_matrices=False)  # u: [POOLED, 10]
+    r = len(s)
+    sqrt_s = np.sqrt(s)
+    w1 = np.zeros((dataset.HIDDEN, dataset.POOLED))
+    w1[:r] = (u * sqrt_s).T  # [10, POOLED]
+    noise = np.random.RandomState(seed).randn(
+        dataset.HIDDEN - r, dataset.POOLED
+    )
+    w1[r:] = 1e-4 * noise
+    w2 = np.zeros((dataset.CLASSES, dataset.HIDDEN))
+    w2[:, :r] = (sqrt_s[:, None] * vt).T
+    b1 = np.zeros(dataset.HIDDEN)
+    b2 = bias
+
+    return {
+        "w1": w1.astype(np.float32),
+        "b1": b1.astype(np.float32),
+        "w2": w2.astype(np.float32),
+        "b2": b2.astype(np.float32),
+    }
+
+
+def accuracy(params, feats, labels):
+    """Top-1 accuracy of the head on raw features (f64 host reference)."""
+    pm = _pool_matrix_np()
+    pooled = feats.astype(np.float64) @ pm
+    h = pooled @ params["w1"].T.astype(np.float64) + params["b1"]
+    logits = h @ params["w2"].T.astype(np.float64) + params["b2"]
+    return float((logits.argmax(1) == labels).mean())

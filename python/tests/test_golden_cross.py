@@ -1,0 +1,41 @@
+"""Cross-language golden test: the Rust posit library (`repro golden`)
+and the Python quantizer must produce bit-identical encodings."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.posit_np import decode_np, quantize_np
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden_posit.json")
+FMTS = {"p8": (8, 1), "p16": (16, 2), "p32": (32, 3)}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if not os.path.exists(GOLDEN):
+        pytest.skip("golden_posit.json missing — run `repro golden`")
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def test_bits_match_rust(golden):
+    assert len(golden) > 100
+    for row in golden:
+        ps, es = FMTS[row["fmt"]]
+        got = int(quantize_np(np.asarray([row["input"]], np.float64), ps, es)[0])
+        assert got == row["bits"], (
+            f"{row['fmt']}: input {row['input']} -> {got}, rust {row['bits']}"
+        )
+
+
+def test_values_match_rust(golden):
+    for row in golden:
+        ps, es = FMTS[row["fmt"]]
+        v = float(decode_np(np.asarray([row["bits"]], np.int64), ps, es)[0])
+        if np.isnan(v):
+            assert np.isnan(row["value"]) or row["bits"] == 1 << (ps - 1)
+        else:
+            assert v == row["value"], f"{row} -> {v}"

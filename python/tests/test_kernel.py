@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernel vs pure-jnp reference vs numpy oracle —
+the core correctness signal of the compile path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.posit_quant import quantize_pallas
+from compile.kernels.ref import roundtrip_ref
+from compile.posit_np import exhaustive_values, quantize_np, roundtrip_np
+
+FORMATS = [(8, 1), (16, 2), (32, 3), (16, 1), (12, 2)]
+
+
+@pytest.mark.parametrize("ps,es", FORMATS)
+def test_pallas_matches_ref_random(ps, es):
+    rng = np.random.RandomState(42)
+    x = np.concatenate(
+        [
+            rng.randn(500).astype(np.float32) * 10.0 ** rng.randint(-6, 6, 500),
+            np.asarray([0.0, -0.0, 1.0, -1.0, 1e30, -1e30, 1e-30], np.float32),
+        ]
+    )
+    got = np.asarray(quantize_pallas(jnp.asarray(x), ps, es))
+    want = np.asarray(roundtrip_ref(jnp.asarray(x), ps, es))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("ps,es", FORMATS)
+def test_ref_matches_numpy(ps, es):
+    rng = np.random.RandomState(7)
+    x = (rng.randn(1000) * 10.0 ** rng.randint(-8, 8, 1000)).astype(np.float32)
+    got = np.asarray(roundtrip_ref(jnp.asarray(x), ps, es))
+    want = roundtrip_np(x, ps, es)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("ps,es", [(8, 1), (16, 2)])
+def test_quantize_is_nearest_value(ps, es):
+    """True oracle: quantization must pick the nearest representable
+    posit (ties by the RNE pattern rule), for every tested input."""
+    vals, _ = exhaustive_values(ps, es)
+    rng = np.random.RandomState(3)
+    x = (rng.randn(2000) * 10.0 ** rng.randint(-8, 8, 2000)).astype(np.float32)
+    got = roundtrip_np(x, ps, es).astype(np.float64)
+    minpos = np.min(vals[vals > 0])
+    maxpos = np.max(vals)
+    pos = np.searchsorted(vals, x.astype(np.float64))
+    for i, xv in enumerate(x.astype(np.float64)):
+        if xv != 0 and abs(xv) <= minpos:
+            # Algorithm 2: never round to zero — saturate at ±minpos.
+            assert got[i] == np.copysign(minpos, xv), f"x={xv} got={got[i]}"
+            continue
+        if abs(xv) >= maxpos:
+            # Never round to NaR — saturate at ±maxpos.
+            assert got[i] == np.copysign(maxpos, xv), f"x={xv} got={got[i]}"
+            continue
+        # Posit RNE rounds the *encoding*: where the regime leaves no
+        # fraction bits, the rounding boundary is the binade edge, not
+        # the arithmetic midpoint. The nearest-value oracle is only
+        # valid in the fraction-bearing zone.
+        bound = (ps - es - 4) << es  # max |scale| with >=1 fraction bit
+        frac_zone = 2.0**-bound <= abs(xv) <= 2.0**bound
+        if not frac_zone:
+            continue
+        # Interior: distance to the chosen value must be minimal.
+        lo = vals[max(pos[i] - 1, 0)]
+        hi = vals[min(pos[i], len(vals) - 1)]
+        best = lo if abs(xv - lo) <= abs(xv - hi) else hi
+        assert abs(xv - got[i]) <= abs(xv - best) + 1e-300, (
+            f"x={xv} got={got[i]} best={best} ({ps},{es})"
+        )
+
+
+@pytest.mark.parametrize("ps,es", [(8, 1), (16, 2)])
+def test_roundtrip_fixed_points(ps, es):
+    """Every representable posit value is a fixed point of quantization."""
+    vals, _ = exhaustive_values(ps, es)
+    f32 = vals.astype(np.float32)
+    exact = f32.astype(np.float64) == vals  # skip values f32 cannot hold
+    got = roundtrip_np(f32[exact], ps, es)
+    np.testing.assert_array_equal(got.astype(np.float64), vals[exact])
+
+
+def test_specials():
+    x = np.asarray([np.nan, np.inf, -np.inf, 0.0, -0.0], np.float32)
+    got = roundtrip_np(x, 16, 2)
+    assert np.isnan(got[0]) and np.isnan(got[1]) and np.isnan(got[2])
+    assert got[3] == 0.0 and got[4] == 0.0
+
+
+def test_saturation_matches_paper_ranges():
+    # §V-D: Posit(8,1) spans 2^-12..2^12; Posit(16,2) 2^-56..2^56.
+    big = np.asarray([1e38], np.float32)
+    tiny = np.asarray([1e-38], np.float32)
+    assert roundtrip_np(big, 8, 1)[0] == 4096.0
+    assert roundtrip_np(tiny, 8, 1)[0] == 2.0**-12
+    assert roundtrip_np(big, 16, 2)[0] == 2.0**56
+    assert roundtrip_np(tiny, 16, 2)[0] == 2.0**-56
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.floats(
+        min_value=-(2.0**126), max_value=2.0**126, allow_nan=False, allow_subnormal=False, width=32
+    ),
+    st.sampled_from(FORMATS),
+)
+def test_hypothesis_roundtrip_idempotent(v, fmt):
+    """Property: quantization is idempotent and monotone-safe."""
+    ps, es = fmt
+    x = np.asarray([v], np.float32)
+    once = roundtrip_np(x, ps, es)
+    twice = roundtrip_np(once, ps, es)
+    np.testing.assert_array_equal(once, twice)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=-(2.0**100), max_value=2.0**100, allow_nan=False, allow_subnormal=False, width=32),
+        min_size=2,
+        max_size=20,
+    ),
+    st.sampled_from([(8, 1), (16, 2), (32, 3)]),
+)
+def test_hypothesis_monotone(vals, fmt):
+    """Property: x <= y implies q(x) <= q(y) (posit order preservation)."""
+    ps, es = fmt
+    x = np.sort(np.asarray(vals, np.float32))
+    q = roundtrip_np(x, ps, es)
+    assert np.all(np.diff(q) >= 0), f"{x} -> {q}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=2000),
+    st.sampled_from([(8, 1), (16, 2)]),
+)
+def test_hypothesis_pallas_shapes(n, fmt):
+    """Property: the Pallas kernel handles any length (block padding)."""
+    ps, es = fmt
+    rng = np.random.RandomState(n)
+    x = rng.randn(n).astype(np.float32)
+    got = np.asarray(quantize_pallas(jnp.asarray(x), ps, es))
+    want = roundtrip_np(x, ps, es)
+    np.testing.assert_array_equal(got, want)

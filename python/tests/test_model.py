@@ -1,0 +1,70 @@
+"""L2 model tests: variant shapes, probability semantics, and the §V-C
+accuracy ordering on a small slice of the canonical dataset."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dataset, model, train
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = train.train(seed=7, n_train=1500)
+    feats, labels = dataset.generate(1234, 96)
+    return params, feats, labels
+
+
+@pytest.mark.parametrize("name", model.VARIANTS)
+def test_variant_shapes_and_simplex(setup, name):
+    params, feats, _ = setup
+    fn = jax.jit(model.make_variant(params, name))
+    probs = np.asarray(fn(jnp.asarray(feats[:16]))[0])
+    assert probs.shape == (16, dataset.CLASSES)
+    assert np.all(probs >= 0)
+    # Rows sum to 1 (within the format's rounding).
+    tol = {"p8": 0.2, "hybrid": 0.05}.get(name, 1e-2)
+    np.testing.assert_allclose(probs.sum(1), 1.0, atol=tol)
+
+
+def test_accuracy_ordering(setup):
+    params, feats, labels = setup
+    accs = {}
+    for name in model.VARIANTS:
+        fn = jax.jit(model.make_variant(params, name))
+        preds = []
+        for s in range(0, 96, 16):
+            p = np.asarray(fn(jnp.asarray(feats[s : s + 16]))[0])
+            preds.extend(p.argmax(1))
+        accs[name] = float(np.mean(np.asarray(preds) == labels[:96]))
+    # §V-C: P16 and P32 match FP32 exactly; P8 does not exceed them.
+    assert accs["p16"] == accs["fp32"]
+    assert accs["p32"] == accs["fp32"]
+    assert accs["p8"] <= accs["fp32"]
+    # Hybrid recovers at least P8's level.
+    assert accs["hybrid"] >= accs["p8"] - 0.02
+    # And the head actually classifies (way above 10% chance).
+    assert accs["fp32"] > 0.5
+
+
+def test_pool_matrix_matches_reduce_window(setup):
+    params, feats, _ = setup
+    # The dense pool matrix (train path) and reduce_window (serve path)
+    # must be the same linear map.
+    x = jnp.asarray(np.maximum(feats[:4], 0.0))
+    via_matrix = x @ model.pool_matrix()
+    via_window = model._pool3(jnp.asarray(feats[:4]))
+    np.testing.assert_allclose(
+        np.asarray(via_matrix), np.asarray(via_window), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_train_is_deterministic():
+    a = train.train(seed=7, n_train=500)
+    b = train.train(seed=7, n_train=500)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])

@@ -1,0 +1,32 @@
+//! Minimal shared bench harness (criterion is not in the offline crate
+//! set): warm-up + timed iterations + ns/op and throughput reporting.
+
+use std::time::Instant;
+
+/// Time `f` (which must consume/run one "operation batch" of `ops` ops)
+/// and print a criterion-style line.
+pub fn bench(name: &str, ops_per_iter: u64, mut f: impl FnMut()) {
+    // Warm-up.
+    let warm = Instant::now();
+    while warm.elapsed().as_millis() < 80 {
+        f();
+    }
+    // Measure.
+    let mut iters = 0u64;
+    let t0 = Instant::now();
+    while t0.elapsed().as_millis() < 400 {
+        f();
+        iters += 1;
+    }
+    let dt = t0.elapsed();
+    let total_ops = iters * ops_per_iter;
+    let ns_per_op = dt.as_nanos() as f64 / total_ops as f64;
+    let mops = total_ops as f64 / dt.as_secs_f64() / 1e6;
+    println!("{name:<44} {ns_per_op:>10.1} ns/op {mops:>10.2} Mop/s");
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

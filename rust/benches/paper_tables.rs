@@ -1,0 +1,34 @@
+//! End-to-end benches, one per paper table/figure: regenerates each
+//! experiment at reduced scale and reports the wall time of the whole
+//! harness (the "cargo bench — one per paper table" deliverable).
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+use posar::report;
+use std::time::Instant;
+
+fn timed(name: &str, f: impl FnOnce() -> String) {
+    let t0 = Instant::now();
+    let out = f();
+    println!(
+        "== {name} ({:.2?}, {} lines) ==============================",
+        t0.elapsed(),
+        out.lines().count()
+    );
+    println!("{out}");
+}
+
+fn main() {
+    timed("Table I", report::table1);
+    timed("Table III (scale 100)", || report::table3(100));
+    timed("Table IV (scale 100)", || report::table4(100));
+    timed("Table V (MM n=64)", || report::table5(64));
+    timed("Table VI", report::table6);
+    timed("Table VII", report::table7);
+    timed("Figure 3", report::fig3);
+    timed("Figure 5", report::fig5);
+    timed("NPB BT (6^3, 3 sweeps)", || report::bt_report(6, 3));
+    timed("CNN (64 samples)", || report::cnn_report(64));
+    timed("Power/Energy (scale 100)", || report::power_report(100));
+    timed("Quire ablation", report::quire_ablation);
+}

@@ -1,0 +1,119 @@
+//! Posit-core micro-benchmarks: throughput of every arithmetic op per
+//! format, vs native f32 as the hardware-FPU baseline. This is the L3
+//! hot path of the simulator (every simulated F-op lands here), so it is
+//! the target of the §Perf optimization pass.
+//!
+//! Run: `cargo bench --bench posit_ops`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box};
+use posar::data::Rng;
+use posar::posit::{self, PositSpec, P16, P32, P8};
+
+const N: usize = 4096;
+
+fn operands(spec: PositSpec, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let mut v = Vec::with_capacity(N);
+    while v.len() < N {
+        let w = rng.bits32(spec.ps);
+        if w != spec.nar() && w != 0 {
+            v.push(w);
+        }
+    }
+    v
+}
+
+fn main() {
+    println!("== posit core op throughput ==");
+    for (spec, name) in [(P8, "p8"), (P16, "p16"), (P32, "p32")] {
+        let a = operands(spec, 1);
+        let b = operands(spec, 2);
+        bench(&format!("{name}/add"), N as u64, || {
+            for i in 0..N {
+                black_box(posit::add(spec, a[i], b[i]));
+            }
+        });
+        bench(&format!("{name}/mul"), N as u64, || {
+            for i in 0..N {
+                black_box(posit::mul(spec, a[i], b[i]));
+            }
+        });
+        bench(&format!("{name}/div"), N as u64, || {
+            for i in 0..N {
+                black_box(posit::div(spec, a[i], b[i]));
+            }
+        });
+        bench(&format!("{name}/sqrt"), N as u64, || {
+            for i in 0..N {
+                black_box(posit::sqrt(spec, posit::abs(spec, a[i])));
+            }
+        });
+        bench(&format!("{name}/fma"), N as u64, || {
+            for i in 0..N {
+                black_box(posit::fma(spec, a[i], b[i], a[(i + 1) % N]));
+            }
+        });
+        bench(&format!("{name}/from_f64"), N as u64, || {
+            for i in 0..N {
+                black_box(posit::from_f64(spec, i as f64 * 0.37 - 700.0));
+            }
+        });
+        bench(&format!("{name}/to_f64"), N as u64, || {
+            for i in 0..N {
+                black_box(posit::to_f64(spec, a[i]));
+            }
+        });
+        bench(&format!("{name}/cmp_lt"), N as u64, || {
+            for i in 0..N {
+                black_box(posit::lt(spec, a[i], b[i]));
+            }
+        });
+    }
+
+    // Native f32 baseline (what a hardware FPU gives the simulator).
+    let mut rng = Rng::new(3);
+    let fa: Vec<f32> = (0..N).map(|_| rng.normal() as f32).collect();
+    let fb: Vec<f32> = (0..N).map(|_| rng.normal() as f32 + 1.5).collect();
+    bench("f32/add (native baseline)", N as u64, || {
+        for i in 0..N {
+            black_box(black_box(fa[i]) + black_box(fb[i]));
+        }
+    });
+    bench("f32/div (native baseline)", N as u64, || {
+        for i in 0..N {
+            black_box(black_box(fa[i]) / black_box(fb[i]));
+        }
+    });
+
+    // Packed SIMD posits (the §V-C packing claim: 2x/4x per value).
+    use posar::posit::packed::{exec as pexec, pack, Packing};
+    use posar::isa::FOp;
+    let a8 = operands(P8, 7);
+    let w8: Vec<u32> = a8.chunks(4).map(|c| pack(Packing::X4P8, c)).collect();
+    bench("p8x4/add (packed, per value)", N as u64, || {
+        for i in 0..w8.len() - 1 {
+            black_box(pexec(Packing::X4P8, FOp::Add, w8[i], w8[i + 1], 0));
+        }
+    });
+
+    // Quire accumulation vs sequential FMA (the §II-B design point).
+    let a = operands(P16, 5);
+    let b = operands(P16, 6);
+    bench("p16/dot-sequential", N as u64, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc = posit::fma(P16, a[i], b[i], acc);
+        }
+        black_box(acc);
+    });
+    bench("p16/dot-quire", N as u64, || {
+        let mut q = posit::Quire::new(P16);
+        for i in 0..N {
+            q.add_product(a[i], b[i]);
+        }
+        black_box(q.to_posit());
+    });
+}

@@ -1,0 +1,49 @@
+//! Serving-path bench: PJRT batch execution latency per variant and
+//! router/batcher overhead — the deployment-side numbers that accompany
+//! the paper's §V-C "18% faster" claim in this reproduction.
+//!
+//! Needs `make artifacts`. Run: `cargo bench --bench serving`
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box};
+use posar::cnn::weights::set_or_generate;
+use posar::runtime::{Manifest, Runtime};
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu(dir).expect("pjrt");
+    let m = Manifest::load(dir).expect("manifest");
+    println!("platform: {}", rt.platform());
+    let (set, _) = set_or_generate(m.batch);
+    let mut x = vec![0f32; m.batch * m.feat];
+    for i in 0..m.batch {
+        x[i * m.feat..(i + 1) * m.feat].copy_from_slice(set.sample(i));
+    }
+
+    println!("== PJRT batch execution (batch = {}) ==", m.batch);
+    for (name, file) in m.variants.clone() {
+        let exe = rt.load(&name, &file, &m).expect("load");
+        bench(&format!("exec/{name}"), m.batch as u64, || {
+            black_box(exe.run(&x).expect("run"));
+        });
+    }
+
+    // The standalone L1 kernel.
+    let qm = Manifest {
+        feat: 1024,
+        classes: 1024,
+        ..m.clone()
+    };
+    let quant = rt.load("quant_p16", "quant_p16.hlo.txt", &qm).expect("load");
+    let qx = vec![0.5f32; qm.batch * 1024];
+    bench("exec/quant_p16 (L1 kernel)", (qm.batch * 1024) as u64, || {
+        black_box(quant.run(&qx).expect("run"));
+    });
+}

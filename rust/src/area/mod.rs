@@ -1,0 +1,3 @@
+//! FPGA resource & power models (Table VII, §V-F).
+pub mod power;
+pub mod resources;

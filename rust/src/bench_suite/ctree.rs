@@ -1,0 +1,307 @@
+//! Classification tree (CT) — level-two kernel on Iris (Table V).
+//!
+//! CART with Gini impurity: training scans candidate thresholds (feature
+//! value midpoints) with divisions in the impurity computation, then
+//! inference walks the tree with F-comparisons. The paper implements
+//! "both the creation (training) and usage (inference)".
+
+use crate::data::iris;
+use crate::sim::Machine;
+
+const K: usize = iris::K;
+const M: usize = iris::M;
+const N: usize = iris::N;
+const MAX_DEPTH: usize = 3;
+
+/// A (flattened) decision tree node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    /// Internal: (feature, threshold-as-f64, left, right).
+    Split(usize, f64, usize, usize),
+    /// Leaf: class.
+    Leaf(u8),
+}
+
+/// Gini impurity of a subset, computed with F-ops: `1 - Σ (n_c / n)²`.
+fn gini(m: &mut Machine, counts: &[u32; K], total: u32) -> u32 {
+    let one = m.lit(1.0);
+    let tf = m.from_int(total as i32);
+    let mut acc = m.be.load_f64(0.0);
+    for &c in counts {
+        let cf = m.from_int(c as i32);
+        let frac = m.div(cf, tf);
+        acc = m.madd(frac, frac, acc);
+        m.int_ops(1);
+    }
+    m.sub(one, acc)
+}
+
+/// Train a tree on the simulated core. Returns the node arena (root = 0).
+pub fn train(m: &mut Machine) -> Vec<Node> {
+    m.program_start();
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| m.be.load_f64(v))
+        .collect();
+    let mut nodes = Vec::new();
+    let all: Vec<usize> = (0..N).collect();
+    build(m, &x, &all, 0, &mut nodes);
+    nodes
+}
+
+fn majority(idx: &[usize]) -> u8 {
+    let mut counts = [0u32; K];
+    for &i in idx {
+        counts[iris::LABELS[i] as usize] += 1;
+    }
+    counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, c)| **c)
+        .unwrap()
+        .0 as u8
+}
+
+fn class_counts(idx: &[usize]) -> [u32; K] {
+    let mut counts = [0u32; K];
+    for &i in idx {
+        counts[iris::LABELS[i] as usize] += 1;
+    }
+    counts
+}
+
+fn build(m: &mut Machine, x: &[u32], idx: &[usize], depth: usize, nodes: &mut Vec<Node>) -> usize {
+    let counts = class_counts(idx);
+    let pure = counts.iter().filter(|&&c| c > 0).count() <= 1;
+    if depth >= MAX_DEPTH || pure || idx.len() < 4 {
+        let id = nodes.len();
+        nodes.push(Node::Leaf(majority(idx)));
+        return id;
+    }
+    // Scan splits: for each feature, thresholds at sample values.
+    let mut best: Option<(usize, u32, f64)> = None; // (feat, thr bits, score)
+    for f in 0..M {
+        for &i in idx {
+            let thr = x[i * M + f];
+            let mut lc = [0u32; K];
+            let mut rc = [0u32; K];
+            let mut ln = 0u32;
+            let mut rn = 0u32;
+            for &j in idx {
+                m.mem_read(1);
+                if m.fle(x[j * M + f], thr) {
+                    lc[iris::LABELS[j] as usize] += 1;
+                    ln += 1;
+                } else {
+                    rc[iris::LABELS[j] as usize] += 1;
+                    rn += 1;
+                }
+                m.int_ops(2);
+                m.branch();
+            }
+            if ln == 0 || rn == 0 {
+                continue;
+            }
+            // Weighted Gini (divisions).
+            let gl = gini(m, &lc, ln);
+            let gr = gini(m, &rc, rn);
+            let lf = m.from_int(ln as i32);
+            let rf = m.from_int(rn as i32);
+            let tf = m.from_int((ln + rn) as i32);
+            let wl = m.div(lf, tf);
+            let wr = m.div(rf, tf);
+            let s1 = m.mul(wl, gl);
+            let score_w = m.madd(wr, gr, s1);
+            let score = m.val(score_w);
+            m.int_ops(3);
+            if best.map(|(_, _, s)| score < s).unwrap_or(true) {
+                best = Some((f, thr, score));
+            }
+            m.branch();
+        }
+    }
+    let (f, thr_bits, _) = match best {
+        Some(b) => b,
+        None => {
+            let id = nodes.len();
+            nodes.push(Node::Leaf(majority(idx)));
+            return id;
+        }
+    };
+    let thr_val = m.val(thr_bits);
+    let (mut li, mut ri) = (Vec::new(), Vec::new());
+    for &j in idx {
+        if m.fle(x[j * M + f], thr_bits) {
+            li.push(j);
+        } else {
+            ri.push(j);
+        }
+        m.int_ops(1);
+        m.branch();
+    }
+    let id = nodes.len();
+    nodes.push(Node::Leaf(0)); // placeholder
+    let l = build(m, x, &li, depth + 1, nodes);
+    let r = build(m, x, &ri, depth + 1, nodes);
+    nodes[id] = Node::Split(f, thr_val, l, r);
+    id
+}
+
+/// Classify every sample with a trained tree (F-comparisons per level).
+pub fn infer(m: &mut Machine, nodes: &[Node]) -> Vec<u8> {
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| m.be.load_f64(v))
+        .collect();
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        let mut cur = 0usize;
+        loop {
+            match &nodes[cur] {
+                Node::Leaf(c) => {
+                    preds.push(*c);
+                    break;
+                }
+                Node::Split(f, thr, l, r) => {
+                    let t = m.be.load_f64(*thr);
+                    m.mem_read(1);
+                    cur = if m.fle(x[i * M + f], t) { *l } else { *r };
+                    m.branch();
+                }
+            }
+        }
+        m.int_ops(2);
+    }
+    preds
+}
+
+/// Full f64 reference: train + infer.
+pub fn reference() -> Vec<u8> {
+    // Build with an exact machine? The reference uses f64 arithmetic via
+    // a throwaway FPU-like backend that is exact for these small values:
+    // we reuse the simulator with the FP32 backend as "reference
+    // hardware" is the paper's approach (x86 host run). For a pure-f64
+    // gold we train with f64 math below.
+    let x: Vec<f64> = iris::FEATURES.iter().flatten().cloned().collect();
+    fn gini(counts: &[u32; K], total: u32) -> f64 {
+        1.0 - counts
+            .iter()
+            .map(|&c| (c as f64 / total as f64).powi(2))
+            .sum::<f64>()
+    }
+    fn build(x: &[f64], idx: &[usize], depth: usize, nodes: &mut Vec<Node>) -> usize {
+        let counts = class_counts(idx);
+        let pure = counts.iter().filter(|&&c| c > 0).count() <= 1;
+        if depth >= MAX_DEPTH || pure || idx.len() < 4 {
+            let id = nodes.len();
+            nodes.push(Node::Leaf(majority(idx)));
+            return id;
+        }
+        let mut best: Option<(usize, f64, f64)> = None;
+        for f in 0..M {
+            for &i in idx {
+                let thr = x[i * M + f];
+                let mut lc = [0u32; K];
+                let mut rc = [0u32; K];
+                let (mut ln, mut rn) = (0u32, 0u32);
+                for &j in idx {
+                    if x[j * M + f] <= thr {
+                        lc[iris::LABELS[j] as usize] += 1;
+                        ln += 1;
+                    } else {
+                        rc[iris::LABELS[j] as usize] += 1;
+                        rn += 1;
+                    }
+                }
+                if ln == 0 || rn == 0 {
+                    continue;
+                }
+                let score = ln as f64 / (ln + rn) as f64 * gini(&lc, ln)
+                    + rn as f64 / (ln + rn) as f64 * gini(&rc, rn);
+                if best.map(|(_, _, s)| score < s).unwrap_or(true) {
+                    best = Some((f, thr, score));
+                }
+            }
+        }
+        let (f, thr, _) = match best {
+            Some(b) => b,
+            None => {
+                let id = nodes.len();
+                nodes.push(Node::Leaf(majority(idx)));
+                return id;
+            }
+        };
+        let (mut li, mut ri) = (Vec::new(), Vec::new());
+        for &j in idx {
+            if x[j * M + f] <= thr {
+                li.push(j);
+            } else {
+                ri.push(j);
+            }
+        }
+        let id = nodes.len();
+        nodes.push(Node::Leaf(0));
+        let l = build(x, &li, depth + 1, nodes);
+        let r = build(x, &ri, depth + 1, nodes);
+        nodes[id] = Node::Split(f, thr, l, r);
+        id
+    }
+    let mut nodes = Vec::new();
+    let all: Vec<usize> = (0..N).collect();
+    build(&x, &all, 0, &mut nodes);
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        let mut cur = 0usize;
+        loop {
+            match &nodes[cur] {
+                Node::Leaf(c) => {
+                    preds.push(*c);
+                    break;
+                }
+                Node::Split(f, thr, l, r) => {
+                    cur = if x[i * M + f] <= *thr { *l } else { *r };
+                }
+            }
+        }
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P32, P8};
+    use crate::sim::{Fpu, Machine, Posar};
+
+    #[test]
+    fn reference_tree_is_accurate() {
+        let preds = reference();
+        let acc = preds
+            .iter()
+            .zip(iris::LABELS.iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(acc >= 140, "acc {acc}/150");
+    }
+
+    #[test]
+    fn all_formats_predict_like_reference() {
+        // Table V: CT is the one kernel correct even on Posit(8,1) —
+        // comparisons survive low precision.
+        let want = reference();
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let t = train(&mut m);
+        assert_eq!(infer(&mut m, &t), want, "FP32");
+        for spec in [P32, P16, P8] {
+            let be = Posar::new(spec);
+            let mut m = Machine::new(&be);
+            let t = train(&mut m);
+            let preds = infer(&mut m, &t);
+            let agree = preds.iter().zip(&want).filter(|(a, b)| a == b).count();
+            assert!(agree >= 140, "{spec:?} agree {agree}/150");
+        }
+    }
+}

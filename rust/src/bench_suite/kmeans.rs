@@ -1,0 +1,198 @@
+//! k-means (KM) — level-two kernel on the Iris dataset (Table V).
+//!
+//! Lloyd's algorithm, k = 3, deterministic initialization (one seed point
+//! per true class, as bare-metal benchmarks do), squared Euclidean
+//! distances for assignment and a division per centroid coordinate in the
+//! update step.
+
+use crate::data::iris;
+use crate::sim::Machine;
+
+/// Result: final assignment of each point and iteration count.
+pub struct KmResult {
+    /// Cluster id per sample.
+    pub assign: Vec<usize>,
+    /// Iterations until convergence (or the cap).
+    pub iters: usize,
+}
+
+const K: usize = iris::K;
+const M: usize = iris::M;
+const N: usize = iris::N;
+const MAX_ITERS: usize = 30;
+
+/// Run k-means on the simulated core.
+pub fn run(m: &mut Machine, trace_inputs: bool) -> KmResult {
+    m.program_start();
+    // Offline-encoded dataset.
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| m.be.load_f64(v))
+        .collect();
+    if trace_inputs {
+        for &w in &x {
+            if let Some(t) = m.tracer.as_mut() {
+                let v = m.be.store_f64(w);
+                t.record(v);
+            }
+        }
+    }
+    let mut centroids: Vec<u32> = [0usize, 50, 100]
+        .iter()
+        .flat_map(|&i| x[i * M..(i + 1) * M].to_vec())
+        .collect();
+    let mut assign = vec![0usize; N];
+    let mut iters = 0;
+    for _ in 0..MAX_ITERS {
+        iters += 1;
+        // Assignment step.
+        let mut changed = false;
+        for i in 0..N {
+            let mut best = 0usize;
+            let mut best_d = u32::MAX;
+            for (c, cent) in centroids.chunks(M).enumerate() {
+                let mut d = m.be.load_f64(0.0);
+                for j in 0..M {
+                    m.mem_read(2);
+                    let diff = m.sub(x[i * M + j], cent[j]);
+                    d = m.madd(diff, diff, d);
+                    m.int_ops(2);
+                }
+                if c == 0 || m.flt(d, best_d) {
+                    best = c;
+                    best_d = d;
+                }
+                m.branch();
+            }
+            changed |= assign[i] != best;
+            assign[i] = best;
+            m.int_ops(3);
+        }
+        if !changed {
+            break;
+        }
+        // Update step: mean of members (FDIV per coordinate).
+        for c in 0..K {
+            let mut count = 0u32;
+            let mut sums = vec![m.be.load_f64(0.0); M];
+            for i in 0..N {
+                if assign[i] == c {
+                    count += 1;
+                    for (j, s) in sums.iter_mut().enumerate() {
+                        m.mem_read(1);
+                        *s = m.add(*s, x[i * M + j]);
+                    }
+                }
+                m.int_ops(2);
+                m.branch();
+            }
+            if count > 0 {
+                let cf = m.from_int(count as i32);
+                for (j, s) in sums.iter().enumerate() {
+                    centroids[c * M + j] = m.div(*s, cf);
+                    m.mem_write(1);
+                }
+            }
+        }
+    }
+    KmResult { assign, iters }
+}
+
+/// f64 reference run (same init, same schedule).
+pub fn reference() -> KmResult {
+    let x: Vec<f64> = iris::FEATURES.iter().flatten().cloned().collect();
+    let mut centroids: Vec<f64> = [0usize, 50, 100]
+        .iter()
+        .flat_map(|&i| x[i * M..(i + 1) * M].to_vec())
+        .collect();
+    let mut assign = vec![0usize; N];
+    let mut iters = 0;
+    for _ in 0..MAX_ITERS {
+        iters += 1;
+        let mut changed = false;
+        for i in 0..N {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..K {
+                let mut d = 0.0;
+                for j in 0..M {
+                    let diff = x[i * M + j] - centroids[c * M + j];
+                    d += diff * diff;
+                }
+                if d < best_d {
+                    best = c;
+                    best_d = d;
+                }
+            }
+            changed |= assign[i] != best;
+            assign[i] = best;
+        }
+        if !changed {
+            break;
+        }
+        for c in 0..K {
+            let mut count = 0.0;
+            let mut sums = [0.0; M];
+            for i in 0..N {
+                if assign[i] == c {
+                    count += 1.0;
+                    for j in 0..M {
+                        sums[j] += x[i * M + j];
+                    }
+                }
+            }
+            if count > 0.0 {
+                for j in 0..M {
+                    centroids[c * M + j] = sums[j] / count;
+                }
+            }
+        }
+    }
+    KmResult { assign, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P32, P8};
+    use crate::sim::{Fpu, Machine, Posar};
+
+    #[test]
+    fn reference_is_sane() {
+        let r = reference();
+        // Iris k-means with class-seeded init converges and finds
+        // clusters roughly matching the 50/50/50 classes.
+        assert!(r.iters < 30);
+        let acc = r
+            .assign
+            .iter()
+            .zip(iris::LABELS.iter())
+            .filter(|(a, b)| **a == **b as usize)
+            .count();
+        assert!(acc > 120, "clustering accuracy {acc}/150");
+    }
+
+    #[test]
+    fn fp32_p32_p16_match_reference() {
+        let want = reference().assign;
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        assert_eq!(run(&mut m, false).assign, want, "FP32");
+        for spec in [P32, P16] {
+            let be = Posar::new(spec);
+            let mut m = Machine::new(&be);
+            assert_eq!(run(&mut m, false).assign, want, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn p8_diverges() {
+        // Table V marks KM wrong for Posit(8,1).
+        let want = reference().assign;
+        let be = Posar::new(P8);
+        let mut m = Machine::new(&be);
+        let got = run(&mut m, false).assign;
+        assert_ne!(got, want, "P8 k-means should differ from the reference");
+    }
+}

@@ -1,0 +1,159 @@
+//! k-nearest-neighbours (KNN) — level-two kernel on Iris (Table V).
+//!
+//! Leave-one-out classification of all 150 samples with k = 5 and *true*
+//! Euclidean distance (FSQRT per pair — this kernel is where the paper's
+//! 1.05–1.10× posit speedups come from, POSAR's sqrt being faster).
+
+use crate::data::iris;
+use crate::sim::Machine;
+
+const K: usize = 5;
+const M: usize = iris::M;
+const N: usize = iris::N;
+
+/// Classify every sample against the other 149. Returns predictions.
+pub fn run(m: &mut Machine) -> Vec<u8> {
+    m.program_start();
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| m.be.load_f64(v))
+        .collect();
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        // Distances to all others (bits kept for posit-order comparisons).
+        let mut dist: Vec<(u32, usize)> = Vec::with_capacity(N - 1);
+        for j in 0..N {
+            if j == i {
+                continue;
+            }
+            let mut d = m.be.load_f64(0.0);
+            for f in 0..M {
+                m.mem_read(2);
+                let diff = m.sub(x[i * M + f], x[j * M + f]);
+                d = m.madd(diff, diff, d);
+                m.int_ops(2);
+            }
+            let d = m.sqrt(d);
+            dist.push((d, j));
+            m.int_ops(2);
+            m.branch();
+        }
+        // Partial selection of the k smallest (selection sort over k, the
+        // bare-metal-friendly approach); comparisons are F-ops.
+        for a in 0..K {
+            let mut min = a;
+            for b in (a + 1)..dist.len() {
+                if m.flt(dist[b].0, dist[min].0) {
+                    min = b;
+                }
+                m.int_ops(1);
+                m.branch();
+            }
+            dist.swap(a, min);
+            m.int_ops(3);
+        }
+        // Majority vote.
+        let mut votes = [0u8; iris::K];
+        for d in dist.iter().take(K) {
+            votes[iris::LABELS[d.1] as usize] += 1;
+            m.int_ops(2);
+        }
+        let best = votes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .unwrap()
+            .0;
+        preds.push(best as u8);
+        m.int_ops(4);
+    }
+    preds
+}
+
+/// f64 reference predictions (same algorithm).
+pub fn reference() -> Vec<u8> {
+    let x: Vec<f64> = iris::FEATURES.iter().flatten().cloned().collect();
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        let mut dist: Vec<(f64, usize)> = Vec::with_capacity(N - 1);
+        for j in 0..N {
+            if j == i {
+                continue;
+            }
+            let mut d = 0.0;
+            for f in 0..M {
+                let diff = x[i * M + f] - x[j * M + f];
+                d += diff * diff;
+            }
+            dist.push((d.sqrt(), j));
+        }
+        for a in 0..K {
+            let mut min = a;
+            for b in (a + 1)..dist.len() {
+                if dist[b].0 < dist[min].0 {
+                    min = b;
+                }
+            }
+            dist.swap(a, min);
+        }
+        let mut votes = [0u8; iris::K];
+        for d in dist.iter().take(K) {
+            votes[iris::LABELS[d.1] as usize] += 1;
+        }
+        preds.push(
+            votes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, v)| **v)
+                .unwrap()
+                .0 as u8,
+        );
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P32, P8};
+    use crate::sim::{Fpu, Machine, Posar};
+
+    #[test]
+    fn reference_accuracy() {
+        let preds = reference();
+        let acc = preds
+            .iter()
+            .zip(iris::LABELS.iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        // Iris LOO-5NN is a classic ~96-97% benchmark.
+        assert!(acc >= 140, "acc {acc}/150");
+    }
+
+    #[test]
+    fn wide_formats_match_reference() {
+        let want = reference();
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        assert_eq!(run(&mut m), want, "FP32");
+        for spec in [P32, P16] {
+            let be = Posar::new(spec);
+            let mut m = Machine::new(&be);
+            assert_eq!(run(&mut m), want, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn knn_speedup_from_sqrt() {
+        // Table V: KNN gains ~1.05-1.10 from faster posit sqrt/div.
+        let fpu = Fpu::new();
+        let p8 = Posar::new(P8);
+        let mut mf = Machine::new(&fpu);
+        let mut mp = Machine::new(&p8);
+        run(&mut mf);
+        run(&mut mp);
+        let s = mf.cycles as f64 / mp.cycles as f64;
+        assert!(s > 1.02, "KNN speedup {s}");
+    }
+}

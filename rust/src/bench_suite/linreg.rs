@@ -1,0 +1,221 @@
+//! Multivariate linear regression (LR) — level-two kernel (Table V).
+//!
+//! Predict petal width from the other three Iris features. The solver
+//! centers the data (mean removal, with FDIVs), builds the 3×3 covariance
+//! normal equations, and solves them by *Cramer's rule* — the paper
+//! explicitly attributes the small-posit failures to "the wrong value of
+//! one of the determinants computed by the program", so determinants
+//! (with their cancellation) are the heart of this kernel. With centering
+//! the products stay within Posit(32,3)'s golden zone (P32 matches FP32,
+//! as in Table V) while Posit(16,2)'s 7–9 fraction bits at these scales
+//! are not enough — exactly the paper's outcome.
+
+use crate::data::iris;
+use crate::sim::Machine;
+
+const D: usize = 3;
+const N: usize = iris::N;
+
+/// 3×3 determinant (rule of Sarrus) on the simulated core.
+fn det3(m: &mut Machine, a: &[u32; 9]) -> u32 {
+    let p1 = m.mul(a[0], a[4]);
+    let p1 = m.mul(p1, a[8]);
+    let p2 = m.mul(a[1], a[5]);
+    let p2 = m.mul(p2, a[6]);
+    let p3 = m.mul(a[2], a[3]);
+    let p3 = m.mul(p3, a[7]);
+    let n1 = m.mul(a[2], a[4]);
+    let n1 = m.mul(n1, a[6]);
+    let n2 = m.mul(a[1], a[3]);
+    let n2 = m.mul(n2, a[8]);
+    let n3 = m.mul(a[0], a[5]);
+    let n3 = m.mul(n3, a[7]);
+    let s = m.add(p1, p2);
+    let s = m.add(s, p3);
+    let s = m.sub(s, n1);
+    let s = m.sub(s, n2);
+    m.sub(s, n3)
+}
+
+/// Fit on the simulated core; returns `([b0, b1, b2, b3], det)` with `b0`
+/// the intercept.
+pub fn run(m: &mut Machine) -> (Vec<f64>, f64) {
+    m.program_start();
+    let xw: Vec<u32> = iris::FEATURES
+        .iter()
+        .flat_map(|f| [f[0], f[1], f[2]])
+        .map(|v| m.be.load_f64(v))
+        .collect();
+    let yw: Vec<u32> = iris::FEATURES
+        .iter()
+        .map(|f| m.be.load_f64(f[3]))
+        .collect();
+    let zero = m.be.load_f64(0.0);
+    let nf = m.lit(N as f64);
+
+    // Means (FDIV per dimension — the divisions of Table V's LR row).
+    let mut xm = [zero; D];
+    for j in 0..D {
+        let mut s = zero;
+        for i in 0..N {
+            m.mem_read(1);
+            s = m.add(s, xw[i * D + j]);
+            m.int_ops(1);
+        }
+        xm[j] = m.div(s, nf);
+        m.branch();
+    }
+    let mut s = zero;
+    for &y in &yw {
+        m.mem_read(1);
+        s = m.add(s, y);
+        m.int_ops(1);
+    }
+    let ym = m.div(s, nf);
+
+    // Covariance normal equations: A = Xc'Xc (3×3), b = Xc'yc.
+    let mut a = [zero; 9];
+    let mut b = [zero; D];
+    for i in 0..D {
+        for j in 0..D {
+            let mut acc = zero;
+            for sidx in 0..N {
+                m.mem_read(2);
+                let di = m.sub(xw[sidx * D + i], xm[i]);
+                let dj = m.sub(xw[sidx * D + j], xm[j]);
+                acc = m.madd(di, dj, acc);
+                m.int_ops(2);
+            }
+            a[i * 3 + j] = acc;
+            m.branch();
+        }
+        let mut acc = zero;
+        for sidx in 0..N {
+            m.mem_read(2);
+            let di = m.sub(xw[sidx * D + i], xm[i]);
+            let dy = m.sub(yw[sidx], ym);
+            acc = m.madd(di, dy, acc);
+            m.int_ops(2);
+        }
+        b[i] = acc;
+        m.branch();
+    }
+
+    // Cramer's rule.
+    let det = det3(m, &a);
+    let mut beta = vec![0f64; D + 1];
+    let mut acc0 = ym;
+    for i in 0..D {
+        let mut ai = a;
+        for r in 0..D {
+            ai[r * 3 + i] = b[r];
+        }
+        let di = det3(m, &ai);
+        let bi = m.div(di, det);
+        beta[i + 1] = m.val(bi);
+        // Intercept: b0 = ȳ − Σ βᵢ·x̄ᵢ.
+        let t = m.mul(bi, xm[i]);
+        acc0 = m.sub(acc0, t);
+        m.int_ops(4);
+        m.branch();
+    }
+    beta[0] = m.val(acc0);
+    (beta, m.val(det))
+}
+
+/// f64 reference fit (same algorithm).
+pub fn reference() -> (Vec<f64>, f64) {
+    let xs: Vec<[f64; D]> = iris::FEATURES.iter().map(|f| [f[0], f[1], f[2]]).collect();
+    let ys: Vec<f64> = iris::FEATURES.iter().map(|f| f[3]).collect();
+    let mut xm = [0f64; D];
+    for j in 0..D {
+        xm[j] = xs.iter().map(|r| r[j]).sum::<f64>() / N as f64;
+    }
+    let ym = ys.iter().sum::<f64>() / N as f64;
+    let mut a = [0f64; 9];
+    let mut b = [0f64; D];
+    for i in 0..D {
+        for j in 0..D {
+            a[i * 3 + j] = (0..N)
+                .map(|s| (xs[s][i] - xm[i]) * (xs[s][j] - xm[j]))
+                .sum();
+        }
+        b[i] = (0..N).map(|s| (xs[s][i] - xm[i]) * (ys[s] - ym)).sum();
+    }
+    let det3 = |a: &[f64; 9]| -> f64 {
+        a[0] * a[4] * a[8] + a[1] * a[5] * a[6] + a[2] * a[3] * a[7]
+            - a[2] * a[4] * a[6]
+            - a[1] * a[3] * a[8]
+            - a[0] * a[5] * a[7]
+    };
+    let det = det3(&a);
+    let mut beta = vec![0f64; D + 1];
+    let mut b0 = ym;
+    for i in 0..D {
+        let mut ai = a;
+        for r in 0..D {
+            ai[r * 3 + i] = b[r];
+        }
+        beta[i + 1] = det3(&ai) / det;
+        b0 -= beta[i + 1] * xm[i];
+    }
+    beta[0] = b0;
+    (beta, det)
+}
+
+/// Correctness criterion: every coefficient within 5% relative error.
+pub fn coefficients_match(got: &[f64], want: &[f64]) -> bool {
+    got.len() == want.len()
+        && got
+            .iter()
+            .zip(want)
+            .all(|(g, w)| g.is_finite() && (g - w).abs() <= 0.05 * w.abs().max(0.05))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P32, P8};
+    use crate::sim::{Fpu, Machine, Posar};
+
+    #[test]
+    fn reference_fit_predicts() {
+        let (beta, det) = reference();
+        assert!(det > 0.0);
+        let mut sse = 0.0;
+        for f in iris::FEATURES.iter() {
+            let pred = beta[0] + beta[1] * f[0] + beta[2] * f[1] + beta[3] * f[2];
+            sse += (pred - f[3]).powi(2);
+        }
+        assert!(sse / 150.0 < 0.05, "MSE {}", sse / 150.0);
+    }
+
+    #[test]
+    fn fp32_and_p32_match() {
+        let (want, _) = reference();
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let (got, _) = run(&mut m);
+        assert!(coefficients_match(&got, &want), "FP32 {got:?} vs {want:?}");
+        let p32 = Posar::new(P32);
+        let mut m = Machine::new(&p32);
+        let (got, _) = run(&mut m);
+        assert!(coefficients_match(&got, &want), "P32 {got:?} vs {want:?}");
+    }
+
+    #[test]
+    fn small_posits_fail() {
+        // Table V: LR is wrong for Posit(8,1) AND Posit(16,2) — the
+        // determinant's cancellation needs more fraction bits.
+        let (want, _) = reference();
+        for spec in [P8, P16] {
+            let be = Posar::new(spec);
+            let mut m = Machine::new(&be);
+            let (got, _) = run(&mut m);
+            assert!(
+                !coefficients_match(&got, &want),
+                "{spec:?} unexpectedly correct: {got:?}"
+            );
+        }
+    }
+}

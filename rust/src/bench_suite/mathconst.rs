@@ -1,0 +1,254 @@
+//! Level-one benchmarks: mathematical constants via series (§V-B).
+//!
+//! Each function mirrors the paper's bare-metal C (Listing 1): constants
+//! are pre-encoded offline, every arithmetic step is a register-register
+//! F-op, and the loop control is integer-side. The returned value is the
+//! computed constant; cycles accumulate in the [`Machine`].
+
+use crate::sim::Machine;
+
+/// π via the Leibniz series: `4·Σ (-1)^i / (2i+1)`. The paper runs
+/// 2,000,000 iterations (slow convergence).
+pub fn pi_leibniz(m: &mut Machine, iters: u64) -> f64 {
+    m.program_start();
+    let one = m.lit(1.0);
+    let two = m.lit(2.0);
+    let four = m.lit(4.0);
+    let mut denom = m.lit(1.0);
+    let mut sum = m.lit(0.0);
+    let mut add = true;
+    for _ in 0..iters {
+        let term = m.div(one, denom);
+        sum = if add { m.add(sum, term) } else { m.sub(sum, term) };
+        denom = m.add(denom, two);
+        add = !add;
+        // -O0 bare-metal stack traffic: 2 loads + 1 store per statement,
+        // plus the loop counter's load/inc/store/compare/branch. This is
+        // the fixed integer-side cost shared by both units.
+        m.mem_read(7);
+        m.mem_write(4);
+        m.int_ops(2);
+        m.branch();
+    }
+    let pi = m.mul(four, sum);
+    m.val(pi)
+}
+
+/// π via the Nilakantha series: `3 + Σ ±4 / (n(n+1)(n+2))`, 200 iters.
+pub fn pi_nilakantha(m: &mut Machine, iters: u64) -> f64 {
+    m.program_start();
+    let two = m.lit(2.0);
+    let four = m.lit(4.0);
+    let mut pi = m.lit(3.0);
+    let mut n = m.lit(2.0);
+    let one = m.lit(1.0);
+    let mut add = true;
+    for _ in 0..iters {
+        let n1 = m.add(n, one);
+        let n2 = m.add(n, two);
+        let d = m.mul(n, n1);
+        let d = m.mul(d, n2);
+        let term = m.div(four, d);
+        pi = if add { m.add(pi, term) } else { m.sub(pi, term) };
+        n = m.add(n, two);
+        add = !add;
+        // -O0 stack traffic for the 7 statements + loop bookkeeping.
+        m.mem_read(15);
+        m.mem_write(8);
+        m.int_ops(2);
+        m.branch();
+    }
+    m.val(pi)
+}
+
+/// e via Euler's series `Σ 1/k!` — the exact loop of the paper's
+/// Listing 1: `fact = fact / k; k = k + 1; e = e + fact`, 20 iterations.
+pub fn e_euler(m: &mut Machine, iters: u64) -> f64 {
+    m.program_start();
+    let one = m.lit(1.0);
+    let mut e = m.lit(2.0);
+    let mut k = m.lit(2.0);
+    let mut fact = m.lit(1.0);
+    for _ in 2..iters.max(2) {
+        fact = m.div(fact, k);
+        k = m.add(k, one);
+        e = m.add(e, fact);
+        // -O0 stack traffic (3 statements + loop bookkeeping).
+        m.mem_read(7);
+        m.mem_write(4);
+        m.int_ops(2);
+        m.branch();
+    }
+    m.val(e)
+}
+
+/// The §IV-B/Figure-3 experiment: the same Euler loop but with the
+/// loop-carried state round-tripped through IEEE FP32 *every iteration*,
+/// emulating the hardware-conversion alternative (FP32 in memory/caches,
+/// posit in the register file). Only meaningful on posit backends.
+pub fn e_euler_with_runtime_conversion(m: &mut Machine, iters: u64) -> f64 {
+    m.program_start();
+    let rt = |m: &mut Machine, w: u32| -> u32 {
+        // posit → FP32 (store) → posit (load). The hardware converter the
+        // paper describes sits on the memory pipe (Figure 2) and, like
+        // most format bridges, truncates toward zero rather than spending
+        // a rounder on the store path; the systematic downward bias is
+        // what makes Figure 3's loss so much worse than double rounding.
+        let v = m.val(w);
+        let mut f = v as f32;
+        if (f as f64).abs() > v.abs() {
+            // chop to the FP32 value nearer zero
+            f = f32::from_bits(f.to_bits() - 1);
+        }
+        m.int_ops(2);
+        m.be.load_f64(f as f64) // FP32 → posit on the load path
+    };
+    let one = m.lit(1.0);
+    let mut e = m.lit(2.0);
+    let mut k = m.lit(2.0);
+    let mut fact = m.lit(1.0);
+    for _ in 2..iters.max(2) {
+        fact = m.div(fact, k);
+        k = m.add(k, one);
+        e = m.add(e, fact);
+        // Every loop-carried value spills through FP32 memory.
+        fact = rt(m, fact);
+        k = rt(m, k);
+        e = rt(m, e);
+        m.int_ops(2);
+        m.branch();
+    }
+    m.val(e)
+}
+
+/// sin(1) via the Taylor series `Σ (-1)^i x^(2i+1) / (2i+1)!`, 10 terms.
+pub fn sin1(m: &mut Machine, iters: u64) -> f64 {
+    m.program_start();
+    let one = m.lit(1.0);
+    let x = m.lit(1.0);
+    let x2 = m.mul(x, x);
+    let mut term = x; // x^(2i+1)/(2i+1)! carried incrementally
+    let mut sum = x;
+    let mut kf = m.lit(1.0);
+    for _ in 1..iters {
+        // term *= -x² / ((k+1)(k+2))
+        let k1 = m.add(kf, one);
+        let k2 = m.add(k1, one);
+        let d = m.mul(k1, k2);
+        let t = m.mul(term, x2);
+        let t = m.div(t, d);
+        term = m.fneg(t);
+        sum = m.add(sum, term);
+        kf = k2;
+        // -O0 stack traffic (7 statements + loop bookkeeping).
+        m.mem_read(15);
+        m.mem_write(8);
+        m.int_ops(2);
+        m.branch();
+    }
+    m.val(sum)
+}
+
+/// Count the exactly-matching fraction digits against a reference value —
+/// the accuracy metric of Table III ("number of exact fraction digits").
+/// Both values are *rounded* to `d` decimals before comparing, so
+/// 3.14159 (an f64 slightly below the literal) still scores 5 digits
+/// against π.
+pub fn exact_fraction_digits(value: f64, reference: f64) -> u32 {
+    if !value.is_finite() {
+        return 0;
+    }
+    let mut digits = 0;
+    for d in 1..=15usize {
+        if format!("{value:.d$}") == format!("{reference:.d$}") {
+            digits = d as u32;
+        } else {
+            break;
+        }
+    }
+    // Integer part must match for any fraction digit to count.
+    if format!("{value:.0}") != format!("{reference:.0}") {
+        return 0;
+    }
+    digits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P32, P8};
+    use crate::sim::{Fpu, Machine, Posar};
+
+    #[test]
+    fn digits_metric() {
+        assert_eq!(exact_fraction_digits(3.14159, std::f64::consts::PI), 5);
+        assert_eq!(exact_fraction_digits(3.5, std::f64::consts::PI), 0);
+        assert_eq!(exact_fraction_digits(2.7182817, std::f64::consts::E), 6);
+        assert_eq!(exact_fraction_digits(f64::NAN, 3.14), 0);
+        assert_eq!(exact_fraction_digits(4.14, std::f64::consts::PI), 0);
+    }
+
+    #[test]
+    fn euler_fp32_reaches_6_digits() {
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let e = e_euler(&mut m, 20);
+        assert!(exact_fraction_digits(e, std::f64::consts::E) >= 6, "e={e}");
+    }
+
+    #[test]
+    fn euler_p32_reaches_6_digits() {
+        let p = Posar::new(P32);
+        let mut m = Machine::new(&p);
+        let e = e_euler(&mut m, 20);
+        assert!(exact_fraction_digits(e, std::f64::consts::E) >= 6, "e={e}");
+    }
+
+    #[test]
+    fn euler_p8_saturates_early() {
+        // Table III: Posit(8,1) gives e ≈ 2.625 — 0 exact digits.
+        let p = Posar::new(P8);
+        let mut m = Machine::new(&p);
+        let e = e_euler(&mut m, 20);
+        assert_eq!(exact_fraction_digits(e, std::f64::consts::E), 0, "e={e}");
+    }
+
+    #[test]
+    fn runtime_conversion_destroys_accuracy() {
+        // Figure 3: with per-iteration FP32 round-trips, only ~1 digit
+        // survives; without, 6 digits.
+        let p = Posar::new(P32);
+        let mut m1 = Machine::new(&p);
+        let direct = e_euler(&mut m1, 20);
+        let mut m2 = Machine::new(&p);
+        let converted = e_euler_with_runtime_conversion(&mut m2, 20);
+        let dd = exact_fraction_digits(direct, std::f64::consts::E);
+        let dc = exact_fraction_digits(converted, std::f64::consts::E);
+        assert!(dd >= 6, "direct {direct} ({dd} digits)");
+        assert!(dc < dd, "converted {converted} ({dc} digits)");
+    }
+
+    #[test]
+    fn leibniz_posit_faster() {
+        // Table IV: Posit(32,3) ≈ 1.30× on π Leibniz.
+        let fpu = Fpu::new();
+        let p32 = Posar::new(P32);
+        let mut mf = Machine::new(&fpu);
+        let mut mp = Machine::new(&p32);
+        pi_leibniz(&mut mf, 10_000);
+        pi_leibniz(&mut mp, 10_000);
+        let speedup = mf.cycles as f64 / mp.cycles as f64;
+        assert!(
+            (1.2..1.45).contains(&speedup),
+            "Leibniz speedup {speedup} outside the paper's ballpark"
+        );
+    }
+
+    #[test]
+    fn sin1_converges() {
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let s = sin1(&mut m, 10);
+        assert!(exact_fraction_digits(s, 1f64.sin()) >= 6, "sin(1)={s}");
+    }
+}

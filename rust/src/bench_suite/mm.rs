@@ -1,0 +1,128 @@
+//! Matrix multiplication (MM) — level-two kernel (Table V, `n = 182`,
+//! the largest square size fitting the paper's 512 kB scratchpad).
+
+use crate::data::Rng;
+use crate::sim::Machine;
+
+/// Generate the two input matrices (seeded, shared with the reference).
+pub fn inputs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let a: Vec<f64> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let b: Vec<f64> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
+    (a, b)
+}
+
+/// `C = A·B` on the simulated core. Returns `(checksum, first_row)`:
+/// the checksum `Σ|c_ij|` is accumulated *on the machine* (and is itself
+/// subject to low-precision absorption — measured, not a bug), while the
+/// first-row entries are read out exactly for the correctness check
+/// against the reference matrix (the paper checks "reference outputs",
+/// not a same-precision checksum).
+pub fn run(m: &mut Machine, n: usize, a: &[f64], b: &[f64]) -> (f64, Vec<f64>) {
+    m.program_start();
+    // Offline-encoded inputs (Figure 4 flow): registers load memory words.
+    let aw: Vec<u32> = a.iter().map(|&v| m.be.load_f64(v)).collect();
+    let bw: Vec<u32> = b.iter().map(|&v| m.be.load_f64(v)).collect();
+    let zero = m.be.load_f64(0.0);
+    let mut checksum = zero;
+    let mut first_row = Vec::with_capacity(n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = zero;
+            for k in 0..n {
+                m.mem_read(2);
+                acc = m.madd(aw[i * n + k], bw[k * n + j], acc);
+                m.int_ops(3); // index arithmetic
+            }
+            m.mem_write(1);
+            if i == 0 {
+                first_row.push(m.val(acc));
+            }
+            let abs = m.fabs(acc);
+            checksum = m.add(checksum, abs);
+            m.int_ops(2);
+            m.branch();
+        }
+    }
+    (m.val(checksum), first_row)
+}
+
+/// f64 reference `(checksum, first_row)`.
+pub fn reference(n: usize, a: &[f64], b: &[f64]) -> (f64, Vec<f64>) {
+    let mut checksum = 0.0;
+    let mut first_row = Vec::with_capacity(n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += a[i * n + k] * b[k * n + j];
+            }
+            if i == 0 {
+                first_row.push(acc);
+            }
+            checksum += acc.abs();
+        }
+    }
+    (checksum, first_row)
+}
+
+/// Correctness criterion: every first-row entry within 2% of the
+/// reference (relative to the row's magnitude scale).
+pub fn entries_match(got: &[f64], want: &[f64]) -> bool {
+    let scale = want.iter().fold(0f64, |m, v| m.max(v.abs())).max(1e-30);
+    got.len() == want.len()
+        && got
+            .iter()
+            .zip(want)
+            .all(|(g, w)| g.is_finite() && (g - w).abs() <= 0.02 * scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P32, P8};
+    use crate::sim::{Fpu, Machine, Posar};
+
+    #[test]
+    fn fp32_close_to_reference() {
+        let n = 16;
+        let (a, b) = inputs(n, 9);
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let (cs, row) = run(&mut m, n, &a, &b);
+        let (wcs, wrow) = reference(n, &a, &b);
+        assert!((cs - wcs).abs() / wcs < 1e-4, "checksum {cs} want {wcs}");
+        assert!(entries_match(&row, &wrow));
+    }
+
+    #[test]
+    fn p16_entries_ok_p8_degrades() {
+        // The paper checks the result matrix: P16/P32 correct, P8 wrong.
+        let n = 16;
+        let (a, b) = inputs(n, 9);
+        let (_, wrow) = reference(n, &a, &b);
+        let row = |spec| {
+            let be = Posar::new(spec);
+            let mut m = Machine::new(&be);
+            run(&mut m, n, &a, &b).1
+        };
+        assert!(entries_match(&row(P32), &wrow), "P32");
+        assert!(entries_match(&row(P16), &wrow), "P16");
+        assert!(!entries_match(&row(P8), &wrow), "P8 should fail");
+    }
+
+    #[test]
+    fn mm_speedup_is_flat() {
+        // Table V: MM shows speedup ≈ 1.0 (no div/sqrt in the kernel).
+        let n = 12;
+        let (a, b) = inputs(n, 1);
+        let fpu = Fpu::new();
+        let p32 = Posar::new(P32);
+        let mut mf = Machine::new(&fpu);
+        let mut mp = Machine::new(&p32);
+        let _ = run(&mut mf, n, &a, &b);
+        let _ = run(&mut mp, n, &a, &b);
+        let s = mf.cycles as f64 / mp.cycles as f64;
+        assert!((0.98..1.02).contains(&s), "MM speedup {s} should be ~1.0");
+    }
+}

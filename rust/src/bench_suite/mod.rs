@@ -1,0 +1,22 @@
+//! The paper's benchmark programs, written once against
+//! [`crate::sim::Machine`] and executed on every backend — the software
+//! realization of the paper's "identical assembly footprints" methodology
+//! (§IV-B).
+//!
+//! Level one (§V-B, Tables III & IV): mathematical constants via series —
+//! π (Leibniz, Nilakantha), e (Euler), sin(1) (Taylor).
+//!
+//! Level two (Table V): ML kernels — matrix multiplication, k-means,
+//! k-nearest-neighbours, multivariate linear regression, naive Bayes and
+//! a classification tree, the latter five on the embedded Iris dataset.
+
+pub mod ctree;
+pub mod kmeans;
+pub mod knn;
+pub mod linreg;
+pub mod mathconst;
+pub mod mm;
+pub mod naivebayes;
+pub mod runner;
+
+pub use runner::{run_level_one, run_level_two, BenchResult, Level2Result};

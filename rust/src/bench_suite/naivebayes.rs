@@ -1,0 +1,183 @@
+//! Gaussian naive Bayes (NB) — level-two kernel on Iris (Table V).
+//!
+//! Training computes per-class/per-feature means and variances (divisions
+//! by class counts); inference multiplies four Gaussian densities — the
+//! `exp` and the normalization `1/sqrt(2πσ²)` are computed with F-ops the
+//! way the bare-metal C does, so tiny-posit underflow shows up exactly as
+//! in the paper's prob-layer discussion.
+
+use crate::cnn::model::m_exp;
+use crate::data::iris;
+use crate::sim::Machine;
+
+const K: usize = iris::K;
+const M: usize = iris::M;
+const N: usize = iris::N;
+
+/// Train + classify all samples on the simulated core. Returns preds.
+pub fn run(m: &mut Machine) -> Vec<u8> {
+    m.program_start();
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| m.be.load_f64(v))
+        .collect();
+    let zero = m.be.load_f64(0.0);
+    let half = m.lit(0.5);
+    let two_pi = m.lit(std::f64::consts::TAU);
+    let one = m.lit(1.0);
+
+    // Training: mean and variance per (class, feature).
+    let mut mean = vec![zero; K * M];
+    let mut var = vec![zero; K * M];
+    for c in 0..K {
+        let mut count = 0i32;
+        let mut sums = vec![zero; M];
+        for i in 0..N {
+            if iris::LABELS[i] as usize == c {
+                count += 1;
+                for (j, s) in sums.iter_mut().enumerate() {
+                    m.mem_read(1);
+                    *s = m.add(*s, x[i * M + j]);
+                }
+            }
+            m.int_ops(2);
+            m.branch();
+        }
+        let cf = m.from_int(count);
+        for j in 0..M {
+            mean[c * M + j] = m.div(sums[j], cf);
+            m.mem_write(1);
+        }
+        let mut sq = vec![zero; M];
+        for i in 0..N {
+            if iris::LABELS[i] as usize == c {
+                for (j, s) in sq.iter_mut().enumerate() {
+                    m.mem_read(2);
+                    let d = m.sub(x[i * M + j], mean[c * M + j]);
+                    *s = m.madd(d, d, *s);
+                }
+            }
+            m.int_ops(2);
+            m.branch();
+        }
+        for j in 0..M {
+            var[c * M + j] = m.div(sq[j], cf);
+            m.mem_write(1);
+        }
+    }
+
+    // Inference: argmax_c prior · Π_j N(x_j; μ, σ²).
+    let kf = m.lit(K as f64);
+    let prior = m.div(one, kf); // balanced classes
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        let mut best = 0usize;
+        let mut best_p = zero;
+        for c in 0..K {
+            let mut p = prior;
+            for j in 0..M {
+                m.mem_read(3);
+                let v = var[c * M + j];
+                let d = m.sub(x[i * M + j], mean[c * M + j]);
+                let d2 = m.mul(d, d);
+                let tv = m.mul(two_pi, v);
+                let norm = m.sqrt(tv);
+                let e_arg = m.div(d2, v);
+                let e_arg = m.mul(e_arg, half);
+                let e_arg = m.fneg(e_arg);
+                let dens = m_exp(m, e_arg);
+                let dens = m.div(dens, norm);
+                p = m.mul(p, dens);
+                m.int_ops(2);
+            }
+            if c == 0 || m.flt(best_p, p) {
+                best = c;
+                best_p = p;
+            }
+            m.branch();
+        }
+        preds.push(best as u8);
+        m.int_ops(3);
+    }
+    preds
+}
+
+/// f64 reference (same algorithm).
+pub fn reference() -> Vec<u8> {
+    let x: Vec<f64> = iris::FEATURES.iter().flatten().cloned().collect();
+    let mut mean = vec![0f64; K * M];
+    let mut var = vec![0f64; K * M];
+    for c in 0..K {
+        let idx: Vec<usize> = (0..N).filter(|&i| iris::LABELS[i] as usize == c).collect();
+        for j in 0..M {
+            let s: f64 = idx.iter().map(|&i| x[i * M + j]).sum();
+            mean[c * M + j] = s / idx.len() as f64;
+            let v: f64 = idx
+                .iter()
+                .map(|&i| (x[i * M + j] - mean[c * M + j]).powi(2))
+                .sum();
+            var[c * M + j] = v / idx.len() as f64;
+        }
+    }
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        let mut best = 0usize;
+        let mut best_p = f64::NEG_INFINITY;
+        for c in 0..K {
+            let mut p = (1.0 / K as f64).ln();
+            for j in 0..M {
+                let v = var[c * M + j];
+                let d = x[i * M + j] - mean[c * M + j];
+                p += -(d * d) / (2.0 * v) - (std::f64::consts::TAU * v).sqrt().ln();
+            }
+            if p > best_p {
+                best = c;
+                best_p = p;
+            }
+        }
+        preds.push(best as u8);
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P32, P8};
+    use crate::sim::{Fpu, Machine, Posar};
+
+    #[test]
+    fn reference_accuracy() {
+        let preds = reference();
+        let acc = preds
+            .iter()
+            .zip(iris::LABELS.iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        // Gaussian NB on Iris (train = test) is the classic ~96%.
+        assert!(acc >= 140, "acc {acc}/150");
+    }
+
+    #[test]
+    fn wide_formats_match() {
+        let want = reference();
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        assert_eq!(run(&mut m), want, "FP32");
+        for spec in [P32, P16] {
+            let be = Posar::new(spec);
+            let mut m = Machine::new(&be);
+            assert_eq!(run(&mut m), want, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn p8_fails() {
+        // Table V: NB wrong on Posit(8,1) — density products underflow.
+        let want = reference();
+        let be = Posar::new(P8);
+        let mut m = Machine::new(&be);
+        assert_ne!(run(&mut m), want);
+    }
+}

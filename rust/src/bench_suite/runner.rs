@@ -1,0 +1,243 @@
+//! Benchmark harness: runs each level-1/level-2 program on every backend
+//! and produces the rows of Tables III, IV and V.
+
+use super::{ctree, kmeans, knn, linreg, mathconst, mm, naivebayes};
+use crate::posit::{P16, P32, P8};
+use crate::sim::{Backend, Fpu, Machine, Posar};
+
+/// One (benchmark × backend) measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub bench: String,
+    /// Backend name.
+    pub backend: String,
+    /// Iteration count.
+    pub iters: u64,
+    /// Computed value.
+    pub value: f64,
+    /// Exact fraction digits vs the mathematical reference (Table III).
+    pub digits: u32,
+    /// Cycles (Table IV).
+    pub cycles: u64,
+}
+
+/// The standard backend lineup of the paper's evaluation.
+pub fn standard_backends() -> Vec<Box<dyn Backend>> {
+    vec![
+        Box::new(Fpu::new()),
+        Box::new(Posar::new(P8)),
+        Box::new(Posar::new(P16)),
+        Box::new(Posar::new(P32)),
+    ]
+}
+
+/// Level-one run (Tables III & IV). `scale` divides the Leibniz iteration
+/// count for quick runs (1 = the paper's full 2,000,000).
+pub fn run_level_one(scale: u64) -> Vec<BenchResult> {
+    let backends = standard_backends();
+    let mut out = Vec::new();
+    let leibniz_iters = 2_000_000 / scale.max(1);
+    let cases: Vec<(&str, u64, f64, fn(&mut Machine, u64) -> f64)> = vec![
+        ("pi (Leibniz)", leibniz_iters, std::f64::consts::PI, mathconst::pi_leibniz),
+        ("pi (Nilakantha)", 200, std::f64::consts::PI, mathconst::pi_nilakantha),
+        ("e (Euler)", 20, std::f64::consts::E, mathconst::e_euler),
+        ("sin(1)", 10, 1f64.sin(), mathconst::sin1),
+    ];
+    for (name, iters, reference, f) in cases {
+        for be in &backends {
+            let mut m = Machine::new(be.as_ref());
+            let value = f(&mut m, iters);
+            out.push(BenchResult {
+                bench: name.to_string(),
+                backend: be.name(),
+                iters,
+                value,
+                digits: mathconst::exact_fraction_digits(value, reference),
+                cycles: m.cycles,
+            });
+        }
+    }
+    out
+}
+
+/// One level-two (benchmark × backend) measurement.
+#[derive(Clone, Debug)]
+pub struct Level2Result {
+    /// Benchmark name.
+    pub bench: String,
+    /// Backend name.
+    pub backend: String,
+    /// Input description (Table V's "Input Size" column).
+    pub input: String,
+    /// Cycles.
+    pub cycles: u64,
+    /// Whether the result matches the f64 reference (gray cells in
+    /// Table V are mismatches).
+    pub correct: bool,
+}
+
+/// Level-two run (Table V). `mm_n` sets the MM size (paper: 182).
+pub fn run_level_two(mm_n: usize) -> Vec<Level2Result> {
+    let backends = standard_backends();
+    let mut out = Vec::new();
+
+    // MM: correctness = result-matrix entries match the f64 reference
+    // (the machine-accumulated checksum is absorption-prone by design).
+    let (a, b) = mm::inputs(mm_n, 0xA11CE);
+    let (_, mm_row) = mm::reference(mm_n, &a, &b);
+    for be in &backends {
+        let mut m = Machine::new(be.as_ref());
+        let (_, row) = mm::run(&mut m, mm_n, &a, &b);
+        out.push(Level2Result {
+            bench: "Matrix Multiplication (MM)".into(),
+            backend: be.name(),
+            input: format!("n = {mm_n}"),
+            cycles: m.cycles,
+            correct: mm::entries_match(&row, &mm_row),
+        });
+    }
+
+    // KM.
+    let km_ref = kmeans::reference().assign;
+    for be in &backends {
+        let mut m = Machine::new(be.as_ref());
+        let got = kmeans::run(&mut m, false);
+        out.push(Level2Result {
+            bench: "k-means (KM)".into(),
+            backend: be.name(),
+            input: "Iris".into(),
+            cycles: m.cycles,
+            correct: got.assign == km_ref,
+        });
+    }
+
+    // KNN.
+    let knn_ref = knn::reference();
+    for be in &backends {
+        let mut m = Machine::new(be.as_ref());
+        let got = knn::run(&mut m);
+        out.push(Level2Result {
+            bench: "k Nearest Neighbours (KNN)".into(),
+            backend: be.name(),
+            input: "Iris".into(),
+            cycles: m.cycles,
+            correct: got == knn_ref,
+        });
+    }
+
+    // LR.
+    let (lr_ref, _) = linreg::reference();
+    for be in &backends {
+        let mut m = Machine::new(be.as_ref());
+        let (got, _) = linreg::run(&mut m);
+        out.push(Level2Result {
+            bench: "Linear Regression (LR)".into(),
+            backend: be.name(),
+            input: "Iris".into(),
+            cycles: m.cycles,
+            correct: linreg::coefficients_match(&got, &lr_ref),
+        });
+    }
+
+    // NB.
+    let nb_ref = naivebayes::reference();
+    for be in &backends {
+        let mut m = Machine::new(be.as_ref());
+        let got = naivebayes::run(&mut m);
+        out.push(Level2Result {
+            bench: "Naive Bayes (NB)".into(),
+            backend: be.name(),
+            input: "Iris".into(),
+            cycles: m.cycles,
+            correct: got == nb_ref,
+        });
+    }
+
+    // CT: correct = ≥95% prediction agreement with the reference tree
+    // (trees may differ structurally yet predict identically).
+    let ct_ref = ctree::reference();
+    for be in &backends {
+        let mut m = Machine::new(be.as_ref());
+        let t = ctree::train(&mut m);
+        let got = ctree::infer(&mut m, &t);
+        let agree = got.iter().zip(&ct_ref).filter(|(a, b)| a == b).count();
+        out.push(Level2Result {
+            bench: "Classification Tree (CT)".into(),
+            backend: be.name(),
+            input: "Iris".into(),
+            cycles: m.cycles,
+            correct: agree * 100 >= ct_ref.len() * 95,
+        });
+    }
+
+    out
+}
+
+/// Speedup helper: FP32 cycles / backend cycles, matched by benchmark.
+pub fn speedup_vs_fp32<'a>(
+    rows: impl Iterator<Item = (&'a str, &'a str, u64)>,
+) -> Vec<(String, String, f64)> {
+    let rows: Vec<(String, String, u64)> = rows
+        .map(|(b, k, c)| (b.to_string(), k.to_string(), c))
+        .collect();
+    let mut out = Vec::new();
+    for (bench, backend, cycles) in &rows {
+        if backend == "FP32" {
+            continue;
+        }
+        if let Some((_, _, f)) = rows
+            .iter()
+            .find(|(b, k, _)| b == bench && k == "FP32")
+        {
+            out.push((bench.clone(), backend.clone(), *f as f64 / *cycles as f64));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_one_shape() {
+        let rows = run_level_one(1000); // 2000-iteration Leibniz
+        assert_eq!(rows.len(), 4 * 4);
+        // P32 must match FP32's digit count on e (Table III).
+        let e_fp32 = rows
+            .iter()
+            .find(|r| r.bench == "e (Euler)" && r.backend == "FP32")
+            .unwrap();
+        let e_p32 = rows
+            .iter()
+            .find(|r| r.bench == "e (Euler)" && r.backend == "Posit(32,3)")
+            .unwrap();
+        assert!(e_p32.digits >= e_fp32.digits.min(6));
+        // P8 digits must be 0 on e.
+        let e_p8 = rows
+            .iter()
+            .find(|r| r.bench == "e (Euler)" && r.backend == "Posit(8,1)")
+            .unwrap();
+        assert_eq!(e_p8.digits, 0);
+    }
+
+    #[test]
+    fn level_two_shape_small() {
+        let rows = run_level_two(12); // small MM for test speed
+        assert_eq!(rows.len(), 6 * 4);
+        // FP32 and P32 rows must all be correct.
+        for r in rows.iter().filter(|r| r.backend == "FP32") {
+            assert!(r.correct, "{} wrong on FP32", r.bench);
+        }
+        for r in rows.iter().filter(|r| r.backend == "Posit(32,3)") {
+            assert!(r.correct, "{} wrong on P32", r.bench);
+        }
+        // P8 must be wrong somewhere (the paper: everything except CT).
+        assert!(
+            rows.iter()
+                .any(|r| r.backend == "Posit(8,1)" && !r.correct),
+            "P8 should fail at least one kernel"
+        );
+    }
+}

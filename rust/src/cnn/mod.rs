@@ -1,0 +1,13 @@
+//! The Cifar-10 CNN tail (level-three ML benchmark, §V-B/§V-C).
+//!
+//! The paper takes the last four layers of a Caffe Cifar-10 CNN, starting
+//! at `relu3`: `relu3 → pool3 (3×3/2 average) → ip1 → ip2 → prob
+//! (softmax)`, compiles them to bare-metal C with the parameters baked in,
+//! and measures Top-1 accuracy and cycles per format. This module is that
+//! generated C code, expressed over [`crate::sim::Machine`] so the same
+//! "assembly" runs on the FPU and every POSAR configuration.
+
+pub mod model;
+pub mod weights;
+
+pub use model::{forward, prepare, reference_forward, PreparedCnn};

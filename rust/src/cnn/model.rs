@@ -1,0 +1,313 @@
+//! CNN-tail forward pass over the simulated core.
+//!
+//! Layer stack (paper Figure 4, from `relu3`):
+//!   relu3  : elementwise max(x, 0) over 64×8×8
+//!   pool3  : 3×3 stride-2 *average* pool (Caffe AVE, ceil mode) → 64×4×4
+//!   ip1    : dense 1024 → 64
+//!   ip2    : dense 64 → 10
+//!   prob   : softmax (max-subtracted, like Caffe's SoftmaxLayer)
+//!
+//! `exp` inside the softmax is computed with F-extension ops only
+//! (range reduction by ln 2 + a 7-term Taylor polynomial + a power-of-two
+//! scaling loop), the way the bare-metal `expf` does — this is exactly
+//! where the paper observes Posit(8,1) under/overflow (§V-C).
+
+use crate::data::synth::{CnnParams, CHAN, CLASSES, FEAT, HIDDEN, POOLED, SIDE};
+use crate::sim::{Backend, Machine};
+
+/// Parameters and constants pre-encoded into the backend's *memory*
+/// format (the paper's offline conversion flow, Figure 4: FP32 binaries →
+/// posit binaries → linked objects).
+pub struct PreparedCnn {
+    /// ip1 weights in memory format.
+    pub w1: Vec<u32>,
+    /// ip1 bias.
+    pub b1: Vec<u32>,
+    /// ip2 weights.
+    pub w2: Vec<u32>,
+    /// ip2 bias.
+    pub b2: Vec<u32>,
+    /// Total parameter memory footprint in bytes (for the §V-C memory
+    /// saving claim: P16/P8 store half/quarter of FP32).
+    pub mem_bytes: usize,
+}
+
+/// Encode the FP32 parameter set into the backend's memory format.
+pub fn prepare(be: &dyn Backend, p: &CnnParams) -> PreparedCnn {
+    let enc = |v: &f32| be.to_mem(be.load_f64(*v as f64));
+    let w1: Vec<u32> = p.w1.iter().map(enc).collect();
+    let b1: Vec<u32> = p.b1.iter().map(enc).collect();
+    let w2: Vec<u32> = p.w2.iter().map(enc).collect();
+    let b2: Vec<u32> = p.b2.iter().map(enc).collect();
+    let n = w1.len() + b1.len() + w2.len() + b2.len();
+    PreparedCnn {
+        w1,
+        b1,
+        w2,
+        b2,
+        mem_bytes: n * (be.mem_bits() as usize) / 8,
+    }
+}
+
+/// `exp(x)` with F-extension ops only (shared instruction stream across
+/// backends). Range-reduce by ln 2, 7-term Taylor, then multiply the
+/// power of two back in a loop of FMULs.
+pub fn m_exp(m: &mut Machine, x: u32) -> u32 {
+    let ln2 = m.lit(std::f64::consts::LN_2);
+    let inv_ln2 = m.lit(std::f64::consts::LOG2_E);
+    let t = m.mul(x, inv_ln2);
+    let k = m.to_int(t); // FCVT.W.S, RNE
+    let kf = m.from_int(k);
+    let kl = m.mul(kf, ln2);
+    let r = m.sub(x, kl);
+    // Horner: 1 + r(1 + r/2(1 + r/3(1 + r/4(1 + r/5(1 + r/6 + r²/42))))).
+    let one = m.lit(1.0);
+    let mut acc = one;
+    for d in [7.0f64, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0] {
+        let c = m.lit(1.0 / d);
+        let rc = m.mul(r, c);
+        acc = m.madd(rc, acc, one);
+        m.int_ops(1);
+    }
+    // Scale by 2^k with a multiply loop (|k| is small after the
+    // max-subtraction in softmax; saturation on small posits is the
+    // *intended* behaviour being measured).
+    let two = m.lit(2.0);
+    let half = m.lit(0.5);
+    let factor = if k >= 0 { two } else { half };
+    for _ in 0..k.unsigned_abs().min(300) {
+        acc = m.mul(acc, factor);
+        m.int_ops(1);
+        m.branch();
+    }
+    acc
+}
+
+/// Full forward pass of one sample. Returns `(argmax class, probs)`.
+/// `x` is the FP32 feature map; its conversion to the backend format is
+/// the offline input-encoding step of Figure 4 (only loads are charged).
+pub fn forward(m: &mut Machine, pc: &PreparedCnn, x: &[f32]) -> (usize, Vec<f64>) {
+    assert_eq!(x.len(), FEAT);
+    let zero = m.be.load_f64(0.0);
+
+    // relu3 + pool3 fused: average 3×3/2 windows of max(x, 0).
+    let mut pooled = vec![0u32; POOLED];
+    for ch in 0..CHAN {
+        for py in 0..4 {
+            for px in 0..4 {
+                let mut acc = zero;
+                let mut cnt = 0u32;
+                for wy in 0..3usize {
+                    for wx in 0..3usize {
+                        let y = 2 * py + wy;
+                        let xx = 2 * px + wx;
+                        if y < SIDE && xx < SIDE {
+                            let v = x[ch * SIDE * SIDE + y * SIDE + xx];
+                            m.mem_read(1); // FLW of the input value
+                            let w = m.be.load_f64(v as f64);
+                            let w = m.fmax(w, zero); // relu3
+                            acc = m.add(acc, w);
+                            cnt += 1;
+                        }
+                        m.int_ops(2); // index arithmetic
+                    }
+                }
+                let c = m.lit(cnt as f64);
+                pooled[ch * 16 + py * 4 + px] = m.div(acc, c);
+                m.int_ops(3);
+                m.branch();
+            }
+        }
+    }
+
+    // ip1: 1024 → 64 (FMADD chain).
+    let mut hidden = vec![0u32; HIDDEN];
+    for (j, h) in hidden.iter_mut().enumerate() {
+        let mut acc = m.load_word(pc.b1[j]);
+        for (k, &p) in pooled.iter().enumerate() {
+            let w = m.load_word(pc.w1[j * POOLED + k]);
+            acc = m.madd(w, p, acc);
+            m.int_ops(1);
+        }
+        *h = acc;
+        m.branch();
+    }
+
+    // ip2: 64 → 10.
+    let mut logits = vec![0u32; CLASSES];
+    for (c, l) in logits.iter_mut().enumerate() {
+        let mut acc = m.load_word(pc.b2[c]);
+        for (j, &h) in hidden.iter().enumerate() {
+            let w = m.load_word(pc.w2[c * HIDDEN + j]);
+            acc = m.madd(w, h, acc);
+            m.int_ops(1);
+        }
+        *l = acc;
+        m.branch();
+    }
+
+    // prob: softmax with max subtraction (Caffe SoftmaxLayer).
+    let mut mx = logits[0];
+    for &l in &logits[1..] {
+        mx = m.fmax(mx, l);
+    }
+    let mut exps = vec![0u32; CLASSES];
+    let mut sum = zero;
+    for (c, e) in exps.iter_mut().enumerate() {
+        let d = m.sub(logits[c], mx);
+        *e = m_exp(m, d);
+        sum = m.add(sum, *e);
+        m.int_ops(1);
+    }
+    let mut probs = vec![0f64; CLASSES];
+    let mut best = 0usize;
+    let mut best_w = m.div(exps[0], sum);
+    probs[0] = m.val(best_w);
+    for c in 1..CLASSES {
+        let p = m.div(exps[c], sum);
+        probs[c] = m.val(p);
+        if m.flt(best_w, p) {
+            best = c;
+            best_w = p;
+        }
+        m.branch();
+    }
+    (best, probs)
+}
+
+/// Exact f64 reference forward (the paper's x86/64 host reference run).
+pub fn reference_forward(p: &CnnParams, x: &[f32]) -> (usize, Vec<f64>) {
+    let mut pooled = vec![0f64; POOLED];
+    for ch in 0..CHAN {
+        for py in 0..4 {
+            for px in 0..4 {
+                let mut acc = 0.0;
+                let mut cnt = 0.0;
+                for wy in 0..3usize {
+                    for wx in 0..3usize {
+                        let y = 2 * py + wy;
+                        let xx = 2 * px + wx;
+                        if y < SIDE && xx < SIDE {
+                            acc += (x[ch * SIDE * SIDE + y * SIDE + xx] as f64).max(0.0);
+                            cnt += 1.0;
+                        }
+                    }
+                }
+                pooled[ch * 16 + py * 4 + px] = acc / cnt;
+            }
+        }
+    }
+    let mut hidden = vec![0f64; HIDDEN];
+    for j in 0..HIDDEN {
+        let mut acc = p.b1[j] as f64;
+        for k in 0..POOLED {
+            acc += p.w1[j * POOLED + k] as f64 * pooled[k];
+        }
+        hidden[j] = acc;
+    }
+    let mut logits = vec![0f64; CLASSES];
+    for c in 0..CLASSES {
+        let mut acc = p.b2[c] as f64;
+        for j in 0..HIDDEN {
+            acc += p.w2[c * HIDDEN + j] as f64 * hidden[j];
+        }
+        logits[c] = acc;
+    }
+    let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    let probs: Vec<f64> = exps.iter().map(|e| e / sum).collect();
+    let best = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    (best, probs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::posit::{P16, P32, P8};
+    use crate::sim::{Fpu, Hybrid, Posar};
+
+    #[test]
+    fn fp32_matches_reference_argmax() {
+        let set = synth::generate(77, 12);
+        let params = synth::analytic_params();
+        let fpu = Fpu::new();
+        let pc = prepare(&fpu, &params);
+        let mut agree = 0;
+        for i in 0..set.len() {
+            let mut m = Machine::new(&fpu);
+            let (c, _) = forward(&mut m, &pc, set.sample(i));
+            let (r, _) = reference_forward(&params, set.sample(i));
+            agree += (c == r) as usize;
+        }
+        // FP32 vs f64 reference should agree on virtually every sample.
+        assert!(agree >= set.len() - 1, "agree {agree}/{}", set.len());
+    }
+
+    #[test]
+    fn p16_matches_fp32_argmax_mostly() {
+        let set = synth::generate(78, 10);
+        let params = synth::analytic_params();
+        let fpu = Fpu::new();
+        let p16 = Posar::new(P16);
+        let pcf = prepare(&fpu, &params);
+        let pcp = prepare(&p16, &params);
+        let mut agree = 0;
+        for i in 0..set.len() {
+            let mut mf = Machine::new(&fpu);
+            let mut mp = Machine::new(&p16);
+            let (cf, _) = forward(&mut mf, &pcf, set.sample(i));
+            let (cp, _) = forward(&mut mp, &pcp, set.sample(i));
+            agree += (cf == cp) as usize;
+        }
+        assert!(agree >= 8, "P16 should track FP32: {agree}/10");
+    }
+
+    #[test]
+    fn memory_footprint_scales_with_format() {
+        let params = synth::analytic_params();
+        let f = prepare(&Fpu::new(), &params).mem_bytes;
+        let p16 = prepare(&Posar::new(P16), &params).mem_bytes;
+        let p8 = prepare(&Hybrid::new(P16, P8), &params).mem_bytes;
+        assert_eq!(p16 * 2, f);
+        assert_eq!(p8 * 4, f);
+    }
+
+    #[test]
+    fn posit_cycles_fewer_than_fpu() {
+        // §V-C: "all three posit representations are around 18% faster".
+        let set = synth::generate(79, 2);
+        let params = synth::analytic_params();
+        let fpu = Fpu::new();
+        let p32 = Posar::new(P32);
+        let pcf = prepare(&fpu, &params);
+        let pcp = prepare(&p32, &params);
+        let mut mf = Machine::new(&fpu);
+        let mut mp = Machine::new(&p32);
+        forward(&mut mf, &pcf, set.sample(0));
+        forward(&mut mp, &pcp, set.sample(0));
+        assert!(mp.cycles < mf.cycles);
+    }
+
+    #[test]
+    fn exp_approximation_quality() {
+        let fpu = Fpu::new();
+        for x in [-5.0f64, -1.0, -0.3, 0.0, 0.4, 1.0, 3.0] {
+            let mut m = Machine::new(&fpu);
+            let w = m.be.load_f64(x);
+            let e = m_exp(&mut m, w);
+            let got = m.val(e);
+            assert!(
+                (got - x.exp()).abs() <= x.exp() * 1e-5,
+                "exp({x}) = {got} want {}",
+                x.exp()
+            );
+        }
+    }
+}

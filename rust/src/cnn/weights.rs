@@ -1,0 +1,116 @@
+//! Artifact I/O for the CNN tail — the binary interchange between the
+//! python build path (dataset generation + training, Figure 4's "Caffe
+//! instrumentation") and the Rust runtime/simulator.
+//!
+//! Formats (little-endian):
+//! - `cnn_weights.bin`: `w1 (HIDDEN·POOLED f32) | b1 (HIDDEN f32) |
+//!   w2 (CLASSES·HIDDEN f32) | b2 (CLASSES f32)`
+//! - `cnn_testset.bin`: `n (u32) | n·FEAT f32 features | n u8 labels`
+
+use crate::data::synth::{self, CnnParams, SynthSet, CLASSES, FEAT, HIDDEN, POOLED};
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+fn read_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Load trained parameters from `cnn_weights.bin`.
+pub fn load_params(path: &Path) -> io::Result<CnnParams> {
+    let mut f = std::fs::File::open(path)?;
+    let w1 = read_f32s(&mut f, HIDDEN * POOLED)?;
+    let b1 = read_f32s(&mut f, HIDDEN)?;
+    let w2 = read_f32s(&mut f, CLASSES * HIDDEN)?;
+    let b2 = read_f32s(&mut f, CLASSES)?;
+    Ok(CnnParams { w1, b1, w2, b2 })
+}
+
+/// Save parameters (used by tests and the fallback generator).
+pub fn save_params(path: &Path, p: &CnnParams) -> io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    for v in p.w1.iter().chain(&p.b1).chain(&p.w2).chain(&p.b2) {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a test set from `cnn_testset.bin`.
+pub fn load_set(path: &Path) -> io::Result<SynthSet> {
+    let mut f = std::fs::File::open(path)?;
+    let mut nb = [0u8; 4];
+    f.read_exact(&mut nb)?;
+    let n = u32::from_le_bytes(nb) as usize;
+    let features = read_f32s(&mut f, n * FEAT)?;
+    let mut labels = vec![0u8; n];
+    f.read_exact(&mut labels)?;
+    Ok(SynthSet { features, labels })
+}
+
+/// Save a test set.
+pub fn save_set(path: &Path, s: &SynthSet) -> io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&(s.len() as u32).to_le_bytes())?;
+    for v in &s.features {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.write_all(&s.labels)?;
+    Ok(())
+}
+
+/// The canonical artifacts directory (next to the crate root).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("POSAR_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// Trained parameters if the python build produced them, else the
+/// analytic head (keeps every Rust path runnable standalone).
+pub fn params_or_analytic() -> (CnnParams, bool) {
+    let p = artifacts_dir().join("cnn_weights.bin");
+    match load_params(&p) {
+        Ok(w) => (w, true),
+        Err(_) => (synth::analytic_params(), false),
+    }
+}
+
+/// Canonical test set if present, else freshly generated `n` samples.
+pub fn set_or_generate(n: usize) -> (SynthSet, bool) {
+    let p = artifacts_dir().join("cnn_testset.bin");
+    match load_set(&p) {
+        Ok(s) => (s, true),
+        Err(_) => (synth::generate(0xC1FA_7E57, n), false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_roundtrip() {
+        let p = synth::analytic_params();
+        let dir = std::env::temp_dir().join("posar_test_weights.bin");
+        save_params(&dir, &p).unwrap();
+        let q = load_params(&dir).unwrap();
+        assert_eq!(p.w1, q.w1);
+        assert_eq!(p.b2, q.b2);
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn set_roundtrip() {
+        let s = synth::generate(5, 2);
+        let dir = std::env::temp_dir().join("posar_test_set.bin");
+        save_set(&dir, &s).unwrap();
+        let t = load_set(&dir).unwrap();
+        assert_eq!(s.features, t.features);
+        assert_eq!(s.labels, t.labels);
+        std::fs::remove_file(&dir).ok();
+    }
+}

@@ -1,0 +1,106 @@
+//! Dynamic batcher: coalesce requests up to the executable's baked batch
+//! size or a deadline — the standard continuous-batching front end
+//! (vLLM-router style), sized for the fixed-shape PJRT executables.
+
+use super::Reply;
+use anyhow::Result;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+/// One enqueued request.
+pub struct Request {
+    /// Flat feature vector (`feat` values).
+    pub features: Vec<f32>,
+    /// Where to send the result.
+    pub reply: SyncSender<Result<Reply>>,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued: Instant,
+}
+
+/// Deadline-bounded batch assembler.
+pub struct Batcher {
+    batch: usize,
+    max_wait: Duration,
+}
+
+impl Batcher {
+    /// New batcher for a fixed batch size and fill deadline.
+    pub fn new(batch: usize, max_wait: Duration) -> Self {
+        Batcher { batch, max_wait }
+    }
+
+    /// Block for the first request, then drain more until the batch is
+    /// full or `max_wait` has elapsed. Returns `None` when the channel
+    /// is closed and empty (shutdown).
+    pub fn next_batch(&mut self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
+        let first = rx.recv().ok()?;
+        let deadline = Instant::now() + self.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn req(v: f32) -> (Request, Receiver<Result<Reply>>) {
+        let (tx, rx) = sync_channel(1);
+        (
+            Request {
+                features: vec![v],
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fills_to_batch_size() {
+        let (tx, rx) = sync_channel(16);
+        let mut b = Batcher::new(3, Duration::from_millis(50));
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, k) = req(i as f32);
+            tx.send(r).unwrap();
+            keep.push(k);
+        }
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 2); // deadline flush of the tail
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let (tx, rx) = sync_channel::<Request>(16);
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let (r, _k) = req(1.0);
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn shutdown_returns_none() {
+        let (tx, rx) = sync_channel::<Request>(1);
+        drop(tx);
+        let mut b = Batcher::new(4, Duration::from_millis(1));
+        assert!(b.next_batch(&rx).is_none());
+    }
+}

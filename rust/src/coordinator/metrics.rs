@@ -1,0 +1,120 @@
+//! Serving metrics: per-variant request counts, latency distribution and
+//! batch-size occupancy — what the e2e example reports alongside the
+//! Top-1 numbers.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Fixed latency histogram buckets (µs).
+pub const BUCKETS_US: [u64; 8] = [100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, u64::MAX];
+
+/// Per-variant counters.
+#[derive(Clone, Debug, Default)]
+pub struct VariantStats {
+    /// Requests served.
+    pub requests: u64,
+    /// Total end-to-end latency (queue + execute), µs.
+    pub total_latency_us: u64,
+    /// Max end-to-end latency, µs.
+    pub max_latency_us: u64,
+    /// Total batch-execute wall time, µs.
+    pub total_exec_us: u64,
+    /// Sum of batch occupancies (for the mean batch size).
+    pub occupancy_sum: u64,
+    /// Latency histogram counts per [`BUCKETS_US`].
+    pub hist: [u64; 8],
+}
+
+/// Mutable metrics registry.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    per_variant: HashMap<String, VariantStats>,
+}
+
+impl Metrics {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one served request.
+    pub fn observe(&mut self, variant: &str, latency: Duration, exec: Duration, batch_n: u64) {
+        let s = self.per_variant.entry(variant.to_string()).or_default();
+        let us = latency.as_micros() as u64;
+        s.requests += 1;
+        s.total_latency_us += us;
+        s.max_latency_us = s.max_latency_us.max(us);
+        s.total_exec_us += exec.as_micros() as u64;
+        s.occupancy_sum += batch_n;
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(7);
+        s.hist[idx] += 1;
+    }
+
+    /// Immutable snapshot for reporting.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut rows: Vec<(String, VariantStats)> = self
+            .per_variant
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        Snapshot { rows }
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// (variant, stats) sorted by name.
+    pub rows: Vec<(String, VariantStats)>,
+}
+
+impl Snapshot {
+    /// Render a compact table.
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "variant    reqs    mean_lat(ms)  max_lat(ms)  mean_batch\n",
+        );
+        for (name, s) in &self.rows {
+            let mean = if s.requests > 0 {
+                s.total_latency_us as f64 / s.requests as f64 / 1000.0
+            } else {
+                0.0
+            };
+            let occ = if s.requests > 0 {
+                s.occupancy_sum as f64 / s.requests as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{name:<10} {:<7} {mean:<13.3} {:<12.3} {occ:.2}\n",
+                s.requests,
+                s.max_latency_us as f64 / 1000.0,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_and_snapshot() {
+        let mut m = Metrics::new();
+        m.observe("p16", Duration::from_micros(500), Duration::from_micros(400), 4);
+        m.observe("p16", Duration::from_micros(1500), Duration::from_micros(900), 8);
+        m.observe("fp32", Duration::from_micros(200), Duration::from_micros(100), 1);
+        let s = m.snapshot();
+        assert_eq!(s.rows.len(), 2);
+        let p16 = &s.rows.iter().find(|(n, _)| n == "p16").unwrap().1;
+        assert_eq!(p16.requests, 2);
+        assert_eq!(p16.max_latency_us, 1500);
+        assert_eq!(p16.occupancy_sum, 12);
+        assert_eq!(p16.hist[2], 1); // 500µs lands in the <=1000µs bucket
+        assert_eq!(p16.hist[3], 1); // 1500µs in the <=3000µs bucket
+        let rendered = s.render();
+        assert!(rendered.contains("p16"));
+    }
+}

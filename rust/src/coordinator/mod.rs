@@ -1,0 +1,213 @@
+//! L3 coordinator — the serving stack for posit-quantized edge inference.
+//!
+//! The paper motivates posits with "ML inference at the edge"; this
+//! module is the deployment shape of that claim: a request router +
+//! dynamic batcher in front of the per-format PJRT executables produced
+//! by the AOT path. Requests name a variant ("fp32", "p8", "p16", "p32",
+//! "hybrid" — offline elasticity, §IV-A); the batcher coalesces them up
+//! to the executable's baked batch size or a deadline, pads the tail,
+//! executes, and fans results back out.
+//!
+//! Threading: one worker thread per variant owns its own PJRT client and
+//! executable (the xla wrapper types are not `Send`, and per-thread
+//! clients sidestep that cleanly). `infer` is synchronous from the
+//! caller's view; metrics are shared behind a mutex.
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{Batcher, Request};
+pub use metrics::{Metrics, Snapshot};
+
+use crate::runtime::Manifest;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Artifacts directory.
+    pub artifacts: PathBuf,
+    /// Max time a request waits for its batch to fill.
+    pub max_wait: Duration,
+    /// Bounded queue depth per variant (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts: PathBuf::from("artifacts"),
+            max_wait: Duration::from_millis(2),
+            queue_depth: 256,
+        }
+    }
+}
+
+/// One classification reply.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    /// Predicted class.
+    pub class: usize,
+    /// Class probabilities.
+    pub probs: Vec<f32>,
+}
+
+/// The running coordinator: router + per-variant workers.
+pub struct Coordinator {
+    senders: HashMap<String, SyncSender<Request>>,
+    metrics: Arc<Mutex<Metrics>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Manifest the workers were built from.
+    pub manifest: Manifest,
+}
+
+impl Coordinator {
+    /// Start one worker per manifest variant (optionally filtered).
+    pub fn start(cfg: &ServeConfig, only: Option<&[&str]>) -> Result<Self> {
+        let manifest = Manifest::load(&cfg.artifacts)?;
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let mut senders = HashMap::new();
+        let mut handles = Vec::new();
+        for (name, file) in manifest.variants.clone() {
+            if let Some(filter) = only {
+                if !filter.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(cfg.queue_depth);
+            let m = manifest.clone();
+            let dir = cfg.artifacts.clone();
+            let max_wait = cfg.max_wait;
+            let metrics = Arc::clone(&metrics);
+            let vname = name.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("posar-serve-{vname}"))
+                .spawn(move || worker(vname, file, dir, m, rx, max_wait, metrics))
+                .map_err(|e| anyhow!("spawn: {e}"))?;
+            senders.insert(name, tx);
+            handles.push(handle);
+        }
+        anyhow::ensure!(!senders.is_empty(), "no variants started");
+        Ok(Coordinator {
+            senders,
+            metrics,
+            handles,
+            manifest,
+        })
+    }
+
+    /// Variants currently served.
+    pub fn variants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.senders.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Route one request to a variant and wait for the result.
+    pub fn infer(&self, variant: &str, features: Vec<f32>) -> Result<Reply> {
+        let tx = self
+            .senders
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant {variant:?} (have {:?})", self.variants()))?;
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        tx.send(Request {
+            features,
+            reply: rtx,
+            enqueued: std::time::Instant::now(),
+        })
+        .map_err(|_| anyhow!("worker {variant} stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("worker {variant} dropped reply"))?
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Stop all workers and join.
+    pub fn shutdown(mut self) {
+        self.senders.clear(); // closing the channels stops the workers
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker loop: own client + executable, drain-batch-execute-reply.
+fn worker(
+    name: String,
+    file: String,
+    dir: PathBuf,
+    manifest: Manifest,
+    rx: Receiver<Request>,
+    max_wait: Duration,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    let rt = match crate::runtime::Runtime::cpu(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[{name}] PJRT init failed: {e}");
+            return;
+        }
+    };
+    let exe = match rt.load(&name, &file, &manifest) {
+        Ok(exe) => exe,
+        Err(e) => {
+            eprintln!("[{name}] load failed: {e}");
+            return;
+        }
+    };
+    let mut batcher = Batcher::new(exe.batch, max_wait);
+    loop {
+        let batch = match batcher.next_batch(&rx) {
+            Some(b) => b,
+            None => return, // channel closed and drained
+        };
+        let t0 = std::time::Instant::now();
+        let n = batch.len();
+        // Pad the tail with zeros up to the baked batch size.
+        let mut x = vec![0f32; exe.batch * exe.feat];
+        for (i, req) in batch.iter().enumerate() {
+            x[i * exe.feat..(i + 1) * exe.feat].copy_from_slice(&req.features);
+        }
+        match exe.run(&x) {
+            Ok(probs) => {
+                let dt = t0.elapsed();
+                {
+                    let mut m = metrics.lock().unwrap();
+                    for req in &batch {
+                        m.observe(
+                            &name,
+                            req.enqueued.elapsed(),
+                            dt,
+                            n as u64,
+                        );
+                    }
+                }
+                for (i, req) in batch.into_iter().enumerate() {
+                    let row = probs[i * exe.classes..(i + 1) * exe.classes].to_vec();
+                    let class = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| {
+                            a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal)
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    let _ = req.reply.send(Ok(Reply { class, probs: row }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e}");
+                for req in batch {
+                    let _ = req.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}

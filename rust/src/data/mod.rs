@@ -1,0 +1,15 @@
+//! Datasets and workload generators.
+//!
+//! - [`iris`] — the embedded Fisher Iris dataset (level-two benchmarks).
+//! - [`synth`] — the seeded synthetic Cifar-like dataset substituted for
+//!   Cifar-10 (see DESIGN.md §1), shared bit-for-bit with the python side
+//!   via `artifacts/`.
+//! - [`rng`] — a tiny deterministic PRNG (xoshiro256**) used everywhere a
+//!   seeded stream is needed (no external `rand` crate in this offline
+//!   environment).
+
+pub mod iris;
+pub mod rng;
+pub mod synth;
+
+pub use rng::Rng;

@@ -1,0 +1,130 @@
+//! RISC-V F-extension operation model.
+//!
+//! POSAR keeps the RISC-V ISA unchanged (§IV-A: "Without modifying the
+//! ISA, we use the F extension … but change the internal processor
+//! representation of floating-point numbers to posit"). This module
+//! enumerates the computational F-extension instructions both the Rocket
+//! FPU and the POSAR execute, and carries the per-op latency tables used
+//! by the cycle simulator.
+
+pub mod cost;
+
+pub use cost::{CostModel, IntCosts};
+
+/// Computational instructions of the RV32F extension (v20191213), as
+/// listed in the paper's "Supported Instructions" paragraph. Memory ops
+/// (`FLW`/`FSW`) are accounted by the integer/memory side of the core
+/// model, and `rm`-bearing ops take a [`crate::posit::RoundMode`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FOp {
+    /// FADD.S
+    Add,
+    /// FSUB.S
+    Sub,
+    /// FMUL.S
+    Mul,
+    /// FDIV.S
+    Div,
+    /// FSQRT.S
+    Sqrt,
+    /// FMADD.S — `a·b + c`
+    Madd,
+    /// FMSUB.S — `a·b - c`
+    Msub,
+    /// FNMADD.S — `-(a·b) - c`
+    Nmadd,
+    /// FNMSUB.S — `-(a·b) + c`
+    Nmsub,
+    /// FMIN.S
+    Min,
+    /// FMAX.S
+    Max,
+    /// FSGNJ.S
+    SgnJ,
+    /// FSGNJN.S
+    SgnJN,
+    /// FSGNJX.S
+    SgnJX,
+    /// FEQ.S (integer result 0/1)
+    Eq,
+    /// FLT.S
+    Lt,
+    /// FLE.S
+    Le,
+    /// FCLASS.S
+    Class,
+    /// FCVT.W.S — to signed 32-bit integer
+    CvtWS,
+    /// FCVT.WU.S — to unsigned 32-bit integer
+    CvtWuS,
+    /// FCVT.S.W — from signed 32-bit integer
+    CvtSW,
+    /// FCVT.S.WU — from unsigned 32-bit integer
+    CvtSWu,
+    /// FMV.X.W / FMV.W.X — raw bit moves between register files
+    Mv,
+}
+
+impl FOp {
+    /// All ops, for exhaustive tests and the area model.
+    pub const ALL: [FOp; 23] = [
+        FOp::Add,
+        FOp::Sub,
+        FOp::Mul,
+        FOp::Div,
+        FOp::Sqrt,
+        FOp::Madd,
+        FOp::Msub,
+        FOp::Nmadd,
+        FOp::Nmsub,
+        FOp::Min,
+        FOp::Max,
+        FOp::SgnJ,
+        FOp::SgnJN,
+        FOp::SgnJX,
+        FOp::Eq,
+        FOp::Lt,
+        FOp::Le,
+        FOp::Class,
+        FOp::CvtWS,
+        FOp::CvtWuS,
+        FOp::CvtSW,
+        FOp::CvtSWu,
+        FOp::Mv,
+    ];
+
+    /// True for the three-operand fused ops.
+    pub fn is_fma(self) -> bool {
+        matches!(self, FOp::Madd | FOp::Msub | FOp::Nmadd | FOp::Nmsub)
+    }
+
+    /// True if the result is an integer (comparisons, classify, FCVT.W*).
+    pub fn int_result(self) -> bool {
+        matches!(
+            self,
+            FOp::Eq | FOp::Lt | FOp::Le | FOp::Class | FOp::CvtWS | FOp::CvtWuS
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_is_exhaustive_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for op in FOp::ALL {
+            assert!(seen.insert(op));
+        }
+        assert_eq!(seen.len(), 23);
+    }
+
+    #[test]
+    fn fma_classification() {
+        assert!(FOp::Madd.is_fma());
+        assert!(!FOp::Add.is_fma());
+        assert!(FOp::Eq.int_result());
+        assert!(!FOp::Mul.int_result());
+    }
+}

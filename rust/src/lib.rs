@@ -1,0 +1,34 @@
+//! # POSAR — posit arithmetic accuracy & efficiency reproduction
+//!
+//! Library reproduction of *"The Accuracy and Efficiency of Posit
+//! Arithmetic"* (Ciocirlan et al., 2021). The crate is organized like the
+//! paper's system (see `DESIGN.md`):
+//!
+//! - [`posit`] — the POSAR datapath: bit-exact posit arithmetic for any
+//!   `(ps, es)` (Algorithms 1–8), plus the quire extension.
+//! - [`isa`] — the RISC-V F-extension operation model and the per-op
+//!   latency tables of the Rocket FPU vs POSAR.
+//! - [`sim`] — the "Rocket core" execution substrate: backends (IEEE FP32
+//!   FPU, POSAR, hybrid storage/compute, runtime-conversion unit), cycle
+//!   accounting, and the dynamic-range tracer.
+//! - [`bench_suite`] — the paper's level-1/level-2 benchmark programs.
+//! - [`npb`] — the NPB BT (block tri-diagonal) level-3 substrate.
+//! - [`cnn`] — the Cifar-10 CNN tail (level-3 ML inference).
+//! - [`data`] — embedded Iris dataset + synthetic Cifar-like workload.
+//! - [`area`] — FPGA resource (Table VII) and power/energy (§V-F) models.
+//! - [`runtime`] — PJRT loader/executor for AOT-compiled JAX artifacts.
+//! - [`coordinator`] — the L3 serving stack: router, batcher, metrics.
+//! - [`report`] — table/figure renderers that regenerate the paper's
+//!   evaluation section.
+
+pub mod area;
+pub mod bench_suite;
+pub mod cnn;
+pub mod coordinator;
+pub mod data;
+pub mod isa;
+pub mod npb;
+pub mod posit;
+pub mod report;
+pub mod runtime;
+pub mod sim;

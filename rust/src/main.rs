@@ -1,0 +1,223 @@
+//! `repro` — the POSAR reproduction driver.
+//!
+//! Subcommands regenerate each table/figure of the paper (DESIGN.md §4)
+//! and run the serving stack. Hand-rolled argument parsing: the offline
+//! crate set has no clap.
+
+use posar::cnn;
+use posar::coordinator::{Coordinator, ServeConfig};
+use posar::report;
+use std::time::Instant;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command> [options]
+
+paper reproduction:
+  table1                 posit bit-pattern examples (Table I)
+  table3 [--scale N]     level-1 accuracy (Table III; scale divides the
+                         Leibniz 2M iterations, default 100)
+  table4 [--scale N]     level-1 efficiency (Table IV)
+  table5 [--mm N]        level-2 efficiency (Table V; MM size, default 64)
+  table6                 dynamic ranges (Table VI)
+  table7                 FPGA resource model (Table VII)
+  fig3                   runtime-conversion accuracy loss (Figure 3)
+  fig5                   e accuracy/cycles vs iterations (Figure 5)
+  bt [--n N] [--steps S] NPB BT epsilon-validation (default 6^3, 3)
+  cnn [--samples N]      CNN Top-1 + cycles on the simulator (default 64)
+  power [--scale N]      power/energy model (S V-F)
+  ablation               quire vs sequential accumulation
+  all                    everything above at quick-run sizes
+
+serving (PJRT, needs `make artifacts`):
+  serve [--requests N] [--variants a,b,..]
+                         batched inference over the AOT executables
+
+misc:
+  golden [path]          dump posit golden vectors (cross-checked by the
+                         python tests)"
+    );
+    std::process::exit(2)
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn num(args: &[String], name: &str, default: u64) -> u64 {
+    flag(args, name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("");
+    let t0 = Instant::now();
+    match cmd {
+        "table1" => print!("{}", report::table1()),
+        "table3" => print!("{}", report::table3(num(&args, "--scale", 100))),
+        "table4" => print!("{}", report::table4(num(&args, "--scale", 100))),
+        "table5" => print!("{}", report::table5(num(&args, "--mm", 64) as usize)),
+        "table6" => print!("{}", report::table6()),
+        "table7" => print!("{}", report::table7()),
+        "fig3" => print!("{}", report::fig3()),
+        "fig5" => print!("{}", report::fig5()),
+        "bt" => print!(
+            "{}",
+            report::bt_report(
+                num(&args, "--n", 6) as usize,
+                num(&args, "--steps", 3) as usize
+            )
+        ),
+        "cnn" => print!("{}", report::cnn_report(num(&args, "--samples", 64) as usize)),
+        "power" => print!("{}", report::power_report(num(&args, "--scale", 100))),
+        "ablation" => print!("{}", report::quire_ablation()),
+        "all" => {
+            print!("{}", report::table1());
+            print!("\n{}", report::table3(100));
+            print!("\n{}", report::table4(100));
+            print!("\n{}", report::table5(64));
+            print!("\n{}", report::table6());
+            print!("\n{}", report::table7());
+            print!("\n{}", report::fig3());
+            print!("\n{}", report::fig5());
+            print!("\n{}", report::bt_report(6, 3));
+            print!("\n{}", report::cnn_report(64));
+            print!("\n{}", report::power_report(100));
+            print!("\n{}", report::quire_ablation());
+        }
+        "serve" => {
+            let n = num(&args, "--requests", 256) as usize;
+            let variants = flag(&args, "--variants");
+            match serve(n, variants.as_deref()) {
+                Ok(()) => {}
+                Err(e) => {
+                    eprintln!("serve failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "golden" => {
+            let path = args
+                .get(1)
+                .cloned()
+                .unwrap_or_else(|| "python/tests/golden_posit.json".into());
+            golden(&path);
+        }
+        _ => usage(),
+    }
+    eprintln!("[{}] done in {:.2?}", cmd, t0.elapsed());
+}
+
+/// The serving driver: load AOT variants, push a request stream through
+/// the router/batcher, report Top-1 + latency/throughput.
+fn serve(n_requests: usize, variants: Option<&str>) -> anyhow::Result<()> {
+    let cfg = ServeConfig::default();
+    let filter: Option<Vec<&str>> = variants.map(|v| v.split(',').collect());
+    let coord = Coordinator::start(&cfg, filter.as_deref())?;
+    println!("serving variants: {:?}", coord.variants());
+    let (set, canonical) = cnn::weights::set_or_generate(n_requests);
+    println!(
+        "request stream: {} samples ({})",
+        set.len().min(n_requests),
+        if canonical {
+            "canonical test set"
+        } else {
+            "generated"
+        }
+    );
+    let t0 = Instant::now();
+    let mut correct = std::collections::HashMap::<String, usize>::new();
+    let mut total = 0usize;
+    std::thread::scope(|s| {
+        let coord = &coord;
+        let set = &set;
+        let names = coord.variants();
+        let mut joins = Vec::new();
+        for name in names {
+            let h = s.spawn(move || {
+                let mut ok = 0usize;
+                let n = set.len().min(n_requests);
+                for i in 0..n {
+                    let reply = coord
+                        .infer(&name, set.sample(i).to_vec())
+                        .expect("inference");
+                    ok += (reply.class == set.labels[i] as usize) as usize;
+                }
+                (name, ok, n)
+            });
+            joins.push(h);
+        }
+        for j in joins {
+            let (name, ok, n) = j.join().unwrap();
+            correct.insert(name, ok);
+            total = n;
+        }
+    });
+    let dt = t0.elapsed();
+    println!("\nTop-1 per variant ({total} requests each):");
+    let mut names: Vec<_> = correct.keys().cloned().collect();
+    names.sort();
+    for name in names {
+        println!("  {:<8} {:.4}", name, correct[&name] as f64 / total as f64);
+    }
+    let served = correct.len() * total;
+    println!(
+        "\nthroughput: {:.0} req/s over {} variants ({:.2?} total)",
+        served as f64 / dt.as_secs_f64(),
+        correct.len(),
+        dt
+    );
+    println!("\n{}", coord.metrics().render());
+    coord.shutdown();
+    Ok(())
+}
+
+/// Dump golden posit vectors for the cross-language tests.
+fn golden(path: &str) {
+    use posar::posit::{from_f64, to_f64, P16, P32, P8};
+    let mut out = String::from("[\n");
+    let mut first = true;
+    for (spec, name) in [(P8, "p8"), (P16, "p16"), (P32, "p32")] {
+        let mut vals = vec![
+            0.0f64,
+            1.0,
+            -1.0,
+            0.5,
+            -0.5,
+            3.125,
+            -2.0,
+            0.1,
+            -0.1,
+            100.0,
+            1e6,
+            1e-6,
+            1e20,
+            1e-20,
+            std::f64::consts::PI,
+            std::f64::consts::E,
+            1.0 / 3.0,
+        ];
+        let mut rng = posar::data::Rng::new(0x60FD);
+        for _ in 0..50 {
+            vals.push(rng.normal() * 10f64.powi(rng.below(13) as i32 - 6));
+        }
+        for v in vals {
+            let bits = from_f64(spec, v);
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            out.push_str(&format!(
+                "  {{\"fmt\": \"{name}\", \"input\": {v:e}, \"bits\": {bits}, \"value\": {:e}}}",
+                to_f64(spec, bits)
+            ));
+        }
+    }
+    out.push_str("\n]\n");
+    std::fs::write(path, out).expect("write golden file");
+    println!("wrote {path}");
+}

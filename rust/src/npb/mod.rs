@@ -1,0 +1,3 @@
+//! NPB BT (Block Tri-diagonal) — level-three scientific substrate.
+pub mod bt;
+pub mod verify;

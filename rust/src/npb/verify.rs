@@ -1,0 +1,117 @@
+//! NPB-style ε-validation (§V-C level three).
+//!
+//! NPB's `verify()` accepts a run when every verification quantity is
+//! within a class-specific relative threshold ε of the reference. The
+//! paper's finding: BT validates at ε = 10⁻⁴ with Posit(32,3) but needs
+//! ε = 10⁻³ with FP32. This module scans ε decades and reports the
+//! tightest passing threshold per backend.
+
+use super::bt::{run_machine, run_reference, BtProblem, NC};
+use crate::sim::{Backend, Machine};
+
+/// Outcome of a verification run on one backend.
+#[derive(Clone, Debug)]
+pub struct VerifyResult {
+    /// Backend name.
+    pub backend: String,
+    /// Maximum relative deviation across the NC verification norms.
+    pub max_rel_err: f64,
+    /// Tightest passing ε as a power of ten (e.g. -4 means 10⁻⁴), or
+    /// `None` if even 10⁰ fails.
+    pub tightest_eps_pow10: Option<i32>,
+    /// Cycles for the solve.
+    pub cycles: u64,
+}
+
+/// Tightest power-of-ten ε that `max_rel_err` passes.
+pub fn tightest_eps(max_rel_err: f64) -> Option<i32> {
+    if !max_rel_err.is_finite() {
+        return None;
+    }
+    let mut pow = None;
+    for p in (-12..=0).rev() {
+        if max_rel_err < 10f64.powi(p) {
+            pow = Some(p);
+        } else {
+            break;
+        }
+    }
+    // `rev()` makes us scan 0 → -12; the first failure stops tightening.
+    pow
+}
+
+/// Run BT on a backend and validate against the f64 reference.
+pub fn verify(be: &dyn Backend, p: &BtProblem) -> VerifyResult {
+    let reference = run_reference(p);
+    let mut m = Machine::new(be);
+    let got = run_machine(&mut m, p);
+    let max_rel_err = got
+        .iter()
+        .zip(reference.iter())
+        .map(|(g, w)| ((g - w) / w).abs())
+        .fold(0.0f64, f64::max);
+    VerifyResult {
+        backend: be.name(),
+        max_rel_err,
+        tightest_eps_pow10: tightest_eps(max_rel_err),
+        cycles: m.cycles,
+    }
+}
+
+/// Validate all NC norms individually (diagnostics).
+pub fn per_component_errors(be: &dyn Backend, p: &BtProblem) -> [f64; NC] {
+    let reference = run_reference(p);
+    let mut m = Machine::new(be);
+    let got = run_machine(&mut m, p);
+    let mut out = [0f64; NC];
+    for i in 0..NC {
+        out[i] = ((got[i] - reference[i]) / reference[i]).abs();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P32, P8};
+    use crate::sim::{Fpu, Posar};
+
+    #[test]
+    fn eps_scan_logic() {
+        assert_eq!(tightest_eps(0.5), Some(0));
+        assert_eq!(tightest_eps(5e-4), Some(-3));
+        assert_eq!(tightest_eps(5e-5), Some(-4));
+        assert_eq!(tightest_eps(2.0), None);
+        assert_eq!(tightest_eps(f64::NAN), None);
+    }
+
+    #[test]
+    fn p32_validates_tighter_than_fp32() {
+        let p = BtProblem {
+            n: 4,
+            steps: 2,
+            seed: 0xB7,
+        };
+        let f = verify(&Fpu::new(), &p);
+        let q = verify(&Posar::new(P32), &p);
+        let ef = f.tightest_eps_pow10.expect("FP32 must validate");
+        let ep = q.tightest_eps_pow10.expect("P32 must validate");
+        assert!(ep <= ef, "P32 ε=1e{ep} should be at most FP32's 1e{ef}");
+    }
+
+    #[test]
+    fn p8_cannot_validate_tightly() {
+        let p = BtProblem {
+            n: 4,
+            steps: 2,
+            seed: 0xB7,
+        };
+        let r = verify(&Posar::new(P8), &p);
+        // §V-C: Posit(8,1) cannot achieve good accuracy on BT.
+        assert!(
+            r.tightest_eps_pow10.map(|e| e >= -2).unwrap_or(true),
+            "P8 unexpectedly accurate: {:?}",
+            r
+        );
+    }
+}

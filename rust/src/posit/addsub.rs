@@ -1,0 +1,187 @@
+//! Algorithms 3 & 4 — posit addition and subtraction.
+//!
+//! The paper's selector (Algorithm 3) rewrites `a - b` as an addition of
+//! opposite signs, orders the operands by magnitude, and fixes the result
+//! sign; the adder/subtractor (Algorithm 4) aligns fractions by the scale
+//! difference `t`, adds or subtracts, and collects shifted-out bits into
+//! the sticky `bm`. We perform the alignment at full width in `u128`
+//! (exact), clamping only astronomically large `t` to a pure sticky
+//! contribution, so the single rounding happens in the encoder.
+
+use super::decode::decode;
+use super::encode::encode;
+use super::{Decoded, PositSpec, Real};
+
+/// Add (`op == false`) or subtract (`op == true`) two posit patterns.
+pub(crate) fn addsub(spec: PositSpec, a: u32, b: u32, op: bool) -> u32 {
+    let da = decode(spec, a);
+    let db = decode(spec, b);
+
+    // Algorithm 4 lines 2–3: special cases. NaR is absorbing; zero is the
+    // identity (with sign adjustment for subtraction).
+    match (&da, &db) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => return spec.nar(),
+        (Decoded::Zero, Decoded::Zero) => return spec.zero(),
+        (Decoded::Zero, Decoded::Num(_)) => {
+            return if op { spec.negate(b) } else { b };
+        }
+        (Decoded::Num(_), Decoded::Zero) => return a,
+        _ => {}
+    }
+    let (ra, rb) = match (da, db) {
+        (Decoded::Num(ra), Decoded::Num(rb)) => (ra, rb),
+        _ => unreachable!(),
+    };
+
+    // Fold the subtraction into the second operand's sign (Algorithm 3's
+    // op/sign rewriting) and compute exactly.
+    let rb = Real {
+        sign: rb.sign ^ op,
+        ..rb
+    };
+    match real_add(&ra, &rb) {
+        Some(r) => encode(spec, &r),
+        None => spec.zero(), // exact cancellation
+    }
+}
+
+/// Exact sum of two unpacked reals. Returns `None` on exact cancellation.
+/// Ordering by magnitude (the paper's `PositAddSubSelector`) guarantees a
+/// non-negative fraction difference and gives the result its sign.
+pub(crate) fn real_add(x: &Real, y: &Real) -> Option<Real> {
+    // Algorithm 3 lines 19–23: ensure |x| >= |y|.
+    let (hi, lo) = if cmp_magnitude(x, y) >= 0 { (x, y) } else { (y, x) };
+
+    // Align to a common fraction size, then apply the scale difference `t`
+    // (Algorithm 4 line 11: t = (k1<<es + e1) - (k2<<es + e2)).
+    let t = hi.scale - lo.scale;
+    debug_assert!(t >= 0);
+    let fsc = hi.fs.max(lo.fs);
+
+    // Beyond this, `lo` can only influence rounding through the sticky bit.
+    // (fsc + t must also stay within the u128 assembly width.)
+    const TMAX: i64 = 44;
+    if t > TMAX {
+        let same_sign = hi.sign == lo.sign;
+        if same_sign {
+            return Some(Real {
+                sticky: true,
+                ..*hi
+            });
+        }
+        // hi - tiny: borrow one ulp at guard depth so the encoder rounds
+        // toward hi from below rather than above.
+        const G: u32 = 6;
+        let frac = ((hi.frac << G) - 1) as u128;
+        return Real::new(hi.sign, hi.scale, frac, hi.fs + G, true);
+    }
+
+    let fs = fsc + t as u32;
+    let sticky = hi.sticky | lo.sticky;
+
+    // §Perf iteration 3: decoded posits have fs <= 61-bit alignment in
+    // the common case — do it in u64 and only fall back to u128 for the
+    // wide intermediates produced by fma/quire chains.
+    let width = fsc + t as u32 + 2; // +1 hidden, +1 carry
+    if width <= 63 {
+        let fa = ((hi.frac as u64) << (fsc - hi.fs)) << t as u32;
+        let fb = (lo.frac as u64) << (fsc - lo.fs);
+        let f = if hi.sign == lo.sign { fa + fb } else { fa - fb };
+        return Real::new(hi.sign, hi.scale, f as u128, fs, sticky);
+    }
+
+    let fa = (hi.frac << (fsc - hi.fs)) << t as u32; // scale-aligned
+    let fb = lo.frac << (fsc - lo.fs);
+    if hi.sign == lo.sign {
+        // Effective addition (Algorithm 4 line 13).
+        Real::new(hi.sign, hi.scale, fa + fb, fs, sticky)
+    } else {
+        // Effective subtraction (line 15); |hi| >= |lo| keeps this >= 0.
+        Real::new(hi.sign, hi.scale, fa - fb, fs, sticky)
+    }
+}
+
+/// Compare |x| vs |y|: sign of (|x| - |y|).
+fn cmp_magnitude(x: &Real, y: &Real) -> i32 {
+    if x.scale != y.scale {
+        return if x.scale > y.scale { 1 } else { -1 };
+    }
+    // Same scale: compare fractions aligned to a common width.
+    let fsc = x.fs.max(y.fs);
+    let fx = x.frac << (fsc - x.fs);
+    let fy = y.frac << (fsc - y.fs);
+    match fx.cmp(&fy) {
+        std::cmp::Ordering::Greater => 1,
+        std::cmp::Ordering::Less => -1,
+        std::cmp::Ordering::Equal => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{add, from_f64, sub, to_f64, P16, P32, P8};
+
+    #[test]
+    fn simple_sums() {
+        let spec = P32;
+        for (x, y) in [(1.0, 1.0), (1.5, 2.25), (0.1, 0.2), (1e6, 1e-6), (3.0, -3.0)] {
+            let a = from_f64(spec, x);
+            let b = from_f64(spec, y);
+            let s = add(spec, a, b);
+            // Posit(32,3) has >= 26 fraction bits around these values: the
+            // sum must match the f64 sum to f32-grade precision.
+            let got = to_f64(spec, s);
+            let want = to_f64(spec, a) + to_f64(spec, b);
+            assert!(
+                (got - want).abs() <= want.abs() * 1e-7 + 1e-12,
+                "{x}+{y}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn cancellation_and_zero() {
+        let a = from_f64(P16, 42.5);
+        assert_eq!(sub(P16, a, a), 0);
+        assert_eq!(add(P16, a, P16.negate(a)), 0);
+        assert_eq!(add(P16, 0, a), a);
+        assert_eq!(add(P16, a, 0), a);
+        assert_eq!(sub(P16, 0, a), P16.negate(a));
+    }
+
+    #[test]
+    fn nar_absorbs() {
+        let a = from_f64(P8, 1.0);
+        assert_eq!(add(P8, P8.nar(), a), P8.nar());
+        assert_eq!(sub(P8, a, P8.nar()), P8.nar());
+    }
+
+    #[test]
+    fn tiny_plus_huge() {
+        // maxpos + minpos rounds back to maxpos (sticky-only contribution).
+        let s = add(P8, P8.maxpos(), P8.minpos());
+        assert_eq!(s, P8.maxpos());
+        // maxpos - minpos must stay just below maxpos => rounds to the
+        // next-lower posit or maxpos itself depending on ulp; it must NOT
+        // become NaR or jump categories.
+        let d = sub(P8, P8.maxpos(), P8.minpos());
+        assert!(d == P8.maxpos() || d == P8.maxpos() - 1);
+    }
+
+    #[test]
+    fn exhaustive_vs_f64_oracle_p8() {
+        // For Posit(8,1), f64 computes the exact sum of any two posits
+        // (scales within ±24, fractions tiny), so rounding that sum to P8
+        // is the correctly-rounded reference.
+        for a in 0u32..=0xff {
+            for b in 0u32..=0xff {
+                if a == super::super::P8.nar() || b == super::super::P8.nar() {
+                    continue;
+                }
+                let want = super::super::from_f64(P8, to_f64(P8, a) + to_f64(P8, b));
+                let got = add(P8, a, b);
+                assert_eq!(got, want, "a={a:#04x} b={b:#04x}");
+            }
+        }
+    }
+}

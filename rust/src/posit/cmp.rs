@@ -1,0 +1,186 @@
+//! Posit comparisons — the POSAR implementation of `FEQ.S`, `FLT.S`,
+//! `FLE.S`, `FMIN.S`, `FMAX.S`.
+//!
+//! A celebrated posit property: patterns order exactly like two's-
+//! complement integers, so the hardware comparator is the integer ALU.
+//! NaR is the most negative pattern; per the posit standard it is equal to
+//! itself and less than every real (unlike IEEE NaN, which is unordered —
+//! a deliberate, documented semantic difference of the posit ISA).
+
+use super::PositSpec;
+use std::cmp::Ordering;
+
+/// Total order on posit patterns (NaR first, then negative → positive).
+pub fn total_cmp(spec: PositSpec, a: u32, b: u32) -> Ordering {
+    spec.to_i32_pattern(a).cmp(&spec.to_i32_pattern(b))
+}
+
+/// `FEQ.S` — equality. Bit equality is value equality (posits have a
+/// unique representation per value, no ±0 or NaN payloads).
+pub fn eq(spec: PositSpec, a: u32, b: u32) -> bool {
+    (a & spec.mask()) == (b & spec.mask())
+}
+
+/// `FLT.S` — strict less-than.
+pub fn lt(spec: PositSpec, a: u32, b: u32) -> bool {
+    total_cmp(spec, a, b) == Ordering::Less
+}
+
+/// `FLE.S` — less-or-equal.
+pub fn le(spec: PositSpec, a: u32, b: u32) -> bool {
+    total_cmp(spec, a, b) != Ordering::Greater
+}
+
+/// Strict greater-than.
+pub fn gt(spec: PositSpec, a: u32, b: u32) -> bool {
+    total_cmp(spec, a, b) == Ordering::Greater
+}
+
+/// Greater-or-equal.
+pub fn ge(spec: PositSpec, a: u32, b: u32) -> bool {
+    total_cmp(spec, a, b) != Ordering::Less
+}
+
+/// `FMIN.S`. Like RISC-V's NaN handling, a single NaR yields the other
+/// operand; NaR/NaR yields NaR.
+pub fn min(spec: PositSpec, a: u32, b: u32) -> u32 {
+    if a == spec.nar() {
+        return b;
+    }
+    if b == spec.nar() {
+        return a;
+    }
+    if lt(spec, a, b) {
+        a
+    } else {
+        b
+    }
+}
+
+/// `FMAX.S` (same NaR rule as [`min`]).
+pub fn max(spec: PositSpec, a: u32, b: u32) -> u32 {
+    if a == spec.nar() {
+        return b;
+    }
+    if b == spec.nar() {
+        return a;
+    }
+    if gt(spec, a, b) {
+        a
+    } else {
+        b
+    }
+}
+
+/// `FSGNJ.S` — magnitude of `a` with the sign of `b`. On posits this is a
+/// conditional two's-complement negation, not a bit splice.
+pub fn sgnj(spec: PositSpec, a: u32, b: u32) -> u32 {
+    if a == spec.nar() {
+        return a;
+    }
+    let neg_a = spec.to_i32_pattern(a) < 0;
+    let neg_b = spec.to_i32_pattern(b) < 0;
+    if neg_a != neg_b {
+        spec.negate(a)
+    } else {
+        a
+    }
+}
+
+/// `FSGNJN.S` — magnitude of `a` with the opposite of `b`'s sign.
+pub fn sgnjn(spec: PositSpec, a: u32, b: u32) -> u32 {
+    if a == spec.nar() {
+        return a;
+    }
+    let neg_a = spec.to_i32_pattern(a) < 0;
+    let neg_b = spec.to_i32_pattern(b) < 0;
+    if neg_a == neg_b {
+        spec.negate(a)
+    } else {
+        a
+    }
+}
+
+/// `FSGNJX.S` — sign of `a` xor sign of `b` applied to `a`'s magnitude.
+pub fn sgnjx(spec: PositSpec, a: u32, b: u32) -> u32 {
+    if a == spec.nar() {
+        return a;
+    }
+    if spec.to_i32_pattern(b) < 0 {
+        spec.negate(a)
+    } else {
+        a
+    }
+}
+
+/// `FCLASS.S` result mask for posits, using the RISC-V FCLASS bit layout
+/// where applicable: bit 0 = −∞ (never), 1 = negative normal, 3 = −0
+/// (never), 4 = +0, 6 = positive normal, 9 = NaR (mapped to the quiet-NaN
+/// bit). Posits have no subnormals or infinities.
+pub fn classify(spec: PositSpec, a: u32) -> u32 {
+    let a = a & spec.mask();
+    if a == 0 {
+        1 << 4
+    } else if a == spec.nar() {
+        1 << 9
+    } else if spec.to_i32_pattern(a) < 0 {
+        1 << 1
+    } else {
+        1 << 6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{from_f64, P16, P32, P8};
+    use super::*;
+
+    #[test]
+    fn order_matches_values_exhaustive_p8() {
+        // The integer-compare shortcut must agree with value order.
+        for a in 0u32..=0xff {
+            for b in 0u32..=0xff {
+                if a == P8.nar() || b == P8.nar() {
+                    continue;
+                }
+                let va = super::super::to_f64(P8, a);
+                let vb = super::super::to_f64(P8, b);
+                assert_eq!(lt(P8, a, b), va < vb, "a={a:#x} b={b:#x}");
+                assert_eq!(eq(P8, a, b), va == vb);
+            }
+        }
+    }
+
+    #[test]
+    fn nar_ordering_and_minmax() {
+        let one = P32.one();
+        assert!(lt(P32, P32.nar(), one)); // NaR < everything
+        assert!(eq(P32, P32.nar(), P32.nar()));
+        assert_eq!(min(P32, P32.nar(), one), one);
+        assert_eq!(max(P32, P32.nar(), one), one);
+        assert_eq!(min(P32, one, P32.nar()), one);
+        assert_eq!(max(P32, P32.nar(), P32.nar()), P32.nar());
+    }
+
+    #[test]
+    fn sign_injection() {
+        let a = from_f64(P16, 2.5);
+        let nb = from_f64(P16, -7.0);
+        let pb = from_f64(P16, 7.0);
+        assert_eq!(sgnj(P16, a, nb), P16.negate(a));
+        assert_eq!(sgnj(P16, a, pb), a);
+        assert_eq!(sgnjn(P16, a, pb), P16.negate(a));
+        // FABS = FSGNJX(x, x); FNEG = FSGNJN(x, x).
+        let na = P16.negate(a);
+        assert_eq!(sgnjx(P16, na, na), a);
+        assert_eq!(sgnjn(P16, a, a), na);
+    }
+
+    #[test]
+    fn classes() {
+        assert_eq!(classify(P8, 0), 1 << 4);
+        assert_eq!(classify(P8, P8.nar()), 1 << 9);
+        assert_eq!(classify(P8, P8.one()), 1 << 6);
+        assert_eq!(classify(P8, P8.negate(P8.one())), 1 << 1);
+    }
+}

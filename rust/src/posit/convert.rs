@@ -1,0 +1,337 @@
+//! Conversions between posits and IEEE 754 / integer types — the POSAR's
+//! implementation of the RISC-V `FCVT.*` instruction family (§IV-A), plus
+//! posit↔posit resizing used by the hybrid storage/compute mode (§V-C) and
+//! the §IV-B runtime-conversion experiment (Figure 3).
+
+use super::decode::decode;
+use super::encode::encode;
+use super::{Decoded, PositSpec, Real};
+
+/// RISC-V dynamic rounding modes (the `rm` field of F-extension ops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RoundMode {
+    /// Round to nearest, ties to even (RNE) — the default.
+    #[default]
+    Nearest,
+    /// Round towards zero (RTZ).
+    TowardZero,
+    /// Round down (RDN).
+    Down,
+    /// Round up (RUP).
+    Up,
+    /// Round to nearest, ties to max magnitude (RMM).
+    NearestMaxMag,
+}
+
+/// Exact multiply-by-power-of-two for `f64` (no libm; `exp2`/`powi` are not
+/// guaranteed correctly rounded on every platform, and we need exactness
+/// for bit-level golden tests).
+pub(crate) fn ldexp_exact(m: f64, k: i64) -> f64 {
+    let mut v = m;
+    let mut k = k;
+    while k > 1000 {
+        v *= f64::from_bits(((1023 + 1000) as u64) << 52);
+        k -= 1000;
+    }
+    while k < -1000 {
+        v *= f64::from_bits(((1023 - 1000) as u64) << 52);
+        k += 1000;
+    }
+    v * f64::from_bits(((1023 + k) as u64) << 52)
+}
+
+/// Convert an `f64` to the nearest posit. IEEE NaN and ±∞ map to NaR
+/// (posit has no infinities; the standard folds every non-real to NaR).
+pub fn from_f64(spec: PositSpec, v: f64) -> u32 {
+    let bits = v.to_bits();
+    let sign = bits >> 63 == 1;
+    let exp_bits = ((bits >> 52) & 0x7ff) as i64;
+    let mant = bits & ((1u64 << 52) - 1);
+    if exp_bits == 0x7ff {
+        return spec.nar(); // NaN or infinity
+    }
+    if exp_bits == 0 && mant == 0 {
+        return spec.zero(); // ±0
+    }
+    let r = if exp_bits == 0 {
+        // Subnormal: value = mant · 2^(-1074); Real::new renormalizes.
+        Real::new(sign, -1074 + 52, mant as u128, 52, false).unwrap()
+    } else {
+        Real::new(sign, exp_bits - 1023, (1u128 << 52) | mant as u128, 52, false).unwrap()
+    };
+    encode(spec, &r)
+}
+
+/// Convert an `f32` to the nearest posit (exact: `f32 ⊂ f64`).
+pub fn from_f32(spec: PositSpec, v: f32) -> u32 {
+    from_f64(spec, v as f64)
+}
+
+/// Convert a posit to `f64`. Exact for every posit of size ≤ 32: the
+/// fraction has at most 30 bits and the scale at most ±240.
+pub fn to_f64(spec: PositSpec, bits: u32) -> f64 {
+    match decode(spec, bits) {
+        Decoded::Zero => 0.0,
+        Decoded::NaR => f64::NAN,
+        Decoded::Num(r) => r.to_f64(),
+    }
+}
+
+/// Convert a posit to `f32` (single rounding: the intermediate `f64` is
+/// exact, so only the final f64→f32 step rounds).
+pub fn to_f32(spec: PositSpec, bits: u32) -> f32 {
+    to_f64(spec, bits) as f32
+}
+
+/// Re-encode a posit into another format — one rounding step. This is the
+/// hardware conversion the paper's hybrid CNN mode performs between the
+/// Posit(8,1) store and the Posit(16,2) POSAR (§V-C), and what `FCVT.ES`
+/// does in PERI.
+pub fn resize(from: PositSpec, to: PositSpec, bits: u32) -> u32 {
+    match decode(from, bits) {
+        Decoded::Zero => to.zero(),
+        Decoded::NaR => to.nar(),
+        Decoded::Num(r) => encode(to, &r),
+    }
+}
+
+/// Convert a signed 64-bit integer to the nearest posit (`FCVT.S.L`).
+pub fn from_i64(spec: PositSpec, v: i64) -> u32 {
+    if v == 0 {
+        return spec.zero();
+    }
+    let sign = v < 0;
+    let mag = v.unsigned_abs();
+    encode(spec, &Real::new(sign, 63, (mag as u128) << 11, 63 + 11, false).unwrap())
+}
+
+/// Convert an unsigned 64-bit integer to the nearest posit (`FCVT.S.LU`).
+pub fn from_u64(spec: PositSpec, v: u64) -> u32 {
+    if v == 0 {
+        return spec.zero();
+    }
+    encode(spec, &Real::new(false, 63, (v as u128) << 11, 63 + 11, false).unwrap())
+}
+
+/// `FCVT.S.W` — signed 32-bit integer to posit.
+pub fn from_i32(spec: PositSpec, v: i32) -> u32 {
+    from_i64(spec, v as i64)
+}
+
+/// `FCVT.S.WU` — unsigned 32-bit integer to posit.
+pub fn from_u32(spec: PositSpec, v: u32) -> u32 {
+    from_u64(spec, v as u64)
+}
+
+/// Integer conversion core: round a decoded posit to an integer with the
+/// given rounding mode, returning (magnitude, sign).
+fn to_int_parts(r: &Real, rm: RoundMode) -> (u128, bool) {
+    let sign = r.sign;
+    let (int, frac_nonzero, half, below_half_nonzero) = if r.scale >= r.fs as i64 {
+        ((r.frac) << (r.scale - r.fs as i64), false, false, false)
+    } else {
+        let shift = (r.fs as i64 - r.scale) as u32;
+        if shift > 127 {
+            (0u128, true, false, r.frac != 0)
+        } else {
+            let int = r.frac >> shift;
+            let rem = r.frac & ((1u128 << shift) - 1);
+            let half_bit = (r.frac >> (shift - 1)) & 1 == 1;
+            let below = rem & ((1u128 << (shift - 1)) - 1);
+            (int, rem != 0, half_bit, below != 0 || r.sticky)
+        }
+    };
+    let round_up = match rm {
+        RoundMode::Nearest => half && (below_half_nonzero || int & 1 == 1),
+        RoundMode::TowardZero => false,
+        RoundMode::Down => sign && frac_nonzero,
+        RoundMode::Up => !sign && frac_nonzero,
+        RoundMode::NearestMaxMag => half,
+    };
+    (int + round_up as u128, sign)
+}
+
+/// `FCVT.W.S` — posit to signed 32-bit integer. NaR saturates to
+/// `i32::MIN` per the posit standard (documented deviation from IEEE
+/// RISC-V, which returns the max positive integer for NaN).
+pub fn to_i32(spec: PositSpec, bits: u32, rm: RoundMode) -> i32 {
+    match decode(spec, bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => i32::MIN,
+        Decoded::Num(r) => {
+            let (mag, sign) = to_int_parts(&r, rm);
+            if sign {
+                if mag > (i32::MAX as u128) + 1 {
+                    i32::MIN
+                } else {
+                    (mag as i64).wrapping_neg() as i32
+                }
+            } else if mag > i32::MAX as u128 {
+                i32::MAX
+            } else {
+                mag as i32
+            }
+        }
+    }
+}
+
+/// `FCVT.L.S` — posit to signed 64-bit integer.
+pub fn to_i64(spec: PositSpec, bits: u32, rm: RoundMode) -> i64 {
+    match decode(spec, bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => i64::MIN,
+        Decoded::Num(r) => {
+            let (mag, sign) = to_int_parts(&r, rm);
+            if sign {
+                if mag > (i64::MAX as u128) + 1 {
+                    i64::MIN
+                } else {
+                    (mag as i128).wrapping_neg() as i64
+                }
+            } else if mag > i64::MAX as u128 {
+                i64::MAX
+            } else {
+                mag as i64
+            }
+        }
+    }
+}
+
+/// `FCVT.WU.S` — posit to unsigned 32-bit integer (negatives clamp to 0).
+pub fn to_u32(spec: PositSpec, bits: u32, rm: RoundMode) -> u32 {
+    match decode(spec, bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => u32::MAX,
+        Decoded::Num(r) => {
+            let (mag, sign) = to_int_parts(&r, rm);
+            if sign {
+                0
+            } else if mag > u32::MAX as u128 {
+                u32::MAX
+            } else {
+                mag as u32
+            }
+        }
+    }
+}
+
+/// `FCVT.LU.S` — posit to unsigned 64-bit integer.
+pub fn to_u64(spec: PositSpec, bits: u32, rm: RoundMode) -> u64 {
+    match decode(spec, bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => u64::MAX,
+        Decoded::Num(r) => {
+            let (mag, sign) = to_int_parts(&r, rm);
+            if sign {
+                0
+            } else if mag > u64::MAX as u128 {
+                u64::MAX
+            } else {
+                mag as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{P16, P32, P8};
+    use super::*;
+
+    #[test]
+    fn f64_roundtrip_exhaustive_p8() {
+        // Every posit is exactly representable in f64 (paper §V-C cites
+        // [12] for this); converting back must be the identity.
+        for bits in 0u32..=0xff {
+            let v = to_f64(P8, bits);
+            if bits == P8.nar() {
+                assert!(v.is_nan());
+                assert_eq!(from_f64(P8, v), P8.nar());
+            } else {
+                assert_eq!(from_f64(P8, v), bits, "bits={bits:#x} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_exhaustive_p16() {
+        for bits in 0u32..=0xffff {
+            if bits == P16.nar() {
+                continue;
+            }
+            assert_eq!(from_f64(P16, to_f64(P16, bits)), bits);
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_sampled_p32() {
+        // Exhaustive 2^32 is too slow for a unit test; a strided sweep and
+        // the proptest suite cover the space.
+        let mut bits = 1u32;
+        while bits < u32::MAX - 65537 {
+            if bits != P32.nar() {
+                assert_eq!(from_f64(P32, to_f64(P32, bits)), bits);
+            }
+            bits = bits.wrapping_add(65537);
+        }
+    }
+
+    #[test]
+    fn specials_and_extremes() {
+        assert_eq!(from_f64(P32, f64::INFINITY), P32.nar());
+        assert_eq!(from_f64(P32, f64::NEG_INFINITY), P32.nar());
+        assert_eq!(from_f64(P32, f64::NAN), P32.nar());
+        assert_eq!(from_f64(P32, 0.0), 0);
+        assert_eq!(from_f64(P32, -0.0), 0);
+        // Huge / tiny values saturate, never wrap to 0/NaR.
+        assert_eq!(from_f64(P8, 1e30), P8.maxpos());
+        assert_eq!(from_f64(P8, 1e-30), P8.minpos());
+        assert_eq!(from_f64(P8, -1e30), P8.negate(P8.maxpos()));
+        // Paper §V-D: Posit(8,1) minpos = 2^-12 ... maxpos = 2^12 = 4096.
+        assert_eq!(to_f64(P8, P8.maxpos()), 4096.0);
+        assert_eq!(to_f64(P8, P8.minpos()), ldexp_exact(1.0, -12));
+    }
+
+    #[test]
+    fn int_conversions() {
+        for v in [0i64, 1, -1, 2, 7, -20, 150, 1 << 20, -(1 << 23)] {
+            let p = from_i64(P32, v);
+            assert_eq!(to_i64(P32, p, RoundMode::Nearest), v, "v={v}");
+        }
+        // Posit(8,1) has a single fraction bit at scale 7 (regime eats the
+        // word): candidates are 128 and 192, and 150 rounds to 128.
+        let p = from_i64(P8, 150);
+        assert_eq!(to_f64(P8, p), 128.0);
+        // Rounding modes.
+        let half = from_f64(P32, 2.5);
+        assert_eq!(to_i32(P32, half, RoundMode::Nearest), 2); // tie to even
+        assert_eq!(to_i32(P32, half, RoundMode::TowardZero), 2);
+        assert_eq!(to_i32(P32, half, RoundMode::Up), 3);
+        let neg = from_f64(P32, -2.5);
+        assert_eq!(to_i32(P32, neg, RoundMode::Nearest), -2);
+        assert_eq!(to_i32(P32, neg, RoundMode::Down), -3);
+        assert_eq!(to_i32(P32, neg, RoundMode::TowardZero), -2);
+    }
+
+    #[test]
+    fn resize_hybrid() {
+        // The §V-C hybrid path: store P8, compute P16. Round-tripping a P8
+        // value through P16 must be lossless (P16 ⊃ P8 numerically except
+        // saturation, which P16's wider regime range covers).
+        for bits in 0u32..=0xff {
+            if bits == P8.nar() {
+                continue;
+            }
+            let wide = resize(P8, P16, bits);
+            assert_eq!(resize(P16, P8, wide), bits, "bits={bits:#x}");
+        }
+    }
+
+    #[test]
+    fn ldexp_matches_f64_semantics() {
+        assert_eq!(ldexp_exact(1.0, 12), 4096.0);
+        assert_eq!(ldexp_exact(1.5, -1), 0.75);
+        assert_eq!(ldexp_exact(1.0, -1074), f64::from_bits(1)); // min subnormal
+        assert_eq!(ldexp_exact(1.0, -240), 2f64.powi(-240));
+    }
+}

@@ -1,0 +1,193 @@
+//! Algorithm 1 — posit decoding: binary pattern → unpacked representation.
+//!
+//! Mirrors the paper's decoder: special-number detection, two's complement
+//! of negatives, leading-run regime detection (the hardware's
+//! reverse + leading-ones detector), exponent extraction with the
+//! `ers = max(0, min(es, ps - rs - 1))` clamp, and fraction extraction with
+//! the hidden bit restored (`f ← f + 2^fs`, Algorithm 1 line 19).
+
+use super::{Decoded, PositSpec, Real};
+
+/// Decode a `ps`-bit posit pattern into [`Decoded`].
+pub fn decode(spec: PositSpec, bits: u32) -> Decoded {
+    let ps = spec.ps;
+    let es = spec.es;
+    let bits = bits & spec.mask();
+
+    // Lines 1–3: special numbers — all bits zero except possibly the sign.
+    if bits == 0 {
+        return Decoded::Zero;
+    }
+    if bits == spec.nar() {
+        return Decoded::NaR;
+    }
+
+    // Line 3–4: sign, two's complement of negatives.
+    let sign = (bits >> (ps - 1)) & 1 == 1;
+    let mag = if sign { spec.negate(bits) } else { bits };
+
+    let f = fields_of_magnitude(spec, mag);
+
+    let scale = (f.k << es) + f.e as i64;
+    let frac = (f.frac as u128) | (1u128 << f.frs); // hidden bit (line 19)
+
+    Decoded::Num(
+        Real::new(sign, scale, frac, f.frs, false).expect("non-zero magnitude decodes to a Real"),
+    )
+}
+
+/// The raw fields of a posit pattern, as named in the paper's Table II.
+/// Used by the Table I renderer and by tests; `decode` is the fast path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fields {
+    /// Regime value `k` (Equation 1).
+    pub k: i64,
+    /// Regime run length `rn` (bits with the same value).
+    pub rn: u32,
+    /// Regime field size `rs = rn + 1` (capped at `ps - 1`).
+    pub rs: u32,
+    /// Exponent value `e` (after the `<< (es - ers)` widening).
+    pub e: u32,
+    /// Exponent bits actually present in the pattern.
+    pub ers: u32,
+    /// Fraction field value (no hidden bit).
+    pub frac: u32,
+    /// Fraction bits actually present in the pattern.
+    pub frs: u32,
+}
+
+/// Decode the regime/exponent/fraction fields of a *positive* magnitude
+/// (sign already removed via two's complement).
+pub(crate) fn fields_of_magnitude(spec: PositSpec, mag: u32) -> Fields {
+    let ps = spec.ps;
+    let es = spec.es;
+    debug_assert!(mag != 0 && mag >> (ps - 1) == 0, "magnitude must be positive");
+
+    // Lines 5–12: regime run detection. Align bit ps-2 (first regime bit)
+    // with bit 31 so the hardware's leading-ones/zeros detector becomes
+    // `leading_ones`/`leading_zeros`.
+    let shift = 32 - (ps - 1);
+    let r0 = (mag >> (ps - 2)) & 1;
+    let (rn, k) = if r0 == 1 {
+        // Padding with zeros terminates a ones-run correctly.
+        let x = mag << shift;
+        let rn = x.leading_ones().min(ps - 1);
+        (rn, rn as i64 - 1)
+    } else {
+        // Pad with ones so the zero-run terminates at the field boundary.
+        let x = (mag << shift) | ((1u32 << shift) - 1);
+        let rn = x.leading_zeros().min(ps - 1);
+        (rn, -(rn as i64))
+    };
+    let rs = (rn + 1).min(ps - 1); // terminator may be squeezed out
+
+    // Lines 13–15: exponent, with the partial-field clamp and widening.
+    let rem = (ps - 1).saturating_sub(rs);
+    let ers = es.min(rem);
+    let e = if ers == 0 {
+        0
+    } else {
+        let lo = ps - 1 - rs - ers; // bit index of exponent LSB
+        ((mag >> lo) & ((1u32 << ers) - 1)) << (es - ers)
+    };
+
+    // Lines 16–18: fraction.
+    let frs = rem.saturating_sub(es);
+    let frac = if frs == 0 { 0 } else { mag & ((1u32 << frs) - 1) };
+
+    Fields {
+        k,
+        rn,
+        rs,
+        e,
+        ers,
+        frac,
+        frs,
+    }
+}
+
+/// Decode all fields of a pattern (handles sign; panics on 0 / NaR, which
+/// have no fields). For diagnostics, Table I rendering and tests.
+pub fn fields(spec: PositSpec, bits: u32) -> Fields {
+    let bits = bits & spec.mask();
+    assert!(bits != 0 && bits != spec.nar(), "special posits have no fields");
+    let sign = (bits >> (spec.ps - 1)) & 1 == 1;
+    let mag = if sign { spec.negate(bits) } else { bits };
+    fields_of_magnitude(spec, mag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{P16, P32, P8};
+    use super::*;
+
+    #[test]
+    fn decode_specials() {
+        assert!(decode(P8, 0).is_zero());
+        assert!(decode(P8, 0x80).is_nar());
+        assert!(decode(P32, 0).is_zero());
+        assert!(decode(P32, 0x8000_0000).is_nar());
+    }
+
+    #[test]
+    fn decode_one() {
+        for spec in [P8, P16, P32] {
+            match decode(spec, spec.one()) {
+                Decoded::Num(r) => {
+                    assert!(!r.sign);
+                    assert_eq!(r.scale, 0);
+                    assert_eq!(r.frac >> r.fs, 1);
+                    assert_eq!(r.frac & ((1 << r.fs) - 1), 0);
+                }
+                _ => panic!("1.0 must decode as a number"),
+            }
+        }
+    }
+
+    #[test]
+    fn decode_table1_3_125() {
+        // 0 1 0 1 1 0 0 1 = 3.125 in Posit(8,1) (paper Table I).
+        let f = fields(P8, 0b0101_1001);
+        assert_eq!(f.k, 0);
+        assert_eq!(f.rs, 2);
+        assert_eq!(f.e, 1);
+        assert_eq!(f.frs, 4);
+        assert_eq!(f.frac, 0b1001);
+        match decode(P8, 0b0101_1001) {
+            Decoded::Num(r) => assert_eq!(r.to_f64(), 3.125),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn decode_maxpos_minpos() {
+        // maxpos: regime run fills all ps-1 bits, no terminator.
+        match decode(P8, P8.maxpos()) {
+            Decoded::Num(r) => {
+                assert_eq!(r.scale, P8.max_scale());
+                assert_eq!(r.frac, 1);
+            }
+            _ => panic!(),
+        }
+        match decode(P8, P8.minpos()) {
+            Decoded::Num(r) => assert_eq!(r.scale, -P8.max_scale()),
+            _ => panic!(),
+        }
+        match decode(P32, P32.maxpos()) {
+            Decoded::Num(r) => assert_eq!(r.scale, 240),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn decode_negative_two() {
+        // Table I: -2.0 = 1011_0000.
+        match decode(P8, 0b1011_0000) {
+            Decoded::Num(r) => {
+                assert!(r.sign);
+                assert_eq!(r.to_f64(), -2.0);
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Algorithm 6 — posit division.
+//!
+//! Scales subtract (with the borrow the paper handles explicitly in lines
+//! 9–12; our unsplit scale makes it implicit), and the fraction quotient is
+//! computed by widening the dividend (`P1.f << ps`, line 14) so the
+//! quotient carries enough precision; the remainder feeds the sticky `bm`
+//! (line 15) for correct round-to-nearest-even in the encoder.
+
+use super::decode::decode;
+use super::encode::encode;
+use super::{Decoded, PositSpec, Real};
+
+/// Exact-to-sticky quotient of two unpacked reals.
+pub(crate) fn real_div(spec: PositSpec, a: &Real, b: &Real) -> Real {
+    // Widen the dividend so the integer quotient has at least ps+4
+    // significant bits: frac_a/2^fs_a ÷ frac_b/2^fs_b = q / 2^(fs_a+w-fs_b)
+    // with q = (frac_a << w) / frac_b. Choose w so fs_q = ps + 4.
+    let target = spec.ps + 4;
+    let w = (target as i64 + b.fs as i64 - a.fs as i64).max(1) as u32;
+    let num = a.frac << w;
+    let q = num / b.frac;
+    let rem = num % b.frac;
+    Real::new(
+        a.sign ^ b.sign,
+        a.scale - b.scale,
+        q,
+        a.fs + w - b.fs,
+        rem != 0 || a.sticky || b.sticky,
+    )
+    .expect("quotient of normalized fractions is non-zero")
+}
+
+/// Posit division on binary patterns.
+pub(crate) fn div(spec: PositSpec, a: u32, b: u32) -> u32 {
+    let da = decode(spec, a);
+    let db = decode(spec, b);
+    match (da, db) {
+        // Algorithm 6 lines 1–3: NaR absorbs; x/0 = NaR; 0/x = 0.
+        (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
+        (_, Decoded::Zero) => spec.nar(),
+        (Decoded::Zero, _) => spec.zero(),
+        (Decoded::Num(ra), Decoded::Num(rb)) => encode(spec, &real_div(spec, &ra, &rb)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{div, from_f64, to_f64, P16, P32, P8};
+
+    #[test]
+    fn exhaustive_vs_f64_oracle_p8() {
+        // f64 quotients are NOT exact in general, but any P8 quotient has
+        // well under 53 significant bits of separation from the nearest
+        // P8 rounding boundary except exact ties — and ties in a binary
+        // quotient of 9-bit fractions are exactly representable in f64.
+        // Hence round(f64-quotient) is a correct reference for P8.
+        for a in 0u32..=0xff {
+            for b in 0u32..=0xff {
+                if a == P8.nar() || b == P8.nar() || b == 0 {
+                    continue;
+                }
+                let want = from_f64(P8, to_f64(P8, a) / to_f64(P8, b));
+                let got = div(P8, a, b);
+                assert_eq!(got, want, "a={a:#04x} b={b:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn specials() {
+        let one = P32.one();
+        assert_eq!(div(P32, one, 0), P32.nar());
+        assert_eq!(div(P32, 0, one), 0);
+        assert_eq!(div(P32, P32.nar(), one), P32.nar());
+        assert_eq!(div(P32, 0, 0), P32.nar());
+    }
+
+    #[test]
+    fn exact_quotients() {
+        for (x, y) in [(6.0, 3.0), (1.0, 2.0), (100.0, 8.0), (-9.0, 3.0)] {
+            let q = div(P16, from_f64(P16, x), from_f64(P16, y));
+            assert_eq!(to_f64(P16, q), x / y);
+        }
+    }
+
+    #[test]
+    fn repeating_quotient_rounds() {
+        // 1/3 in Posit(32,3) must equal the correctly rounded value.
+        let q = div(P32, P32.one(), from_f64(P32, 3.0));
+        let direct = from_f64(P32, 1.0 / 3.0);
+        assert_eq!(q, direct);
+    }
+}

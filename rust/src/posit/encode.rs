@@ -1,0 +1,167 @@
+//! Algorithm 2 — posit encoding: unpacked representation → binary pattern,
+//! with round-to-nearest, ties-to-even.
+//!
+//! The paper's encoder assembles {regime, exponent, fraction} in a `3·ps`
+//! buffer, keeps the first unrepresentable bit in `b_{n+1}` and the OR of
+//! everything after it in `bm`, and adds
+//! `addOne = b_{n+1} & (bm | (~bm & BP[1]))` — round-to-nearest-even.
+//! We assemble in a `u128` (the [`super::Real`] normalizer guarantees the
+//! assembly fits) and apply the identical rounding rule.
+//!
+//! Saturation follows Algorithm 2 exactly: regimes at or beyond the format
+//! edge clamp to `maxpos` / `minpos` — posits never round to 0 or NaR.
+
+use super::{PositSpec, Real};
+
+/// Encode an exact unpacked value into the nearest `ps`-bit posit pattern.
+pub fn encode(spec: PositSpec, r: &Real) -> u32 {
+    let ps = spec.ps as i64;
+    let es = spec.es as i64;
+
+    // Split the total scale into regime k and exponent e (Euclidean:
+    // 0 <= e < 2^es even for negative scales).
+    let k = r.scale >> es;
+    let e = (r.scale - (k << es)) as u128;
+
+    // Lines 5–8: regime saturation. k == ps-2 is exactly maxpos's regime
+    // (run of ps-1 identical bits, no terminator), and anything it would
+    // carry in exponent/fraction is unrepresentable -> maxpos.
+    let mag = if k >= ps - 2 {
+        spec.maxpos()
+    } else if k < -(ps - 2) {
+        spec.minpos()
+    } else {
+        // Lines 10–19: regime pattern and size.
+        let (regime, rs) = if k >= 0 {
+            // k+1 ones then a zero.
+            let rn = (k + 1) as u32;
+            ((((1u128 << rn) - 1) << 1), rn + 1)
+        } else {
+            // -k zeros then a one.
+            let rn = (-k) as u32;
+            (1u128, rn + 1)
+        };
+
+        // Perf (§Perf iteration 1): pre-truncate the fraction to the
+        // bits the body can actually hold plus one guard bit, folding the
+        // rest into sticky. The assembly then always fits a u64 (the
+        // natural software rendering of the paper's 3·ps-bit buffer).
+        let body = ps - 1; // bits available after the sign
+        let needed = (body - rs as i64 - es).max(0) as u32 + 1; // + guard
+        let (frac, fs, pre_sticky) = if r.fs > needed {
+            let drop = r.fs - needed;
+            let dropped = r.frac & ((1u128 << drop) - 1);
+            (
+                (r.frac >> drop) as u64,
+                needed,
+                dropped != 0 || r.sticky,
+            )
+        } else {
+            (r.frac as u64, r.fs, r.sticky)
+        };
+
+        // Lines 20–23: assemble regime|exponent|fraction.
+        let regime = regime as u64;
+        let frac_low = frac & ((1u64 << fs) - 1); // strip hidden bit
+        let acc = (((regime << es) | e as u64) << fs) | frac_low;
+        let len = rs as i64 + es + fs as i64; // total assembled bits
+
+        let (mut mag, b_next, bm) = if len <= body {
+            // Everything fits; pad fraction with zeros.
+            ((acc << (body - len)) as u32, false, pre_sticky)
+        } else {
+            // Lines 24–25: guard bit b_{n+1} and sticky bm.
+            let shift = (len - body) as u32;
+            let kept = (acc >> shift) as u32;
+            let b_next = (acc >> (shift - 1)) & 1 == 1;
+            let below = acc & ((1u64 << (shift - 1)) - 1);
+            (kept, b_next, below != 0 || pre_sticky)
+        };
+
+        // Line 26–27: addOne = b_{n+1} & (bm | (~bm & BP[1])).
+        if b_next && (bm || (mag & 1) == 1) {
+            mag += 1;
+        }
+        // Rounding can only reach maxpos from below (k is already < ps-2),
+        // never cross into NaR; and the regime's leading 1 keeps mag >= 1.
+        debug_assert!(mag <= spec.maxpos() && mag >= 1);
+        mag
+    };
+
+    // Line 28: negatives are the two's complement of the magnitude.
+    if r.sign {
+        spec.negate(mag)
+    } else {
+        mag
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decode::decode;
+    use super::super::{Decoded, P16, P32, P8, PositSpec};
+    use super::*;
+
+    /// Round-trip: every decodable pattern must re-encode to itself.
+    fn roundtrip_all(spec: PositSpec) {
+        for bits in 0..=(spec.mask() as u64) {
+            let bits = bits as u32;
+            match decode(spec, bits) {
+                Decoded::Num(r) => {
+                    assert_eq!(
+                        encode(spec, &r),
+                        bits,
+                        "round-trip failed for {:#x} in {:?}",
+                        bits,
+                        spec
+                    );
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_p8_exhaustive() {
+        roundtrip_all(P8);
+    }
+
+    #[test]
+    fn roundtrip_p16_exhaustive() {
+        roundtrip_all(P16);
+    }
+
+    #[test]
+    fn roundtrip_all_specs_8bit() {
+        for es in 0..=3 {
+            roundtrip_all(PositSpec::new(8, es));
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        // Values beyond maxpos clamp to maxpos, never to NaR (Algorithm 2).
+        let r = Real::new(false, P8.max_scale() + 5, 1, 0, false).unwrap();
+        assert_eq!(encode(P8, &r), P8.maxpos());
+        // Values below minpos clamp to minpos, never to zero.
+        let r = Real::new(false, -P8.max_scale() - 5, 1, 0, false).unwrap();
+        assert_eq!(encode(P8, &r), P8.minpos());
+        // Negative saturation.
+        let r = Real::new(true, P32.max_scale() + 1, 1, 0, false).unwrap();
+        assert_eq!(encode(P32, &r), P32.negate(P32.maxpos()));
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // In Posit(8,1) the ulp at 1.0 is 1/16. The midpoint 1+1/32 between
+        // 1.0 (0x40) and 1+1/16 (0x41) must round to the even pattern 0x40;
+        // the midpoint 1+3/32 between 0x41 and 0x42 rounds up to even 0x42.
+        let mid = Real::new(false, 0, (1 << 5) | 1, 5, false).unwrap();
+        assert_eq!(encode(P8, &mid), 0x40);
+        let mid = Real::new(false, 0, (1 << 5) | 3, 5, false).unwrap();
+        assert_eq!(encode(P8, &mid), 0x42);
+        // Sticky breaks the tie upward.
+        let mid = Real::new(false, 0, (1 << 5) | 1, 5, true).unwrap();
+        assert_eq!(encode(P8, &mid), 0x41);
+    }
+}

@@ -1,0 +1,391 @@
+//! Posit arithmetic core — the software model of the paper's POSAR datapath.
+//!
+//! This module implements the posit numeric format exactly as described in
+//! §IV-A of *"The Accuracy and Efficiency of Posit Arithmetic"*: a
+//! parameterized `(ps, es)` representation (Algorithm 1 decoder, Algorithm 2
+//! round-to-nearest-even encoder with the `b_{n+1}`/`bm` guard/sticky bits),
+//! the add/sub selector (Algorithm 3), adder/subtractor (Algorithm 4),
+//! multiplier (Algorithm 5), divider (Algorithm 6), and the non-restoring
+//! square root (Algorithms 7–8).
+//!
+//! All arithmetic is *bit-exact*: operations are computed on an exact
+//! unpacked representation ([`Real`]) wide enough to hold the infinitely
+//! precise result (or a guard/sticky compression of it) and rounded exactly
+//! once by the encoder. The paper's hardware pipeline does the same thing
+//! with fixed-width buffers; we use `u128` intermediates instead, which is
+//! the natural software rendering of the same algorithm.
+//!
+//! The three instantiations evaluated in the paper are exported as
+//! [`P8`] = Posit(8,1), [`P16`] = Posit(16,2) and [`P32`] = Posit(32,3).
+
+mod addsub;
+mod cmp;
+mod convert;
+mod decode;
+mod div;
+mod encode;
+mod mul;
+pub mod packed;
+pub mod quire;
+mod sqrt;
+
+pub use cmp::{classify, eq, ge, gt, le, lt, max as cmp_max, min as cmp_min, sgnj, sgnjn, sgnjx, total_cmp};
+pub use mul::fma_full;
+pub use convert::{
+    from_f32, from_f64, from_i32, from_i64, from_u32, from_u64, resize, to_f32, to_f64, to_i32,
+    to_i64, to_u32, to_u64, RoundMode,
+};
+pub use decode::{decode, fields, Fields};
+pub use encode::encode;
+pub use quire::Quire;
+
+/// A posit format: total size `ps` (2..=32 bits) and exponent size `es`.
+///
+/// The paper's "elasticity" is exactly this parameterization: POSAR is
+/// instantiated per workload with the smallest `(ps, es)` that meets the
+/// accuracy target (§IV-A *Elasticity*, §V-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PositSpec {
+    /// Total posit size in bits (`ps` in the paper). 2..=32.
+    pub ps: u32,
+    /// Exponent field size in bits (`es` in the paper). 0..=4.
+    pub es: u32,
+}
+
+/// Posit(8,1) — the 8-bit format evaluated in the paper.
+pub const P8: PositSpec = PositSpec { ps: 8, es: 1 };
+/// Posit(16,2) — the 16-bit format evaluated in the paper.
+pub const P16: PositSpec = PositSpec { ps: 16, es: 2 };
+/// Posit(32,3) — the 32-bit format evaluated in the paper.
+pub const P32: PositSpec = PositSpec { ps: 32, es: 3 };
+
+impl PositSpec {
+    /// New spec; panics on out-of-range parameters (hardware elaboration
+    /// would equally reject them).
+    pub fn new(ps: u32, es: u32) -> Self {
+        assert!((2..=32).contains(&ps), "posit size must be in 2..=32");
+        assert!(es <= 4, "exponent size must be in 0..=4");
+        Self { ps, es }
+    }
+
+    /// Bit mask covering the `ps` valid bits of a binary representation.
+    #[inline]
+    pub fn mask(&self) -> u32 {
+        if self.ps == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.ps) - 1
+        }
+    }
+
+    /// Binary pattern of posit zero.
+    #[inline]
+    pub fn zero(&self) -> u32 {
+        0
+    }
+
+    /// Binary pattern of NaR (not-a-real): sign bit set, all others zero.
+    #[inline]
+    pub fn nar(&self) -> u32 {
+        1u32 << (self.ps - 1)
+    }
+
+    /// Binary pattern of `maxpos`, the largest representable posit
+    /// (`useed^(ps-2)` = `2^((ps-2)·2^es)`): `0111…1`.
+    #[inline]
+    pub fn maxpos(&self) -> u32 {
+        (1u32 << (self.ps - 1)) - 1
+    }
+
+    /// Binary pattern of `minpos`, the smallest positive posit: `0…01`.
+    #[inline]
+    pub fn minpos(&self) -> u32 {
+        1
+    }
+
+    /// Binary pattern of 1.0 (`010…0`).
+    #[inline]
+    pub fn one(&self) -> u32 {
+        1u32 << (self.ps - 2)
+    }
+
+    /// The scale (power of two) of `maxpos`: `(ps-2)·2^es`.
+    #[inline]
+    pub fn max_scale(&self) -> i64 {
+        ((self.ps - 2) as i64) << self.es
+    }
+
+    /// Two's-complement negation within `ps` bits. Note that posit negation
+    /// is arithmetic negation of the pattern, *not* a sign-bit flip.
+    #[inline]
+    pub fn negate(&self, bits: u32) -> u32 {
+        (bits.wrapping_neg()) & self.mask()
+    }
+
+    /// Sign-extend a `ps`-bit pattern to an `i32` (posits order like
+    /// two's-complement integers, which makes comparisons trivial).
+    #[inline]
+    pub fn to_i32_pattern(&self, bits: u32) -> i32 {
+        ((bits << (32 - self.ps)) as i32) >> (32 - self.ps)
+    }
+}
+
+/// Exact unpacked number used as the arithmetic interchange form.
+///
+/// Value = `(-1)^sign · 2^scale · frac / 2^fs`, with the *hidden bit*
+/// invariant `2^fs <= frac < 2^(fs+1)` after [`Real::normalize`].
+/// `sticky` records that non-zero bits below `frac`'s LSB were discarded
+/// (the paper's `bm` bit); the encoder folds it into round-to-nearest-even.
+#[derive(Clone, Copy, Debug)]
+pub struct Real {
+    /// Sign: true = negative (the paper's `s`).
+    pub sign: bool,
+    /// Total binary scale `k·2^es + e` (unsplit; the encoder re-splits).
+    pub scale: i64,
+    /// Fraction with hidden bit, `frac/2^fs ∈ [1, 2)`.
+    pub frac: u128,
+    /// Fraction size in bits below the hidden bit (the paper's `fs`).
+    pub fs: u32,
+    /// Sticky bit: discarded non-zero low-order bits (the paper's `bm`).
+    pub sticky: bool,
+}
+
+impl Real {
+    /// Construct from raw parts and normalize.
+    pub fn new(sign: bool, scale: i64, frac: u128, fs: u32, sticky: bool) -> Option<Self> {
+        let mut r = Real {
+            sign,
+            scale,
+            frac,
+            fs,
+            sticky,
+        };
+        if r.frac == 0 {
+            return None; // exact zero (sticky-only values saturate to minpos at encode)
+        }
+        r.normalize();
+        Some(r)
+    }
+
+    /// Restore the hidden-bit invariant: shift so that `frac`'s MSB sits at
+    /// bit `fs`, adjusting `scale`. Also compresses very wide fractions,
+    /// folding dropped bits into `sticky`, so `rs + es + fs` always fits the
+    /// encoder's `u128` assembly buffer (the hardware analogue is the
+    /// fixed `3·ps` pipeline buffer of Algorithm 2).
+    pub fn normalize(&mut self) {
+        debug_assert!(self.frac != 0);
+        let top = 127 - self.frac.leading_zeros(); // index of MSB
+        self.scale += top as i64 - self.fs as i64;
+        self.fs = top;
+        // Compress: keep at most 80 fraction bits (far more than any
+        // encodable posit needs: ps-2+guard ≈ 33 for ps=32).
+        const FMAX: u32 = 80;
+        if self.fs > FMAX {
+            let drop = self.fs - FMAX;
+            let dropped = self.frac & ((1u128 << drop) - 1);
+            self.sticky |= dropped != 0;
+            self.frac >>= drop;
+            self.fs = FMAX;
+        }
+    }
+
+    /// The value as an `f64` (exact for any decoded posit up to 32 bits).
+    pub fn to_f64(&self) -> f64 {
+        let m = self.frac as f64; // exact: decoded posits have < 53 frac bits
+        let v = convert::ldexp_exact(m, self.scale - self.fs as i64);
+        if self.sign {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+/// Result of decoding a posit binary pattern: one of the two special
+/// numbers, or an exact unpacked [`Real`].
+#[derive(Clone, Copy, Debug)]
+pub enum Decoded {
+    /// Posit zero (pattern `0…0`).
+    Zero,
+    /// Not-a-real (pattern `10…0`).
+    NaR,
+    /// A finite non-zero number.
+    Num(Real),
+}
+
+impl Decoded {
+    /// True if zero.
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        matches!(self, Decoded::Zero)
+    }
+    /// True if NaR.
+    #[inline]
+    pub fn is_nar(&self) -> bool {
+        matches!(self, Decoded::NaR)
+    }
+}
+
+/// Posit addition: `a + b` on `ps`-bit patterns (Algorithms 3–4 + encode).
+pub fn add(spec: PositSpec, a: u32, b: u32) -> u32 {
+    addsub::addsub(spec, a, b, false)
+}
+
+/// Posit subtraction: `a - b` (Algorithms 3–4 + encode).
+pub fn sub(spec: PositSpec, a: u32, b: u32) -> u32 {
+    addsub::addsub(spec, a, b, true)
+}
+
+/// Posit multiplication (Algorithm 5 + encode).
+pub fn mul(spec: PositSpec, a: u32, b: u32) -> u32 {
+    mul::mul(spec, a, b)
+}
+
+/// Posit division (Algorithm 6 + encode).
+pub fn div(spec: PositSpec, a: u32, b: u32) -> u32 {
+    div::div(spec, a, b)
+}
+
+/// Posit square root (Algorithms 7–8 + encode).
+pub fn sqrt(spec: PositSpec, a: u32) -> u32 {
+    sqrt::sqrt(spec, a)
+}
+
+/// Fused multiply-add `a·b + c` with a *single* rounding, as required for
+/// the RISC-V `FMADD.S` family the POSAR executes.
+pub fn fma(spec: PositSpec, a: u32, b: u32, c: u32) -> u32 {
+    mul::fma(spec, a, b, c)
+}
+
+/// Arithmetic negation (`FSGNJN(x, x)` on the POSAR): two's complement of
+/// the pattern. Negating NaR or zero yields itself.
+pub fn neg(spec: PositSpec, a: u32) -> u32 {
+    if a == spec.nar() {
+        a
+    } else {
+        spec.negate(a)
+    }
+}
+
+/// Absolute value (`FSGNJX(x, x)`).
+pub fn abs(spec: PositSpec, a: u32) -> u32 {
+    if a == spec.nar() {
+        a
+    } else if spec.to_i32_pattern(a) < 0 {
+        spec.negate(a)
+    } else {
+        a
+    }
+}
+
+/// A posit value paired with its format — the ergonomic front door of the
+/// library (examples and tests use this; the simulator works on raw `u32`
+/// patterns like the hardware register file does).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Posit {
+    /// Binary representation (low `ps` bits significant).
+    pub bits: u32,
+    /// Format.
+    pub spec: PositSpec,
+}
+
+impl Posit {
+    /// Wrap an existing pattern.
+    pub fn from_bits(spec: PositSpec, bits: u32) -> Self {
+        Self {
+            bits: bits & spec.mask(),
+            spec,
+        }
+    }
+    /// Round an `f64` to the nearest posit.
+    pub fn from_f64(spec: PositSpec, v: f64) -> Self {
+        Self {
+            bits: from_f64(spec, v),
+            spec,
+        }
+    }
+    /// Exact value as `f64`.
+    pub fn to_f64(&self) -> f64 {
+        to_f64(self.spec, self.bits)
+    }
+    /// True if this is NaR.
+    pub fn is_nar(&self) -> bool {
+        self.bits == self.spec.nar()
+    }
+    /// True if this is zero.
+    pub fn is_zero(&self) -> bool {
+        self.bits == 0
+    }
+}
+
+macro_rules! posit_binop {
+    ($trait:ident, $m:ident, $f:path) => {
+        impl std::ops::$trait for Posit {
+            type Output = Posit;
+            fn $m(self, rhs: Posit) -> Posit {
+                assert_eq!(self.spec, rhs.spec, "posit format mismatch");
+                Posit::from_bits(self.spec, $f(self.spec, self.bits, rhs.bits))
+            }
+        }
+    };
+}
+posit_binop!(Add, add, add);
+posit_binop!(Sub, sub, sub);
+posit_binop!(Mul, mul, mul);
+posit_binop!(Div, div, div);
+
+impl std::ops::Neg for Posit {
+    type Output = Posit;
+    fn neg(self) -> Posit {
+        Posit::from_bits(self.spec, neg(self.spec, self.bits))
+    }
+}
+
+impl std::fmt::Display for Posit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_nar() {
+            write!(f, "NaR")
+        } else {
+            write!(f, "{}", self.to_f64())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_constants() {
+        assert_eq!(P8.nar(), 0x80);
+        assert_eq!(P8.maxpos(), 0x7f);
+        assert_eq!(P8.one(), 0x40);
+        assert_eq!(P16.nar(), 0x8000);
+        assert_eq!(P32.nar(), 0x8000_0000);
+        assert_eq!(P8.max_scale(), 12);
+        assert_eq!(P16.max_scale(), 56);
+        assert_eq!(P32.max_scale(), 240);
+    }
+
+    #[test]
+    fn table1_examples() {
+        // Table I of the paper: example Posit(8,1) patterns.
+        assert_eq!(from_f64(P8, 0.0), 0b0000_0000);
+        assert_eq!(from_f64(P8, 1.0), 0b0100_0000);
+        assert_eq!(from_f64(P8, -2.0), 0b1011_0000);
+        assert_eq!(from_f64(P8, 3.125), 0b0101_1001);
+        assert_eq!(from_f64(P8, f64::NAN), 0b1000_0000);
+    }
+
+    #[test]
+    fn posit_value_ops() {
+        let a = Posit::from_f64(P32, 1.5);
+        let b = Posit::from_f64(P32, 2.5);
+        assert_eq!((a + b).to_f64(), 4.0);
+        assert_eq!((a * b).to_f64(), 3.75);
+        assert_eq!((b - a).to_f64(), 1.0);
+        // Division rounds to the nearest Posit(32,3), not the f64 value.
+        assert_eq!((b / a).bits, from_f64(P32, 2.5 / 1.5));
+        assert_eq!((-a).to_f64(), -1.5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Algorithm 5 — posit multiplication (and the fused multiply-add built on
+//! its exact product).
+//!
+//! The product of two decoded posits is computed exactly: scales add
+//! (`P3.k ← P1.k + P2.k`, `P3.e ← P1.e + P2.e` — we keep the unsplit scale
+//! so the carry between `e` and `k` is implicit), fractions multiply into a
+//! double-width register (`P3.f ← P1.f · P2.f`, `P3.fs ← P1.fs + P2.fs`),
+//! and the encoder performs the single rounding.
+
+use super::addsub::real_add;
+use super::decode::decode;
+use super::encode::encode;
+use super::{Decoded, PositSpec, Real};
+
+/// Exact product of two unpacked reals (no rounding).
+pub(crate) fn real_mul(a: &Real, b: &Real) -> Real {
+    // Fractions are <= 2^53-grade after decode; the 128-bit product is
+    // exact. Real::new renormalizes the hidden bit (the product of two
+    // [1,2) fractions lies in [1,4)).
+    Real::new(
+        a.sign ^ b.sign,
+        a.scale + b.scale,
+        a.frac * b.frac,
+        a.fs + b.fs,
+        a.sticky | b.sticky,
+    )
+    .expect("non-zero fractions have a non-zero product")
+}
+
+/// Posit multiplication on binary patterns.
+pub(crate) fn mul(spec: PositSpec, a: u32, b: u32) -> u32 {
+    let da = decode(spec, a);
+    let db = decode(spec, b);
+    match (da, db) {
+        // Algorithm 5 lines 1–2: NaR absorbs; zero wins otherwise.
+        (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
+        (Decoded::Zero, _) | (_, Decoded::Zero) => spec.zero(),
+        (Decoded::Num(ra), Decoded::Num(rb)) => encode(spec, &real_mul(&ra, &rb)),
+    }
+}
+
+/// Fused multiply-add `a·b + c` with a single rounding — the POSAR
+/// implementation of `FMADD.S`/`FMSUB.S`/`FNMADD.S`/`FNMSUB.S`.
+/// `negate_product` and `negate_c` select among the four variants.
+pub fn fma_full(
+    spec: PositSpec,
+    a: u32,
+    b: u32,
+    c: u32,
+    negate_product: bool,
+    negate_c: bool,
+) -> u32 {
+    let da = decode(spec, a);
+    let db = decode(spec, b);
+    let dc = decode(spec, c);
+    if da.is_nar() || db.is_nar() || dc.is_nar() {
+        return spec.nar();
+    }
+    let prod = match (da, db) {
+        (Decoded::Num(ra), Decoded::Num(rb)) => {
+            let mut p = real_mul(&ra, &rb);
+            p.sign ^= negate_product;
+            Some(p)
+        }
+        _ => None, // exact zero product
+    };
+    let addend = match dc {
+        Decoded::Num(rc) => Some(Real {
+            sign: rc.sign ^ negate_c,
+            ..rc
+        }),
+        _ => None,
+    };
+    match (prod, addend) {
+        (None, None) => spec.zero(),
+        (Some(p), None) => encode(spec, &p),
+        (None, Some(c)) => encode(spec, &c),
+        (Some(p), Some(c)) => match real_add(&p, &c) {
+            Some(r) => encode(spec, &r),
+            None => spec.zero(),
+        },
+    }
+}
+
+/// `FMADD.S`: `a·b + c`, single rounding.
+pub(crate) fn fma(spec: PositSpec, a: u32, b: u32, c: u32) -> u32 {
+    fma_full(spec, a, b, c, false, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{from_f64, mul, to_f64, P16, P32, P8};
+    use super::*;
+
+    #[test]
+    fn exhaustive_vs_f64_oracle_p8() {
+        // f64 products of two P8 values are exact, so round(f64-product)
+        // is the correctly-rounded reference.
+        for a in 0u32..=0xff {
+            for b in 0u32..=0xff {
+                if a == P8.nar() || b == P8.nar() {
+                    continue;
+                }
+                let want = from_f64(P8, to_f64(P8, a) * to_f64(P8, b));
+                let got = mul(P8, a, b);
+                assert_eq!(got, want, "a={a:#04x} b={b:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn specials() {
+        let one = P16.one();
+        assert_eq!(mul(P16, P16.nar(), one), P16.nar());
+        assert_eq!(mul(P16, one, P16.nar()), P16.nar());
+        assert_eq!(mul(P16, 0, one), 0);
+        assert_eq!(mul(P16, one, 0), 0);
+        // NaR · 0 = NaR (NaR dominates, Algorithm 5 checks NaR first).
+        assert_eq!(mul(P16, P16.nar(), 0), P16.nar());
+    }
+
+    #[test]
+    fn saturation() {
+        // maxpos · maxpos saturates to maxpos (no overflow to NaR).
+        assert_eq!(mul(P8, P8.maxpos(), P8.maxpos()), P8.maxpos());
+        assert_eq!(mul(P8, P8.minpos(), P8.minpos()), P8.minpos());
+    }
+
+    #[test]
+    fn fma_single_rounding() {
+        // Choose values where round(round(a*b)+c) != round(a*b+c):
+        // in Posit(8,1), a=b=1+5/16: a*b = 1.72265625; the two-step path
+        // rounds the product to 1.75 first.
+        let spec = P8;
+        let a = from_f64(spec, 1.3125);
+        let c = from_f64(spec, -1.6875);
+        let fused = fma(spec, a, a, c);
+        let two_step = super::super::add(spec, mul(spec, a, a), c);
+        let exact = 1.3125f64 * 1.3125 - 1.6875;
+        assert_eq!(to_f64(spec, fused), {
+            // correctly rounded single-step reference
+            to_f64(spec, from_f64(spec, exact))
+        });
+        assert_ne!(fused, two_step, "test vector must expose double rounding");
+    }
+
+    #[test]
+    fn fma_variants() {
+        let spec = P32;
+        let a = from_f64(spec, 3.0);
+        let b = from_f64(spec, 5.0);
+        let c = from_f64(spec, 7.0);
+        assert_eq!(to_f64(spec, fma_full(spec, a, b, c, false, false)), 22.0);
+        assert_eq!(to_f64(spec, fma_full(spec, a, b, c, false, true)), 8.0); // msub
+        assert_eq!(to_f64(spec, fma_full(spec, a, b, c, true, true)), -22.0); // nmadd
+        assert_eq!(to_f64(spec, fma_full(spec, a, b, c, true, false)), -8.0); // nmsub
+    }
+}

@@ -1,0 +1,288 @@
+//! Quire — the posit standard's exact fixed-point accumulator.
+//!
+//! The paper *discusses and rejects* the quire for POSAR (§II-B: ~10× area,
+//! ~8× latency per De Dinechin et al.). We ship it anyway as the paper's
+//! explicitly-named design alternative so the accuracy ablation
+//! (`benches/paper_tables.rs` and `repro ablation`) can quantify what POSAR
+//! gives up: dot products and sums accumulate *exactly* in the quire and
+//! round once at the end.
+//!
+//! Layout: a two's-complement fixed-point register wide enough for
+//! `maxpos²` down to `minpos²` plus 80 guard bits against carries —
+//! the standard's quire, generalized to any `(ps, es)`.
+
+use super::decode::decode;
+use super::encode::encode;
+use super::mul::real_mul;
+use super::{Decoded, PositSpec, Real};
+
+/// Number of carry-guard bits above `maxpos²`.
+const GUARD: u32 = 80;
+
+/// An exact accumulator for one posit format.
+#[derive(Clone, Debug)]
+pub struct Quire {
+    spec: PositSpec,
+    /// Two's-complement little-endian limbs.
+    limbs: Vec<u64>,
+    /// Weight of bit 0 is `2^-offset`.
+    offset: i64,
+    nar: bool,
+}
+
+impl Quire {
+    /// Fresh zero quire for a format.
+    pub fn new(spec: PositSpec) -> Self {
+        let m = spec.max_scale();
+        // Range: 2^(2m) down to 2^(-2m), plus guard and a sign bit.
+        let bits = (4 * m) as u32 + GUARD + 2;
+        let limbs = vec![0u64; bits.div_ceil(64) as usize];
+        Quire {
+            spec,
+            limbs,
+            offset: 2 * m,
+            nar: false,
+        }
+    }
+
+    /// Reset to zero.
+    pub fn clear(&mut self) {
+        self.limbs.fill(0);
+        self.nar = false;
+    }
+
+    /// True if a NaR has poisoned the accumulation.
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    fn add_shifted(&mut self, frac: u128, shift: i64, negative: bool) {
+        // Add (or subtract) frac · 2^shift, shift relative to bit 0.
+        debug_assert!(shift >= 0, "quire offset must cover minpos²");
+        let limb = (shift / 64) as usize;
+        let bit = (shift % 64) as u32;
+        // Spread the (≤128-bit) fraction over up to three limbs.
+        let lo = (frac << bit) as u64;
+        let mid = (frac >> (64 - bit as i64 as u32).min(127)) as u64; // careful with bit=0
+        let mid = if bit == 0 { (frac >> 64) as u64 } else { mid };
+        let hi = if bit == 0 {
+            0
+        } else {
+            (frac >> (128 - bit)) as u64
+        };
+        let parts = [lo, mid, hi];
+        if negative {
+            let mut borrow = 0u64;
+            for (i, p) in parts.iter().enumerate() {
+                if limb + i >= self.limbs.len() {
+                    break;
+                }
+                let (v1, b1) = self.limbs[limb + i].overflowing_sub(*p);
+                let (v2, b2) = v1.overflowing_sub(borrow);
+                self.limbs[limb + i] = v2;
+                borrow = (b1 || b2) as u64;
+            }
+            let mut i = limb + 3;
+            while borrow != 0 && i < self.limbs.len() {
+                let (v, b) = self.limbs[i].overflowing_sub(borrow);
+                self.limbs[i] = v;
+                borrow = b as u64;
+                i += 1;
+            }
+        } else {
+            let mut carry = 0u64;
+            for (i, p) in parts.iter().enumerate() {
+                if limb + i >= self.limbs.len() {
+                    break;
+                }
+                let (v1, c1) = self.limbs[limb + i].overflowing_add(*p);
+                let (v2, c2) = v1.overflowing_add(carry);
+                self.limbs[limb + i] = v2;
+                carry = (c1 || c2) as u64;
+            }
+            let mut i = limb + 3;
+            while carry != 0 && i < self.limbs.len() {
+                let (v, c) = self.limbs[i].overflowing_add(carry);
+                self.limbs[i] = v;
+                carry = c as u64;
+                i += 1;
+            }
+        }
+    }
+
+    fn add_real(&mut self, r: &Real) {
+        // Value = sign · frac · 2^(scale - fs); bit 0 weighs 2^-offset.
+        let shift = r.scale - r.fs as i64 + self.offset;
+        self.add_shifted(r.frac, shift, r.sign);
+    }
+
+    /// Accumulate a posit value exactly (`quire += p`).
+    pub fn add(&mut self, p: u32) {
+        match decode(self.spec, p) {
+            Decoded::Zero => {}
+            Decoded::NaR => self.nar = true,
+            Decoded::Num(r) => self.add_real(&r),
+        }
+    }
+
+    /// Fused accumulate of an exact product (`quire += a · b`) — the
+    /// quire's raison d'être: no rounding at all.
+    pub fn add_product(&mut self, a: u32, b: u32) {
+        let da = decode(self.spec, a);
+        let db = decode(self.spec, b);
+        match (da, db) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => self.nar = true,
+            (Decoded::Zero, _) | (_, Decoded::Zero) => {}
+            (Decoded::Num(ra), Decoded::Num(rb)) => {
+                let p = real_mul(&ra, &rb);
+                debug_assert!(!p.sticky, "exact product carries no sticky");
+                self.add_real(&p);
+            }
+        }
+    }
+
+    /// Subtract an exact product (`quire -= a · b`).
+    pub fn sub_product(&mut self, a: u32, b: u32) {
+        let da = decode(self.spec, a);
+        let db = decode(self.spec, b);
+        match (da, db) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => self.nar = true,
+            (Decoded::Zero, _) | (_, Decoded::Zero) => {}
+            (Decoded::Num(ra), Decoded::Num(rb)) => {
+                let mut p = real_mul(&ra, &rb);
+                p.sign = !p.sign;
+                self.add_real(&p);
+            }
+        }
+    }
+
+    /// Round the accumulated value to a posit — the single rounding of the
+    /// whole accumulation chain.
+    pub fn to_posit(&self) -> u32 {
+        if self.nar {
+            return self.spec.nar();
+        }
+        let negative = self.limbs.last().map(|&l| l >> 63 == 1).unwrap_or(false);
+        // Magnitude: two's complement if negative.
+        let mut mag = self.limbs.clone();
+        if negative {
+            let mut carry = 1u64;
+            for l in mag.iter_mut() {
+                let inv = !*l;
+                let (v, c) = inv.overflowing_add(carry);
+                *l = v;
+                carry = c as u64;
+            }
+        }
+        // Find the most significant set bit.
+        let mut msb: Option<u32> = None;
+        for (i, &l) in mag.iter().enumerate().rev() {
+            if l != 0 {
+                msb = Some(i as u32 * 64 + (63 - l.leading_zeros()));
+                break;
+            }
+        }
+        let msb = match msb {
+            None => return self.spec.zero(),
+            Some(m) => m,
+        };
+        // Extract the top <=80 bits as the fraction, OR the rest into sticky.
+        let keep = msb.min(80);
+        let mut frac: u128 = 0;
+        for k in (0..=keep).rev() {
+            let bit_idx = msb - keep + k;
+            let bit = (mag[(bit_idx / 64) as usize] >> (bit_idx % 64)) & 1;
+            frac = (frac << 1) | bit as u128;
+        }
+        let mut sticky = false;
+        if msb > keep {
+            'outer: for bit_idx in 0..(msb - keep) {
+                if (mag[(bit_idx / 64) as usize] >> (bit_idx % 64)) & 1 == 1 {
+                    sticky = true;
+                    break 'outer;
+                }
+            }
+        }
+        let scale = msb as i64 - self.offset;
+        match Real::new(negative, scale, frac, keep, sticky) {
+            Some(r) => encode(self.spec, &r),
+            None => self.spec.zero(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{add as padd, from_f64, mul as pmul, to_f64, P16, P8};
+    use super::*;
+
+    #[test]
+    fn sum_matches_exact() {
+        let mut q = Quire::new(P16);
+        let xs = [1.5f64, -0.25, 100.0, 0.003, -99.0];
+        for &x in &xs {
+            q.add(from_f64(P16, x));
+        }
+        // Exact sum of the *posit-rounded* inputs.
+        let exact: f64 = xs.iter().map(|&x| to_f64(P16, from_f64(P16, x))).sum();
+        assert_eq!(q.to_posit(), from_f64(P16, exact));
+    }
+
+    #[test]
+    fn dot_product_beats_sequential() {
+        // Σ minpos·minpos-scale terms that sequential rounding loses:
+        // classic quire demonstration. 1 + ε + ε + ... with ε below the
+        // rounding step accumulates in the quire, not sequentially.
+        let spec = P8;
+        let one = spec.one();
+        let eps = from_f64(spec, 0.03); // well below ulp(1)/2 = 1/32
+        let mut q = Quire::new(spec);
+        q.add(one);
+        let mut seq = one;
+        for _ in 0..4 {
+            q.add(eps);
+            seq = padd(spec, seq, eps);
+        }
+        // Sequential: each 1 + 0.03 rounds back to 1.0.
+        assert_eq!(seq, one);
+        // Quire: 1 + 4·0.03125 = 1.125 exactly representable.
+        assert_eq!(to_f64(spec, q.to_posit()), 1.125);
+    }
+
+    #[test]
+    fn product_accumulation() {
+        let spec = P16;
+        let a = from_f64(spec, 0.1);
+        let b = from_f64(spec, 0.2);
+        let mut q = Quire::new(spec);
+        q.add_product(a, b);
+        assert_eq!(q.to_posit(), pmul(spec, a, b));
+        q.sub_product(a, b);
+        assert_eq!(q.to_posit(), 0);
+    }
+
+    #[test]
+    fn extremes_no_overflow() {
+        let spec = P8;
+        let mut q = Quire::new(spec);
+        // maxpos² many times must not wrap the guard bits.
+        for _ in 0..1000 {
+            q.add_product(spec.maxpos(), spec.maxpos());
+        }
+        assert_eq!(q.to_posit(), spec.maxpos()); // saturates at encode
+        let mut q = Quire::new(spec);
+        q.add_product(spec.minpos(), spec.minpos());
+        assert_eq!(q.to_posit(), spec.minpos()); // minpos² rounds up to minpos
+    }
+
+    #[test]
+    fn nar_poisons() {
+        let mut q = Quire::new(P16);
+        q.add(P16.one());
+        q.add(P16.nar());
+        assert_eq!(q.to_posit(), P16.nar());
+        q.clear();
+        q.add(P16.one());
+        assert_eq!(q.to_posit(), P16.one());
+    }
+}

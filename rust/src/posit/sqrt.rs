@@ -1,0 +1,184 @@
+//! Algorithms 7 & 8 — posit square root via non-restoring integer sqrt.
+//!
+//! The wrapper (Algorithm 7) rejects NaR/negatives, halves the scale after
+//! an odd-scale adjustment, and hands an integer radicand to the
+//! non-restoring extractor (Algorithm 8, adapted from Piromsopa et al. as
+//! in the paper), which produces the root `Q` and remainder `R` with
+//! `D = Q² + R`; `R != 0` becomes the sticky `bm`.
+
+use super::decode::decode;
+use super::encode::encode;
+use super::{Decoded, PositSpec, Real};
+
+/// Fast exact integer square root: f64 seed + bounded correction
+/// (§Perf iteration 2 — replaces the bit-serial loop on the hot path;
+/// [`uint_sqrt_nonrestoring`] remains as the Algorithm 8 reference and
+/// the two are cross-checked by tests). Returns `(q, r)` with
+/// `d = q² + r`, `0 <= r <= 2q`.
+pub(crate) fn uint_sqrt(d: u128) -> (u128, u128) {
+    if d == 0 {
+        return (0, 0);
+    }
+    // Radicands here are < 2^104 (fs_q = ps+4 ≤ 36 ⇒ ≤ 2·36+fs bits), so
+    // q < 2^52: an f64 estimate is within a few ulps and the correction
+    // loop runs at most a couple of steps.
+    let mut q = (d as f64).sqrt() as u128;
+    while q > 0 && q * q > d {
+        q -= 1;
+    }
+    while (q + 1) * (q + 1) <= d {
+        q += 1;
+    }
+    (q, d - q * q)
+}
+
+/// Non-restoring unsigned integer square root (Algorithm 8) — the
+/// paper-faithful hardware algorithm, kept as the reference
+/// implementation (cross-checked against the fast path in tests).
+#[allow(dead_code)]
+pub(crate) fn uint_sqrt_nonrestoring(d: u128) -> (u128, u128) {
+    if d == 0 {
+        return (0, 0);
+    }
+    // Number of digit pairs: advance two radicand bits per iteration.
+    let size = 128 - d.leading_zeros();
+    let pairs = size.div_ceil(2);
+    let mut q: u128 = 0;
+    let mut r: i128 = 0;
+    for i in (0..pairs).rev() {
+        let two = ((d >> (2 * i)) & 3) as i128;
+        let t_r = (r << 2) | two;
+        if r >= 0 {
+            r = t_r - ((q << 2) | 1) as i128;
+        } else {
+            r = t_r + ((q << 2) | 3) as i128;
+        }
+        if r >= 0 {
+            q = (q << 1) | 1;
+        } else {
+            q <<= 1;
+        }
+    }
+    if r < 0 {
+        // Final restore. Note: Algorithm 8 line 12 in the paper prints
+        // `R + ((Q << 2)|1)`, but the non-restoring invariant requires
+        // `R + ((Q << 1)|1)` (= 2Q+1); the `<< 2` variant breaks
+        // D = Q² + R for e.g. D = 4. We implement the correct restore.
+        r += ((q << 1) | 1) as i128;
+    }
+    (q, r as u128)
+}
+
+/// Posit square root on a binary pattern (Algorithm 7).
+pub(crate) fn sqrt(spec: PositSpec, a: u32) -> u32 {
+    match decode(spec, a) {
+        Decoded::Zero => spec.zero(),
+        Decoded::NaR => spec.nar(),
+        Decoded::Num(r) if r.sign => spec.nar(), // sqrt of negative
+        Decoded::Num(r) => {
+            // value = 2^scale · frac/2^fs. Make the scale even by folding
+            // its parity into the radicand, then take the integer root of
+            // a widened fraction so the result has ps+4 significant bits.
+            let odd = (r.scale & 1) as u32;
+            let even_scale = r.scale - odd as i64;
+            // Want result fs_q = ps+4, so radicand fs must be 2·fs_q.
+            let fs_q = spec.ps + 4;
+            let w = 2 * fs_q - r.fs + odd;
+            let d = r.frac << w;
+            let (q, rem) = uint_sqrt(d);
+            encode(
+                spec,
+                &Real::new(false, even_scale / 2, q, fs_q, rem != 0 || r.sticky)
+                    .expect("sqrt of a positive number is positive"),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{from_f64, sqrt as psqrt, to_f64, P16, P32, P8};
+    use super::*;
+
+    #[test]
+    fn uint_sqrt_small() {
+        for d in 0u128..5000 {
+            let (q, r) = uint_sqrt(d);
+            assert_eq!(q * q + r, d);
+            assert!(q * q <= d && (q + 1) * (q + 1) > d, "d={d} q={q}");
+            // Fast path and Algorithm 8 reference agree.
+            assert_eq!(uint_sqrt_nonrestoring(d), (q, r));
+        }
+    }
+
+    #[test]
+    fn uint_sqrt_wide() {
+        for d in [
+            (1u128 << 104) - 1,
+            1 << 100,
+            (1 << 100) - 1,
+            0x1234_5678_9abc_def0_1234_5678,
+        ] {
+            let (q, r) = uint_sqrt(d);
+            assert_eq!(q.checked_mul(q).and_then(|x| x.checked_add(r)), Some(d));
+            assert_eq!(uint_sqrt_nonrestoring(d), (q, r));
+        }
+    }
+
+    #[test]
+    fn uint_sqrt_fast_vs_reference_random() {
+        let mut rng = crate::data::Rng::new(0x5097);
+        for _ in 0..20_000 {
+            let d = (rng.next_u64() as u128) << (rng.below(40) as u32);
+            let (q, r) = uint_sqrt(d);
+            assert_eq!(q * q + r, d);
+            assert!((q + 1) * (q + 1) > d);
+            assert_eq!(uint_sqrt_nonrestoring(d), (q, r), "d={d}");
+        }
+    }
+
+    #[test]
+    fn exhaustive_vs_f64_oracle_p8_p16() {
+        // f64 sqrt is correctly rounded (IEEE requirement); for 8/16-bit
+        // posits the double-rounding gap cannot flip the posit rounding
+        // except within 2^-52 of a tie, which cannot occur for values with
+        // so few significant bits.
+        for spec in [P8, P16] {
+            for bits in 0..=spec.mask() {
+                let v = to_f64(spec, bits);
+                if bits == spec.nar() {
+                    assert_eq!(psqrt(spec, bits), spec.nar());
+                    continue;
+                }
+                if v < 0.0 {
+                    assert_eq!(psqrt(spec, bits), spec.nar(), "sqrt(neg) must be NaR");
+                    continue;
+                }
+                let want = from_f64(spec, v.sqrt());
+                assert_eq!(psqrt(spec, bits), want, "bits={bits:#x} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn perfect_squares_p32() {
+        // Exact dyadic squares: the posit sqrt must hit them exactly.
+        for x in [1.0f64, 4.0, 9.0, 0.25, 2.25, 1e4, 5.0625] {
+            let p = from_f64(P32, x);
+            assert_eq!(to_f64(P32, psqrt(P32, p)), x.sqrt(), "x={x}");
+        }
+        // Non-dyadic values: correctly rounded vs the f64 oracle on the
+        // posit-rounded input.
+        for x in [1e-4f64, 3.0, 0.007, 123456.789] {
+            let p = from_f64(P32, x);
+            let want = from_f64(P32, to_f64(P32, p).sqrt());
+            assert_eq!(psqrt(P32, p), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn sqrt_two_p32() {
+        let q = psqrt(P32, from_f64(P32, 2.0));
+        assert_eq!(q, from_f64(P32, std::f64::consts::SQRT_2));
+    }
+}

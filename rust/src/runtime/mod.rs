@@ -1,0 +1,224 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts and runs
+//! them from Rust. Python is build-time only; after `make artifacts` the
+//! binary is self-contained.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client + the artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+/// One compiled model variant.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Variant name ("fp32", "p16", …).
+    pub name: String,
+    /// Batch size baked into the executable.
+    pub batch: usize,
+    /// Input features per sample.
+    pub feat: usize,
+    /// Output classes per sample.
+    pub classes: usize,
+}
+
+/// Parsed `artifacts/manifest.json` (hand-rolled parser — the offline
+/// crate set has no serde_json; the schema is flat and fixed).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Serving batch size.
+    pub batch: usize,
+    /// Features per sample.
+    pub feat: usize,
+    /// Classes.
+    pub classes: usize,
+    /// Test-set size.
+    pub test_n: usize,
+    /// FP32 reference Top-1 measured at build time.
+    pub fp32_top1: f64,
+    /// variant name → HLO file.
+    pub variants: Vec<(String, String)>,
+}
+
+/// Extract `"key": <number>` from a flat JSON string.
+fn json_num(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\"");
+    let at = text.find(&pat)?;
+    let rest = &text[at + pat.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| {
+            !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == 'E' || c == '+')
+        })
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Extract the `"variants": {...}` map.
+fn json_variants(text: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let Some(at) = text.find("\"variants\"") else {
+        return out;
+    };
+    let Some(open) = text[at..].find('{') else {
+        return out;
+    };
+    let body_start = at + open + 1;
+    let Some(close) = text[body_start..].find('}') else {
+        return out;
+    };
+    let body = &text[body_start..body_start + close];
+    let mut parts = body.split('"');
+    // Pattern: "name" : "file" repeating; split('"') yields
+    // [ws, name, sep, file, ws, name, ...]
+    let _ = parts.next();
+    loop {
+        let (Some(name), Some(_), Some(file)) = (parts.next(), parts.next(), parts.next()) else {
+            break;
+        };
+        out.push((name.to_string(), file.to_string()));
+        if parts.next().is_none() {
+            break;
+        }
+    }
+    out
+}
+
+impl Manifest {
+    /// Load and parse `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("manifest.json in {dir:?} — run `make artifacts`"))?;
+        Ok(Manifest {
+            batch: json_num(&text, "batch").unwrap_or(16.0) as usize,
+            feat: json_num(&text, "feat").unwrap_or(4096.0) as usize,
+            classes: json_num(&text, "classes").unwrap_or(10.0) as usize,
+            test_n: json_num(&text, "test_n").unwrap_or(0.0) as usize,
+            fp32_top1: json_num(&text, "fp32_top1").unwrap_or(0.0),
+            variants: json_variants(&text),
+        })
+    }
+}
+
+impl Runtime {
+    /// PJRT CPU client over the artifacts directory.
+    pub fn cpu(dir: impl Into<PathBuf>) -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e}"))?,
+            dir: dir.into(),
+        })
+    }
+
+    /// Platform description (diagnostics).
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// The artifacts directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, name: &str, file: &str, m: &Manifest) -> Result<Executable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        Ok(Executable {
+            exe,
+            name: name.to_string(),
+            batch: m.batch,
+            feat: m.feat,
+            classes: m.classes,
+        })
+    }
+
+    /// Load every variant in the manifest.
+    pub fn load_all(&self, m: &Manifest) -> Result<Vec<Executable>> {
+        m.variants
+            .iter()
+            .map(|(name, file)| self.load(name, file, m))
+            .collect()
+    }
+}
+
+impl Executable {
+    /// Run one full batch: `x` is `batch·feat` f32s; returns
+    /// `batch·classes` probabilities.
+    pub fn run(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.batch * self.feat,
+            "expected {}·{} inputs, got {}",
+            self.batch,
+            self.feat,
+            x.len()
+        );
+        let lit = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, self.feat as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// Classify a batch: argmax per sample.
+    pub fn classify(&self, x: &[f32]) -> Result<Vec<usize>> {
+        let probs = self.run(x)?;
+        Ok(probs
+            .chunks(self.classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = r#"{
+  "batch": 16, "feat": 4096, "classes": 10, "test_n": 2000,
+  "fp32_top1": 0.714,
+  "variants": {"fp32": "cnn_fp32.hlo.txt", "p16": "cnn_p16.hlo.txt"}
+}"#;
+        assert_eq!(json_num(text, "batch"), Some(16.0));
+        assert_eq!(json_num(text, "fp32_top1"), Some(0.714));
+        let v = json_variants(text);
+        assert_eq!(
+            v,
+            vec![
+                ("fp32".to_string(), "cnn_fp32.hlo.txt".to_string()),
+                ("p16".to_string(), "cnn_p16.hlo.txt".to_string())
+            ]
+        );
+    }
+}

@@ -1,0 +1,335 @@
+//! Execution backends: the two arithmetic units the paper compares, plus
+//! the hybrid storage/compute configuration of §V-C.
+//!
+//! A backend executes one RISC-V F-extension instruction on 32-bit
+//! register words — exactly the boundary between the Rocket pipeline and
+//! its FPU/POSAR in Figure 2. Benchmarks are written once against
+//! [`crate::sim::Machine`] and run unchanged on every backend, mirroring
+//! the paper's "near-identical assembly code for FP32 and posit".
+
+use crate::isa::{CostModel, FOp};
+use crate::posit::{self, PositSpec, RoundMode};
+
+/// An arithmetic unit pluggable into the simulated Rocket core.
+pub trait Backend: Sync {
+    /// Human-readable unit name ("FP32", "Posit(16,2)", …).
+    fn name(&self) -> String;
+
+    /// Execute one F-extension op on register words. Comparison/classify
+    /// ops return the integer result in the low bits; `FCVT.W*` return
+    /// the integer as its two's-complement word.
+    fn exec(&self, op: FOp, a: u32, b: u32, c: u32, rm: RoundMode) -> u32;
+
+    /// Offline constant conversion (the paper's Listing 1: constants are
+    /// pre-encoded into the binary, so this costs no cycles at runtime).
+    fn load_f64(&self, v: f64) -> u32;
+
+    /// Exact numeric value of a register word (for result verification
+    /// and the dynamic-range tracer; both formats embed exactly in f64).
+    fn store_f64(&self, w: u32) -> f64;
+
+    /// Per-op latency table of this unit.
+    fn cost(&self) -> &CostModel;
+
+    /// Convert a register word to the *memory* representation (identity
+    /// except for the hybrid configuration).
+    fn to_mem(&self, w: u32) -> u32 {
+        w
+    }
+
+    /// Convert a memory word to the register representation.
+    fn from_mem(&self, w: u32) -> u32 {
+        w
+    }
+
+    /// Bits per value in memory (for footprint accounting, §V-C: P16/P8
+    /// save half/three-quarters of parameter memory).
+    fn mem_bits(&self) -> u32 {
+        32
+    }
+}
+
+/// The original Rocket Chip FPU: IEEE 754 binary32. Host `f32` arithmetic
+/// *is* the IEEE 754 FPU model (same standard, same RNE rounding).
+pub struct Fpu {
+    cost: CostModel,
+}
+
+impl Fpu {
+    /// FPU with the Rocket latency table.
+    pub fn new() -> Self {
+        Fpu {
+            cost: crate::isa::cost::ROCKET_FPU,
+        }
+    }
+}
+
+impl Default for Fpu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn f(w: u32) -> f32 {
+    f32::from_bits(w)
+}
+
+impl Backend for Fpu {
+    fn name(&self) -> String {
+        "FP32".into()
+    }
+
+    fn exec(&self, op: FOp, a: u32, b: u32, c: u32, rm: RoundMode) -> u32 {
+        let round = |x: f32| -> f32 {
+            match rm {
+                RoundMode::Nearest => x.round_ties_even(),
+                RoundMode::TowardZero => x.trunc(),
+                RoundMode::Down => x.floor(),
+                RoundMode::Up => x.ceil(),
+                RoundMode::NearestMaxMag => x.round(),
+            }
+        };
+        match op {
+            FOp::Add => (f(a) + f(b)).to_bits(),
+            FOp::Sub => (f(a) - f(b)).to_bits(),
+            FOp::Mul => (f(a) * f(b)).to_bits(),
+            FOp::Div => (f(a) / f(b)).to_bits(),
+            FOp::Sqrt => f(a).sqrt().to_bits(),
+            FOp::Madd => f(a).mul_add(f(b), f(c)).to_bits(),
+            FOp::Msub => f(a).mul_add(f(b), -f(c)).to_bits(),
+            FOp::Nmadd => (-f(a).mul_add(f(b), f(c))).to_bits(),
+            FOp::Nmsub => (-f(a)).mul_add(f(b), f(c)).to_bits(),
+            FOp::Min => f(a).min(f(b)).to_bits(),
+            FOp::Max => f(a).max(f(b)).to_bits(),
+            FOp::SgnJ => f(a).copysign(f(b)).to_bits(),
+            FOp::SgnJN => f(a).copysign(-f(b)).to_bits(),
+            FOp::SgnJX => (f32::from_bits(a ^ (b & 0x8000_0000))).to_bits(),
+            FOp::Eq => (f(a) == f(b)) as u32,
+            FOp::Lt => (f(a) < f(b)) as u32,
+            FOp::Le => (f(a) <= f(b)) as u32,
+            FOp::Class => fclass_f32(f(a)),
+            FOp::CvtWS => (round(f(a)) as i32) as u32,
+            FOp::CvtWuS => round(f(a)).max(0.0) as u32,
+            FOp::CvtSW => (a as i32 as f32).to_bits(),
+            FOp::CvtSWu => (a as f32).to_bits(),
+            FOp::Mv => a,
+        }
+    }
+
+    fn load_f64(&self, v: f64) -> u32 {
+        (v as f32).to_bits()
+    }
+
+    fn store_f64(&self, w: u32) -> f64 {
+        f(w) as f64
+    }
+
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+}
+
+/// RISC-V FCLASS.S bit layout for IEEE values.
+fn fclass_f32(x: f32) -> u32 {
+    use std::num::FpCategory::*;
+    let neg = x.is_sign_negative();
+    match (x.classify(), neg) {
+        (Infinite, true) => 1 << 0,
+        (Normal, true) => 1 << 1,
+        (Subnormal, true) => 1 << 2,
+        (Zero, true) => 1 << 3,
+        (Zero, false) => 1 << 4,
+        (Subnormal, false) => 1 << 5,
+        (Normal, false) => 1 << 6,
+        (Infinite, false) => 1 << 7,
+        (Nan, _) => 1 << 9, // quiet NaN
+    }
+}
+
+/// The POSAR: posit arithmetic for any `(ps, es)`.
+pub struct Posar {
+    /// Register/compute format.
+    pub spec: PositSpec,
+    cost: CostModel,
+}
+
+impl Posar {
+    /// POSAR instantiated for a format, with its calibrated latency table.
+    pub fn new(spec: PositSpec) -> Self {
+        Posar {
+            spec,
+            cost: crate::isa::cost::posar(spec.ps),
+        }
+    }
+}
+
+impl Backend for Posar {
+    fn name(&self) -> String {
+        format!("Posit({},{})", self.spec.ps, self.spec.es)
+    }
+
+    fn exec(&self, op: FOp, a: u32, b: u32, c: u32, rm: RoundMode) -> u32 {
+        let s = self.spec;
+        match op {
+            FOp::Add => posit::add(s, a, b),
+            FOp::Sub => posit::sub(s, a, b),
+            FOp::Mul => posit::mul(s, a, b),
+            FOp::Div => posit::div(s, a, b),
+            FOp::Sqrt => posit::sqrt(s, a),
+            FOp::Madd => crate::posit::fma(s, a, b, c),
+            FOp::Msub => fma_variant(s, a, b, c, false, true),
+            FOp::Nmadd => fma_variant(s, a, b, c, true, true),
+            FOp::Nmsub => fma_variant(s, a, b, c, true, false),
+            FOp::Min => crate::posit::cmp_min(s, a, b),
+            FOp::Max => crate::posit::cmp_max(s, a, b),
+            FOp::SgnJ => crate::posit::sgnj(s, a, b),
+            FOp::SgnJN => crate::posit::sgnjn(s, a, b),
+            FOp::SgnJX => crate::posit::sgnjx(s, a, b),
+            FOp::Eq => posit::eq(s, a, b) as u32,
+            FOp::Lt => posit::lt(s, a, b) as u32,
+            FOp::Le => posit::le(s, a, b) as u32,
+            FOp::Class => crate::posit::classify(s, a),
+            FOp::CvtWS => posit::to_i32(s, a, rm) as u32,
+            FOp::CvtWuS => posit::to_u32(s, a, rm),
+            FOp::CvtSW => posit::from_i32(s, a as i32),
+            FOp::CvtSWu => posit::from_u32(s, a),
+            FOp::Mv => a & s.mask(),
+        }
+    }
+
+    fn load_f64(&self, v: f64) -> u32 {
+        posit::from_f64(self.spec, v)
+    }
+
+    fn store_f64(&self, w: u32) -> f64 {
+        posit::to_f64(self.spec, w)
+    }
+
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn mem_bits(&self) -> u32 {
+        self.spec.ps
+    }
+}
+
+fn fma_variant(s: PositSpec, a: u32, b: u32, c: u32, neg_prod: bool, neg_c: bool) -> u32 {
+    crate::posit::fma_full(s, a, b, c, neg_prod, neg_c)
+}
+
+/// The §V-C hybrid configuration: parameters live in memory in a *smaller*
+/// posit format (storage `Posit(8,1)`), while the POSAR computes in a
+/// wider one (`Posit(16,2)`); the load/store path resizes. This is the
+/// configuration that recovers FP32-grade CNN accuracy at P8 storage cost.
+pub struct Hybrid {
+    /// Compute unit (register format).
+    pub compute: Posar,
+    /// Memory format.
+    pub store: PositSpec,
+}
+
+impl Hybrid {
+    /// New hybrid backend (compute format, storage format).
+    pub fn new(compute: PositSpec, store: PositSpec) -> Self {
+        Hybrid {
+            compute: Posar::new(compute),
+            store,
+        }
+    }
+}
+
+impl Backend for Hybrid {
+    fn name(&self) -> String {
+        format!(
+            "Hybrid[store Posit({},{}) → compute {}]",
+            self.store.ps,
+            self.store.es,
+            self.compute.name()
+        )
+    }
+
+    fn exec(&self, op: FOp, a: u32, b: u32, c: u32, rm: RoundMode) -> u32 {
+        self.compute.exec(op, a, b, c, rm)
+    }
+
+    fn load_f64(&self, v: f64) -> u32 {
+        // Constants follow the same path as data: stored small, widened.
+        self.from_mem(posit::from_f64(self.store, v))
+    }
+
+    fn store_f64(&self, w: u32) -> f64 {
+        self.compute.store_f64(w)
+    }
+
+    fn cost(&self) -> &CostModel {
+        self.compute.cost()
+    }
+
+    fn to_mem(&self, w: u32) -> u32 {
+        posit::resize(self.compute.spec, self.store, w)
+    }
+
+    fn from_mem(&self, w: u32) -> u32 {
+        posit::resize(self.store, self.compute.spec, w)
+    }
+
+    fn mem_bits(&self) -> u32 {
+        self.store.ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P8};
+
+    #[test]
+    fn fpu_is_ieee() {
+        let fpu = Fpu::new();
+        let a = 1.5f32.to_bits();
+        let b = 2.25f32.to_bits();
+        let r = fpu.exec(FOp::Add, a, b, 0, RoundMode::Nearest);
+        assert_eq!(f32::from_bits(r), 3.75);
+        assert_eq!(fpu.exec(FOp::Lt, a, b, 0, RoundMode::Nearest), 1);
+        let nan = f32::NAN.to_bits();
+        assert_eq!(fpu.exec(FOp::Class, nan, 0, 0, RoundMode::Nearest), 1 << 9);
+    }
+
+    #[test]
+    fn posar_matches_library() {
+        let p = Posar::new(P16);
+        let a = p.load_f64(1.5);
+        let b = p.load_f64(2.25);
+        let r = p.exec(FOp::Add, a, b, 0, RoundMode::Nearest);
+        assert_eq!(p.store_f64(r), 3.75);
+        assert_eq!(p.mem_bits(), 16);
+    }
+
+    #[test]
+    fn hybrid_roundtrips_small_values() {
+        let h = Hybrid::new(P16, P8);
+        let w = h.load_f64(0.5); // register word in P16
+        assert_eq!(h.store_f64(w), 0.5);
+        let m = h.to_mem(w); // stored as P8
+        assert_eq!(h.from_mem(m), w);
+        assert_eq!(h.mem_bits(), 8);
+    }
+
+    #[test]
+    fn all_backends_run_every_op() {
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(Fpu::new()),
+            Box::new(Posar::new(P16)),
+            Box::new(Hybrid::new(P16, P8)),
+        ];
+        for be in &backends {
+            let a = be.load_f64(2.0);
+            let b = be.load_f64(-0.75);
+            let c = be.load_f64(10.0);
+            for op in FOp::ALL {
+                let _ = be.exec(op, a, b, c, RoundMode::Nearest);
+            }
+        }
+    }
+}

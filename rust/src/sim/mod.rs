@@ -1,0 +1,278 @@
+//! The simulated Rocket core — cycle accounting + arithmetic-unit plug-in.
+//!
+//! [`Machine`] plays the role of the Rocket tiny core in Figure 2: it owns
+//! the cycle counter, charges integer/memory costs for the parts of the
+//! instruction stream that are identical across FPU/POSAR builds, and
+//! dispatches every F-extension op to the configured [`Backend`]. The
+//! paper's "identical assembly footprints" property holds by construction:
+//! a benchmark runs the *same* `Machine` calls on every backend, so cycle
+//! differences come exclusively from the per-op latency tables.
+
+pub mod backend;
+pub mod trace;
+
+pub use backend::{Backend, Fpu, Hybrid, Posar};
+pub use trace::RangeTracer;
+
+use crate::isa::{cost::ROCKET_INT, FOp, IntCosts};
+use crate::posit::RoundMode;
+
+/// A simulated core: backend + cycle/op accounting + optional tracer.
+pub struct Machine<'a> {
+    /// The arithmetic unit under test.
+    pub be: &'a dyn Backend,
+    /// Total cycles charged.
+    pub cycles: u64,
+    /// Number of F-extension ops executed.
+    pub fops: u64,
+    /// Integer-core cost table.
+    pub int_costs: IntCosts,
+    /// Dynamic-range tracer (§V-D), if enabled.
+    pub tracer: Option<RangeTracer>,
+}
+
+impl<'a> Machine<'a> {
+    /// New machine with the Rocket integer-core costs.
+    pub fn new(be: &'a dyn Backend) -> Self {
+        Machine {
+            be,
+            cycles: 0,
+            fops: 0,
+            int_costs: ROCKET_INT,
+            tracer: None,
+        }
+    }
+
+    /// Enable the dynamic-range tracer.
+    pub fn with_tracer(mut self) -> Self {
+        self.tracer = Some(RangeTracer::new());
+        self
+    }
+
+    /// Charge the fixed program overhead (crt0 + runtime init). Call once
+    /// at the start of a benchmark `main`.
+    pub fn program_start(&mut self) {
+        self.cycles += self.int_costs.program_overhead;
+    }
+
+    #[inline]
+    fn record(&mut self, w: u32) {
+        if let Some(t) = self.tracer.as_mut() {
+            t.record(self.be.store_f64(w));
+        }
+    }
+
+    /// Execute one F-op with full accounting.
+    #[inline]
+    pub fn exec(&mut self, op: FOp, a: u32, b: u32, c: u32, rm: RoundMode) -> u32 {
+        self.cycles += self.be.cost().of(op);
+        self.fops += 1;
+        let r = self.be.exec(op, a, b, c, rm);
+        if self.tracer.is_some() {
+            self.record(a);
+            if !matches!(op, FOp::Sqrt | FOp::Class | FOp::Mv | FOp::CvtWS | FOp::CvtWuS) {
+                self.record(b);
+            }
+            if op.is_fma() {
+                self.record(c);
+            }
+            if !op.int_result() {
+                self.record(r);
+            }
+        }
+        r
+    }
+
+    // ---- ergonomic wrappers (one per instruction) --------------------
+
+    /// FADD.S
+    #[inline]
+    pub fn add(&mut self, a: u32, b: u32) -> u32 {
+        self.exec(FOp::Add, a, b, 0, RoundMode::Nearest)
+    }
+    /// FSUB.S
+    #[inline]
+    pub fn sub(&mut self, a: u32, b: u32) -> u32 {
+        self.exec(FOp::Sub, a, b, 0, RoundMode::Nearest)
+    }
+    /// FMUL.S
+    #[inline]
+    pub fn mul(&mut self, a: u32, b: u32) -> u32 {
+        self.exec(FOp::Mul, a, b, 0, RoundMode::Nearest)
+    }
+    /// FDIV.S
+    #[inline]
+    pub fn div(&mut self, a: u32, b: u32) -> u32 {
+        self.exec(FOp::Div, a, b, 0, RoundMode::Nearest)
+    }
+    /// FSQRT.S
+    #[inline]
+    pub fn sqrt(&mut self, a: u32) -> u32 {
+        self.exec(FOp::Sqrt, a, 0, 0, RoundMode::Nearest)
+    }
+    /// FMADD.S — `a·b + c`
+    #[inline]
+    pub fn madd(&mut self, a: u32, b: u32, c: u32) -> u32 {
+        self.exec(FOp::Madd, a, b, c, RoundMode::Nearest)
+    }
+    /// FMIN.S
+    #[inline]
+    pub fn fmin(&mut self, a: u32, b: u32) -> u32 {
+        self.exec(FOp::Min, a, b, 0, RoundMode::Nearest)
+    }
+    /// FMAX.S
+    #[inline]
+    pub fn fmax(&mut self, a: u32, b: u32) -> u32 {
+        self.exec(FOp::Max, a, b, 0, RoundMode::Nearest)
+    }
+    /// FEQ.S
+    #[inline]
+    pub fn feq(&mut self, a: u32, b: u32) -> bool {
+        self.exec(FOp::Eq, a, b, 0, RoundMode::Nearest) != 0
+    }
+    /// FLT.S
+    #[inline]
+    pub fn flt(&mut self, a: u32, b: u32) -> bool {
+        self.exec(FOp::Lt, a, b, 0, RoundMode::Nearest) != 0
+    }
+    /// FLE.S
+    #[inline]
+    pub fn fle(&mut self, a: u32, b: u32) -> bool {
+        self.exec(FOp::Le, a, b, 0, RoundMode::Nearest) != 0
+    }
+    /// FSGNJN(x, x) — negate.
+    #[inline]
+    pub fn fneg(&mut self, a: u32) -> u32 {
+        self.exec(FOp::SgnJN, a, a, 0, RoundMode::Nearest)
+    }
+    /// FSGNJX(x, x) — absolute value.
+    #[inline]
+    pub fn fabs(&mut self, a: u32) -> u32 {
+        self.exec(FOp::SgnJX, a, a, 0, RoundMode::Nearest)
+    }
+    /// FCVT.W.S (RNE).
+    #[inline]
+    pub fn to_int(&mut self, a: u32) -> i32 {
+        self.exec(FOp::CvtWS, a, 0, 0, RoundMode::Nearest) as i32
+    }
+    /// FCVT.S.W
+    #[inline]
+    pub fn from_int(&mut self, v: i32) -> u32 {
+        self.exec(FOp::CvtSW, v as u32, 0, 0, RoundMode::Nearest)
+    }
+
+    // ---- constants, memory and integer-side accounting ---------------
+
+    /// Load a pre-encoded constant (Listing 1: constants are baked into
+    /// the binary offline, so only a memory load is charged).
+    #[inline]
+    pub fn lit(&mut self, v: f64) -> u32 {
+        self.cycles += self.int_costs.load;
+        self.be.load_f64(v)
+    }
+
+    /// Numeric value of a register word (verification only, free).
+    #[inline]
+    pub fn val(&self, w: u32) -> f64 {
+        self.be.store_f64(w)
+    }
+
+    /// Charge `n` integer ALU ops.
+    #[inline]
+    pub fn int_ops(&mut self, n: u64) {
+        self.cycles += n * self.int_costs.alu;
+    }
+
+    /// Charge one branch.
+    #[inline]
+    pub fn branch(&mut self) {
+        self.cycles += self.int_costs.branch;
+    }
+
+    /// Charge `n` data-memory loads (FLW/LW).
+    #[inline]
+    pub fn mem_read(&mut self, n: u64) {
+        self.cycles += n * self.int_costs.load;
+    }
+
+    /// Charge `n` data-memory stores (FSW/SW).
+    #[inline]
+    pub fn mem_write(&mut self, n: u64) {
+        self.cycles += n * self.int_costs.store;
+    }
+
+    /// Load a value from "memory" (applies the backend's memory-format
+    /// conversion — identity except on [`Hybrid`]) and charge the load.
+    #[inline]
+    pub fn load_word(&mut self, stored: u32) -> u32 {
+        self.mem_read(1);
+        self.be.from_mem(stored)
+    }
+
+    /// Store a register word to "memory" format and charge the store.
+    #[inline]
+    pub fn store_word(&mut self, w: u32) -> u32 {
+        self.mem_write(1);
+        self.be.to_mem(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P32};
+
+    #[test]
+    fn cycle_accounting_differs_by_backend() {
+        let fpu = Fpu::new();
+        let posar = Posar::new(P32);
+        let run = |be: &dyn Backend| -> (u64, f64) {
+            let mut m = Machine::new(be);
+            let one = m.lit(1.0);
+            let mut acc = m.lit(0.0);
+            let mut d = m.lit(1.0);
+            for _ in 0..100 {
+                let t = m.div(one, d);
+                acc = m.add(acc, t);
+                d = m.add(d, one);
+                m.int_ops(2);
+                m.branch();
+            }
+            (m.cycles, m.val(acc))
+        };
+        let (cf, vf) = run(&fpu);
+        let (cp, vp) = run(&posar);
+        // Identical op stream, different latency: FPU div is slower.
+        assert!(cf > cp, "fpu {cf} <= posar {cp}");
+        // Both compute the 100th harmonic number ≈ 5.187.
+        assert!((vf - 5.187).abs() < 1e-2);
+        assert!((vp - 5.187).abs() < 1e-2);
+    }
+
+    #[test]
+    fn tracer_sees_operands_and_results() {
+        let posar = Posar::new(P16);
+        let mut m = Machine::new(&posar).with_tracer();
+        let a = m.lit(0.25);
+        let b = m.lit(8.0);
+        let _ = m.mul(a, b);
+        let t = m.tracer.unwrap();
+        assert_eq!(t.min_01, Some(0.25));
+        assert_eq!(t.max_1inf, Some(8.0));
+    }
+
+    #[test]
+    fn identical_fop_counts_across_backends() {
+        // The core reproduction invariant: same program => same op count.
+        let fpu = Fpu::new();
+        let posar = Posar::new(P16);
+        let count = |be: &dyn Backend| {
+            let mut m = Machine::new(be);
+            let x = m.lit(2.0);
+            let y = m.sqrt(x);
+            let _ = m.madd(y, y, x);
+            m.fops
+        };
+        assert_eq!(count(&fpu), count(&posar));
+    }
+}

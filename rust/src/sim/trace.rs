@@ -1,0 +1,120 @@
+//! Dynamic floating-point range tracer — the software analogue of the
+//! paper's DynamoRIO instrumentation tool (§V-D, Table VI).
+//!
+//! The paper's tool "inspects the registers and memory locations involved
+//! in FP32 instructions" and reports the absolute minimum value in (0, 1]
+//! and the absolute maximum in [1, ∞). We take the same measurement inside
+//! the simulator: every F-op operand and result is recorded.
+
+/// Running min/max of the absolute values seen by the float datapath.
+#[derive(Clone, Copy, Debug)]
+pub struct RangeTracer {
+    /// Smallest |v| observed in (0, 1].
+    pub min_01: Option<f64>,
+    /// Largest |v| observed in [1, ∞).
+    pub max_1inf: Option<f64>,
+    /// Number of values recorded.
+    pub samples: u64,
+}
+
+impl RangeTracer {
+    /// Fresh tracer.
+    pub fn new() -> Self {
+        RangeTracer {
+            min_01: None,
+            max_1inf: None,
+            samples: 0,
+        }
+    }
+
+    /// Record one value flowing through the datapath.
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let a = v.abs();
+        self.samples += 1;
+        if a > 0.0 && a <= 1.0 {
+            self.min_01 = Some(match self.min_01 {
+                Some(m) => m.min(a),
+                None => a,
+            });
+        }
+        if a >= 1.0 {
+            self.max_1inf = Some(match self.max_1inf {
+                Some(m) => m.max(a),
+                None => a,
+            });
+        }
+    }
+
+    /// The minimum posit size (with the paper's size→es mapping 8→1,
+    /// 16→2, 32→3, and intermediate sizes with es=2) whose dynamic range
+    /// covers the observed values — the §V-D elasticity analysis.
+    pub fn min_covering_posit(&self) -> Option<crate::posit::PositSpec> {
+        let need_min = self.min_01.unwrap_or(1.0);
+        let need_max = self.max_1inf.unwrap_or(1.0);
+        for ps in 3..=32u32 {
+            let es = match ps {
+                0..=11 => 1,
+                12..=23 => 2,
+                _ => 3,
+            };
+            let spec = crate::posit::PositSpec::new(ps, es);
+            let max = crate::posit::to_f64(spec, spec.maxpos());
+            let min = crate::posit::to_f64(spec, spec.minpos());
+            if max >= need_max && min <= need_min {
+                return Some(spec);
+            }
+        }
+        None
+    }
+}
+
+impl Default for RangeTracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_ranges() {
+        let mut t = RangeTracer::new();
+        for v in [0.5, -3.0, 0.001, 150.0, 1.0, 0.0, f64::NAN] {
+            t.record(v);
+        }
+        assert_eq!(t.min_01, Some(0.001));
+        assert_eq!(t.max_1inf, Some(150.0));
+        // 1.0 lands in both buckets; 0 and NaN in neither.
+        assert_eq!(t.samples, 6);
+    }
+
+    #[test]
+    fn covering_posit_grows_with_range() {
+        let mut narrow = RangeTracer::new();
+        narrow.record(0.5);
+        narrow.record(4.0);
+        let mut wide = RangeTracer::new();
+        wide.record(1e-18);
+        wide.record(1e18);
+        let sn = narrow.min_covering_posit().unwrap();
+        let sw = wide.min_covering_posit().unwrap();
+        assert!(sn.ps < sw.ps, "narrow {sn:?} vs wide {sw:?}");
+    }
+
+    #[test]
+    fn p16_covers_iris_like_range() {
+        // KM row of Table VI: min 2.22e-16, max 245.8 — Posit(16,2)
+        // (range 2^-56 .. 2^56) covers it.
+        let mut t = RangeTracer::new();
+        t.record(2.22e-16);
+        t.record(245.8);
+        let s = t.min_covering_posit().unwrap();
+        assert!(s.ps <= 16);
+    }
+}
