@@ -1,5 +1,7 @@
-"""Cross-language golden test: the Rust posit library (`repro golden`)
-and the Python quantizer must produce bit-identical encodings."""
+"""Cross-language golden tests: the Rust posit library (`repro golden`)
+and the Python quantizer must produce bit-identical encodings, and the
+Rust PVU's vector/fused kernels must match what the NumPy posit model
+predicts (decode -> exact f64 arithmetic -> re-quantize)."""
 
 import json
 import os
@@ -10,6 +12,7 @@ import pytest
 from compile.posit_np import decode_np, quantize_np
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden_posit.json")
+GOLDEN_PVU = os.path.join(os.path.dirname(__file__), "golden_pvu.json")
 FMTS = {"p8": (8, 1), "p16": (16, 2), "p32": (32, 3)}
 
 
@@ -18,6 +21,14 @@ def golden():
     if not os.path.exists(GOLDEN):
         pytest.skip("golden_posit.json missing — run `repro golden`")
     with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def golden_pvu():
+    if not os.path.exists(GOLDEN_PVU):
+        pytest.skip("golden_pvu.json missing — run `repro golden`")
+    with open(GOLDEN_PVU) as f:
         return json.load(f)
 
 
@@ -39,3 +50,39 @@ def test_values_match_rust(golden):
             assert np.isnan(row["value"]) or row["bits"] == 1 << (ps - 1)
         else:
             assert v == row["value"], f"{row} -> {v}"
+
+
+def _decode_rows(row):
+    ps, es = FMTS[row["fmt"]]
+    a = decode_np(np.asarray(row["a"], np.int64), ps, es)
+    b = decode_np(np.asarray(row["b"], np.int64), ps, es)
+    return ps, es, a, b
+
+
+def test_pvu_elementwise_match_numpy_model(golden_pvu):
+    """vadd/vmul: the golden operands are p8/p16, whose exact sums and
+    products are representable in f64 — so decode, compute exactly, and
+    re-quantize must reproduce the Rust PVU bits exactly."""
+    rows = [r for r in golden_pvu if r["op"] in ("vadd", "vmul")]
+    assert rows, "golden_pvu.json has no elementwise rows"
+    for row in rows:
+        ps, es, a, b = _decode_rows(row)
+        exact = a + b if row["op"] == "vadd" else a * b
+        got = quantize_np(exact, ps, es)
+        want = np.asarray(row["out"], np.int64)
+        assert np.array_equal(got, want), (
+            f"{row['fmt']} {row['op']}: {got.tolist()} != {want.tolist()}"
+        )
+
+
+def test_pvu_dot_is_single_rounding(golden_pvu):
+    """The quire-fused dot rounds the *exact* sum of products once; the
+    golden operands are same-magnitude, so the exact dot fits f64 and
+    quantize(exact) must equal the Rust PVU result bit-for-bit."""
+    rows = [r for r in golden_pvu if r["op"] == "dot"]
+    assert rows, "golden_pvu.json has no dot rows"
+    for row in rows:
+        ps, es, a, b = _decode_rows(row)
+        exact = float(np.sum(a * b))
+        got = int(quantize_np(np.asarray([exact], np.float64), ps, es)[0])
+        assert got == row["out"], f"{row['fmt']} dot: {got} != {row['out']}"

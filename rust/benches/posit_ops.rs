@@ -116,4 +116,54 @@ fn main() {
         }
         black_box(q.to_posit());
     });
+
+    // PVU vs scalar: the LUT p8 kernels, the decode-once vector kernels,
+    // and the quire-fused dot (`repro pvu` prints the same comparison).
+    use posar::pvu;
+    println!("\n== PVU (LUT / decode-once / quire-fused) vs scalar ==");
+    let a8 = operands(P8, 11);
+    let b8 = operands(P8, 12);
+    let t = pvu::p8_tables(); // build outside the timed region
+    bench("p8/add (scalar baseline)", N as u64, || {
+        for i in 0..N {
+            black_box(posit::add(P8, a8[i], b8[i]));
+        }
+    });
+    bench("p8/add (PVU LUT)", N as u64, || {
+        for i in 0..N {
+            black_box(t.add(a8[i], b8[i]));
+        }
+    });
+    bench("p8/mul (PVU LUT)", N as u64, || {
+        for i in 0..N {
+            black_box(t.mul(a8[i], b8[i]));
+        }
+    });
+    bench("p8/div (PVU LUT)", N as u64, || {
+        for i in 0..N {
+            black_box(t.div(a8[i], b8[i]));
+        }
+    });
+    bench("p8/vadd (PVU slice)", N as u64, || {
+        black_box(pvu::vadd(P8, &a8, &b8));
+    });
+    let a16 = operands(P16, 13);
+    let b16 = operands(P16, 14);
+    bench("p16/vadd (PVU decode-once)", N as u64, || {
+        black_box(pvu::vadd(P16, &a16, &b16));
+    });
+    bench("p16/vaxpy (PVU, alpha decoded once)", N as u64, || {
+        black_box(pvu::vaxpy(P16, a16[0], &a16, &b16));
+    });
+    bench("p16/dot (PVU quire-fused)", N as u64, || {
+        black_box(pvu::dot(P16, &a16, &b16));
+    });
+    bench("p8/dot (PVU quire-fused)", N as u64, || {
+        black_box(pvu::dot(P8, &a8, &b8));
+    });
+    let xs: Vec<f32> = (0..N).map(|i| i as f32 * 0.37 - 700.0).collect();
+    bench("p8/vfrom_f32+vto_f32 (PVU batch convert)", (2 * N) as u64, || {
+        let w = pvu::vfrom_f32(P8, &xs);
+        black_box(pvu::vto_f32(P8, &w));
+    });
 }

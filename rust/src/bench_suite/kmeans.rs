@@ -6,6 +6,10 @@
 //! update step.
 
 use crate::data::iris;
+use crate::isa::cost::ROCKET_INT;
+use crate::isa::FOp;
+use crate::posit::{self, PositSpec, Quire};
+use crate::pvu::{self, PvuCost};
 use crate::sim::Machine;
 
 /// Result: final assignment of each point and iteration count.
@@ -99,6 +103,76 @@ pub fn run(m: &mut Machine, trace_inputs: bool) -> KmResult {
     KmResult { assign, iters }
 }
 
+/// k-means on the PVU: the assignment distances run as `vsub` + a
+/// quire-fused [`pvu::dot`] (one rounding per distance), and the update
+/// step sums members exactly in a quire before the per-coordinate
+/// divide. Returns the result plus modeled cycles ([`PvuCost`] packing
+/// + the scalar kernel's integer/branch stream).
+pub fn run_pvu(spec: PositSpec) -> (KmResult, u64) {
+    let cost = PvuCost::new(spec);
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| posit::from_f64(spec, v))
+        .collect();
+    let mut centroids: Vec<u32> = [0usize, 50, 100]
+        .iter()
+        .flat_map(|&i| x[i * M..(i + 1) * M].to_vec())
+        .collect();
+    let mut assign = vec![0usize; N];
+    let mut iters = 0;
+    let mut cycles = ROCKET_INT.program_overhead;
+    for _ in 0..MAX_ITERS {
+        iters += 1;
+        let mut changed = false;
+        for i in 0..N {
+            let mut best = 0usize;
+            let mut best_d = 0u32;
+            for (c, cent) in centroids.chunks(M).enumerate() {
+                let diff = pvu::vsub(spec, &x[i * M..(i + 1) * M], cent);
+                let d = pvu::dot(spec, &diff, &diff);
+                cycles += cost.mem_words(2 * M) * ROCKET_INT.load;
+                cycles += cost.vector_op(FOp::Sub, M) + cost.dot(M);
+                if c == 0 || posit::lt(spec, d, best_d) {
+                    best = c;
+                    best_d = d;
+                }
+                cycles += 1 + ROCKET_INT.branch; // packed compare + branch
+            }
+            changed |= assign[i] != best;
+            assign[i] = best;
+            cycles += 3 * ROCKET_INT.alu;
+        }
+        if !changed {
+            break;
+        }
+        for c in 0..K {
+            let mut count = 0u32;
+            let mut sums = vec![Quire::new(spec); M];
+            for i in 0..N {
+                if assign[i] == c {
+                    count += 1;
+                    for (j, q) in sums.iter_mut().enumerate() {
+                        q.add(x[i * M + j]);
+                    }
+                    cycles += cost.mem_words(M) * ROCKET_INT.load;
+                    cycles += cost.vector_op(FOp::Add, M);
+                }
+                cycles += 2 * ROCKET_INT.alu + ROCKET_INT.branch;
+            }
+            if count > 0 {
+                let cf = posit::from_f64(spec, count as f64);
+                cycles += cost.vector_op(FOp::CvtSW, 1);
+                for (j, q) in sums.iter().enumerate() {
+                    centroids[c * M + j] = posit::div(spec, q.to_posit(), cf);
+                }
+                cycles += cost.vector_op(FOp::Div, M) + cost.mem_words(M) * ROCKET_INT.store;
+            }
+        }
+    }
+    (KmResult { assign, iters }, cycles)
+}
+
 /// f64 reference run (same init, same schedule).
 pub fn reference() -> KmResult {
     let x: Vec<f64> = iris::FEATURES.iter().flatten().cloned().collect();
@@ -184,6 +258,23 @@ mod tests {
             let mut m = Machine::new(&be);
             assert_eq!(run(&mut m, false).assign, want, "{spec:?}");
         }
+    }
+
+    #[test]
+    fn pvu_p32_matches_reference_and_is_cheaper_on_p8() {
+        let want = reference().assign;
+        let (got, _) = run_pvu(P32);
+        assert_eq!(got.assign, want, "PVU P32 k-means");
+        // §V-C lanes: PVU P8 k-means is cheaper than the scalar P8 run.
+        let be = Posar::new(P8);
+        let mut m = Machine::new(&be);
+        let _ = run(&mut m, false);
+        let (_, pvu_cycles) = run_pvu(P8);
+        assert!(
+            pvu_cycles < m.cycles,
+            "PVU P8 {pvu_cycles} !< scalar {}",
+            m.cycles
+        );
     }
 
     #[test]

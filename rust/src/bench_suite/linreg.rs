@@ -11,6 +11,10 @@
 //! are not enough — exactly the paper's outcome.
 
 use crate::data::iris;
+use crate::isa::cost::ROCKET_INT;
+use crate::isa::FOp;
+use crate::posit::{self, PositSpec, Quire};
+use crate::pvu::{self, PvuCost};
 use crate::sim::Machine;
 
 const D: usize = 3;
@@ -123,6 +127,109 @@ pub fn run(m: &mut Machine) -> (Vec<f64>, f64) {
     (beta, m.val(det))
 }
 
+/// Posit `det3` on plain patterns (the PVU path's scalar tail — Cramer's
+/// determinants are 3×3, too small to vectorize usefully).
+fn det3_posit(spec: PositSpec, a: &[u32; 9]) -> u32 {
+    let m = |x, y| posit::mul(spec, x, y);
+    let p1 = m(m(a[0], a[4]), a[8]);
+    let p2 = m(m(a[1], a[5]), a[6]);
+    let p3 = m(m(a[2], a[3]), a[7]);
+    let n1 = m(m(a[2], a[4]), a[6]);
+    let n2 = m(m(a[1], a[3]), a[8]);
+    let n3 = m(m(a[0], a[5]), a[7]);
+    let s = posit::add(spec, p1, p2);
+    let s = posit::add(spec, s, p3);
+    let s = posit::sub(spec, s, n1);
+    let s = posit::sub(spec, s, n2);
+    posit::sub(spec, s, n3)
+}
+
+/// Linear regression on the PVU: column means via exact quire sums, the
+/// centering pass as decode-once [`pvu::vsubs`], and every normal-
+/// equation entry as a quire-fused [`pvu::dot`] (one rounding per
+/// covariance entry). Cramer's rule stays scalar. Returns
+/// `(coefficients, modeled_cycles)`.
+pub fn run_pvu(spec: PositSpec) -> (Vec<f64>, u64) {
+    let cost = PvuCost::new(spec);
+    let mut cycles = ROCKET_INT.program_overhead;
+    let cols: Vec<Vec<u32>> = (0..D)
+        .map(|j| {
+            iris::FEATURES
+                .iter()
+                .map(|f| posit::from_f64(spec, f[j]))
+                .collect()
+        })
+        .collect();
+    let yw: Vec<u32> = iris::FEATURES
+        .iter()
+        .map(|f| posit::from_f64(spec, f[3]))
+        .collect();
+    let nf = posit::from_f64(spec, N as f64);
+
+    // Column means: one exact quire sum + one divide per column.
+    let mean = |col: &[u32], cycles: &mut u64| -> u32 {
+        let mut q = Quire::new(spec);
+        for &w in col {
+            q.add(w);
+        }
+        *cycles += cost.mem_words(N) * ROCKET_INT.load;
+        *cycles += cost.vector_op(FOp::Add, N) + cost.vector_op(FOp::Div, 1);
+        posit::div(spec, q.to_posit(), nf)
+    };
+    let xm: Vec<u32> = cols
+        .iter()
+        .map(|c| mean(c.as_slice(), &mut cycles))
+        .collect();
+    let ym = mean(yw.as_slice(), &mut cycles);
+
+    // Centering (decode-once subtrahend) + quire-fused normal equations.
+    let xc: Vec<Vec<u32>> = cols
+        .iter()
+        .zip(&xm)
+        .map(|(c, &m)| {
+            cycles += cost.vector_op(FOp::Sub, N);
+            pvu::vsubs(spec, c, m)
+        })
+        .collect();
+    cycles += cost.vector_op(FOp::Sub, N);
+    let yc = pvu::vsubs(spec, &yw, ym);
+
+    let mut a = [0u32; 9];
+    let mut b = [0u32; D];
+    for i in 0..D {
+        for j in 0..D {
+            a[i * 3 + j] = pvu::dot(spec, &xc[i], &xc[j]);
+            cycles += cost.dot(N) + cost.mem_words(2 * N) * ROCKET_INT.load;
+        }
+        b[i] = pvu::dot(spec, &xc[i], &yc);
+        cycles += cost.dot(N) + cost.mem_words(2 * N) * ROCKET_INT.load;
+    }
+
+    // Cramer's rule on the scalar core (4 determinants + 3 divides).
+    let det = det3_posit(spec, &a);
+    cycles += 4 * (12 * cost.vector_op(FOp::Mul, 1) + 5 * cost.vector_op(FOp::Add, 1));
+    let mut beta = vec![0f64; D + 1];
+    let mut acc0 = ym;
+    for i in 0..D {
+        let mut ai = a;
+        for r in 0..D {
+            ai[r * 3 + i] = b[r];
+        }
+        let di = det3_posit(spec, &ai);
+        let bi = posit::div(spec, di, det);
+        beta[i + 1] = posit::to_f64(spec, bi);
+        let t = posit::mul(spec, bi, xm[i]);
+        acc0 = posit::sub(spec, acc0, t);
+        cycles += cost.vector_op(FOp::Div, 1)
+            + cost.vector_op(FOp::Mul, 1)
+            + cost.vector_op(FOp::Sub, 1)
+            + 4 * ROCKET_INT.alu
+            + ROCKET_INT.branch;
+    }
+    beta[0] = posit::to_f64(spec, acc0);
+    (beta, cycles)
+}
+
 /// f64 reference fit (same algorithm).
 pub fn reference() -> (Vec<f64>, f64) {
     let xs: Vec<[f64; D]> = iris::FEATURES.iter().map(|f| [f[0], f[1], f[2]]).collect();
@@ -201,6 +308,26 @@ mod tests {
         let mut m = Machine::new(&p32);
         let (got, _) = run(&mut m);
         assert!(coefficients_match(&got, &want), "P32 {got:?} vs {want:?}");
+    }
+
+    #[test]
+    fn pvu_p32_matches_reference() {
+        let (want, _) = reference();
+        let (got, _) = run_pvu(P32);
+        assert!(
+            coefficients_match(&got, &want),
+            "PVU P32 {got:?} vs {want:?}"
+        );
+        // PVU P8 is cheaper than the scalar P8 run (§V-C lanes).
+        let be = Posar::new(P8);
+        let mut m = Machine::new(&be);
+        let _ = run(&mut m);
+        let (_, pvu_cycles) = run_pvu(P8);
+        assert!(
+            pvu_cycles < m.cycles,
+            "PVU P8 {pvu_cycles} !< scalar {}",
+            m.cycles
+        );
     }
 
     #[test]

@@ -2,6 +2,9 @@
 //! the largest square size fitting the paper's 512 kB scratchpad).
 
 use crate::data::Rng;
+use crate::isa::cost::ROCKET_INT;
+use crate::posit::{self, PositSpec};
+use crate::pvu::{self, PvuCost};
 use crate::sim::Machine;
 
 /// Generate the two input matrices (seeded, shared with the reference).
@@ -45,6 +48,27 @@ pub fn run(m: &mut Machine, n: usize, a: &[f64], b: &[f64]) -> (f64, Vec<f64>) {
         }
     }
     (m.val(checksum), first_row)
+}
+
+/// `C = A·B` on the PVU: one quire-fused [`pvu::gemm`] call (one rounding
+/// per entry) instead of the scalar per-MAC chain. Returns
+/// `(first_row, modeled_cycles)` — cycles follow the [`PvuCost`] packed
+/// model plus the same integer/memory stream the scalar kernel charges.
+pub fn run_pvu(spec: PositSpec, n: usize, a: &[f64], b: &[f64]) -> (Vec<f64>, u64) {
+    let cost = PvuCost::new(spec);
+    let aw: Vec<u32> = a.iter().map(|&v| posit::from_f64(spec, v)).collect();
+    let bw: Vec<u32> = b.iter().map(|&v| posit::from_f64(spec, v)).collect();
+    let c = pvu::gemm(spec, &aw, &bw, n, n, n);
+    let first_row: Vec<f64> = c[..n].iter().map(|&w| posit::to_f64(spec, w)).collect();
+    // Cycle model: program overhead + packed operand loads (each matrix
+    // row/column streamed once per use, packed `lanes` per word) + the
+    // fused gemm + per-output store/branch like the scalar loop.
+    let mut cycles = ROCKET_INT.program_overhead;
+    cycles += cost.gemm(n, n, n);
+    cycles += (n * n) as u64 * cost.mem_words(2 * n) * ROCKET_INT.load;
+    cycles += (n * n) as u64 * (ROCKET_INT.store + 2 * ROCKET_INT.alu + ROCKET_INT.branch);
+    cycles += (n * n) as u64 * cost.words(n) * ROCKET_INT.alu;
+    (first_row, cycles)
 }
 
 /// f64 reference `(checksum, first_row)`.
@@ -109,6 +133,28 @@ mod tests {
         assert!(entries_match(&row(P32), &wrow), "P32");
         assert!(entries_match(&row(P16), &wrow), "P16");
         assert!(!entries_match(&row(P8), &wrow), "P8 should fail");
+    }
+
+    #[test]
+    fn pvu_mm_correct_and_cheaper() {
+        let n = 12;
+        let (a, b) = inputs(n, 9);
+        let (_, wrow) = reference(n, &a, &b);
+        // Quire-fused P16/P32 match the reference like the scalar kernel.
+        for spec in [P32, P16] {
+            let (row, _) = run_pvu(spec, n, &a, &b);
+            assert!(entries_match(&row, &wrow), "PVU {spec:?}");
+        }
+        // §V-C lanes: the PVU P8 MM is far cheaper than the scalar P8 MM.
+        let be = Posar::new(P8);
+        let mut m = Machine::new(&be);
+        let _ = run(&mut m, n, &a, &b);
+        let (_, pvu_cycles) = run_pvu(P8, n, &a, &b);
+        assert!(
+            pvu_cycles < m.cycles,
+            "PVU P8 {pvu_cycles} !< scalar {}",
+            m.cycles
+        );
     }
 
     #[test]

@@ -19,4 +19,4 @@ pub mod mm;
 pub mod naivebayes;
 pub mod runner;
 
-pub use runner::{run_level_one, run_level_two, BenchResult, Level2Result};
+pub use runner::{run_level_one, run_level_two, run_level_two_pvu, BenchResult, Level2Result};

@@ -174,6 +174,57 @@ pub fn run_level_two(mm_n: usize) -> Vec<Level2Result> {
     out
 }
 
+/// Level-two run on the PVU (selectable alternative to the scalar
+/// [`run_level_two`]): MM, k-means and linear regression execute through
+/// the `pvu` subsystem's LUT/decode-once/quire-fused kernels, per posit
+/// format. Rows carry the [`crate::pvu::PvuCost`]-modeled cycles, so
+/// pairing them with the scalar rows (same benchmark, same format)
+/// yields the §V-C packed-lane speedup — the `repro pvu` report does
+/// exactly that.
+pub fn run_level_two_pvu(mm_n: usize) -> Vec<Level2Result> {
+    let mut out = Vec::new();
+    let specs = [P8, P16, P32];
+
+    let (a, b) = mm::inputs(mm_n, 0xA11CE);
+    let (_, mm_row) = mm::reference(mm_n, &a, &b);
+    for spec in specs {
+        let (row, cycles) = mm::run_pvu(spec, mm_n, &a, &b);
+        out.push(Level2Result {
+            bench: "Matrix Multiplication (MM)".into(),
+            backend: format!("PVU Posit({},{})", spec.ps, spec.es),
+            input: format!("n = {mm_n}"),
+            cycles,
+            correct: mm::entries_match(&row, &mm_row),
+        });
+    }
+
+    let km_ref = kmeans::reference().assign;
+    for spec in specs {
+        let (got, cycles) = kmeans::run_pvu(spec);
+        out.push(Level2Result {
+            bench: "k-means (KM)".into(),
+            backend: format!("PVU Posit({},{})", spec.ps, spec.es),
+            input: "Iris".into(),
+            cycles,
+            correct: got.assign == km_ref,
+        });
+    }
+
+    let (lr_ref, _) = linreg::reference();
+    for spec in specs {
+        let (got, cycles) = linreg::run_pvu(spec);
+        out.push(Level2Result {
+            bench: "Linear Regression (LR)".into(),
+            backend: format!("PVU Posit({},{})", spec.ps, spec.es),
+            input: "Iris".into(),
+            cycles,
+            correct: linreg::coefficients_match(&got, &lr_ref),
+        });
+    }
+
+    out
+}
+
 /// Speedup helper: FP32 cycles / backend cycles, matched by benchmark.
 pub fn speedup_vs_fp32<'a>(
     rows: impl Iterator<Item = (&'a str, &'a str, u64)>,
@@ -220,6 +271,18 @@ mod tests {
             .find(|r| r.bench == "e (Euler)" && r.backend == "Posit(8,1)")
             .unwrap();
         assert_eq!(e_p8.digits, 0);
+    }
+
+    #[test]
+    fn pvu_level_two_rows() {
+        let rows = run_level_two_pvu(10);
+        assert_eq!(rows.len(), 3 * 3);
+        // Quire-fused P32 must be correct on every kernel.
+        for r in rows.iter().filter(|r| r.backend.contains("32")) {
+            assert!(r.correct, "{} wrong on PVU P32", r.bench);
+        }
+        // Every PVU row must carry a non-trivial cycle count.
+        assert!(rows.iter().all(|r| r.cycles > 0));
     }
 
     #[test]

@@ -13,6 +13,9 @@
 //! where the paper observes Posit(8,1) under/overflow (§V-C).
 
 use crate::data::synth::{CnnParams, CHAN, CLASSES, FEAT, HIDDEN, POOLED, SIDE};
+use crate::isa::FOp;
+use crate::posit::{decode, PositSpec, Quire};
+use crate::pvu::{self, PvuCost};
 use crate::sim::{Backend, Machine};
 
 /// Parameters and constants pre-encoded into the backend's *memory*
@@ -175,6 +178,122 @@ pub fn forward(m: &mut Machine, pc: &PreparedCnn, x: &[f32]) -> (usize, Vec<f64>
     (best, probs)
 }
 
+/// Forward pass with relu/pool and the dense layers executed on the
+/// [`crate::pvu`] — the PVU as the CNN's batched execution engine.
+///
+/// `m`'s backend must be a POSAR of the same `spec` (`pc` prepared with
+/// it): the PVU runs relu3 as one `vrelu` over the feature map, pool3 as
+/// exact quire window sums, and ip1/ip2 as quire-fused [`pvu::gemv`]
+/// (one rounding per neuron, bias included). The softmax tail stays on
+/// the scalar core (shared `m_exp` instruction stream). Cycles are
+/// charged through [`PvuCost`] — the §V-C packed-lane model — so the
+/// P8/P16 forward is 4×/2× cheaper on the dense layers than the scalar
+/// FMA chain of [`forward`].
+pub fn forward_pvu(
+    m: &mut Machine,
+    spec: PositSpec,
+    pc: &PreparedCnn,
+    x: &[f32],
+) -> (usize, Vec<f64>) {
+    assert_eq!(x.len(), FEAT);
+    // Hard assert: with a mismatched backend (wrong format, or Hybrid,
+    // whose mem_bits is the storage width) the prepared weights would
+    // silently decode as the wrong format.
+    assert_eq!(
+        m.be.mem_bits(),
+        spec.ps,
+        "forward_pvu needs a Posar backend of the same format"
+    );
+    let cost = PvuCost::new(spec);
+    let zero = m.be.load_f64(0.0);
+
+    // Input encode: the batch f32→posit converter (packed loads).
+    let xw = pvu::vfrom_f32(spec, x);
+    m.mem_read(cost.mem_words(FEAT));
+    m.cycles += cost.convert(FEAT);
+    m.fops += FEAT as u64;
+
+    // relu3: one vector op over the whole 64×8×8 feature map.
+    let relu = pvu::vrelu(spec, &xw);
+    m.cycles += cost.vector_op(FOp::Max, FEAT);
+    m.fops += FEAT as u64;
+
+    // pool3: 3×3 stride-2 average with an exact quire window sum and a
+    // single divide per output (one rounding for the sum, one for the
+    // mean). The window operands are decoded once for the whole map.
+    let drelu: Vec<_> = relu.iter().map(|&w| decode(spec, w)).collect();
+    let mut pooled = vec![0u32; POOLED];
+    let mut q = Quire::new(spec);
+    for ch in 0..CHAN {
+        for py in 0..4 {
+            for px in 0..4 {
+                q.clear();
+                let mut cnt = 0u32;
+                for wy in 0..3usize {
+                    for wx in 0..3usize {
+                        let y = 2 * py + wy;
+                        let xx = 2 * px + wx;
+                        if y < SIDE && xx < SIDE {
+                            q.add_decoded(&drelu[ch * SIDE * SIDE + y * SIDE + xx]);
+                            cnt += 1;
+                        }
+                        m.int_ops(2);
+                    }
+                }
+                let c = m.lit(cnt as f64);
+                let sum = q.to_posit();
+                pooled[ch * 16 + py * 4 + px] = crate::posit::div(spec, sum, c);
+                m.cycles += cost.vector_op(FOp::Add, cnt as usize);
+                m.cycles += cost.vector_op(FOp::Div, 1);
+                m.fops += cnt as u64 + 1;
+                m.int_ops(3);
+                m.branch();
+            }
+        }
+    }
+
+    // ip1/ip2: quire-fused gemv — the PVU as the dense-layer engine.
+    let hidden = pvu::gemv(spec, &pc.w1, &pooled, Some(&pc.b1), HIDDEN, POOLED);
+    m.mem_read(cost.mem_words(HIDDEN * POOLED) + HIDDEN as u64);
+    m.cycles += cost.gemv(HIDDEN, POOLED);
+    m.fops += (HIDDEN * POOLED) as u64;
+    m.int_ops(cost.words(POOLED) * HIDDEN as u64);
+
+    let logits = pvu::gemv(spec, &pc.w2, &hidden, Some(&pc.b2), CLASSES, HIDDEN);
+    m.mem_read(cost.mem_words(CLASSES * HIDDEN) + CLASSES as u64);
+    m.cycles += cost.gemv(CLASSES, HIDDEN);
+    m.fops += (CLASSES * HIDDEN) as u64;
+    m.int_ops(cost.words(HIDDEN) * CLASSES as u64);
+
+    // prob: softmax on the scalar core (identical to [`forward`]).
+    let mut mx = logits[0];
+    for &l in &logits[1..] {
+        mx = m.fmax(mx, l);
+    }
+    let mut exps = vec![0u32; CLASSES];
+    let mut sum = zero;
+    for (c, e) in exps.iter_mut().enumerate() {
+        let d = m.sub(logits[c], mx);
+        *e = m_exp(m, d);
+        sum = m.add(sum, *e);
+        m.int_ops(1);
+    }
+    let mut probs = vec![0f64; CLASSES];
+    let mut best = 0usize;
+    let mut best_w = m.div(exps[0], sum);
+    probs[0] = m.val(best_w);
+    for c in 1..CLASSES {
+        let p = m.div(exps[c], sum);
+        probs[c] = m.val(p);
+        if m.flt(best_w, p) {
+            best = c;
+            best_w = p;
+        }
+        m.branch();
+    }
+    (best, probs)
+}
+
 /// Exact f64 reference forward (the paper's x86/64 host reference run).
 pub fn reference_forward(p: &CnnParams, x: &[f32]) -> (usize, Vec<f64>) {
     let mut pooled = vec![0f64; POOLED];
@@ -293,6 +412,49 @@ mod tests {
         forward(&mut mf, &pcf, set.sample(0));
         forward(&mut mp, &pcp, set.sample(0));
         assert!(mp.cycles < mf.cycles);
+    }
+
+    #[test]
+    fn pvu_forward_tracks_fp32_argmax() {
+        // The PVU path (quire-fused dense layers) must track FP32 at
+        // least as well as the scalar P16 forward does.
+        let set = synth::generate(78, 8);
+        let params = synth::analytic_params();
+        let fpu = Fpu::new();
+        let p16 = Posar::new(P16);
+        let pcf = prepare(&fpu, &params);
+        let pcp = prepare(&p16, &params);
+        let mut agree = 0;
+        for i in 0..set.len() {
+            let mut mf = Machine::new(&fpu);
+            let mut mp = Machine::new(&p16);
+            let (cf, _) = forward(&mut mf, &pcf, set.sample(i));
+            let (cp, _) = forward_pvu(&mut mp, P16, &pcp, set.sample(i));
+            agree += (cf == cp) as usize;
+        }
+        assert!(agree >= 6, "PVU P16 should track FP32: {agree}/8");
+    }
+
+    #[test]
+    fn pvu_forward_cheaper_than_scalar_posit_forward() {
+        // The point of the PVU: §V-C packed lanes make the P8/P16 CNN
+        // forward measurably cheaper than the scalar FMA chain.
+        let set = synth::generate(79, 1);
+        let params = synth::analytic_params();
+        for spec in [P8, P16] {
+            let be = Posar::new(spec);
+            let pc = prepare(&be, &params);
+            let mut ms = Machine::new(&be);
+            let mut mv = Machine::new(&be);
+            forward(&mut ms, &pc, set.sample(0));
+            forward_pvu(&mut mv, spec, &pc, set.sample(0));
+            assert!(
+                mv.cycles < ms.cycles,
+                "{spec:?}: PVU {} !< scalar {}",
+                mv.cycles,
+                ms.cycles
+            );
+        }
     }
 
     #[test]

@@ -19,6 +19,8 @@ pub mod metrics;
 pub use batcher::{Batcher, Request};
 pub use metrics::{Metrics, Snapshot};
 
+use crate::posit::{PositSpec, P16, P32, P8};
+use crate::pvu;
 use crate::runtime::Manifest;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -138,6 +140,30 @@ impl Coordinator {
     }
 }
 
+/// Input quantization format of a serving variant, if it has one. This
+/// must match what the variant's AOT graph applies to its *inputs*:
+/// "hybrid" stores parameters in Posit(8,1) but quantizes activations
+/// (inputs included) at its Posit(16,2) compute format, so its inputs
+/// are P16 here — only the pure-posit variants use their own format.
+pub fn variant_input_spec(name: &str) -> Option<PositSpec> {
+    match name {
+        "p8" => Some(P8),
+        "p16" | "hybrid" => Some(P16),
+        "p32" => Some(P32),
+        _ => None,
+    }
+}
+
+/// Quantize a request batch through the PVU's batch converters:
+/// f32 → posit → f32 in two vector passes (the batcher's pad/encode
+/// path). Idempotent for already-quantized values, so it composes with
+/// (and pins the contract of) the in-graph input quantization of the
+/// AOT executables — the batch handed to PJRT is guaranteed to be in
+/// the variant's input format even for graphs that omit the q(x) step.
+pub fn encode_batch(spec: PositSpec, x: &[f32]) -> Vec<f32> {
+    pvu::vto_f32(spec, &pvu::vfrom_f32(spec, x))
+}
+
 /// Worker loop: own client + executable, drain-batch-execute-reply.
 fn worker(
     name: String,
@@ -168,13 +194,23 @@ fn worker(
             Some(b) => b,
             None => return, // channel closed and drained
         };
-        let t0 = std::time::Instant::now();
         let n = batch.len();
-        // Pad the tail with zeros up to the baked batch size.
+        // Pad the tail with zeros up to the baked batch size, then run
+        // the PVU batch converters over the *filled* rows of the posit
+        // variants (the input-format encode of Figure 4; the zero
+        // padding quantizes to zero, so it is skipped). This happens
+        // before `t0` so the exec-latency metric measures the PJRT run,
+        // not the host-side encode.
         let mut x = vec![0f32; exe.batch * exe.feat];
         for (i, req) in batch.iter().enumerate() {
             x[i * exe.feat..(i + 1) * exe.feat].copy_from_slice(&req.features);
         }
+        if let Some(spec) = variant_input_spec(&name) {
+            let filled = n * exe.feat;
+            let q = encode_batch(spec, &x[..filled]);
+            x[..filled].copy_from_slice(&q);
+        }
+        let t0 = std::time::Instant::now();
         match exe.run(&x) {
             Ok(probs) => {
                 let dt = t0.elapsed();
@@ -208,6 +244,42 @@ fn worker(
                     let _ = req.reply.send(Err(anyhow!("{msg}")));
                 }
             }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_specs_route_to_input_formats() {
+        assert_eq!(variant_input_spec("p8"), Some(P8));
+        assert_eq!(variant_input_spec("p16"), Some(P16));
+        assert_eq!(variant_input_spec("p32"), Some(P32));
+        // Hybrid quantizes activations at its *compute* format: P16.
+        assert_eq!(variant_input_spec("hybrid"), Some(P16));
+        assert_eq!(variant_input_spec("fp32"), None);
+        assert_eq!(variant_input_spec("nope"), None);
+    }
+
+    #[test]
+    fn encode_batch_is_posit_quantization_and_idempotent() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) * 0.37).collect();
+        for spec in [P8, P16, P32] {
+            let once = encode_batch(spec, &x);
+            // Matches the scalar round trip per value.
+            for (i, (&xi, &qi)) in x.iter().zip(&once).enumerate() {
+                let want = crate::posit::to_f32(spec, crate::posit::from_f32(spec, xi));
+                assert_eq!(qi.to_bits(), want.to_bits(), "{spec:?} lane {i}");
+            }
+            // Quantizing a quantized batch is the identity (safe to
+            // compose with in-graph quantization).
+            let twice = encode_batch(spec, &once);
+            assert_eq!(
+                once.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                twice.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
         }
     }
 }

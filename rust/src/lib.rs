@@ -6,20 +6,36 @@
 //!
 //! - [`posit`] — the POSAR datapath: bit-exact posit arithmetic for any
 //!   `(ps, es)` (Algorithms 1–8), plus the quire extension.
+//! - [`pvu`] — the **Posit Vector Unit**: the fast batched execution
+//!   engine. Three layers: exact 256×256 lookup tables for Posit(8,1)
+//!   (bit-exact by construction against the scalar core), decode-once
+//!   vector kernels for arbitrary `(ps, es)` slices, and quire-fused
+//!   `dot`/`gemv`/`gemm` with one rounding per output element.
+//!   [`pvu::PvuCost`] realizes the paper's §V-C packed-operand claim
+//!   (4 × P8 / 2 × P16 lanes per 32-bit issue) in the cycle model. The
+//!   CNN dense layers, the PVU-backed `bench_suite` variants and the
+//!   coordinator's pad/encode path execute through it; `repro pvu`
+//!   reports measured speedup and bit-exactness.
 //! - [`isa`] — the RISC-V F-extension operation model and the per-op
 //!   latency tables of the Rocket FPU vs POSAR.
 //! - [`sim`] — the "Rocket core" execution substrate: backends (IEEE FP32
 //!   FPU, POSAR, hybrid storage/compute, runtime-conversion unit), cycle
 //!   accounting, and the dynamic-range tracer.
-//! - [`bench_suite`] — the paper's level-1/level-2 benchmark programs.
+//! - [`bench_suite`] — the paper's level-1/level-2 benchmark programs,
+//!   plus PVU-backed variants of MM, k-means and linear regression.
 //! - [`npb`] — the NPB BT (block tri-diagonal) level-3 substrate.
-//! - [`cnn`] — the Cifar-10 CNN tail (level-3 ML inference).
+//! - [`cnn`] — the Cifar-10 CNN tail (level-3 ML inference); dense
+//!   layers and pooling have a PVU execution path ([`cnn::forward_pvu`]).
 //! - [`data`] — embedded Iris dataset + synthetic Cifar-like workload.
 //! - [`area`] — FPGA resource (Table VII) and power/energy (§V-F) models.
 //! - [`runtime`] — PJRT loader/executor for AOT-compiled JAX artifacts.
 //! - [`coordinator`] — the L3 serving stack: router, batcher, metrics.
 //! - [`report`] — table/figure renderers that regenerate the paper's
 //!   evaluation section.
+
+// Index-based loops are the house style here: the code mirrors the
+// paper's algorithm listings (and the generated bare-metal C they model).
+#![allow(clippy::needless_range_loop)]
 
 pub mod area;
 pub mod bench_suite;
@@ -29,6 +45,7 @@ pub mod data;
 pub mod isa;
 pub mod npb;
 pub mod posit;
+pub mod pvu;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -27,6 +27,9 @@ paper reproduction:
   cnn [--samples N]      CNN Top-1 + cycles on the simulator (default 64)
   power [--scale N]      power/energy model (S V-F)
   ablation               quire vs sequential accumulation
+  pvu [--mm N]           Posit Vector Unit: LUT bit-exactness, measured
+                         host speedup, SV-C packed-lane model, and the
+                         PVU-vs-scalar level-two kernels (default MM 24)
   all                    everything above at quick-run sizes
 
 serving (PJRT, needs `make artifacts`):
@@ -34,8 +37,9 @@ serving (PJRT, needs `make artifacts`):
                          batched inference over the AOT executables
 
 misc:
-  golden [path]          dump posit golden vectors (cross-checked by the
-                         python tests)"
+  golden [path]          dump posit golden vectors plus PVU golden
+                         vectors (golden_pvu.json alongside), both
+                         cross-checked by the python tests"
     );
     std::process::exit(2)
 }
@@ -75,6 +79,7 @@ fn main() {
         "cnn" => print!("{}", report::cnn_report(num(&args, "--samples", 64) as usize)),
         "power" => print!("{}", report::power_report(num(&args, "--scale", 100))),
         "ablation" => print!("{}", report::quire_ablation()),
+        "pvu" => print!("{}", report::pvu_report(num(&args, "--mm", 24) as usize)),
         "all" => {
             print!("{}", report::table1());
             print!("\n{}", report::table3(100));
@@ -88,6 +93,7 @@ fn main() {
             print!("\n{}", report::cnn_report(64));
             print!("\n{}", report::power_report(100));
             print!("\n{}", report::quire_ablation());
+            print!("\n{}", report::pvu_report(16));
         }
         "serve" => {
             let n = num(&args, "--requests", 256) as usize;
@@ -220,4 +226,76 @@ fn golden(path: &str) {
     out.push_str("\n]\n");
     std::fs::write(path, out).expect("write golden file");
     println!("wrote {path}");
+    let pvu_path = std::path::Path::new(path)
+        .parent()
+        .map(|d| d.join("golden_pvu.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("golden_pvu.json"));
+    golden_pvu(&pvu_path);
+}
+
+/// Dump PVU golden vectors: elementwise vadd/vmul slices (p8/p16, where
+/// the f64 oracle is exact) and a quire-fused dot over same-magnitude
+/// operands (so the exact sum fits f64). The python side recomputes each
+/// from the NumPy posit model and must match bit-for-bit.
+fn golden_pvu(path: &std::path::Path) {
+    use posar::posit::{P16, P8};
+    use posar::pvu;
+    let mut out = String::from("[\n");
+    let mut first = true;
+    let push = |s: String, first: &mut bool, out: &mut String| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        out.push_str(&s);
+    };
+    let fmt_list = |v: &[u32]| -> String {
+        let items: Vec<String> = v.iter().map(|b| b.to_string()).collect();
+        format!("[{}]", items.join(", "))
+    };
+    for (spec, name) in [(P8, "p8"), (P16, "p16")] {
+        let mut rng = posar::data::Rng::new(0xB0B5);
+        let n = 32;
+        let a: Vec<u32> = (0..n)
+            .map(|_| posar::posit::from_f64(spec, rng.range(-8.0, 8.0)))
+            .collect();
+        let b: Vec<u32> = (0..n)
+            .map(|_| posar::posit::from_f64(spec, rng.range(-8.0, 8.0)))
+            .collect();
+        for (op, res) in [
+            ("vadd", pvu::vadd(spec, &a, &b)),
+            ("vmul", pvu::vmul(spec, &a, &b)),
+        ] {
+            push(
+                format!(
+                    "  {{\"fmt\": \"{name}\", \"op\": \"{op}\", \"a\": {}, \"b\": {}, \"out\": {}}}",
+                    fmt_list(&a),
+                    fmt_list(&b),
+                    fmt_list(&res)
+                ),
+                &mut first,
+                &mut out,
+            );
+        }
+        // Same-magnitude operands keep the exact dot representable in f64.
+        let da: Vec<u32> = (0..8)
+            .map(|_| posar::posit::from_f64(spec, rng.range(0.5, 2.0)))
+            .collect();
+        let db: Vec<u32> = (0..8)
+            .map(|_| posar::posit::from_f64(spec, rng.range(0.5, 2.0)))
+            .collect();
+        let d = pvu::dot(spec, &da, &db);
+        push(
+            format!(
+                "  {{\"fmt\": \"{name}\", \"op\": \"dot\", \"a\": {}, \"b\": {}, \"out\": {d}}}",
+                fmt_list(&da),
+                fmt_list(&db)
+            ),
+            &mut first,
+            &mut out,
+        );
+    }
+    out.push_str("\n]\n");
+    std::fs::write(path, out).expect("write PVU golden file");
+    println!("wrote {}", path.display());
 }

@@ -31,6 +31,11 @@ mod sqrt;
 
 pub use cmp::{classify, eq, ge, gt, le, lt, max as cmp_max, min as cmp_min, sgnj, sgnjn, sgnjx, total_cmp};
 pub use mul::fma_full;
+// Exact-arithmetic internals shared with the PVU's decode-once kernels
+// (crate-private: the unpacked `Real` algebra is not a public API).
+pub(crate) use addsub::real_add;
+pub(crate) use div::real_div;
+pub(crate) use mul::real_mul;
 pub use convert::{
     from_f32, from_f64, from_i32, from_i64, from_u32, from_u64, resize, to_f32, to_f64, to_i32,
     to_i64, to_u32, to_u64, RoundMode,

@@ -118,10 +118,30 @@ impl Quire {
 
     /// Accumulate a posit value exactly (`quire += p`).
     pub fn add(&mut self, p: u32) {
-        match decode(self.spec, p) {
+        self.add_decoded(&decode(self.spec, p));
+    }
+
+    /// Accumulate an already-decoded value — the PVU's decode-once path:
+    /// operands decoded once per slice feed many accumulations without
+    /// re-running the field extractor.
+    pub fn add_decoded(&mut self, d: &Decoded) {
+        match d {
             Decoded::Zero => {}
             Decoded::NaR => self.nar = true,
-            Decoded::Num(r) => self.add_real(&r),
+            Decoded::Num(r) => self.add_real(r),
+        }
+    }
+
+    /// Fused accumulate of an exact product of two already-decoded
+    /// operands (`quire += a · b`) — the PVU gemv/gemm inner loop.
+    pub fn add_product_decoded(&mut self, a: &Decoded, b: &Decoded) {
+        match (a, b) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => self.nar = true,
+            (Decoded::Zero, _) | (_, Decoded::Zero) => {}
+            (Decoded::Num(ra), Decoded::Num(rb)) => {
+                let p = real_mul(ra, rb);
+                self.add_real(&p);
+            }
         }
     }
 

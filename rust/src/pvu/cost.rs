@@ -1,0 +1,142 @@
+//! `PvuCost` — the PVU's hook into the `isa`/`sim` cycle model.
+//!
+//! §V-C of the paper: *"by packing two Posit(16,2) and four Posit(8,1)
+//! operands per instruction, we can reduce the execution time by two and
+//! four times, respectively."* The PVU models exactly that datapath: a
+//! 32-bit issue slot carries `32 / ps` lanes, every lane executes in
+//! parallel at the scalar POSAR latency of the lane format
+//! ([`crate::isa::cost::posar`]), and a vector op over `n` elements
+//! issues `ceil(n / lanes)` packed words. This agrees with
+//! [`crate::posit::packed::packed_cost`] on a single word (tested below)
+//! and extends it to whole slices, fused dots, and gemv/gemm shapes.
+
+use crate::isa::{cost, CostModel, FOp};
+use crate::posit::PositSpec;
+
+/// Cycle model of the PVU for one posit format.
+#[derive(Clone, Copy, Debug)]
+pub struct PvuCost {
+    /// Lane format.
+    pub spec: PositSpec,
+    /// Lanes per 32-bit packed word: 4 for P8, 2 for P16, 1 for P32.
+    pub lanes: u64,
+    scalar: CostModel,
+}
+
+impl PvuCost {
+    /// Cost model for a format (lanes = `32 / ps`, at least 1).
+    pub fn new(spec: PositSpec) -> Self {
+        PvuCost {
+            spec,
+            lanes: (32 / spec.ps).max(1) as u64,
+            scalar: cost::posar(spec.ps),
+        }
+    }
+
+    /// Packed words needed for `n` elements.
+    #[inline]
+    pub fn words(&self, n: usize) -> u64 {
+        (n as u64).div_ceil(self.lanes)
+    }
+
+    /// Cycles for an elementwise vector op over `n` elements: one issue
+    /// per packed word, all lanes in parallel.
+    pub fn vector_op(&self, op: FOp, n: usize) -> u64 {
+        self.words(n) * self.scalar.of(op)
+    }
+
+    /// Cycles for a batch f32↔posit conversion of `n` values.
+    pub fn convert(&self, n: usize) -> u64 {
+        self.words(n) * self.scalar.of(FOp::CvtSW)
+    }
+
+    /// Cycles for a quire-fused dot of length `n`: packed MACs plus one
+    /// final quire→posit rounding (modeled at the encode-grade `cvt`
+    /// latency — the deferred rounding the scalar chain pays per MAC).
+    pub fn dot(&self, n: usize) -> u64 {
+        self.words(n) * self.scalar.of(FOp::Madd) + self.scalar.of(FOp::CvtSW)
+    }
+
+    /// Cycles for a gemv of shape `rows × cols` (one fused dot per row).
+    pub fn gemv(&self, rows: usize, cols: usize) -> u64 {
+        rows as u64 * self.dot(cols)
+    }
+
+    /// Cycles for a gemm of shape `m × k × n` (one fused dot per output).
+    pub fn gemm(&self, m: usize, k: usize, n: usize) -> u64 {
+        (m * n) as u64 * self.dot(k)
+    }
+
+    /// Memory traffic for `n` elements: packed words move `lanes` values
+    /// per 32-bit transfer.
+    pub fn mem_words(&self, n: usize) -> u64 {
+        self.words(n)
+    }
+
+    /// Per-value throughput speedup of a PVU vector op over the scalar
+    /// POSAR executing `n` ops of the same latency — the §V-C claim
+    /// (→ 4.0 for P8, 2.0 for P16, 1.0 for P32 as `n` grows).
+    pub fn speedup_vs_scalar(&self, op: FOp, n: usize) -> f64 {
+        let scalar = n as u64 * self.scalar.of(op);
+        scalar as f64 / self.vector_op(op, n) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::packed::{packed_cost, Packing};
+    use crate::posit::{P16, P32, P8};
+
+    #[test]
+    fn lanes_match_the_paper() {
+        assert_eq!(PvuCost::new(P8).lanes, 4);
+        assert_eq!(PvuCost::new(P16).lanes, 2);
+        assert_eq!(PvuCost::new(P32).lanes, 1);
+    }
+
+    #[test]
+    fn one_packed_word_agrees_with_the_packed_model() {
+        // The PVU generalizes `posit::packed`: a single full word must
+        // cost exactly what the packed cycle model says.
+        for (spec, packing) in [(P8, Packing::X4P8), (P16, Packing::X2P16)] {
+            let c = PvuCost::new(spec);
+            for op in [FOp::Add, FOp::Mul, FOp::Div, FOp::Madd] {
+                assert_eq!(
+                    c.vector_op(op, c.lanes as usize),
+                    packed_cost(packing, op),
+                    "{spec:?} {op:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_lane_speedups_hold() {
+        // §V-C: 4× for P8, 2× for P16, parity for P32 (full words).
+        assert_eq!(PvuCost::new(P8).speedup_vs_scalar(FOp::Add, 4096), 4.0);
+        assert_eq!(PvuCost::new(P16).speedup_vs_scalar(FOp::Add, 4096), 2.0);
+        assert_eq!(PvuCost::new(P32).speedup_vs_scalar(FOp::Add, 4096), 1.0);
+    }
+
+    #[test]
+    fn fused_dot_cheaper_than_scalar_fma_chain() {
+        // The scalar chain pays n FMA latencies; the fused dot pays
+        // ceil(n/lanes) + one rounding.
+        for spec in [P8, P16] {
+            let c = PvuCost::new(spec);
+            let n = 1024;
+            let chain = n as u64 * cost::posar(spec.ps).of(FOp::Madd);
+            assert!(c.dot(n) < chain, "{spec:?}: {} !< {chain}", c.dot(n));
+        }
+    }
+
+    #[test]
+    fn partial_words_round_up() {
+        let c = PvuCost::new(P8);
+        assert_eq!(c.words(1), 1);
+        assert_eq!(c.words(4), 1);
+        assert_eq!(c.words(5), 2);
+        assert_eq!(c.vector_op(FOp::Add, 0), 0);
+    }
+}

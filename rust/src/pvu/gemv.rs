@@ -1,0 +1,166 @@
+//! Quire-fused dot / gemv / gemm — one rounding per output element.
+//!
+//! The inner loops accumulate exact products in the posit standard's
+//! quire ([`crate::posit::Quire`]) and round once when the output element
+//! is complete. Operands are decoded **once** and reused: `gemv` decodes
+//! the input vector once for all rows; `gemm` decodes both matrices once
+//! for all `m·n` outputs. Compared to the scalar FMA chain this skips
+//! both the per-MAC rounding *and* the per-MAC encode/decode round trip.
+//!
+//! The scalar-core reference for bit-exactness is a per-output
+//! [`Quire::add_product`] loop (same single rounding, pattern-level
+//! decode per MAC); `rust/tests/pvu_exact.rs` enforces equality.
+
+use crate::posit::{decode, Decoded, PositSpec, Quire};
+
+/// Quire-fused dot product `Σ a[i]·b[i]`, rounded once.
+pub fn dot(spec: PositSpec, a: &[u32], b: &[u32]) -> u32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    let mut q = Quire::new(spec);
+    for (&x, &y) in a.iter().zip(b) {
+        q.add_product_decoded(&decode(spec, x), &decode(spec, y));
+    }
+    q.to_posit()
+}
+
+/// Quire-fused `y = W·x + bias`: `w` is row-major `rows × cols`, `x` has
+/// `cols` entries (decoded once for all rows), `bias` (if given) has
+/// `rows` entries folded into the quire before rounding — so each output
+/// element is rounded exactly once, bias included.
+pub fn gemv(
+    spec: PositSpec,
+    w: &[u32],
+    x: &[u32],
+    bias: Option<&[u32]>,
+    rows: usize,
+    cols: usize,
+) -> Vec<u32> {
+    assert_eq!(w.len(), rows * cols, "gemv weight shape mismatch");
+    assert_eq!(x.len(), cols, "gemv input length mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), rows, "gemv bias length mismatch");
+    }
+    let dx: Vec<Decoded> = x.iter().map(|&v| decode(spec, v)).collect();
+    let mut out = Vec::with_capacity(rows);
+    let mut q = Quire::new(spec);
+    for r in 0..rows {
+        q.clear();
+        if let Some(b) = bias {
+            q.add_decoded(&decode(spec, b[r]));
+        }
+        let row = &w[r * cols..(r + 1) * cols];
+        for (wv, xv) in row.iter().zip(&dx) {
+            q.add_product_decoded(&decode(spec, *wv), xv);
+        }
+        out.push(q.to_posit());
+    }
+    out
+}
+
+/// Quire-fused `C = A·B`: `a` row-major `m × k`, `b` row-major `k × n`,
+/// result row-major `m × n` with one rounding per entry. Both matrices
+/// are decoded once (`m·k + k·n` decodes for `m·k·n` MACs — the
+/// decode-once amortization at its strongest).
+pub fn gemm(spec: PositSpec, a: &[u32], b: &[u32], m: usize, k: usize, n: usize) -> Vec<u32> {
+    assert_eq!(a.len(), m * k, "gemm A shape mismatch");
+    assert_eq!(b.len(), k * n, "gemm B shape mismatch");
+    let da: Vec<Decoded> = a.iter().map(|&v| decode(spec, v)).collect();
+    let db: Vec<Decoded> = b.iter().map(|&v| decode(spec, v)).collect();
+    let mut out = Vec::with_capacity(m * n);
+    let mut q = Quire::new(spec);
+    for i in 0..m {
+        let arow = &da[i * k..(i + 1) * k];
+        for j in 0..n {
+            q.clear();
+            for (kk, av) in arow.iter().enumerate() {
+                q.add_product_decoded(av, &db[kk * n + j]);
+            }
+            out.push(q.to_posit());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::posit::{self, P16, P32, P8};
+
+    fn operands(spec: PositSpec, seed: u64, n: usize) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| posit::from_f64(spec, rng.range(-2.0, 2.0)))
+            .collect()
+    }
+
+    #[test]
+    fn dot_matches_scalar_quire_reference() {
+        for spec in [P8, P16, P32] {
+            let a = operands(spec, 11, 97);
+            let b = operands(spec, 12, 97);
+            let mut q = Quire::new(spec);
+            for (&x, &y) in a.iter().zip(&b) {
+                q.add_product(x, y);
+            }
+            assert_eq!(dot(spec, &a, &b), q.to_posit(), "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn dot_single_rounding_beats_fma_chain() {
+        // 1 + many small eps: the fused dot keeps them, the chain loses
+        // them (the classic quire demonstration, now on the PVU path).
+        let spec = P8;
+        let one = spec.one();
+        let eps = posit::from_f64(spec, 0.03);
+        let a = vec![one, eps, eps, eps, eps];
+        let ones = vec![one; 5];
+        let fused = dot(spec, &a, &ones);
+        assert_eq!(posit::to_f64(spec, fused), 1.125);
+        let mut chain = 0u32;
+        for &v in &a {
+            chain = posit::fma(spec, v, one, chain);
+        }
+        assert_eq!(chain, one, "FMA chain should absorb the eps terms");
+    }
+
+    #[test]
+    fn gemv_matches_per_row_dot_plus_bias() {
+        let spec = P16;
+        let (rows, cols) = (5, 17);
+        let w = operands(spec, 21, rows * cols);
+        let x = operands(spec, 22, cols);
+        let bias = operands(spec, 23, rows);
+        let y = gemv(spec, &w, &x, Some(&bias), rows, cols);
+        for r in 0..rows {
+            let mut q = Quire::new(spec);
+            q.add(bias[r]);
+            for c in 0..cols {
+                q.add_product(w[r * cols + c], x[c]);
+            }
+            assert_eq!(y[r], q.to_posit(), "row {r}");
+        }
+        // NaR in the input poisons exactly the rows that touch it.
+        let mut x2 = x.clone();
+        x2[0] = spec.nar();
+        let y2 = gemv(spec, &w, &x2, None, rows, cols);
+        assert!(y2.iter().all(|&v| v == spec.nar()));
+    }
+
+    #[test]
+    fn gemm_matches_dot_of_row_and_column() {
+        let spec = P8;
+        let (m, k, n) = (4, 9, 3);
+        let a = operands(spec, 31, m * k);
+        let b = operands(spec, 32, k * n);
+        let c = gemm(spec, &a, &b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let row: Vec<u32> = (0..k).map(|kk| a[i * k + kk]).collect();
+                let col: Vec<u32> = (0..k).map(|kk| b[kk * n + j]).collect();
+                assert_eq!(c[i * n + j], dot(spec, &row, &col), "({i},{j})");
+            }
+        }
+    }
+}

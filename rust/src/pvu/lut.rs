@@ -1,0 +1,149 @@
+//! Exact lookup-table kernels for Posit(8,1).
+//!
+//! A 256-pattern format has 65,536 operand pairs per binary op, so the
+//! complete function tables for add/sub/mul/div fit in 4 × 64 kB (plus
+//! 256-entry unary tables for sqrt and posit→f32). The tables are built
+//! lazily, **from the scalar core itself** — one call per entry to
+//! [`crate::posit::add`] etc. — so they are bit-exact by construction:
+//! there is no second implementation of posit arithmetic to drift.
+//!
+//! After the one-time build (~260 k scalar ops), every p8 op is a single
+//! indexed load: this is where the `repro pvu` report's measured
+//! host-time speedup over the decode/encode scalar path comes from.
+
+use crate::posit::{self, P8};
+use std::sync::OnceLock;
+
+/// The complete Posit(8,1) function tables.
+pub struct P8Tables {
+    add: Vec<u8>,
+    sub: Vec<u8>,
+    mul: Vec<u8>,
+    div: Vec<u8>,
+    sqrt: Vec<u8>,
+    to_f32: Vec<f32>,
+}
+
+#[inline]
+fn idx(a: u32, b: u32) -> usize {
+    (((a & 0xff) << 8) | (b & 0xff)) as usize
+}
+
+impl P8Tables {
+    fn build() -> Self {
+        let n = 1usize << 16;
+        let mut add = vec![0u8; n];
+        let mut sub = vec![0u8; n];
+        let mut mul = vec![0u8; n];
+        let mut div = vec![0u8; n];
+        for a in 0..=255u32 {
+            for b in 0..=255u32 {
+                let i = idx(a, b);
+                add[i] = posit::add(P8, a, b) as u8;
+                sub[i] = posit::sub(P8, a, b) as u8;
+                mul[i] = posit::mul(P8, a, b) as u8;
+                div[i] = posit::div(P8, a, b) as u8;
+            }
+        }
+        let mut sqrt = vec![0u8; 256];
+        let mut to_f32 = vec![0f32; 256];
+        for a in 0..=255u32 {
+            sqrt[a as usize] = posit::sqrt(P8, a) as u8;
+            to_f32[a as usize] = posit::to_f32(P8, a);
+        }
+        P8Tables {
+            add,
+            sub,
+            mul,
+            div,
+            sqrt,
+            to_f32,
+        }
+    }
+
+    /// Table-exact `a + b`.
+    #[inline]
+    pub fn add(&self, a: u32, b: u32) -> u32 {
+        self.add[idx(a, b)] as u32
+    }
+
+    /// Table-exact `a - b`.
+    #[inline]
+    pub fn sub(&self, a: u32, b: u32) -> u32 {
+        self.sub[idx(a, b)] as u32
+    }
+
+    /// Table-exact `a · b`.
+    #[inline]
+    pub fn mul(&self, a: u32, b: u32) -> u32 {
+        self.mul[idx(a, b)] as u32
+    }
+
+    /// Table-exact `a / b`.
+    #[inline]
+    pub fn div(&self, a: u32, b: u32) -> u32 {
+        self.div[idx(a, b)] as u32
+    }
+
+    /// Table-exact `sqrt(a)`.
+    #[inline]
+    pub fn sqrt(&self, a: u32) -> u32 {
+        self.sqrt[(a & 0xff) as usize] as u32
+    }
+
+    /// Table-exact posit→f32 conversion (NaR → NaN).
+    #[inline]
+    pub fn to_f32(&self, a: u32) -> f32 {
+        self.to_f32[(a & 0xff) as usize]
+    }
+}
+
+static TABLES: OnceLock<P8Tables> = OnceLock::new();
+
+/// The process-wide Posit(8,1) tables, built on first use.
+pub fn p8_tables() -> &'static P8Tables {
+    TABLES.get_or_init(P8Tables::build)
+}
+
+/// Re-verify every table entry against the scalar core; returns the
+/// number of mismatches (0 unless the build is broken). Used by the
+/// `repro pvu` report and the exactness test suite.
+pub fn verify_p8_luts() -> usize {
+    let t = p8_tables();
+    let mut bad = 0usize;
+    for a in 0..=255u32 {
+        for b in 0..=255u32 {
+            bad += (t.add(a, b) != posit::add(P8, a, b)) as usize;
+            bad += (t.sub(a, b) != posit::sub(P8, a, b)) as usize;
+            bad += (t.mul(a, b) != posit::mul(P8, a, b)) as usize;
+            bad += (t.div(a, b) != posit::div(P8, a, b)) as usize;
+        }
+        bad += (t.sqrt(a) != posit::sqrt(P8, a)) as usize;
+        let tf = t.to_f32(a);
+        let sf = posit::to_f32(P8, a);
+        bad += (tf.to_bits() != sf.to_bits()) as usize;
+    }
+    bad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn luts_are_bit_exact_by_construction() {
+        assert_eq!(verify_p8_luts(), 0);
+    }
+
+    #[test]
+    fn specials_flow_through_tables() {
+        let t = p8_tables();
+        let nar = P8.nar();
+        let one = P8.one();
+        assert_eq!(t.add(nar, one), nar);
+        assert_eq!(t.mul(0, one), 0);
+        assert_eq!(t.div(one, 0), nar); // x/0 = NaR
+        assert_eq!(t.sqrt(P8.negate(one)), nar); // sqrt(-1) = NaR
+        assert!(t.to_f32(nar).is_nan());
+    }
+}

@@ -1,0 +1,77 @@
+//! PVU — the software **Posit Vector Unit**: the crate's fast batched
+//! execution engine for posit arithmetic.
+//!
+//! The paper's §V-C proposes packing two Posit(16,2) or four Posit(8,1)
+//! operands per 32-bit instruction for 2×/4× speedups. The scalar core in
+//! [`crate::posit`] decodes and re-encodes one operand per op — correct
+//! and bit-exact, but every op pays the full field-extraction round trip,
+//! and [`crate::posit::packed`] only *models* the packed speedup in the
+//! cycle tables. The PVU is the actual fast path, three layers deep:
+//!
+//! 1. **[`lut`] — exact lookup tables for Posit(8,1).** A 256-entry
+//!    format has only 65,536 operand pairs per binary op; the tables are
+//!    built once (lazily) *from the scalar core itself*, so they are
+//!    bit-exact by construction, and every subsequent p8 op is a single
+//!    indexed load. This is the software analogue of the table/simplified
+//!    datapaths Fixed-Posit (Gohil et al., 2021) uses for low-bit posits.
+//!
+//! 2. **[`vector`] — decode-once kernels for any `(ps, es)`.** Batched
+//!    `vadd`/`vmul`/`vfma`/`vrelu`/`vmax` plus f32↔posit batch
+//!    converters. Operands that are *reused* (the scalar of an axpy, the
+//!    vector of a gemv) are decoded once per slice instead of once per
+//!    op; P8 slices are dispatched to the LUTs automatically.
+//!
+//! 3. **[`gemv`] — quire-fused `dot`/`gemv`/`gemm`.** The inner loops
+//!    accumulate exact products in a [`crate::posit::Quire`] and round
+//!    **once per output element** — fewer roundings than a scalar FMA
+//!    chain *and* faster, because the decode-once operands skip the
+//!    per-MAC encode/decode round trip.
+//!
+//! [`cost::PvuCost`] realizes the §V-C packed-lane claim in the `isa`/
+//! `sim` cycle model: a 32-bit datapath issues `32/ps` lanes per cycle,
+//! so modeled vector-op cost is `ceil(n / lanes) ×` the scalar latency of
+//! [`crate::isa::cost::posar`] — 4× throughput for P8, 2× for P16, parity
+//! for P32, exactly the paper's numbers.
+//!
+//! **Kernel selection.** Elementwise entry points check the format:
+//! Posit(8,1) goes to the LUTs (O(1) per op), everything else to the
+//! decode-once path. The fused `dot`/`gemv`/`gemm` family always uses
+//! decode-once + quire (the LUTs cannot express a deferred rounding).
+//! All paths are enforced bit-identical to the scalar core by
+//! `rust/tests/pvu_exact.rs` and the `repro pvu` report.
+
+pub mod cost;
+pub mod gemv;
+pub mod lut;
+pub mod vector;
+
+pub use cost::PvuCost;
+pub use gemv::{dot, gemm, gemv};
+pub use lut::{p8_tables, verify_p8_luts, P8Tables};
+pub use vector::{
+    vadd, vaxpy, vdiv, vfma, vfrom_f32, vmax, vmul, vrelu, vscale, vsub, vsubs, vto_f32,
+};
+
+#[cfg(test)]
+mod tests {
+    use crate::posit::{P16, P8};
+
+    #[test]
+    fn module_level_smoke() {
+        // One op through each layer: LUT, decode-once, quire-fused.
+        let a = crate::posit::from_f64(P8, 1.5);
+        let b = crate::posit::from_f64(P8, 2.0);
+        assert_eq!(
+            super::vadd(P8, &[a], &[b])[0],
+            crate::posit::add(P8, a, b)
+        );
+        let a16 = crate::posit::from_f64(P16, 1.5);
+        let b16 = crate::posit::from_f64(P16, 2.0);
+        assert_eq!(
+            super::vmul(P16, &[a16], &[b16])[0],
+            crate::posit::mul(P16, a16, b16)
+        );
+        let d = super::dot(P16, &[a16, b16], &[b16, a16]);
+        assert_eq!(crate::posit::to_f64(P16, d), 6.0);
+    }
+}

@@ -1,0 +1,312 @@
+//! Decode-once vector kernels for arbitrary `(ps, es)` slices.
+//!
+//! The scalar core's binary ops decode both operands and encode the
+//! result on *every* call. These kernels batch that work over a slice:
+//! operands that are reused across the slice (the `alpha` of an axpy,
+//! the subtrahend of a centering pass) are decoded exactly once, and the
+//! per-element special-case dispatch mirrors the scalar core line for
+//! line, so results are bit-identical to `posit::{add,sub,mul,div,fma}`
+//! (enforced by `rust/tests/pvu_exact.rs`).
+//!
+//! Posit(8,1) slices short-circuit to the [`super::lut`] tables, which is
+//! the §V-C "four Posit(8,1) per instruction" fast path in software form.
+
+use super::lut::p8_tables;
+use crate::posit::{
+    self, decode, encode, real_add, real_div, real_mul, Decoded, PositSpec, Real, P8,
+};
+
+/// Elementwise `a[i] + b[i]` (bit-identical to [`posit::add`]).
+pub fn vadd(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), b.len(), "vadd length mismatch");
+    if spec == P8 {
+        let t = p8_tables();
+        return a.iter().zip(b).map(|(&x, &y)| t.add(x, y)).collect();
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| addsub_one(spec, &decode(spec, x), &decode(spec, y), x, y, false))
+        .collect()
+}
+
+/// Elementwise `a[i] - b[i]` (bit-identical to [`posit::sub`]).
+pub fn vsub(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), b.len(), "vsub length mismatch");
+    if spec == P8 {
+        let t = p8_tables();
+        return a.iter().zip(b).map(|(&x, &y)| t.sub(x, y)).collect();
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| addsub_one(spec, &decode(spec, x), &decode(spec, y), x, y, true))
+        .collect()
+}
+
+/// Elementwise `a[i] · b[i]` (bit-identical to [`posit::mul`]).
+pub fn vmul(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), b.len(), "vmul length mismatch");
+    if spec == P8 {
+        let t = p8_tables();
+        return a.iter().zip(b).map(|(&x, &y)| t.mul(x, y)).collect();
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| mul_one(spec, &decode(spec, x), &decode(spec, y)))
+        .collect()
+}
+
+/// Elementwise `a[i] / b[i]` (bit-identical to [`posit::div`]).
+pub fn vdiv(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), b.len(), "vdiv length mismatch");
+    if spec == P8 {
+        let t = p8_tables();
+        return a.iter().zip(b).map(|(&x, &y)| t.div(x, y)).collect();
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| div_one(spec, &decode(spec, x), &decode(spec, y)))
+        .collect()
+}
+
+/// Elementwise fused `a[i]·b[i] + c[i]`, single rounding (bit-identical
+/// to [`posit::fma`]). Always decode-once: a fused op cannot go through
+/// the binary LUTs without double rounding.
+pub fn vfma(spec: PositSpec, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
+    assert!(a.len() == b.len() && b.len() == c.len(), "vfma length mismatch");
+    (0..a.len())
+        .map(|i| {
+            fma_one(
+                spec,
+                &decode(spec, a[i]),
+                &decode(spec, b[i]),
+                &decode(spec, c[i]),
+            )
+        })
+        .collect()
+}
+
+/// `alpha·x[i] + y[i]` with `alpha` decoded **once** for the whole slice
+/// (bit-identical to `posit::fma(spec, alpha, x[i], y[i])`).
+pub fn vaxpy(spec: PositSpec, alpha: u32, x: &[u32], y: &[u32]) -> Vec<u32> {
+    assert_eq!(x.len(), y.len(), "vaxpy length mismatch");
+    let da = decode(spec, alpha);
+    x.iter()
+        .zip(y)
+        .map(|(&xi, &yi)| fma_one(spec, &da, &decode(spec, xi), &decode(spec, yi)))
+        .collect()
+}
+
+/// `alpha·x[i]` with `alpha` decoded once (bit-identical to
+/// `posit::mul(spec, alpha, x[i])`).
+pub fn vscale(spec: PositSpec, alpha: u32, x: &[u32]) -> Vec<u32> {
+    if spec == P8 {
+        let t = p8_tables();
+        return x.iter().map(|&xi| t.mul(alpha, xi)).collect();
+    }
+    let da = decode(spec, alpha);
+    x.iter()
+        .map(|&xi| mul_one(spec, &da, &decode(spec, xi)))
+        .collect()
+}
+
+/// `x[i] - s` with the subtrahend decoded once (bit-identical to
+/// `posit::sub(spec, x[i], s)`). The centering pass of the PVU-backed
+/// linear-regression and k-means kernels.
+pub fn vsubs(spec: PositSpec, x: &[u32], s: u32) -> Vec<u32> {
+    if spec == P8 {
+        let t = p8_tables();
+        return x.iter().map(|&xi| t.sub(xi, s)).collect();
+    }
+    let ds = decode(spec, s);
+    x.iter()
+        .map(|&xi| addsub_one(spec, &decode(spec, xi), &ds, xi, s, true))
+        .collect()
+}
+
+/// Elementwise `max(x[i], 0)` (bit-identical to
+/// `posit::cmp_max(spec, x[i], 0)`). Pure pattern test — posits order
+/// like two's-complement integers, so no decode at all.
+pub fn vrelu(spec: PositSpec, x: &[u32]) -> Vec<u32> {
+    x.iter()
+        .map(|&xi| if spec.to_i32_pattern(xi) > 0 { xi } else { 0 })
+        .collect()
+}
+
+/// Elementwise `max(a[i], b[i])` (bit-identical to [`posit::cmp_max`]).
+pub fn vmax(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), b.len(), "vmax length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| posit::cmp_max(spec, x, y))
+        .collect()
+}
+
+/// Batch f32 → posit conversion (bit-identical to [`posit::from_f32`]).
+/// The coordinator's pad/encode path and the CNN input layer use this.
+pub fn vfrom_f32(spec: PositSpec, x: &[f32]) -> Vec<u32> {
+    x.iter().map(|&v| posit::from_f32(spec, v)).collect()
+}
+
+/// Batch posit → f32 conversion (bit-identical to [`posit::to_f32`]);
+/// Posit(8,1) reads the 256-entry table.
+pub fn vto_f32(spec: PositSpec, x: &[u32]) -> Vec<f32> {
+    if spec == P8 {
+        let t = p8_tables();
+        return x.iter().map(|&xi| t.to_f32(xi)).collect();
+    }
+    x.iter().map(|&xi| posit::to_f32(spec, xi)).collect()
+}
+
+// ---- per-element dispatch, mirroring the scalar core ------------------
+
+/// One add/sub on decoded operands — the special-case ladder of
+/// `posit::addsub` verbatim (`a`/`b` raw patterns feed the zero cases).
+#[inline]
+pub(crate) fn addsub_one(
+    spec: PositSpec,
+    da: &Decoded,
+    db: &Decoded,
+    a: u32,
+    b: u32,
+    sub: bool,
+) -> u32 {
+    match (da, db) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
+        (Decoded::Zero, Decoded::Zero) => spec.zero(),
+        (Decoded::Zero, Decoded::Num(_)) => {
+            if sub {
+                spec.negate(b)
+            } else {
+                b
+            }
+        }
+        (Decoded::Num(_), Decoded::Zero) => a,
+        (Decoded::Num(ra), Decoded::Num(rb)) => {
+            let rb = Real {
+                sign: rb.sign ^ sub,
+                ..*rb
+            };
+            match real_add(ra, &rb) {
+                Some(r) => encode(spec, &r),
+                None => spec.zero(),
+            }
+        }
+    }
+}
+
+/// One multiply on decoded operands (`posit::mul`'s ladder).
+#[inline]
+pub(crate) fn mul_one(spec: PositSpec, da: &Decoded, db: &Decoded) -> u32 {
+    match (da, db) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
+        (Decoded::Zero, _) | (_, Decoded::Zero) => spec.zero(),
+        (Decoded::Num(ra), Decoded::Num(rb)) => encode(spec, &real_mul(ra, rb)),
+    }
+}
+
+/// One divide on decoded operands (`posit::div`'s ladder).
+#[inline]
+pub(crate) fn div_one(spec: PositSpec, da: &Decoded, db: &Decoded) -> u32 {
+    match (da, db) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
+        (_, Decoded::Zero) => spec.nar(),
+        (Decoded::Zero, _) => spec.zero(),
+        (Decoded::Num(ra), Decoded::Num(rb)) => encode(spec, &real_div(spec, ra, rb)),
+    }
+}
+
+/// One fused multiply-add on decoded operands (`posit::fma_full` with
+/// both negation flags off).
+#[inline]
+pub(crate) fn fma_one(spec: PositSpec, da: &Decoded, db: &Decoded, dc: &Decoded) -> u32 {
+    if da.is_nar() || db.is_nar() || dc.is_nar() {
+        return spec.nar();
+    }
+    let prod = match (da, db) {
+        (Decoded::Num(ra), Decoded::Num(rb)) => Some(real_mul(ra, rb)),
+        _ => None,
+    };
+    let addend = match dc {
+        Decoded::Num(rc) => Some(*rc),
+        _ => None,
+    };
+    match (prod, addend) {
+        (None, None) => spec.zero(),
+        (Some(p), None) => encode(spec, &p),
+        (None, Some(c)) => encode(spec, &c),
+        (Some(p), Some(c)) => match real_add(&p, &c) {
+            Some(r) => encode(spec, &r),
+            None => spec.zero(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::posit::{P16, P32};
+
+    fn operands(spec: PositSpec, seed: u64, n: usize) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.bits32(spec.ps)).collect()
+    }
+
+    #[test]
+    fn elementwise_matches_scalar_all_formats() {
+        for spec in [P8, P16, P32, PositSpec::new(12, 1)] {
+            let a = operands(spec, 0xA0 + spec.ps as u64, 300);
+            let b = operands(spec, 0xB0 + spec.ps as u64, 300);
+            let add = vadd(spec, &a, &b);
+            let sub = vsub(spec, &a, &b);
+            let mul = vmul(spec, &a, &b);
+            let div = vdiv(spec, &a, &b);
+            let max = vmax(spec, &a, &b);
+            let relu = vrelu(spec, &a);
+            for i in 0..a.len() {
+                assert_eq!(add[i], posit::add(spec, a[i], b[i]), "add {spec:?} {i}");
+                assert_eq!(sub[i], posit::sub(spec, a[i], b[i]), "sub {spec:?} {i}");
+                assert_eq!(mul[i], posit::mul(spec, a[i], b[i]), "mul {spec:?} {i}");
+                assert_eq!(div[i], posit::div(spec, a[i], b[i]), "div {spec:?} {i}");
+                assert_eq!(max[i], posit::cmp_max(spec, a[i], b[i]), "max {spec:?} {i}");
+                assert_eq!(relu[i], posit::cmp_max(spec, a[i], 0), "relu {spec:?} {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_scalar_fma() {
+        for spec in [P8, P16, P32] {
+            let a = operands(spec, 1, 200);
+            let b = operands(spec, 2, 200);
+            let c = operands(spec, 3, 200);
+            let f = vfma(spec, &a, &b, &c);
+            let alpha = a[7];
+            let axpy = vaxpy(spec, alpha, &b, &c);
+            let scaled = vscale(spec, alpha, &b);
+            let centered = vsubs(spec, &b, alpha);
+            for i in 0..a.len() {
+                assert_eq!(f[i], posit::fma(spec, a[i], b[i], c[i]), "fma {spec:?} {i}");
+                assert_eq!(axpy[i], posit::fma(spec, alpha, b[i], c[i]));
+                assert_eq!(scaled[i], posit::mul(spec, alpha, b[i]));
+                assert_eq!(centered[i], posit::sub(spec, b[i], alpha));
+            }
+        }
+    }
+
+    #[test]
+    fn converters_match_scalar() {
+        let mut rng = Rng::new(9);
+        let xs: Vec<f32> = (0..200)
+            .map(|_| (rng.normal() * 10f64.powi(rng.below(9) as i32 - 4)) as f32)
+            .collect();
+        for spec in [P8, P16, P32] {
+            let w = vfrom_f32(spec, &xs);
+            let back = vto_f32(spec, &w);
+            for i in 0..xs.len() {
+                assert_eq!(w[i], posit::from_f32(spec, xs[i]));
+                assert_eq!(back[i].to_bits(), posit::to_f32(spec, w[i]).to_bits());
+            }
+        }
+    }
+}

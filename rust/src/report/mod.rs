@@ -6,7 +6,7 @@ use crate::area::resources::table7 as area_table7;
 use crate::bench_suite::mathconst::{
     e_euler, e_euler_with_runtime_conversion, exact_fraction_digits,
 };
-use crate::bench_suite::runner::{run_level_one, run_level_two};
+use crate::bench_suite::runner::{run_level_one, run_level_two, run_level_two_pvu};
 use crate::cnn;
 use crate::npb::bt::BtProblem;
 use crate::npb::verify::verify;
@@ -326,6 +326,31 @@ pub fn cnn_report(n_samples: usize) -> String {
             fp32_cycles as f64 / cycles as f64
         ));
     }
+
+    // PVU rows: relu/pool + dense layers on the Posit Vector Unit
+    // (quire-fused gemv, §V-C packed-lane cycle model).
+    for spec in [P8, P16] {
+        let be = Posar::new(spec);
+        let pc = cnn::prepare(&be, &params);
+        let mut correct = 0usize;
+        let mut agree = 0usize;
+        let mut cycles = 0u64;
+        for i in 0..n {
+            let mut m = Machine::new(&be);
+            let (c, _) = cnn::model::forward_pvu(&mut m, spec, &pc, set.sample(i));
+            cycles += m.cycles;
+            correct += (c == set.labels[i] as usize) as usize;
+            agree += (c == fp32_preds[i]) as usize;
+        }
+        out.push_str(&format!(
+            "{:<40} {:<7.4} {:<11.4} {:<14} {:.2}\n",
+            format!("PVU Posit({},{})", spec.ps, spec.es),
+            correct as f64 / n as f64,
+            agree as f64 / n as f64,
+            cycles / n as u64,
+            fp32_cycles as f64 / cycles as f64
+        ));
+    }
     out
 }
 
@@ -364,6 +389,124 @@ pub fn power_report(scale: u64) -> String {
             "MM(182)",
             board_power(unit, Workload::MatMul),
             "-"
+        ));
+    }
+    out
+}
+
+/// PVU report: bit-exactness of every LUT entry, measured host-time
+/// speedup of the p8 LUT kernels over the scalar core, the modeled
+/// §V-C packed-lane speedups, and the PVU-vs-scalar level-two rows.
+pub fn pvu_report(mm_n: usize) -> String {
+    use crate::isa::FOp;
+    use crate::pvu::{self, PvuCost};
+    use std::time::Instant;
+
+    let mut out = String::from("PVU — Posit Vector Unit (LUT / decode-once / quire-fused)\n");
+
+    // 1. Bit-exactness: every LUT entry vs the scalar core, and a
+    //    quire-fused dot vs the scalar quire reference.
+    let t0 = Instant::now();
+    let mismatches = pvu::verify_p8_luts();
+    out.push_str(&format!(
+        "p8 LUTs: {} mismatches over 4×65536 binary + 2×256 unary entries \
+         (build+verify {:.1?}) — {}\n",
+        mismatches,
+        t0.elapsed(),
+        if mismatches == 0 { "bit-exact" } else { "BROKEN" }
+    ));
+    let mut rng = crate::data::Rng::new(0xD07);
+    let mut dot_ok = true;
+    for spec in [P8, P16, P32] {
+        let a: Vec<u32> = (0..256)
+            .map(|_| posit::from_f64(spec, rng.range(-2.0, 2.0)))
+            .collect();
+        let b: Vec<u32> = (0..256)
+            .map(|_| posit::from_f64(spec, rng.range(-2.0, 2.0)))
+            .collect();
+        let mut q = posit::Quire::new(spec);
+        for (&x, &y) in a.iter().zip(&b) {
+            q.add_product(x, y);
+        }
+        dot_ok &= pvu::dot(spec, &a, &b) == q.to_posit();
+    }
+    out.push_str(&format!(
+        "quire-fused dot vs scalar quire reference (P8/P16/P32, n=256): {}\n",
+        if dot_ok { "bit-exact" } else { "MISMATCH" }
+    ));
+
+    // 2. Measured host time: LUT p8 ops vs the scalar decode/encode path.
+    let n = 65536usize;
+    let a: Vec<u32> = (0..n as u32).map(|i| i & 0xff).collect();
+    let b: Vec<u32> = (0..n as u32).map(|i| (i >> 8) & 0xff).collect();
+    let reps = 8usize;
+    let t0 = Instant::now();
+    let mut sink = 0u32;
+    for _ in 0..reps {
+        for i in 0..n {
+            sink ^= posit::add(P8, a[i], b[i]);
+            sink ^= posit::mul(P8, a[i], b[i]);
+        }
+    }
+    let scalar_dt = t0.elapsed();
+    let t = pvu::p8_tables();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for i in 0..n {
+            sink ^= t.add(a[i], b[i]);
+            sink ^= t.mul(a[i], b[i]);
+        }
+    }
+    let lut_dt = t0.elapsed();
+    std::hint::black_box(sink);
+    let ops = (2 * reps * n) as f64;
+    out.push_str(&format!(
+        "host time, p8 add+mul over all 65536 pairs ×{reps}: scalar {:.1} ns/op, \
+         LUT {:.1} ns/op — speedup {:.1}×\n",
+        scalar_dt.as_nanos() as f64 / ops,
+        lut_dt.as_nanos() as f64 / ops,
+        scalar_dt.as_secs_f64() / lut_dt.as_secs_f64().max(1e-12),
+    ));
+
+    // 3. The §V-C packed-lane claim in the cycle model.
+    out.push_str("modeled packed-lane throughput (cycle model, n = 4096):\n");
+    for spec in [P8, P16, P32] {
+        let c = PvuCost::new(spec);
+        out.push_str(&format!(
+            "  Posit({:>2},{}) lanes {}: add {:.1}×  mul {:.1}×  div {:.1}×  \
+             fused-dot {:.1}× vs scalar FMA chain\n",
+            spec.ps,
+            spec.es,
+            c.lanes,
+            c.speedup_vs_scalar(FOp::Add, 4096),
+            c.speedup_vs_scalar(FOp::Mul, 4096),
+            c.speedup_vs_scalar(FOp::Div, 4096),
+            (4096u64 * crate::isa::cost::posar(spec.ps).of(FOp::Madd)) as f64
+                / c.dot(4096) as f64,
+        ));
+    }
+
+    // 4. Level-two kernels, scalar vs PVU, matched by benchmark+format.
+    out.push_str(&format!(
+        "level-two kernels (MM n = {mm_n}, KM/LR on Iris) — [cycles | speedup vs scalar | correct?]\n"
+    ));
+    let scalar_rows = run_level_two(mm_n);
+    let pvu_rows = run_level_two_pvu(mm_n);
+    for r in &pvu_rows {
+        // "PVU Posit(8,1)" pairs with the scalar "Posit(8,1)" row.
+        let scalar_name = r.backend.trim_start_matches("PVU ");
+        let speedup = scalar_rows
+            .iter()
+            .find(|s| s.bench == r.bench && s.backend == scalar_name)
+            .map(|s| s.cycles as f64 / r.cycles as f64)
+            .unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "  {:<28} {:<16} {:>12} {:>6.2} {}\n",
+            r.bench,
+            r.backend,
+            r.cycles,
+            speedup,
+            if r.correct { "ok" } else { "WRONG" }
         ));
     }
     out
@@ -427,6 +570,15 @@ mod tests {
     fn fig3_renders_with_loss() {
         let t = fig3();
         assert!(t.contains("20"));
+    }
+
+    #[test]
+    fn pvu_report_confirms_exactness() {
+        let t = pvu_report(8);
+        assert!(t.contains("bit-exact"));
+        assert!(!t.contains("BROKEN"));
+        assert!(!t.contains("MISMATCH"));
+        assert!(t.contains("PVU Posit(8,1)"));
     }
 
     #[test]
