@@ -1,13 +1,15 @@
-//! End-to-end serving driver (deliverable (b)/e2e): load the AOT-compiled
-//! CNN variants, serve the canonical test set through the router/batcher
-//! with concurrent clients, and report Top-1 + latency/throughput per
-//! numeric format — the deployment shape of the paper's §V-C experiment.
+//! End-to-end serving driver (deliverable (b)/e2e): serve the canonical
+//! test set through the router/batcher with concurrent clients and
+//! report Top-1 + latency/throughput per numeric format — the
+//! deployment shape of the paper's §V-C experiment.
 //!
-//! Needs `make artifacts` first. Run:
-//! `cargo run --release --example cnn_serving [n_requests] [clients]`
+//! Runs on the native PVU backend by default (no artifacts needed);
+//! pass `pjrt` as the third argument to serve the AOT executables
+//! (needs `make artifacts`). Run:
+//! `cargo run --release --example cnn_serving [n_requests] [clients] [pvu|pjrt]`
 
 use posar::cnn::weights::set_or_generate;
-use posar::coordinator::{Coordinator, ServeConfig};
+use posar::coordinator::{BackendChoice, Coordinator, ServeConfig};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
@@ -15,8 +17,17 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_requests: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(160);
     let clients: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(4);
+    let backend = match args.get(2).map(|s| s.as_str()) {
+        Some("pjrt") => BackendChoice::Pjrt,
+        None | Some("pvu") => BackendChoice::Pvu { batch: 8 },
+        Some(other) => anyhow::bail!("unknown backend {other:?} (expected pvu or pjrt)"),
+    };
 
-    let cfg = ServeConfig::default();
+    let cfg = ServeConfig {
+        backend,
+        shards: 2,
+        ..ServeConfig::default()
+    };
     let coord = Coordinator::start(&cfg, None)?;
     println!("variants: {:?}", coord.variants());
     let (set, canonical) = set_or_generate(n_requests);

@@ -1,21 +1,41 @@
-//! Serving-path bench: PJRT batch execution latency per variant and
-//! router/batcher overhead — the deployment-side numbers that accompany
+//! Serving-path bench: native PVU backend execution per variant (runs
+//! from a clean checkout), plus PJRT batch execution latency when
+//! artifacts are present — the deployment-side numbers that accompany
 //! the paper's §V-C "18% faster" claim in this reproduction.
 //!
-//! Needs `make artifacts`. Run: `cargo bench --bench serving`
+//! Run: `cargo bench --bench serving`
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, black_box};
-use posar::cnn::weights::set_or_generate;
+use posar::cnn::weights::{params_or_analytic, set_or_generate};
+use posar::coordinator::{InferBackend, PvuBackend, NATIVE_VARIANTS};
+use posar::data::synth::FEAT;
 use posar::runtime::{Manifest, Runtime};
 use std::path::Path;
 
 fn main() {
+    // ---- native PVU backend (no artifacts needed) --------------------
+    let batch = 4;
+    let (set, _) = set_or_generate(batch);
+    let (params, _) = params_or_analytic();
+    let mut x = vec![0f32; batch * FEAT];
+    for i in 0..batch.min(set.len()) {
+        x[i * FEAT..(i + 1) * FEAT].copy_from_slice(set.sample(i));
+    }
+    println!("== native PVU backend execution (batch = {batch}) ==");
+    for v in NATIVE_VARIANTS {
+        let mut be = PvuBackend::new(v, batch, &params).expect("native backend");
+        bench(&format!("native/{v}"), batch as u64, || {
+            black_box(be.run(&x, batch).expect("run"));
+        });
+    }
+
+    // ---- PJRT AOT executables (needs `make artifacts`) ---------------
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
+        eprintln!("artifacts/ missing — skipping the PJRT section (run `make artifacts`)");
         return;
     }
     let rt = Runtime::cpu(dir).expect("pjrt");

@@ -86,6 +86,39 @@ pub fn m_exp(m: &mut Machine, x: u32) -> u32 {
     acc
 }
 
+/// Shared softmax tail (Caffe SoftmaxLayer with max subtraction). One
+/// instruction stream used by *both* [`forward`] and [`forward_pvu`],
+/// so the two paths are bit-identical from the logits down — the
+/// invariant the serving stack's native-backend exactness test pins.
+fn softmax_tail(m: &mut Machine, logits: &[u32], zero: u32) -> (usize, Vec<f64>) {
+    let mut mx = logits[0];
+    for &l in &logits[1..] {
+        mx = m.fmax(mx, l);
+    }
+    let mut exps = vec![0u32; CLASSES];
+    let mut sum = zero;
+    for (c, e) in exps.iter_mut().enumerate() {
+        let d = m.sub(logits[c], mx);
+        *e = m_exp(m, d);
+        sum = m.add(sum, *e);
+        m.int_ops(1);
+    }
+    let mut probs = vec![0f64; CLASSES];
+    let mut best = 0usize;
+    let mut best_w = m.div(exps[0], sum);
+    probs[0] = m.val(best_w);
+    for c in 1..CLASSES {
+        let p = m.div(exps[c], sum);
+        probs[c] = m.val(p);
+        if m.flt(best_w, p) {
+            best = c;
+            best_w = p;
+        }
+        m.branch();
+    }
+    (best, probs)
+}
+
 /// Full forward pass of one sample. Returns `(argmax class, probs)`.
 /// `x` is the FP32 feature map; its conversion to the backend format is
 /// the offline input-encoding step of Figure 4 (only loads are charged).
@@ -150,32 +183,7 @@ pub fn forward(m: &mut Machine, pc: &PreparedCnn, x: &[f32]) -> (usize, Vec<f64>
     }
 
     // prob: softmax with max subtraction (Caffe SoftmaxLayer).
-    let mut mx = logits[0];
-    for &l in &logits[1..] {
-        mx = m.fmax(mx, l);
-    }
-    let mut exps = vec![0u32; CLASSES];
-    let mut sum = zero;
-    for (c, e) in exps.iter_mut().enumerate() {
-        let d = m.sub(logits[c], mx);
-        *e = m_exp(m, d);
-        sum = m.add(sum, *e);
-        m.int_ops(1);
-    }
-    let mut probs = vec![0f64; CLASSES];
-    let mut best = 0usize;
-    let mut best_w = m.div(exps[0], sum);
-    probs[0] = m.val(best_w);
-    for c in 1..CLASSES {
-        let p = m.div(exps[c], sum);
-        probs[c] = m.val(p);
-        if m.flt(best_w, p) {
-            best = c;
-            best_w = p;
-        }
-        m.branch();
-    }
-    (best, probs)
+    softmax_tail(m, &logits, zero)
 }
 
 /// Forward pass with relu/pool and the dense layers executed on the
@@ -265,33 +273,8 @@ pub fn forward_pvu(
     m.fops += (CLASSES * HIDDEN) as u64;
     m.int_ops(cost.words(HIDDEN) * CLASSES as u64);
 
-    // prob: softmax on the scalar core (identical to [`forward`]).
-    let mut mx = logits[0];
-    for &l in &logits[1..] {
-        mx = m.fmax(mx, l);
-    }
-    let mut exps = vec![0u32; CLASSES];
-    let mut sum = zero;
-    for (c, e) in exps.iter_mut().enumerate() {
-        let d = m.sub(logits[c], mx);
-        *e = m_exp(m, d);
-        sum = m.add(sum, *e);
-        m.int_ops(1);
-    }
-    let mut probs = vec![0f64; CLASSES];
-    let mut best = 0usize;
-    let mut best_w = m.div(exps[0], sum);
-    probs[0] = m.val(best_w);
-    for c in 1..CLASSES {
-        let p = m.div(exps[c], sum);
-        probs[c] = m.val(p);
-        if m.flt(best_w, p) {
-            best = c;
-            best_w = p;
-        }
-        m.branch();
-    }
-    (best, probs)
+    // prob: softmax on the scalar core (same stream as [`forward`]).
+    softmax_tail(m, &logits, zero)
 }
 
 /// Exact f64 reference forward (the paper's x86/64 host reference run).

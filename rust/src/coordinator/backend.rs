@@ -1,0 +1,224 @@
+//! Inference backends for the serving stack.
+//!
+//! [`InferBackend`] is the execution boundary behind a worker thread: it
+//! receives one padded batch and returns probability rows. Two
+//! implementations exist:
+//!
+//! - [`PjrtBackend`] — the AOT path: a PJRT client + compiled HLO
+//!   executable per worker (the paper's JAX/Pallas flow; needs
+//!   `make artifacts` and a real `xla_extension`).
+//! - [`PvuBackend`] — the native path: the CNN tail executed in-process
+//!   on the [`crate::pvu`] engine (`cnn::forward_pvu` → `pvu::gemv`
+//!   quire-fused dense layers) at the variant's posit format, or on the
+//!   scalar simulator for the FP32/hybrid variants. Needs no artifacts,
+//!   so the full serving stack runs — and is CI-testable — from a clean
+//!   checkout. This is the FPPU/PERI shape: the posit unit *is* the
+//!   serving engine rather than sitting behind an external accelerator.
+//!
+//! Backends are constructed *inside* their worker thread (the PJRT
+//! wrapper types are not `Send`); the factory closure that builds them
+//! is the only thing crossing threads.
+
+use crate::cnn::{self, PreparedCnn};
+use crate::data::synth::{CnnParams, CLASSES, FEAT};
+use crate::posit::{PositSpec, P16, P32, P8};
+use crate::runtime::{Executable, Manifest, Runtime};
+use crate::sim::{Backend, Fpu, Hybrid, Machine, Posar};
+use anyhow::Result;
+use std::path::Path;
+
+/// One model variant's execution engine, owned by a single worker.
+pub trait InferBackend {
+    /// Variant name this backend executes ("fp32", "p16", …).
+    fn variant(&self) -> &str;
+    /// Batch size the backend consumes per [`InferBackend::run`] call.
+    fn batch(&self) -> usize;
+    /// Features per sample.
+    fn feat(&self) -> usize;
+    /// Probability classes per sample.
+    fn classes(&self) -> usize;
+    /// Execute one padded batch. `x` holds `batch()·feat()` values with
+    /// rows `n..batch()` zero-padded; returns at least `n·classes()`
+    /// probabilities (row-major — padding rows may be omitted).
+    fn run(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>>;
+}
+
+/// The PJRT AOT backend: one client + compiled executable per worker.
+pub struct PjrtBackend {
+    // Declared before `_rt`: fields drop in declaration order, and the
+    // executable must be destroyed while its client is still alive.
+    exe: Executable,
+    // Keeps the PJRT client alive for the executable's lifetime.
+    _rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// Build a client over `dir` and compile the variant's HLO artifact.
+    pub fn load(dir: &Path, name: &str, file: &str, m: &Manifest) -> Result<Self> {
+        let rt = Runtime::cpu(dir.to_path_buf())?;
+        let exe = rt.load(name, file, m)?;
+        Ok(PjrtBackend { exe, _rt: rt })
+    }
+}
+
+impl InferBackend for PjrtBackend {
+    fn variant(&self) -> &str {
+        &self.exe.name
+    }
+    fn batch(&self) -> usize {
+        self.exe.batch
+    }
+    fn feat(&self) -> usize {
+        self.exe.feat
+    }
+    fn classes(&self) -> usize {
+        self.exe.classes
+    }
+    fn run(&mut self, x: &[f32], _n: usize) -> Result<Vec<f32>> {
+        // The executable's shape is baked: always the full padded batch.
+        self.exe.run(x)
+    }
+}
+
+/// Which engine a native variant executes on.
+enum Engine {
+    /// The scalar simulator (`cnn::forward`): IEEE FP32, or the §V-C
+    /// hybrid (P8 storage / P16 compute).
+    Scalar(Box<dyn Backend>),
+    /// Posit format on the PVU (`cnn::forward_pvu` — quire-fused
+    /// relu/pool/dense, softmax tail on the scalar core).
+    Pvu(PositSpec, Posar),
+}
+
+/// The native in-process backend: the PVU as the serving engine.
+pub struct PvuBackend {
+    name: String,
+    engine: Engine,
+    pc: PreparedCnn,
+    batch: usize,
+    /// Modeled cycles accumulated over every sample served (the §V-C
+    /// cost model riding along with real execution).
+    pub cycles: u64,
+}
+
+impl PvuBackend {
+    /// Build the engine for one variant. Parameters are re-encoded into
+    /// the variant's memory format (the offline conversion of Figure 4).
+    pub fn new(variant: &str, batch: usize, params: &CnnParams) -> Result<Self> {
+        let engine = match variant {
+            "fp32" => Engine::Scalar(Box::new(Fpu::new())),
+            "p8" => Engine::Pvu(P8, Posar::new(P8)),
+            "p16" => Engine::Pvu(P16, Posar::new(P16)),
+            "p32" => Engine::Pvu(P32, Posar::new(P32)),
+            "hybrid" => Engine::Scalar(Box::new(Hybrid::new(P16, P8))),
+            other => anyhow::bail!("no native PVU engine for variant {other:?}"),
+        };
+        let pc = match &engine {
+            Engine::Scalar(be) => cnn::prepare(be.as_ref(), params),
+            Engine::Pvu(_, be) => cnn::prepare(be, params),
+        };
+        Ok(PvuBackend {
+            name: variant.to_string(),
+            engine,
+            pc,
+            batch: batch.max(1),
+            cycles: 0,
+        })
+    }
+}
+
+impl InferBackend for PvuBackend {
+    fn variant(&self) -> &str {
+        &self.name
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn feat(&self) -> usize {
+        FEAT
+    }
+    fn classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn run(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.batch * FEAT,
+            "expected {}·{FEAT} inputs, got {}",
+            self.batch,
+            x.len()
+        );
+        anyhow::ensure!(n <= self.batch, "{n} filled rows > batch {}", self.batch);
+        let mut probs = Vec::with_capacity(n * CLASSES);
+        let mut cycles = 0u64;
+        for i in 0..n {
+            let sample = &x[i * FEAT..(i + 1) * FEAT];
+            let row = match &self.engine {
+                Engine::Scalar(be) => {
+                    let mut m = Machine::new(be.as_ref());
+                    let (_, p) = cnn::forward(&mut m, &self.pc, sample);
+                    cycles += m.cycles;
+                    p
+                }
+                Engine::Pvu(spec, be) => {
+                    let mut m = Machine::new(be);
+                    let (_, p) = cnn::forward_pvu(&mut m, *spec, &self.pc, sample);
+                    cycles += m.cycles;
+                    p
+                }
+            };
+            probs.extend(row.iter().map(|&v| v as f32));
+        }
+        self.cycles += cycles;
+        Ok(probs)
+    }
+}
+
+/// The native variant list served by [`PvuBackend`].
+pub const NATIVE_VARIANTS: [&str; 5] = ["fp32", "p8", "p16", "p32", "hybrid"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn native_backend_serves_every_native_variant() {
+        let params = synth::analytic_params();
+        let set = synth::generate(0xBEEF, 2);
+        let batch = 2;
+        let mut x = vec![0f32; batch * FEAT];
+        for i in 0..2 {
+            x[i * FEAT..(i + 1) * FEAT].copy_from_slice(set.sample(i));
+        }
+        for v in NATIVE_VARIANTS {
+            let mut be = PvuBackend::new(v, batch, &params).expect(v);
+            assert_eq!(be.variant(), v);
+            assert_eq!((be.batch(), be.feat(), be.classes()), (batch, FEAT, CLASSES));
+            let probs = be.run(&x, 2).expect(v);
+            assert_eq!(probs.len(), 2 * CLASSES);
+            for row in probs.chunks(CLASSES) {
+                // Softmax rows sum to ~1; low-precision formats round
+                // each prob individually (P8 visibly so — §V-C).
+                let sum: f32 = row.iter().sum();
+                assert!((0.6..1.4).contains(&sum), "{v}: probs sum {sum}");
+            }
+            assert!(be.cycles > 0, "{v}: cycles must accumulate");
+        }
+        assert!(PvuBackend::new("nope", 1, &params).is_err());
+    }
+
+    #[test]
+    fn partial_batch_runs_only_filled_rows() {
+        let params = synth::analytic_params();
+        let set = synth::generate(0xCAFE, 1);
+        let mut x = vec![0f32; 4 * FEAT];
+        x[..FEAT].copy_from_slice(set.sample(0));
+        let mut be = PvuBackend::new("p16", 4, &params).unwrap();
+        let probs = be.run(&x, 1).unwrap();
+        assert_eq!(probs.len(), CLASSES);
+        // Bad shapes are errors, not panics.
+        assert!(be.run(&x[..FEAT], 1).is_err());
+        assert!(be.run(&x, 5).is_err());
+    }
+}

@@ -103,4 +103,56 @@ mod tests {
         let mut b = Batcher::new(4, Duration::from_millis(1));
         assert!(b.next_batch(&rx).is_none());
     }
+
+    #[test]
+    fn disconnect_mid_drain_flushes_partial_batch_immediately() {
+        // The channel closing while a batch is filling must flush what
+        // was already drained — without waiting out the deadline — and
+        // only the *next* call reports shutdown.
+        let (tx, rx) = sync_channel(16);
+        let mut keep = Vec::new();
+        for i in 0..2 {
+            let (r, k) = req(i as f32);
+            tx.send(r).unwrap();
+            keep.push(k);
+        }
+        drop(tx); // close mid-batch: 2 of 8 slots filled
+        let mut b = Batcher::new(8, Duration::from_secs(30));
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).expect("partial batch, not shutdown");
+        assert_eq!(batch.len(), 2);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "disconnect must not wait for the 30s deadline"
+        );
+        assert!(b.next_batch(&rx).is_none(), "drained + closed == shutdown");
+    }
+
+    #[test]
+    fn full_queue_backpressure_is_observable() {
+        // The coordinator's admission control rests on sync_channel
+        // semantics: a full bounded queue reports TrySendError::Full
+        // (rejection path) while `send` would block (backpressure path).
+        use std::sync::mpsc::TrySendError;
+        let (tx, rx) = sync_channel(2);
+        let mut keep = Vec::new();
+        for i in 0..2 {
+            let (r, k) = req(i as f32);
+            tx.send(r).unwrap();
+            keep.push(k);
+        }
+        let (r, _k) = req(9.0);
+        match tx.try_send(r) {
+            Err(TrySendError::Full(rejected)) => {
+                assert_eq!(rejected.features, vec![9.0], "request handed back intact");
+            }
+            Err(TrySendError::Disconnected(_)) => panic!("unexpected disconnect"),
+            Ok(()) => panic!("send must fail on a full queue"),
+        }
+        // Draining one slot re-opens admission.
+        let mut b = Batcher::new(1, Duration::from_millis(1));
+        assert_eq!(b.next_batch(&rx).unwrap().len(), 1);
+        let (r, _k2) = req(10.0);
+        assert!(tx.try_send(r).is_ok());
+    }
 }

@@ -1,0 +1,496 @@
+//! Closed/open-loop load generator — the measurement harness behind
+//! `repro serve-bench`.
+//!
+//! Drives a running [`Coordinator`] with concurrent clients over a
+//! variant mix and summarizes the run from the coordinator's own
+//! histogram metrics: throughput, p50/p95/p99 latency, rejection counts
+//! and mean batch occupancy, as a human table and as machine-readable
+//! JSON (the `BENCH_*.json` trajectory format).
+//!
+//! Two client models:
+//! - **closed loop** — `concurrency` clients per variant, each issuing
+//!   its next request as soon as the previous reply lands (throughput-
+//!   bounded by the serving stack, classic saturation measurement).
+//! - **open loop** — clients fire on a fixed arrival schedule
+//!   (`rate` req/s per variant for `duration`), shedding to the
+//!   rejection counter when every shard queue is full. Arrival timing
+//!   does not wait for the server, so queue growth and rejections are
+//!   visible instead of being absorbed into client think time.
+
+use super::metrics::VariantStats;
+use super::{Coordinator, Reply, Request, Snapshot};
+use crate::data::synth::SynthSet;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
+use std::time::{Duration, Instant};
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Variant mix to drive (empty = every served variant).
+    pub variants: Vec<String>,
+    /// Client threads per variant.
+    pub concurrency: usize,
+    /// Total requests per variant (closed loop).
+    pub requests: usize,
+    /// Open-loop mode (paced arrivals + load shedding).
+    pub open_loop: bool,
+    /// Target arrivals/s per variant (open loop).
+    pub rate: f64,
+    /// Run time per variant (open loop).
+    pub duration: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            variants: Vec::new(),
+            concurrency: 4,
+            requests: 256,
+            open_loop: false,
+            rate: 200.0,
+            duration: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Per-variant results: client-side counts merged with the
+/// coordinator's histogram metrics.
+#[derive(Clone, Debug)]
+pub struct VariantBench {
+    /// Variant name.
+    pub variant: String,
+    /// Requests completed (replies received).
+    pub completed: u64,
+    /// Requests rejected at admission (open loop; from [`super::Metrics`]).
+    pub rejected: u64,
+    /// Requests that returned an error.
+    pub errors: u64,
+    /// Top-1 accuracy over completed requests.
+    pub top1: f64,
+    /// Completed requests per second of total wall time.
+    pub throughput_rps: f64,
+    /// Mean end-to-end latency, µs.
+    pub mean_latency_us: f64,
+    /// Histogram-derived p50 latency, µs.
+    pub p50_us: u64,
+    /// Histogram-derived p95 latency, µs.
+    pub p95_us: u64,
+    /// Histogram-derived p99 latency, µs.
+    pub p99_us: u64,
+    /// Max observed latency, µs. Cumulative over the coordinator's
+    /// lifetime, not just this run (a max cannot be un-merged from the
+    /// histogram delta) — only differs from the run's own max when the
+    /// same coordinator served traffic before `run_bench`.
+    pub max_us: u64,
+    /// Mean batch occupancy seen by this variant's workers.
+    pub mean_batch: f64,
+}
+
+/// Whole-run summary.
+#[derive(Clone, Debug)]
+pub struct BenchSummary {
+    /// "closed" or "open".
+    pub mode: &'static str,
+    /// Total wall time for the whole mix.
+    pub wall: Duration,
+    /// Per-variant rows, sorted by name.
+    pub rows: Vec<VariantBench>,
+}
+
+/// Escape a string for embedding in a JSON string literal. Variant
+/// names normally come from a fixed set, but PJRT manifests are
+/// user-authored files — a quote or backslash in a name must not
+/// produce syntactically invalid BENCH_* JSON.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl BenchSummary {
+    /// Aggregate completed-requests/s over the whole mix.
+    pub fn aggregate_rps(&self) -> f64 {
+        self.rows.iter().map(|r| r.throughput_rps).sum()
+    }
+
+    /// Machine-readable JSON (hand-rolled — the offline crate set has
+    /// no serde; the schema is flat and fixed).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
+        out.push_str(&format!("  \"wall_s\": {:.6},\n", self.wall.as_secs_f64()));
+        out.push_str(&format!(
+            "  \"aggregate_rps\": {:.3},\n",
+            self.aggregate_rps()
+        ));
+        out.push_str("  \"variants\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"variant\": \"{}\", \"completed\": {}, \"rejected\": {}, \
+                 \"errors\": {}, \"top1\": {:.6}, \"throughput_rps\": {:.3}, \
+                 \"mean_latency_us\": {:.1}, \"p50_us\": {}, \"p95_us\": {}, \
+                 \"p99_us\": {}, \"max_us\": {}, \"mean_batch\": {:.3}}}{}\n",
+                json_escape(&r.variant),
+                r.completed,
+                r.rejected,
+                r.errors,
+                r.top1,
+                r.throughput_rps,
+                r.mean_latency_us,
+                r.p50_us,
+                r.p95_us,
+                r.p99_us,
+                r.max_us,
+                r.mean_batch,
+                if i + 1 == self.rows.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Human-readable table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "serve-bench ({} loop, {:.2?} wall, {:.0} req/s aggregate)\n",
+            self.mode,
+            self.wall,
+            self.aggregate_rps()
+        );
+        out.push_str(
+            "variant    done    rej    err    top1    req/s    p50(ms)  p95(ms)  p99(ms)  batch\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<10} {:<7} {:<6} {:<6} {:<7.4} {:<8.1} {:<8.3} {:<8.3} {:<8.3} {:.2}\n",
+                r.variant,
+                r.completed,
+                r.rejected,
+                r.errors,
+                r.top1,
+                r.throughput_rps,
+                r.p50_us as f64 / 1000.0,
+                r.p95_us as f64 / 1000.0,
+                r.p99_us as f64 / 1000.0,
+                r.mean_batch,
+            ));
+        }
+        out
+    }
+}
+
+/// Client-side tallies for one variant.
+struct ClientCounts {
+    correct: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl ClientCounts {
+    fn new() -> Self {
+        ClientCounts {
+            correct: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Closed loop: clients share a work counter and re-issue immediately.
+fn closed_loop(
+    coord: &Coordinator,
+    set: &SynthSet,
+    variant: &str,
+    clients: usize,
+    total: usize,
+) -> ClientCounts {
+    let counts = ClientCounts::new();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..clients.max(1) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= total {
+                    break;
+                }
+                let k = i % set.len();
+                match coord.infer(variant, set.sample(k).to_vec()) {
+                    Ok(reply) => {
+                        counts.completed.fetch_add(1, Ordering::Relaxed);
+                        if reply.class == set.labels[k] as usize {
+                            counts.correct.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Err(_) => {
+                        counts.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    counts
+}
+
+/// Open loop: each client fires on its own absolute schedule (client j
+/// owns arrivals `j, j+clients, j+2·clients, …` of the variant's
+/// `rate`/s stream), skipping sleeps when behind. Arrivals never wait
+/// for the server: submits are non-blocking (full queues shed to the
+/// rejection counter) and replies are reaped asynchronously, so queue
+/// growth under overload stays visible instead of throttling the
+/// arrival process (no coordinated omission).
+fn open_loop(
+    coord: &Coordinator,
+    set: &SynthSet,
+    variant: &str,
+    clients: usize,
+    rate: f64,
+    duration: Duration,
+) -> ClientCounts {
+    let counts = ClientCounts::new();
+    let clients = clients.max(1);
+    let rate = rate.max(1.0);
+    std::thread::scope(|s| {
+        for j in 0..clients {
+            let counts = &counts;
+            s.spawn(move || {
+                let start = Instant::now();
+                let horizon = duration.as_secs_f64();
+                let tally = |i: usize, res: Result<Reply>| match res {
+                    Ok(reply) => {
+                        counts.completed.fetch_add(1, Ordering::Relaxed);
+                        if reply.class == set.labels[i] as usize {
+                            counts.correct.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Err(_) => {
+                        counts.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                };
+                let mut pending: Vec<(usize, Receiver<Result<Reply>>)> = Vec::new();
+                let mut k = 0usize;
+                loop {
+                    // Arrival j + k·clients of the variant's rate/s stream.
+                    let due = (j as f64 + (k * clients) as f64) / rate;
+                    if due >= horizon || start.elapsed().as_secs_f64() >= horizon {
+                        break;
+                    }
+                    let now = start.elapsed().as_secs_f64();
+                    if due > now {
+                        std::thread::sleep(Duration::from_secs_f64(due - now));
+                    }
+                    // Reap finished replies without blocking the schedule.
+                    pending.retain(|(i, rx)| match rx.try_recv() {
+                        Ok(res) => {
+                            tally(*i, res);
+                            false
+                        }
+                        Err(TryRecvError::Empty) => true,
+                        Err(TryRecvError::Disconnected) => {
+                            counts.errors.fetch_add(1, Ordering::Relaxed);
+                            false
+                        }
+                    });
+                    let i = (j + k * clients) % set.len();
+                    let (rtx, rrx) = sync_channel(1);
+                    let req = Request {
+                        features: set.sample(i).to_vec(),
+                        reply: rtx,
+                        enqueued: Instant::now(),
+                    };
+                    match coord.submit(variant, req, false) {
+                        Ok(true) => pending.push((i, rrx)),
+                        Ok(false) => {} // shed: counted by the coordinator
+                        Err(_) => {
+                            counts.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    k += 1;
+                }
+                // Accepted work completes even past the horizon.
+                for (i, rx) in pending {
+                    match rx.recv() {
+                        Ok(res) => tally(i, res),
+                        Err(_) => {
+                            counts.errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    counts
+}
+
+/// Pull one variant's histogram stats out of a metrics snapshot.
+fn variant_stats(snap: &Snapshot, variant: &str) -> VariantStats {
+    snap.rows
+        .iter()
+        .find(|(n, _)| n == variant)
+        .map(|(_, s)| s.clone())
+        .unwrap_or_default()
+}
+
+/// Drive the full variant mix concurrently and summarize. The mix runs
+/// simultaneously (one client pool per variant), so per-variant numbers
+/// include cross-variant contention — the serving-stack number that
+/// matters, not an isolated per-variant ideal.
+pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Result<BenchSummary> {
+    anyhow::ensure!(!set.is_empty(), "empty request set");
+    let served = coord.variants();
+    let mut variants = if cfg.variants.is_empty() {
+        served.clone()
+    } else {
+        // Fail fast on a typo'd variant: without this, every request to
+        // it errors and the summary still exits 0 — poison for CI.
+        for v in &cfg.variants {
+            anyhow::ensure!(
+                served.contains(v),
+                "variant {v:?} is not served (have {served:?})"
+            );
+        }
+        cfg.variants.clone()
+    };
+    variants.sort();
+    // A repeated variant would spawn duplicate client pools and emit
+    // double-counted rows.
+    variants.dedup();
+    let baseline = coord.metrics();
+    let t0 = Instant::now();
+    let mut tallies: Vec<(String, ClientCounts)> = Vec::with_capacity(variants.len());
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for v in &variants {
+            let vname = v.clone();
+            let h = s.spawn(move || {
+                let counts = if cfg.open_loop {
+                    open_loop(coord, set, &vname, cfg.concurrency, cfg.rate, cfg.duration)
+                } else {
+                    closed_loop(coord, set, &vname, cfg.concurrency, cfg.requests)
+                };
+                (vname, counts)
+            });
+            joins.push(h);
+        }
+        for h in joins {
+            tallies.push(h.join().expect("bench client pool panicked"));
+        }
+    });
+    let wall = t0.elapsed();
+    let snap = coord.metrics();
+    let mut rows = Vec::with_capacity(tallies.len());
+    for (variant, counts) in tallies {
+        let completed = counts.completed.load(Ordering::Relaxed);
+        let correct = counts.correct.load(Ordering::Relaxed);
+        // Stats for this run only: counter-wise delta against the
+        // pre-run snapshot, so warm starts subtract out of the means,
+        // percentiles and rejection counts alike.
+        let s = variant_stats(&snap, &variant).delta_since(&variant_stats(&baseline, &variant));
+        rows.push(VariantBench {
+            variant,
+            completed,
+            rejected: s.rejected,
+            errors: counts.errors.load(Ordering::Relaxed),
+            top1: if completed > 0 {
+                correct as f64 / completed as f64
+            } else {
+                0.0
+            },
+            throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
+            mean_latency_us: s.mean_latency_us(),
+            p50_us: s.p50_us(),
+            p95_us: s.p95_us(),
+            p99_us: s.p99_us(),
+            max_us: s.max_latency_us,
+            mean_batch: s.mean_batch(),
+        });
+    }
+    rows.sort_by(|a, b| a.variant.cmp(&b.variant));
+    Ok(BenchSummary {
+        mode: if cfg.open_loop { "open" } else { "closed" },
+        wall,
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_summary_is_well_formed_and_complete() {
+        let summary = BenchSummary {
+            mode: "closed",
+            wall: Duration::from_millis(1500),
+            rows: vec![
+                VariantBench {
+                    variant: "fp32".into(),
+                    completed: 100,
+                    rejected: 0,
+                    errors: 0,
+                    top1: 0.71,
+                    throughput_rps: 66.7,
+                    mean_latency_us: 1200.0,
+                    p50_us: 1000,
+                    p95_us: 3000,
+                    p99_us: 9000,
+                    max_us: 9500,
+                    mean_batch: 3.5,
+                },
+                VariantBench {
+                    variant: "p16".into(),
+                    completed: 90,
+                    rejected: 10,
+                    errors: 0,
+                    top1: 0.70,
+                    throughput_rps: 60.0,
+                    mean_latency_us: 1500.0,
+                    p50_us: 1000,
+                    p95_us: 3000,
+                    p99_us: 10000,
+                    max_us: 12000,
+                    mean_batch: 4.0,
+                },
+            ],
+        };
+        let json = summary.to_json();
+        // Structure: balanced braces/brackets, one object per variant.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        for key in [
+            "\"mode\"",
+            "\"wall_s\"",
+            "\"aggregate_rps\"",
+            "\"variants\"",
+            "\"throughput_rps\"",
+            "\"p50_us\"",
+            "\"p95_us\"",
+            "\"p99_us\"",
+            "\"rejected\"",
+            "\"mean_batch\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!((summary.aggregate_rps() - 126.7).abs() < 1e-9);
+        // Rows are comma-separated: exactly one separator for two rows.
+        assert_eq!(json.matches("},\n").count(), 1);
+        let table = summary.render();
+        assert!(table.contains("fp32") && table.contains("p16"));
+    }
+
+    #[test]
+    fn json_escapes_hostile_variant_names() {
+        assert_eq!(json_escape("p16"), "p16");
+        assert_eq!(json_escape("p16\"v2"), "p16\\\"v2");
+        assert_eq!(json_escape("a\\b"), "a\\\\b");
+        assert_eq!(json_escape("x\ny"), "x\\u000ay");
+    }
+}

@@ -1,5 +1,6 @@
-//! Serving metrics: per-variant request counts, latency distribution and
-//! batch-size occupancy — what the e2e example reports alongside the
+//! Serving metrics: per-variant request counts, latency distribution
+//! (with histogram-derived percentiles), queue rejections and batch-size
+//! occupancy — what `repro serve`/`serve-bench` report alongside the
 //! Top-1 numbers.
 
 use std::collections::HashMap;
@@ -13,6 +14,8 @@ pub const BUCKETS_US: [u64; 8] = [100, 300, 1_000, 3_000, 10_000, 30_000, 100_00
 pub struct VariantStats {
     /// Requests served.
     pub requests: u64,
+    /// Requests rejected at admission (every shard queue full).
+    pub rejected: u64,
     /// Total end-to-end latency (queue + execute), µs.
     pub total_latency_us: u64,
     /// Max end-to-end latency, µs.
@@ -23,6 +26,85 @@ pub struct VariantStats {
     pub occupancy_sum: u64,
     /// Latency histogram counts per [`BUCKETS_US`].
     pub hist: [u64; 8],
+}
+
+impl VariantStats {
+    /// Histogram-derived latency quantile (µs) for `q` in `(0, 1]`: the
+    /// upper bound of the bucket holding the q-quantile rank, tightened
+    /// to the observed max (which is also what the open-ended last
+    /// bucket reports). Returns 0 before any request is served.
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        if self.requests == 0 {
+            return 0;
+        }
+        let rank = ((q * self.requests as f64).ceil() as u64).clamp(1, self.requests);
+        let mut cum = 0u64;
+        for (i, &count) in self.hist.iter().enumerate() {
+            cum += count;
+            if cum >= rank {
+                return BUCKETS_US[i].min(self.max_latency_us);
+            }
+        }
+        self.max_latency_us
+    }
+
+    /// Median latency (µs), histogram-derived.
+    pub fn p50_us(&self) -> u64 {
+        self.percentile_us(0.50)
+    }
+
+    /// 95th-percentile latency (µs), histogram-derived.
+    pub fn p95_us(&self) -> u64 {
+        self.percentile_us(0.95)
+    }
+
+    /// 99th-percentile latency (µs), histogram-derived.
+    pub fn p99_us(&self) -> u64 {
+        self.percentile_us(0.99)
+    }
+
+    /// Mean end-to-end latency (µs).
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_latency_us as f64 / self.requests as f64
+        }
+    }
+
+    /// Mean batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.requests as f64
+        }
+    }
+
+    /// Stats accumulated since `base` was snapshotted: counter-wise
+    /// subtraction, so means and percentile *ranks* derived from the
+    /// result cover only the interval. `max_latency_us` stays
+    /// cumulative (a max cannot be un-merged), and percentiles clamp
+    /// to it: a rank landing in a closed bucket reports that bucket's
+    /// bound as usual, but one landing in the open-ended last bucket
+    /// reports the lifetime max — which may predate the interval.
+    /// Callers that need clean tail numbers should bench against a
+    /// fresh coordinator (as `repro serve-bench` does).
+    pub fn delta_since(&self, base: &VariantStats) -> VariantStats {
+        let mut hist = [0u64; 8];
+        for (i, h) in hist.iter_mut().enumerate() {
+            *h = self.hist[i].saturating_sub(base.hist[i]);
+        }
+        VariantStats {
+            requests: self.requests.saturating_sub(base.requests),
+            rejected: self.rejected.saturating_sub(base.rejected),
+            total_latency_us: self.total_latency_us.saturating_sub(base.total_latency_us),
+            max_latency_us: self.max_latency_us,
+            total_exec_us: self.total_exec_us.saturating_sub(base.total_exec_us),
+            occupancy_sum: self.occupancy_sum.saturating_sub(base.occupancy_sum),
+            hist,
+        }
+    }
 }
 
 /// Mutable metrics registry.
@@ -50,6 +132,11 @@ impl Metrics {
         s.hist[idx] += 1;
     }
 
+    /// Record one admission rejection (all shard queues full).
+    pub fn record_rejected(&mut self, variant: &str) {
+        self.per_variant.entry(variant.to_string()).or_default().rejected += 1;
+    }
+
     /// Immutable snapshot for reporting.
     pub fn snapshot(&self) -> Snapshot {
         let mut rows: Vec<(String, VariantStats)> = self
@@ -70,26 +157,21 @@ pub struct Snapshot {
 }
 
 impl Snapshot {
-    /// Render a compact table.
+    /// Render a compact table (latencies in ms).
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "variant    reqs    mean_lat(ms)  max_lat(ms)  mean_batch\n",
+            "variant    reqs    rej     mean(ms)  p50(ms)   p99(ms)   max(ms)   mean_batch\n",
         );
         for (name, s) in &self.rows {
-            let mean = if s.requests > 0 {
-                s.total_latency_us as f64 / s.requests as f64 / 1000.0
-            } else {
-                0.0
-            };
-            let occ = if s.requests > 0 {
-                s.occupancy_sum as f64 / s.requests as f64
-            } else {
-                0.0
-            };
             out.push_str(&format!(
-                "{name:<10} {:<7} {mean:<13.3} {:<12.3} {occ:.2}\n",
+                "{name:<10} {:<7} {:<7} {:<9.3} {:<9.3} {:<9.3} {:<9.3} {:.2}\n",
                 s.requests,
+                s.rejected,
+                s.mean_latency_us() / 1000.0,
+                s.p50_us() as f64 / 1000.0,
+                s.p99_us() as f64 / 1000.0,
                 s.max_latency_us as f64 / 1000.0,
+                s.mean_batch(),
             ));
         }
         out
@@ -114,7 +196,85 @@ mod tests {
         assert_eq!(p16.occupancy_sum, 12);
         assert_eq!(p16.hist[2], 1); // 500µs lands in the <=1000µs bucket
         assert_eq!(p16.hist[3], 1); // 1500µs in the <=3000µs bucket
+        assert_eq!(p16.mean_batch(), 6.0);
         let rendered = s.render();
         assert!(rendered.contains("p16"));
+        assert!(rendered.contains("p50"));
+        assert!(rendered.contains("rej"));
+    }
+
+    #[test]
+    fn percentiles_from_histogram_buckets() {
+        let mut m = Metrics::new();
+        // 60 requests at 200µs (≤300 bucket), 30 at 2ms (≤3000), 10 at
+        // 50ms (≤100_000): a known three-bucket distribution.
+        for _ in 0..60 {
+            m.observe("v", Duration::from_micros(200), Duration::from_micros(1), 1);
+        }
+        for _ in 0..30 {
+            m.observe("v", Duration::from_micros(2_000), Duration::from_micros(1), 1);
+        }
+        for _ in 0..10 {
+            m.observe("v", Duration::from_micros(50_000), Duration::from_micros(1), 1);
+        }
+        let s = &m.snapshot().rows[0].1;
+        assert_eq!(s.requests, 100);
+        // rank 50 falls in the ≤300µs bucket.
+        assert_eq!(s.p50_us(), 300);
+        // rank 95/99 fall in the ≤100ms bucket, tightened to the max.
+        assert_eq!(s.p95_us(), 50_000);
+        assert_eq!(s.p99_us(), 50_000);
+        // Quantile ordering always holds.
+        assert!(s.p50_us() <= s.p95_us() && s.p95_us() <= s.p99_us());
+        assert!(s.p99_us() <= s.max_latency_us);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let empty = VariantStats::default();
+        assert_eq!(empty.percentile_us(0.99), 0);
+        let mut m = Metrics::new();
+        // One request below the first bucket bound: every quantile is
+        // tightened to the observed max, not the 100µs bucket bound.
+        m.observe("v", Duration::from_micros(40), Duration::from_micros(1), 1);
+        let s = &m.snapshot().rows[0].1;
+        assert_eq!(s.p50_us(), 40);
+        assert_eq!(s.p99_us(), 40);
+    }
+
+    #[test]
+    fn delta_since_isolates_an_interval() {
+        let mut m = Metrics::new();
+        m.observe("v", Duration::from_micros(200), Duration::from_micros(1), 2);
+        m.observe("v", Duration::from_micros(200), Duration::from_micros(1), 2);
+        m.record_rejected("v");
+        let base = m.snapshot().rows[0].1.clone();
+        m.observe("v", Duration::from_micros(2_000), Duration::from_micros(5), 4);
+        m.record_rejected("v");
+        let cur = &m.snapshot().rows[0].1;
+        let d = cur.delta_since(&base);
+        assert_eq!(d.requests, 1);
+        assert_eq!(d.rejected, 1);
+        assert_eq!(d.occupancy_sum, 4);
+        assert_eq!(d.mean_latency_us(), 2_000.0);
+        assert_eq!(d.hist[1], 0, "pre-baseline bucket counts removed");
+        assert_eq!(d.hist[3], 1);
+        assert_eq!(d.p50_us(), 2_000, "percentiles reflect only the interval");
+        // Delta against an empty base is the identity.
+        let id = cur.delta_since(&VariantStats::default());
+        assert_eq!(id.requests, cur.requests);
+        assert_eq!(id.hist, cur.hist);
+    }
+
+    #[test]
+    fn rejection_counter() {
+        let mut m = Metrics::new();
+        m.record_rejected("p8");
+        m.record_rejected("p8");
+        let s = m.snapshot();
+        let p8 = &s.rows.iter().find(|(n, _)| n == "p8").unwrap().1;
+        assert_eq!(p8.rejected, 2);
+        assert_eq!(p8.requests, 0);
+        assert!(s.render().contains("p8"));
     }
 }

@@ -2,42 +2,101 @@
 //!
 //! The paper motivates posits with "ML inference at the edge"; this
 //! module is the deployment shape of that claim: a request router +
-//! dynamic batcher in front of the per-format PJRT executables produced
-//! by the AOT path. Requests name a variant ("fp32", "p8", "p16", "p32",
-//! "hybrid" — offline elasticity, §IV-A); the batcher coalesces them up
-//! to the executable's baked batch size or a deadline, pads the tail,
-//! executes, and fans results back out.
+//! dynamic batcher in front of per-variant [`InferBackend`]s. Requests
+//! name a variant ("fp32", "p8", "p16", "p32", "hybrid" — offline
+//! elasticity, §IV-A); the batcher coalesces them up to the backend's
+//! batch size or a deadline, pads the tail, executes, and fans results
+//! back out.
 //!
-//! Threading: one worker thread per variant owns its own PJRT client and
-//! executable (the xla wrapper types are not `Send`, and per-thread
-//! clients sidestep that cleanly). `infer` is synchronous from the
-//! caller's view; metrics are shared behind a mutex.
+//! Two execution backends implement [`InferBackend`]
+//! ([`ServeConfig::backend`] selects one):
+//!
+//! - **PJRT** ([`PjrtBackend`]) — the AOT executables produced by
+//!   `make artifacts` (needs a real `xla_extension`).
+//! - **Native PVU** ([`PvuBackend`]) — the CNN tail executed in-process
+//!   through [`crate::pvu`] (quire-fused dense layers) at each
+//!   variant's posit format. No artifacts required: the full serving
+//!   stack runs from a clean checkout.
+//!
+//! Scaling: each variant is sharded across [`ServeConfig::shards`]
+//! worker threads, each owning its backend instance and a bounded
+//! request queue. The router spreads load round-robin or least-queued
+//! ([`ServeConfig::routing`]); when every shard queue of a variant is
+//! full, non-blocking submits are *rejected* and counted in
+//! [`Metrics`]. Worker init failures (e.g. PJRT unavailable) surface as
+//! an error from [`Coordinator::start`] instead of killing the thread
+//! silently.
 
+pub mod backend;
 pub mod batcher;
+pub mod loadgen;
 pub mod metrics;
 
+pub use backend::{InferBackend, PjrtBackend, PvuBackend, NATIVE_VARIANTS};
 pub use batcher::{Batcher, Request};
+pub use loadgen::{run_bench, BenchConfig, BenchSummary, VariantBench};
 pub use metrics::{Metrics, Snapshot};
 
+use crate::cnn;
 use crate::posit::{PositSpec, P16, P32, P8};
 use crate::pvu;
 use crate::runtime::Manifest;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Which execution engine the workers run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// AOT PJRT executables from the artifacts directory.
+    Pjrt,
+    /// Native in-process PVU execution at the given batch size — needs
+    /// no artifacts (weights fall back to the analytic head).
+    Pvu {
+        /// Serving batch size per worker.
+        batch: usize,
+    },
+}
+
+/// How the router spreads requests over a variant's shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Routing {
+    /// Rotate through shards with an atomic cursor.
+    RoundRobin,
+    /// Pick the shard with the fewest in-flight requests.
+    LeastQueued,
+}
+
+impl Routing {
+    /// Parse a CLI spelling ("rr"/"round-robin", "lq"/"least-queued").
+    pub fn parse(s: &str) -> Option<Routing> {
+        match s {
+            "rr" | "round-robin" => Some(Routing::RoundRobin),
+            "lq" | "least-queued" => Some(Routing::LeastQueued),
+            _ => None,
+        }
+    }
+}
 
 /// Serving configuration.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// Artifacts directory.
+    /// Artifacts directory (PJRT backend only).
     pub artifacts: PathBuf,
     /// Max time a request waits for its batch to fill.
     pub max_wait: Duration,
-    /// Bounded queue depth per variant (backpressure).
+    /// Bounded queue depth per shard (backpressure).
     pub queue_depth: usize,
+    /// Worker threads per variant.
+    pub shards: usize,
+    /// Shard-selection policy.
+    pub routing: Routing,
+    /// Execution engine.
+    pub backend: BackendChoice,
 }
 
 impl Default for ServeConfig {
@@ -46,6 +105,9 @@ impl Default for ServeConfig {
             artifacts: PathBuf::from("artifacts"),
             max_wait: Duration::from_millis(2),
             queue_depth: 256,
+            shards: 1,
+            routing: Routing::RoundRobin,
+            backend: BackendChoice::Pjrt,
         }
     }
 }
@@ -59,44 +121,145 @@ pub struct Reply {
     pub probs: Vec<f32>,
 }
 
-/// The running coordinator: router + per-variant workers.
+/// Builds a worker's backend inside its own thread (PJRT wrapper types
+/// are not `Send`; only this closure crosses the thread boundary).
+type Factory = Arc<dyn Fn() -> Result<Box<dyn InferBackend>> + Send + Sync>;
+
+/// One worker's request queue + in-flight gauge.
+struct Shard {
+    tx: SyncSender<Request>,
+    inflight: Arc<AtomicUsize>,
+}
+
+/// All shards of one variant.
+struct VariantRoute {
+    shards: Vec<Shard>,
+    cursor: AtomicUsize,
+}
+
+/// Everything a worker thread needs, bundled to cross `spawn`.
+struct WorkerCtx {
+    label: String,
+    variant: String,
+    factory: Factory,
+    max_wait: Duration,
+    metrics: Arc<Mutex<Metrics>>,
+    inflight: Arc<AtomicUsize>,
+    init_tx: std::sync::mpsc::Sender<(String, std::result::Result<(), String>)>,
+}
+
+/// The running coordinator: router + sharded per-variant workers.
 pub struct Coordinator {
-    senders: HashMap<String, SyncSender<Request>>,
+    routes: HashMap<String, VariantRoute>,
+    routing: Routing,
     metrics: Arc<Mutex<Metrics>>,
     handles: Vec<std::thread::JoinHandle<()>>,
-    /// Manifest the workers were built from.
+    /// Manifest the workers were built from (synthesized for the
+    /// native backend).
     pub manifest: Manifest,
 }
 
 impl Coordinator {
-    /// Start one worker per manifest variant (optionally filtered).
+    /// Start `cfg.shards` workers per manifest variant (optionally
+    /// filtered). Every worker's backend init is awaited: any failure
+    /// tears the coordinator down and is returned here, so callers
+    /// fail fast instead of discovering a dead variant at `infer` time.
     pub fn start(cfg: &ServeConfig, only: Option<&[&str]>) -> Result<Self> {
-        let manifest = Manifest::load(&cfg.artifacts)?;
+        let manifest = match &cfg.backend {
+            BackendChoice::Pjrt => Manifest::load(&cfg.artifacts)?,
+            BackendChoice::Pvu { batch } => Manifest::native(*batch),
+        };
+        let params = match &cfg.backend {
+            // Loaded once; each worker encodes its own format view.
+            BackendChoice::Pvu { .. } => Some(Arc::new(cnn::weights::params_or_analytic().0)),
+            BackendChoice::Pjrt => None,
+        };
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let mut senders = HashMap::new();
+        let shards_per_variant = cfg.shards.max(1);
+        let mut routes = HashMap::new();
         let mut handles = Vec::new();
+        let (init_tx, init_rx) =
+            std::sync::mpsc::channel::<(String, std::result::Result<(), String>)>();
+        let mut n_workers = 0usize;
         for (name, file) in manifest.variants.clone() {
             if let Some(filter) = only {
                 if !filter.contains(&name.as_str()) {
                     continue;
                 }
             }
-            let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(cfg.queue_depth);
-            let m = manifest.clone();
-            let dir = cfg.artifacts.clone();
-            let max_wait = cfg.max_wait;
-            let metrics = Arc::clone(&metrics);
-            let vname = name.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("posar-serve-{vname}"))
-                .spawn(move || worker(vname, file, dir, m, rx, max_wait, metrics))
-                .map_err(|e| anyhow!("spawn: {e}"))?;
-            senders.insert(name, tx);
-            handles.push(handle);
+            let factory: Factory = match &cfg.backend {
+                BackendChoice::Pjrt => {
+                    let dir = cfg.artifacts.clone();
+                    let m = manifest.clone();
+                    let vname = name.clone();
+                    Arc::new(move || {
+                        let be = PjrtBackend::load(&dir, &vname, &file, &m)?;
+                        Ok(Box::new(be) as Box<dyn InferBackend>)
+                    })
+                }
+                BackendChoice::Pvu { batch } => {
+                    let params = Arc::clone(params.as_ref().expect("params loaded for PVU"));
+                    let vname = name.clone();
+                    let batch = *batch;
+                    Arc::new(move || {
+                        let be = PvuBackend::new(&vname, batch, &params)?;
+                        Ok(Box::new(be) as Box<dyn InferBackend>)
+                    })
+                }
+            };
+            let mut shards = Vec::with_capacity(shards_per_variant);
+            for shard_id in 0..shards_per_variant {
+                let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(cfg.queue_depth);
+                let inflight = Arc::new(AtomicUsize::new(0));
+                let ctx = WorkerCtx {
+                    label: format!("{name}#{shard_id}"),
+                    variant: name.clone(),
+                    factory: Arc::clone(&factory),
+                    max_wait: cfg.max_wait,
+                    metrics: Arc::clone(&metrics),
+                    inflight: Arc::clone(&inflight),
+                    init_tx: init_tx.clone(),
+                };
+                let handle = std::thread::Builder::new()
+                    .name(format!("posar-serve-{name}-{shard_id}"))
+                    .spawn(move || worker(ctx, rx))
+                    .map_err(|e| anyhow!("spawn: {e}"))?;
+                shards.push(Shard { tx, inflight });
+                handles.push(handle);
+                n_workers += 1;
+            }
+            routes.insert(
+                name,
+                VariantRoute {
+                    shards,
+                    cursor: AtomicUsize::new(0),
+                },
+            );
         }
-        anyhow::ensure!(!senders.is_empty(), "no variants started");
+        drop(init_tx);
+        anyhow::ensure!(!routes.is_empty(), "no variants started");
+        // Fail fast: collect every worker's init verdict before serving.
+        let mut failures = Vec::new();
+        for _ in 0..n_workers {
+            match init_rx.recv() {
+                Ok((_, Ok(()))) => {}
+                Ok((label, Err(e))) => failures.push(format!("{label}: {e}")),
+                Err(_) => {
+                    failures.push("worker exited before reporting init".to_string());
+                    break;
+                }
+            }
+        }
+        if !failures.is_empty() {
+            drop(routes); // close every queue: healthy workers exit
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+            return Err(anyhow!("worker init failed: {}", failures.join("; ")));
+        }
         Ok(Coordinator {
-            senders,
+            routes,
+            routing: cfg.routing,
             metrics,
             handles,
             manifest,
@@ -105,25 +268,107 @@ impl Coordinator {
 
     /// Variants currently served.
     pub fn variants(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.senders.keys().cloned().collect();
+        let mut v: Vec<String> = self.routes.keys().cloned().collect();
         v.sort();
         v
     }
 
-    /// Route one request to a variant and wait for the result.
+    /// Shard order to try for one submit: the preferred shard first
+    /// (rotating cursor or lightest in-flight load), then the rest.
+    fn preferred_shard(&self, route: &VariantRoute) -> usize {
+        let n = route.shards.len();
+        match self.routing {
+            Routing::RoundRobin => route.cursor.fetch_add(1, Ordering::Relaxed) % n,
+            Routing::LeastQueued => route
+                .shards
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.inflight.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        }
+    }
+
+    /// Enqueue a raw [`Request`]. Blocking mode waits for queue space on
+    /// the preferred shard and returns `Ok(true)`. Non-blocking mode
+    /// tries every shard and, when all queues are full, records a
+    /// rejection and returns `Ok(false)` (the request is dropped; its
+    /// reply channel disconnects, which a waiting client observes).
+    pub fn submit(&self, variant: &str, req: Request, block: bool) -> Result<bool> {
+        let route = self.routes.get(variant).ok_or_else(|| {
+            anyhow!("unknown variant {variant:?} (have {:?})", self.variants())
+        })?;
+        let n = route.shards.len();
+        let first = self.preferred_shard(route);
+        if block {
+            let shard = &route.shards[first];
+            shard.inflight.fetch_add(1, Ordering::Relaxed);
+            match shard.tx.send(req) {
+                Ok(()) => Ok(true),
+                Err(_) => {
+                    shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                    Err(anyhow!("worker {variant} stopped"))
+                }
+            }
+        } else {
+            let mut req = req;
+            for k in 0..n {
+                let shard = &route.shards[(first + k) % n];
+                shard.inflight.fetch_add(1, Ordering::Relaxed);
+                match shard.tx.try_send(req) {
+                    Ok(()) => return Ok(true),
+                    Err(TrySendError::Full(r)) => {
+                        shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                        req = r;
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                        return Err(anyhow!("worker {variant} stopped"));
+                    }
+                }
+            }
+            self.metrics.lock().unwrap().record_rejected(variant);
+            Ok(false)
+        }
+    }
+
+    /// Route one request to a variant and wait for the result
+    /// (backpressure: blocks while the chosen shard's queue is full).
     pub fn infer(&self, variant: &str, features: Vec<f32>) -> Result<Reply> {
-        let tx = self
-            .senders
-            .get(variant)
-            .ok_or_else(|| anyhow!("unknown variant {variant:?} (have {:?})", self.variants()))?;
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
-        tx.send(Request {
-            features,
-            reply: rtx,
-            enqueued: std::time::Instant::now(),
-        })
-        .map_err(|_| anyhow!("worker {variant} stopped"))?;
+        self.submit(
+            variant,
+            Request {
+                features,
+                reply: rtx,
+                enqueued: std::time::Instant::now(),
+            },
+            true,
+        )?;
         rrx.recv().map_err(|_| anyhow!("worker {variant} dropped reply"))?
+    }
+
+    /// Non-blocking [`Coordinator::infer`]: `Ok(None)` when every shard
+    /// queue of the variant is full (counted in [`Metrics`] as a
+    /// rejection) — the open-loop load-shedding path.
+    pub fn try_infer(&self, variant: &str, features: Vec<f32>) -> Result<Option<Reply>> {
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        let accepted = self.submit(
+            variant,
+            Request {
+                features,
+                reply: rtx,
+                enqueued: std::time::Instant::now(),
+            },
+            false,
+        )?;
+        if !accepted {
+            return Ok(None);
+        }
+        let reply = rrx
+            .recv()
+            .map_err(|_| anyhow!("worker {variant} dropped reply"))??;
+        Ok(Some(reply))
     }
 
     /// Metrics snapshot.
@@ -133,7 +378,7 @@ impl Coordinator {
 
     /// Stop all workers and join.
     pub fn shutdown(mut self) {
-        self.senders.clear(); // closing the channels stops the workers
+        self.routes.clear(); // closing the channels stops the workers
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -141,10 +386,11 @@ impl Coordinator {
 }
 
 /// Input quantization format of a serving variant, if it has one. This
-/// must match what the variant's AOT graph applies to its *inputs*:
-/// "hybrid" stores parameters in Posit(8,1) but quantizes activations
-/// (inputs included) at its Posit(16,2) compute format, so its inputs
-/// are P16 here — only the pure-posit variants use their own format.
+/// must match what the variant's execution graph applies to its
+/// *inputs*: "hybrid" stores parameters in Posit(8,1) but quantizes
+/// activations (inputs included) at its Posit(16,2) compute format, so
+/// its inputs are P16 here — only the pure-posit variants use their own
+/// format.
 pub fn variant_input_spec(name: &str) -> Option<PositSpec> {
     match name {
         "p8" => Some(P8),
@@ -157,91 +403,123 @@ pub fn variant_input_spec(name: &str) -> Option<PositSpec> {
 /// Quantize a request batch through the PVU's batch converters:
 /// f32 → posit → f32 in two vector passes (the batcher's pad/encode
 /// path). Idempotent for already-quantized values, so it composes with
-/// (and pins the contract of) the in-graph input quantization of the
-/// AOT executables — the batch handed to PJRT is guaranteed to be in
+/// (and pins the contract of) the in-graph input quantization of both
+/// backends — the batch handed to the executor is guaranteed to be in
 /// the variant's input format even for graphs that omit the q(x) step.
 pub fn encode_batch(spec: PositSpec, x: &[f32]) -> Vec<f32> {
     pvu::vto_f32(spec, &pvu::vfrom_f32(spec, x))
 }
 
-/// Worker loop: own client + executable, drain-batch-execute-reply.
-fn worker(
-    name: String,
-    file: String,
-    dir: PathBuf,
-    manifest: Manifest,
-    rx: Receiver<Request>,
-    max_wait: Duration,
-    metrics: Arc<Mutex<Metrics>>,
-) {
-    let rt = match crate::runtime::Runtime::cpu(&dir) {
-        Ok(rt) => rt,
+/// Argmax of one probability row (`max_by` semantics: ties resolve to
+/// the highest index). The single argmax both serving paths use:
+/// [`crate::runtime::Executable::classify`] delegates here, so native
+/// and PJRT class decisions cannot diverge.
+pub(crate) fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Worker loop: build the backend (reporting the verdict to `start`),
+/// then drain-batch-encode-execute-reply until the queue closes.
+fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
+    let WorkerCtx {
+        label,
+        variant,
+        factory,
+        max_wait,
+        metrics,
+        inflight,
+        init_tx,
+    } = ctx;
+    let mut be = match factory() {
+        Ok(be) => {
+            let _ = init_tx.send((label, Ok(())));
+            be
+        }
         Err(e) => {
-            eprintln!("[{name}] PJRT init failed: {e}");
+            let _ = init_tx.send((label, Err(format!("{e}"))));
             return;
         }
     };
-    let exe = match rt.load(&name, &file, &manifest) {
-        Ok(exe) => exe,
-        Err(e) => {
-            eprintln!("[{name}] load failed: {e}");
-            return;
-        }
-    };
-    let mut batcher = Batcher::new(exe.batch, max_wait);
+    // Drop our init sender immediately: `start` uses channel closure to
+    // detect workers that died without reporting.
+    drop(init_tx);
+    let batch_size = be.batch();
+    let feat = be.feat();
+    let classes = be.classes();
+    let input_spec = variant_input_spec(&variant);
+    let mut batcher = Batcher::new(batch_size, max_wait);
+    let mut x = vec![0f32; batch_size * feat];
     loop {
-        let batch = match batcher.next_batch(&rx) {
-            Some(b) => b,
-            None => return, // channel closed and drained
+        let Some(batch) = batcher.next_batch(&rx) else {
+            return; // channel closed and drained
         };
+        // Shape-check before the copy loop: a malformed request must
+        // error its own reply, not kill the shard.
+        let (batch, bad): (Vec<Request>, Vec<Request>) = batch
+            .into_iter()
+            .partition(|r| r.features.len() == feat);
+        for req in bad {
+            let _ = req.reply.send(Err(anyhow!(
+                "expected {feat} features, got {}",
+                req.features.len()
+            )));
+            inflight.fetch_sub(1, Ordering::Relaxed);
+        }
         let n = batch.len();
-        // Pad the tail with zeros up to the baked batch size, then run
-        // the PVU batch converters over the *filled* rows of the posit
+        if n == 0 {
+            continue;
+        }
+        // Pad the tail with zeros up to the batch size, then run the
+        // PVU batch converters over the *filled* rows of the posit
         // variants (the input-format encode of Figure 4; the zero
         // padding quantizes to zero, so it is skipped). This happens
-        // before `t0` so the exec-latency metric measures the PJRT run,
-        // not the host-side encode.
-        let mut x = vec![0f32; exe.batch * exe.feat];
+        // before `t0` so the exec-latency metric measures the backend
+        // run, not the host-side encode.
         for (i, req) in batch.iter().enumerate() {
-            x[i * exe.feat..(i + 1) * exe.feat].copy_from_slice(&req.features);
+            x[i * feat..(i + 1) * feat].copy_from_slice(&req.features);
         }
-        if let Some(spec) = variant_input_spec(&name) {
-            let filled = n * exe.feat;
+        for v in &mut x[n * feat..] {
+            *v = 0.0;
+        }
+        if let Some(spec) = input_spec {
+            let filled = n * feat;
             let q = encode_batch(spec, &x[..filled]);
             x[..filled].copy_from_slice(&q);
         }
         let t0 = std::time::Instant::now();
-        match exe.run(&x) {
+        let outcome = be.run(&x, n).and_then(|probs| {
+            anyhow::ensure!(
+                probs.len() >= n * classes,
+                "backend returned {} probs for {n}·{classes} outputs",
+                probs.len()
+            );
+            Ok(probs)
+        });
+        match outcome {
             Ok(probs) => {
                 let dt = t0.elapsed();
                 {
                     let mut m = metrics.lock().unwrap();
                     for req in &batch {
-                        m.observe(
-                            &name,
-                            req.enqueued.elapsed(),
-                            dt,
-                            n as u64,
-                        );
+                        m.observe(&variant, req.enqueued.elapsed(), dt, n as u64);
                     }
                 }
                 for (i, req) in batch.into_iter().enumerate() {
-                    let row = probs[i * exe.classes..(i + 1) * exe.classes].to_vec();
-                    let class = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| {
-                            a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal)
-                        })
-                        .map(|(i, _)| i)
-                        .unwrap_or(0);
+                    let row = probs[i * classes..(i + 1) * classes].to_vec();
+                    let class = argmax(&row);
                     let _ = req.reply.send(Ok(Reply { class, probs: row }));
+                    inflight.fetch_sub(1, Ordering::Relaxed);
                 }
             }
             Err(e) => {
                 let msg = format!("{e}");
                 for req in batch {
                     let _ = req.reply.send(Err(anyhow!("{msg}")));
+                    inflight.fetch_sub(1, Ordering::Relaxed);
                 }
             }
         }
@@ -281,5 +559,21 @@ mod tests {
                 twice.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
             );
         }
+    }
+
+    #[test]
+    fn argmax_breaks_ties_high_and_survives_nan() {
+        assert_eq!(argmax(&[0.1, 0.5, 0.5, 0.2]), 2);
+        assert_eq!(argmax(&[f32::NAN, 1.0, 0.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn routing_parses_cli_spellings() {
+        assert_eq!(Routing::parse("rr"), Some(Routing::RoundRobin));
+        assert_eq!(Routing::parse("round-robin"), Some(Routing::RoundRobin));
+        assert_eq!(Routing::parse("lq"), Some(Routing::LeastQueued));
+        assert_eq!(Routing::parse("least-queued"), Some(Routing::LeastQueued));
+        assert_eq!(Routing::parse("random"), None);
     }
 }

@@ -28,8 +28,13 @@
 //!   layers and pooling have a PVU execution path ([`cnn::forward_pvu`]).
 //! - [`data`] — embedded Iris dataset + synthetic Cifar-like workload.
 //! - [`area`] — FPGA resource (Table VII) and power/energy (§V-F) models.
-//! - [`runtime`] — PJRT loader/executor for AOT-compiled JAX artifacts.
-//! - [`coordinator`] — the L3 serving stack: router, batcher, metrics.
+//! - [`runtime`] — PJRT loader/executor for AOT-compiled JAX artifacts
+//!   (plus the synthesized manifest of the native serving backend).
+//! - [`coordinator`] — the L3 serving stack: router with sharded
+//!   per-variant workers, dynamic batcher, pluggable inference
+//!   backends (native PVU — no artifacts needed — or PJRT), histogram
+//!   metrics with p50/p95/p99 + rejection counters, and the
+//!   closed/open-loop load generator behind `repro serve-bench`.
 //! - [`report`] — table/figure renderers that regenerate the paper's
 //!   evaluation section.
 

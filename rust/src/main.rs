@@ -5,9 +5,11 @@
 //! crate set has no clap.
 
 use posar::cnn;
-use posar::coordinator::{Coordinator, ServeConfig};
+use posar::coordinator::{
+    run_bench, BackendChoice, BenchConfig, Coordinator, Routing, ServeConfig,
+};
 use posar::report;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn usage() -> ! {
     eprintln!(
@@ -32,9 +34,22 @@ paper reproduction:
                          PVU-vs-scalar level-two kernels (default MM 24)
   all                    everything above at quick-run sizes
 
-serving (PJRT, needs `make artifacts`):
-  serve [--requests N] [--variants a,b,..]
-                         batched inference over the AOT executables
+serving:
+  serve [--backend pvu|pjrt] [--requests N] [--variants a,b,..]
+        [--shards S] [--routing rr|lq]
+                         batched inference. Backend `pvu` (default) runs
+                         the CNN natively on the Posit Vector Unit — no
+                         artifacts needed; `pjrt` serves the AOT
+                         executables (needs `make artifacts`)
+  serve-bench [--smoke] [--backend pvu|pjrt] [--requests N]
+              [--concurrency C] [--batch B] [--shards S]
+              [--queue-depth D] [--routing rr|lq] [--variants a,b,..]
+              [--open --rate R --duration-ms MS] [--json PATH]
+                         closed/open-loop load generator; prints a JSON
+                         summary (throughput, p50/p95/p99, rejections)
+                         to stdout and a table to stderr. `--smoke` is
+                         the CI configuration: native backend, small
+                         request count
 
 misc:
   golden [path]          dump posit golden vectors plus PVU golden
@@ -54,6 +69,18 @@ fn num(args: &[String], name: &str, default: u64) -> u64 {
     flag(args, name)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Like [`num`], but a present-yet-unparseable value is an error, not a
+/// silent fall-back to the default — a benchmark run with a typo'd knob
+/// must not measure (and CI must not assert on) the wrong configuration.
+fn strict_num(args: &[String], name: &str, default: u64) -> anyhow::Result<u64> {
+    match flag(args, name) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad {name} {v:?} (expected an integer)")),
+    }
 }
 
 fn main() {
@@ -96,9 +123,8 @@ fn main() {
             print!("\n{}", report::pvu_report(16));
         }
         "serve" => {
-            let n = num(&args, "--requests", 256) as usize;
             let variants = flag(&args, "--variants");
-            match serve(n, variants.as_deref()) {
+            match serve(&args, variants.as_deref()) {
                 Ok(()) => {}
                 Err(e) => {
                     eprintln!("serve failed: {e}");
@@ -106,6 +132,13 @@ fn main() {
                 }
             }
         }
+        "serve-bench" => match serve_bench(&args) {
+            Ok(()) => {}
+            Err(e) => {
+                eprintln!("serve-bench failed: {e}");
+                std::process::exit(1);
+            }
+        },
         "golden" => {
             let path = args
                 .get(1)
@@ -118,67 +151,141 @@ fn main() {
     eprintln!("[{}] done in {:.2?}", cmd, t0.elapsed());
 }
 
-/// The serving driver: load AOT variants, push a request stream through
-/// the router/batcher, report Top-1 + latency/throughput.
-fn serve(n_requests: usize, variants: Option<&str>) -> anyhow::Result<()> {
-    let cfg = ServeConfig::default();
-    let filter: Option<Vec<&str>> = variants.map(|v| v.split(',').collect());
+/// Build a `ServeConfig` from the shared CLI flags. The default backend
+/// is the native PVU (runs from a clean checkout); `--backend pjrt`
+/// selects the AOT path.
+fn serve_config(args: &[String], default_batch: usize) -> anyhow::Result<ServeConfig> {
+    let backend = flag(args, "--backend").unwrap_or_else(|| "pvu".to_string());
+    let backend = match backend.as_str() {
+        "pjrt" => BackendChoice::Pjrt,
+        "pvu" => BackendChoice::Pvu {
+            batch: strict_num(args, "--batch", default_batch as u64)? as usize,
+        },
+        other => anyhow::bail!("unknown backend {other:?} (expected pvu or pjrt)"),
+    };
+    let routing = match flag(args, "--routing") {
+        None => Routing::RoundRobin,
+        Some(s) => Routing::parse(&s)
+            .ok_or_else(|| anyhow::anyhow!("unknown routing {s:?} (expected rr or lq)"))?,
+    };
+    Ok(ServeConfig {
+        backend,
+        shards: strict_num(args, "--shards", 1)? as usize,
+        queue_depth: strict_num(args, "--queue-depth", 256)? as usize,
+        routing,
+        ..ServeConfig::default()
+    })
+}
+
+/// The serving driver: start the selected backend's workers, push a
+/// closed-loop request stream through the router/batcher (one client
+/// per variant, via the load generator — one driver implementation,
+/// not three), and report Top-1 + latency/throughput.
+fn serve(args: &[String], variants: Option<&str>) -> anyhow::Result<()> {
+    let n_requests = strict_num(args, "--requests", 256)? as usize;
+    let cfg = serve_config(args, 8)?;
+    let filter: Option<Vec<&str>> = variants.map(|v| v.split(',').map(str::trim).collect());
     let coord = Coordinator::start(&cfg, filter.as_deref())?;
     println!("serving variants: {:?}", coord.variants());
     let (set, canonical) = cnn::weights::set_or_generate(n_requests);
     println!(
-        "request stream: {} samples ({})",
-        set.len().min(n_requests),
+        "request stream: {} requests per variant ({})",
+        n_requests,
         if canonical {
             "canonical test set"
         } else {
             "generated"
         }
     );
-    let t0 = Instant::now();
-    let mut correct = std::collections::HashMap::<String, usize>::new();
-    let mut total = 0usize;
-    std::thread::scope(|s| {
-        let coord = &coord;
-        let set = &set;
-        let names = coord.variants();
-        let mut joins = Vec::new();
-        for name in names {
-            let h = s.spawn(move || {
-                let mut ok = 0usize;
-                let n = set.len().min(n_requests);
-                for i in 0..n {
-                    let reply = coord
-                        .infer(&name, set.sample(i).to_vec())
-                        .expect("inference");
-                    ok += (reply.class == set.labels[i] as usize) as usize;
-                }
-                (name, ok, n)
-            });
-            joins.push(h);
-        }
-        for j in joins {
-            let (name, ok, n) = j.join().unwrap();
-            correct.insert(name, ok);
-            total = n;
-        }
-    });
-    let dt = t0.elapsed();
-    println!("\nTop-1 per variant ({total} requests each):");
-    let mut names: Vec<_> = correct.keys().cloned().collect();
-    names.sort();
-    for name in names {
-        println!("  {:<8} {:.4}", name, correct[&name] as f64 / total as f64);
-    }
-    let served = correct.len() * total;
-    println!(
-        "\nthroughput: {:.0} req/s over {} variants ({:.2?} total)",
-        served as f64 / dt.as_secs_f64(),
-        correct.len(),
-        dt
-    );
-    println!("\n{}", coord.metrics().render());
+    let bcfg = BenchConfig {
+        concurrency: 1, // sequential per variant: the `serve` shape
+        requests: n_requests,
+        ..Default::default()
+    };
+    let summary = run_bench(&coord, &set, &bcfg)?;
+    println!("\n{}", summary.render());
+    println!("{}", coord.metrics().render());
     coord.shutdown();
+    Ok(())
+}
+
+/// The closed/open-loop load generator (`serve-bench`): drive the
+/// serving stack with concurrent clients and emit a machine-readable
+/// JSON summary on stdout (table + progress on stderr, so the JSON can
+/// be piped or captured as a CI artifact).
+fn serve_bench(args: &[String]) -> anyhow::Result<()> {
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let open = args.iter().any(|a| a == "--open");
+    let mut cfg = serve_config(args, if smoke { 4 } else { 8 })?;
+    if smoke && !args.iter().any(|a| a == "--shards") {
+        cfg.shards = 2; // exercise the sharded router in CI
+    }
+    let concurrency = strict_num(args, "--concurrency", if smoke { 4 } else { 8 })? as usize;
+    let requests = strict_num(args, "--requests", if smoke { 32 } else { 512 })? as usize;
+    let rate = match flag(args, "--rate") {
+        None => 200.0,
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("bad --rate {v:?} (expected a number)"))?,
+    };
+    let duration = Duration::from_millis(strict_num(args, "--duration-ms", 1000)?);
+    let variants: Vec<String> = match flag(args, "--variants") {
+        Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        // Smoke default: one variant per engine kind (scalar FP32, LUT
+        // P8, decode-once P16) keeps CI wall time short.
+        None if smoke => vec!["fp32".into(), "p8".into(), "p16".into()],
+        None => Vec::new(), // every served variant
+    };
+    let filter: Option<Vec<&str>> = if variants.is_empty() {
+        None
+    } else {
+        Some(variants.iter().map(|s| s.as_str()).collect())
+    };
+    let coord = Coordinator::start(&cfg, filter.as_deref())?;
+    let (set, canonical) = cnn::weights::set_or_generate(requests.clamp(64, 256));
+    eprintln!(
+        "serve-bench: {:?} shards={} routing={:?} variants={:?} ({})",
+        cfg.backend,
+        cfg.shards.max(1),
+        cfg.routing,
+        coord.variants(),
+        if canonical { "canonical test set" } else { "generated data" }
+    );
+    let bcfg = BenchConfig {
+        variants,
+        concurrency,
+        requests,
+        open_loop: open,
+        rate,
+        duration,
+    };
+    let summary = run_bench(&coord, &set, &bcfg)?;
+    eprintln!("\n{}", summary.render());
+    eprintln!("{}", coord.metrics().render());
+    let json = summary.to_json();
+    print!("{json}");
+    if let Some(path) = flag(args, "--json") {
+        std::fs::write(&path, &json)?;
+        eprintln!("wrote {path}");
+    }
+    coord.shutdown();
+    // A bench whose requests errored (or that completed nothing) must
+    // exit non-zero, or the CI serving smoke stays green while the
+    // serving path is broken. Rejections are fine — shedding is the
+    // open-loop design — but errors never are.
+    for r in &summary.rows {
+        anyhow::ensure!(
+            r.errors == 0,
+            "variant {} reported {} request errors",
+            r.variant,
+            r.errors
+        );
+        anyhow::ensure!(
+            r.completed > 0,
+            "variant {} completed no requests",
+            r.variant
+        );
+    }
     Ok(())
 }
 

@@ -33,6 +33,12 @@
 //! [`crate::isa::cost::posar`] — 4× throughput for P8, 2× for P16, parity
 //! for P32, exactly the paper's numbers.
 //!
+//! Since PR 4 the PVU is also the crate's **native serving engine**:
+//! [`crate::coordinator::PvuBackend`] executes the CNN tail through
+//! [`crate::cnn::forward_pvu`] (quire-fused relu/pool/dense) inside the
+//! sharded serving workers, so the full L3 stack runs without PJRT
+//! artifacts — the FPPU/PERI integration shape.
+//!
 //! **Kernel selection.** Elementwise entry points check the format:
 //! Posit(8,1) goes to the LUTs (O(1) per op), everything else to the
 //! decode-once path. The fused `dot`/`gemv`/`gemm` family always uses

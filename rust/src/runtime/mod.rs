@@ -92,6 +92,24 @@ fn json_variants(text: &str) -> Vec<(String, String)> {
 }
 
 impl Manifest {
+    /// Manifest for the native (in-process PVU) serving backend: no
+    /// artifact files — every variant executes through
+    /// `cnn::forward_pvu` / the scalar simulator, so the serving stack
+    /// runs from a clean checkout.
+    pub fn native(batch: usize) -> Self {
+        Manifest {
+            batch: batch.max(1),
+            feat: crate::data::synth::FEAT,
+            classes: crate::data::synth::CLASSES,
+            test_n: 0,
+            fp32_top1: 0.0,
+            variants: crate::coordinator::NATIVE_VARIANTS
+                .iter()
+                .map(|v| (v.to_string(), "native".to_string()))
+                .collect(),
+        }
+    }
+
     /// Load and parse `manifest.json` from the artifacts directory.
     pub fn load(dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
@@ -183,18 +201,14 @@ impl Executable {
         out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
     }
 
-    /// Classify a batch: argmax per sample.
+    /// Classify a batch: argmax per sample (the shared
+    /// [`crate::coordinator::argmax`], so PJRT and native serving
+    /// resolve ties identically).
     pub fn classify(&self, x: &[f32]) -> Result<Vec<usize>> {
         let probs = self.run(x)?;
         Ok(probs
             .chunks(self.classes)
-            .map(|row| {
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0)
-            })
+            .map(crate::coordinator::argmax)
             .collect())
     }
 }
@@ -202,6 +216,19 @@ impl Executable {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn native_manifest_covers_every_native_variant() {
+        let m = Manifest::native(8);
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.feat, crate::data::synth::FEAT);
+        assert_eq!(m.classes, crate::data::synth::CLASSES);
+        assert_eq!(m.variants.len(), crate::coordinator::NATIVE_VARIANTS.len());
+        assert!(m.variants.iter().any(|(n, _)| n == "fp32"));
+        assert!(m.variants.iter().any(|(n, _)| n == "p16"));
+        // Degenerate batch is clamped, not propagated.
+        assert_eq!(Manifest::native(0).batch, 1);
+    }
 
     #[test]
     fn manifest_parsing() {
