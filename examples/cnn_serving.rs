@@ -26,6 +26,9 @@ fn main() -> anyhow::Result<()> {
     let cfg = ServeConfig {
         backend,
         shards: 2,
+        // Fan each batch's samples across two cores per shard (native
+        // backend only; bit-identical to sequential execution).
+        intra_batch: 2,
         ..ServeConfig::default()
     };
     let coord = Coordinator::start(&cfg, None)?;

@@ -32,6 +32,29 @@ fn main() {
         });
     }
 
+    // ---- intra-batch parallelism (the `--intra-batch` pool) ----------
+    // Same batch, fanned across cores: sequential vs pool-parallel
+    // execution of the independent samples (bit-identical outputs; see
+    // rust/tests/serving_native.rs). The speedup here is what multiplies
+    // native serving throughput per shard.
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .min(batch);
+    println!("== intra-batch parallel execution (batch = {batch}, pool = {threads}) ==");
+    for v in ["p8", "p16"] {
+        let mut seq = PvuBackend::new(v, batch, &params).expect("native backend");
+        bench(&format!("intra1/{v}"), batch as u64, || {
+            black_box(seq.run(&x, batch).expect("run"));
+        });
+        let mut par = PvuBackend::new(v, batch, &params)
+            .expect("native backend")
+            .with_intra(threads);
+        bench(&format!("intra{threads}/{v}"), batch as u64, || {
+            black_box(par.run(&x, batch).expect("run"));
+        });
+    }
+
     // ---- PJRT AOT executables (needs `make artifacts`) ---------------
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -1,0 +1,239 @@
+//! Shard autoscaler: grow/shrink a variant's live worker shards from the
+//! in-flight gauges the least-queued router already maintains.
+//!
+//! The serving stack's elasticity loop (ROADMAP: "autoscaling: grow/
+//! shrink `shards` per variant from the in-flight gauges") splits into
+//! two halves:
+//!
+//! - **Policy** — [`ShardScaler`], a pure per-variant state machine. It
+//!   is fed one observation per tick (total in-flight requests, live
+//!   shard count) and decides [`ScaleAction::Up`], [`ScaleAction::Down`]
+//!   or nothing. Being plain data in → data out, it is unit-testable
+//!   without threads, queues, or clocks.
+//! - **Actuation** — the coordinator's controller thread (see
+//!   `Coordinator::start`), which ticks every [`AutoscaleConfig::interval`],
+//!   reads the gauges, applies the decisions by spawning or retiring
+//!   worker shards, and records each transition as a scale event in the
+//!   metrics registry.
+//!
+//! The policy is the classic asymmetric one: scale **up fast** (a
+//! sustained high per-shard backlog for [`AutoscaleConfig::sustain`]
+//! consecutive ticks), scale **down slowly** (a sustained idle signal
+//! *and* an expired [`AutoscaleConfig::cooldown`]), and never leave the
+//! `[min_shards, max_shards]` band. Cooldown starts after *any* scale
+//! event, so the shard count cannot flap: a burst that triggers an
+//! up-scale holds the new capacity for at least `cooldown` ticks.
+
+use std::time::Duration;
+
+/// Autoscaler policy knobs (per variant; one config shared by all).
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Floor: scale-down never drops a variant below this many shards.
+    pub min_shards: usize,
+    /// Ceiling: scale-up never exceeds this. `0` disables autoscaling
+    /// entirely (the default — shard counts stay as configured).
+    pub max_shards: usize,
+    /// Per-shard in-flight load at or above which a tick counts as
+    /// pressured (the scale-up signal).
+    pub high_inflight: usize,
+    /// Per-shard in-flight load strictly below which a tick counts as
+    /// idle (the scale-down signal). With the default of 1, a variant is
+    /// idle when it has fewer waiting requests than shards.
+    pub low_inflight: usize,
+    /// Consecutive pressured (resp. idle) ticks required before a scale
+    /// decision fires. Filters one-tick noise.
+    pub sustain: u32,
+    /// Ticks after any scale event during which scale-*down* is
+    /// suppressed (scale-up is never delayed by cooldown).
+    pub cooldown: u32,
+    /// Controller tick period.
+    pub interval: Duration,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 0, // disabled
+            high_inflight: 4,
+            low_inflight: 1,
+            sustain: 3,
+            cooldown: 20,
+            interval: Duration::from_millis(25),
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Whether the controller thread should run at all.
+    pub fn enabled(&self) -> bool {
+        self.max_shards > 0
+    }
+}
+
+/// A scale decision for one variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Add one shard.
+    Up,
+    /// Retire one shard.
+    Down,
+}
+
+/// Per-variant scaling state machine. Feed it one [`ShardScaler::observe`]
+/// per tick; it answers with the action to apply, already bounds-checked
+/// against `[min_shards, max_shards]`.
+#[derive(Clone, Debug)]
+pub struct ShardScaler {
+    cfg: AutoscaleConfig,
+    /// Consecutive pressured ticks.
+    hot: u32,
+    /// Consecutive idle ticks.
+    cold: u32,
+    /// Ticks left before another scale-down is allowed.
+    cooldown_left: u32,
+}
+
+impl ShardScaler {
+    /// Fresh state machine for one variant.
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        ShardScaler {
+            cfg,
+            hot: 0,
+            cold: 0,
+            cooldown_left: 0,
+        }
+    }
+
+    /// One controller tick: `inflight` is the variant's total in-flight
+    /// gauge (queued + executing across all shards), `shards` its live
+    /// shard count. Returns the action the actuator should apply, or
+    /// `None` to hold.
+    pub fn observe(&mut self, inflight: usize, shards: usize) -> Option<ScaleAction> {
+        if !self.cfg.enabled() {
+            return None;
+        }
+        self.cooldown_left = self.cooldown_left.saturating_sub(1);
+        let shards = shards.max(1);
+        if inflight >= self.cfg.high_inflight * shards {
+            self.hot += 1;
+            self.cold = 0;
+        } else if inflight < self.cfg.low_inflight * shards {
+            self.cold += 1;
+            self.hot = 0;
+        } else {
+            self.hot = 0;
+            self.cold = 0;
+        }
+        let sustain = self.cfg.sustain.max(1);
+        if self.hot >= sustain && shards < self.cfg.max_shards {
+            self.hot = 0;
+            self.cold = 0;
+            self.cooldown_left = self.cfg.cooldown;
+            return Some(ScaleAction::Up);
+        }
+        if self.cold >= sustain && shards > self.cfg.min_shards && self.cooldown_left == 0 {
+            self.cold = 0;
+            self.hot = 0;
+            self.cooldown_left = self.cfg.cooldown;
+            return Some(ScaleAction::Down);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            high_inflight: 4,
+            low_inflight: 1,
+            sustain: 3,
+            cooldown: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn disabled_config_never_scales() {
+        let mut s = ShardScaler::new(AutoscaleConfig::default());
+        for _ in 0..100 {
+            assert_eq!(s.observe(1_000, 1), None);
+        }
+    }
+
+    #[test]
+    fn scale_up_requires_sustained_pressure() {
+        let mut s = ShardScaler::new(cfg());
+        // Two pressured ticks, one quiet tick: streak resets, no action.
+        assert_eq!(s.observe(8, 1), None);
+        assert_eq!(s.observe(8, 1), None);
+        assert_eq!(s.observe(2, 1), None);
+        // Three consecutive pressured ticks: up on the third.
+        assert_eq!(s.observe(8, 1), None);
+        assert_eq!(s.observe(8, 1), None);
+        assert_eq!(s.observe(8, 1), Some(ScaleAction::Up));
+    }
+
+    #[test]
+    fn scale_up_respects_max_and_down_respects_min() {
+        let mut s = ShardScaler::new(cfg());
+        // At the ceiling: sustained pressure holds instead of scaling.
+        for _ in 0..20 {
+            assert_eq!(s.observe(100, 4), None, "never above max_shards");
+        }
+        // At the floor: sustained idleness holds instead of scaling.
+        let mut s = ShardScaler::new(cfg());
+        for _ in 0..20 {
+            assert_eq!(s.observe(0, 1), None, "never below min_shards");
+        }
+    }
+
+    #[test]
+    fn scale_down_waits_out_the_cooldown() {
+        let mut s = ShardScaler::new(cfg());
+        // Trigger an up-scale: cooldown starts.
+        for _ in 0..2 {
+            assert_eq!(s.observe(8, 1), None);
+        }
+        assert_eq!(s.observe(8, 1), Some(ScaleAction::Up));
+        // Now fully idle at 2 shards. The idle streak is sustained after
+        // 3 ticks, but the 5-tick cooldown must expire first.
+        let mut fired_at = None;
+        for tick in 1..=10 {
+            if let Some(a) = s.observe(0, 2) {
+                assert_eq!(a, ScaleAction::Down);
+                fired_at = Some(tick);
+                break;
+            }
+        }
+        let fired_at = fired_at.expect("idle variant must eventually scale down");
+        assert!(
+            fired_at > 3,
+            "down at tick {fired_at} ignored the cooldown (sustain alone is 3)"
+        );
+        // The next scale-down needs a fresh cooldown, not just sustain.
+        for tick in 1..=3 {
+            assert_eq!(s.observe(0, 2), None, "tick {tick} inside new cooldown");
+        }
+    }
+
+    #[test]
+    fn pressure_is_per_shard_not_total() {
+        // 8 in-flight over 2 shards is 4/shard: exactly the high mark.
+        let mut s = ShardScaler::new(cfg());
+        assert_eq!(s.observe(8, 2), None);
+        assert_eq!(s.observe(8, 2), None);
+        assert_eq!(s.observe(8, 2), Some(ScaleAction::Up));
+        // The same total over 3 shards is below the mark: streak resets.
+        let mut s = ShardScaler::new(cfg());
+        for _ in 0..10 {
+            assert_eq!(s.observe(8, 3), None);
+        }
+    }
+}

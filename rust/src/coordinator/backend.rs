@@ -19,6 +19,7 @@
 //! wrapper types are not `Send`); the factory closure that builds them
 //! is the only thing crossing threads.
 
+use super::pool::Pool;
 use crate::cnn::{self, PreparedCnn};
 use crate::data::synth::{CnnParams, CLASSES, FEAT};
 use crate::posit::{PositSpec, P16, P32, P8};
@@ -26,6 +27,7 @@ use crate::runtime::{Executable, Manifest, Runtime};
 use crate::sim::{Backend, Fpu, Hybrid, Machine, Posar};
 use anyhow::Result;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// One model variant's execution engine, owned by a single worker.
 pub trait InferBackend {
@@ -90,20 +92,43 @@ enum Engine {
     Pvu(PositSpec, Posar),
 }
 
+/// Run one sample through the engine on a fresh [`Machine`], returning
+/// its probability row and the modeled cycles it cost. The per-sample
+/// state is entirely local, which is what makes samples of a batch
+/// independent — and therefore safe to fan across a [`Pool`].
+fn run_sample(engine: &Engine, pc: &PreparedCnn, sample: &[f32]) -> (Vec<f64>, u64) {
+    match engine {
+        Engine::Scalar(be) => {
+            let mut m = Machine::new(be.as_ref());
+            let (_, p) = cnn::forward(&mut m, pc, sample);
+            (p, m.cycles)
+        }
+        Engine::Pvu(spec, be) => {
+            let mut m = Machine::new(be);
+            let (_, p) = cnn::forward_pvu(&mut m, *spec, pc, sample);
+            (p, m.cycles)
+        }
+    }
+}
+
 /// The native in-process backend: the PVU as the serving engine.
 pub struct PvuBackend {
     name: String,
     engine: Engine,
     pc: PreparedCnn,
     batch: usize,
+    /// Intra-batch worker pool: samples of one batch fan across this
+    /// many threads (width 1 = sequential).
+    pool: Pool,
     /// Modeled cycles accumulated over every sample served (the §V-C
     /// cost model riding along with real execution).
     pub cycles: u64,
 }
 
 impl PvuBackend {
-    /// Build the engine for one variant. Parameters are re-encoded into
-    /// the variant's memory format (the offline conversion of Figure 4).
+    /// Build the engine for one variant, executing batches sequentially.
+    /// Parameters are re-encoded into the variant's memory format (the
+    /// offline conversion of Figure 4).
     pub fn new(variant: &str, batch: usize, params: &CnnParams) -> Result<Self> {
         let engine = match variant {
             "fp32" => Engine::Scalar(Box::new(Fpu::new())),
@@ -122,8 +147,25 @@ impl PvuBackend {
             engine,
             pc,
             batch: batch.max(1),
+            pool: Pool::new(1),
             cycles: 0,
         })
+    }
+
+    /// Set the intra-batch parallelism: independent samples of each
+    /// [`InferBackend::run`] call fan across up to `threads` cores (the
+    /// `--intra-batch` knob). Outputs are **bit-identical** to the
+    /// sequential path for any width — sample `i` always lands in output
+    /// row `i` and shares no mutable state with its neighbours (enforced
+    /// by `rust/tests/serving_native.rs`).
+    pub fn with_intra(mut self, threads: usize) -> Self {
+        self.pool = Pool::new(threads);
+        self
+    }
+
+    /// Intra-batch worker width currently configured.
+    pub fn intra(&self) -> usize {
+        self.pool.threads()
     }
 }
 
@@ -149,27 +191,22 @@ impl InferBackend for PvuBackend {
             x.len()
         );
         anyhow::ensure!(n <= self.batch, "{n} filled rows > batch {}", self.batch);
-        let mut probs = Vec::with_capacity(n * CLASSES);
-        let mut cycles = 0u64;
-        for i in 0..n {
+        // Fan the independent samples across the intra-batch pool: task i
+        // reads input row i and owns output row i exclusively, and cycle
+        // totals are an order-insensitive sum — so the result (probs and
+        // cycles both) is bit-identical for every pool width.
+        let mut probs = vec![0f32; n * CLASSES];
+        let cycles = AtomicU64::new(0);
+        let (engine, pc) = (&self.engine, &self.pc);
+        self.pool.map_chunks(&mut probs, CLASSES, |i, out| {
             let sample = &x[i * FEAT..(i + 1) * FEAT];
-            let row = match &self.engine {
-                Engine::Scalar(be) => {
-                    let mut m = Machine::new(be.as_ref());
-                    let (_, p) = cnn::forward(&mut m, &self.pc, sample);
-                    cycles += m.cycles;
-                    p
-                }
-                Engine::Pvu(spec, be) => {
-                    let mut m = Machine::new(be);
-                    let (_, p) = cnn::forward_pvu(&mut m, *spec, &self.pc, sample);
-                    cycles += m.cycles;
-                    p
-                }
-            };
-            probs.extend(row.iter().map(|&v| v as f32));
-        }
-        self.cycles += cycles;
+            let (row, c) = run_sample(engine, pc, sample);
+            for (o, &v) in out.iter_mut().zip(&row) {
+                *o = v as f32;
+            }
+            cycles.fetch_add(c, Ordering::Relaxed);
+        });
+        self.cycles += cycles.load(Ordering::Relaxed);
         Ok(probs)
     }
 }
@@ -206,6 +243,30 @@ mod tests {
             assert!(be.cycles > 0, "{v}: cycles must accumulate");
         }
         assert!(PvuBackend::new("nope", 1, &params).is_err());
+    }
+
+    #[test]
+    fn intra_batch_pool_matches_sequential_bitwise() {
+        let params = synth::analytic_params();
+        let set = synth::generate(0x1A7E, 4);
+        let batch = 4;
+        let mut x = vec![0f32; batch * FEAT];
+        for i in 0..4 {
+            x[i * FEAT..(i + 1) * FEAT].copy_from_slice(set.sample(i));
+        }
+        for v in ["fp32", "p8", "p16"] {
+            let mut seq = PvuBackend::new(v, batch, &params).unwrap();
+            let mut par = PvuBackend::new(v, batch, &params).unwrap().with_intra(3);
+            assert_eq!(par.intra(), 3);
+            let a = seq.run(&x, 4).unwrap();
+            let b = par.run(&x, 4).unwrap();
+            assert_eq!(
+                a.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+                "{v}: parallel probs must be bit-identical"
+            );
+            assert_eq!(seq.cycles, par.cycles, "{v}: cycle sum is order-insensitive");
+        }
     }
 
     #[test]

@@ -1,6 +1,16 @@
 //! Dynamic batcher: coalesce requests up to the executable's baked batch
 //! size or a deadline — the standard continuous-batching front end
 //! (vLLM-router style), sized for the fixed-shape PJRT executables.
+//!
+//! The fill deadline can be **adaptive** ([`Batcher::adaptive`]): when
+//! batches fill to capacity before the deadline (queue pressure), the
+//! deadline halves — there is no point holding a full pipeline open, and
+//! a short deadline bounds the tail the moment arrivals dip. When a
+//! deadline flush ships a partial batch (idle), the deadline doubles
+//! back toward its configured base, trading p99 for occupancy again.
+//! This is the ROADMAP's "adaptive `max_wait`" item: the operator sets
+//! one base deadline and the batcher walks the latency/occupancy
+//! trade-off by itself.
 
 use super::Reply;
 use anyhow::Result;
@@ -17,24 +27,75 @@ pub struct Request {
     pub enqueued: Instant,
 }
 
-/// Deadline-bounded batch assembler.
+/// Deadline-bounded batch assembler, with an optionally adaptive
+/// deadline (see the module docs for the control law).
 pub struct Batcher {
     batch: usize,
-    max_wait: Duration,
+    /// Configured deadline — the ceiling the adaptive deadline recovers
+    /// toward, and the fixed deadline otherwise.
+    base_wait: Duration,
+    /// Deadline in force for the next batch.
+    wait: Duration,
+    adaptive: bool,
 }
 
+/// Adaptive floor: the deadline never shrinks below `base / 2^MAX_SHRINK`
+/// (it halves per pressured batch, so the floor is reached after
+/// `MAX_SHRINK` consecutive full batches).
+const MAX_SHRINK: u32 = 4;
+
 impl Batcher {
-    /// New batcher for a fixed batch size and fill deadline.
+    /// New batcher with a fixed batch size and fill deadline.
     pub fn new(batch: usize, max_wait: Duration) -> Self {
-        Batcher { batch, max_wait }
+        Batcher {
+            batch,
+            base_wait: max_wait,
+            wait: max_wait,
+            adaptive: false,
+        }
+    }
+
+    /// New batcher whose deadline adapts to queue pressure: halves after
+    /// every batch that fills to capacity, doubles back toward
+    /// `max_wait` after every deadline flush (see module docs).
+    pub fn adaptive(batch: usize, max_wait: Duration) -> Self {
+        Batcher {
+            batch,
+            base_wait: max_wait,
+            wait: max_wait,
+            adaptive: true,
+        }
+    }
+
+    /// Deadline currently in force (the adaptive state; equals the
+    /// configured `max_wait` for a fixed batcher).
+    pub fn current_wait(&self) -> Duration {
+        self.wait
+    }
+
+    /// Fold one batch outcome into the adaptive deadline.
+    fn adapt(&mut self, filled: usize) {
+        if !self.adaptive {
+            return;
+        }
+        if filled >= self.batch {
+            // Queue pressure: batches fill without waiting, so a long
+            // deadline only hurts the tail when arrivals dip.
+            self.wait = (self.wait / 2).max(self.base_wait / 2u32.pow(MAX_SHRINK));
+        } else {
+            // Idle (deadline flush): recover toward the base deadline to
+            // buy occupancy back.
+            let floor = self.base_wait / 2u32.pow(MAX_SHRINK);
+            self.wait = (self.wait * 2).clamp(floor, self.base_wait);
+        }
     }
 
     /// Block for the first request, then drain more until the batch is
-    /// full or `max_wait` has elapsed. Returns `None` when the channel
-    /// is closed and empty (shutdown).
+    /// full or the (possibly adaptive) deadline has elapsed. Returns
+    /// `None` when the channel is closed and empty (shutdown).
     pub fn next_batch(&mut self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
         let first = rx.recv().ok()?;
-        let deadline = Instant::now() + self.max_wait;
+        let deadline = Instant::now() + self.wait;
         let mut batch = vec![first];
         while batch.len() < self.batch {
             let now = Instant::now();
@@ -47,6 +108,7 @@ impl Batcher {
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        self.adapt(batch.len());
         Some(batch)
     }
 }
@@ -126,6 +188,76 @@ mod tests {
             "disconnect must not wait for the 30s deadline"
         );
         assert!(b.next_batch(&rx).is_none(), "drained + closed == shutdown");
+    }
+
+    #[test]
+    fn adaptive_deadline_shrinks_under_pressure_and_recovers_when_idle() {
+        let base = Duration::from_millis(16);
+        let (tx, rx) = sync_channel(64);
+        let mut b = Batcher::adaptive(4, base);
+        assert_eq!(b.current_wait(), base);
+        // Synthetic queue pressure: three back-to-back full batches.
+        let mut keep = Vec::new();
+        for i in 0..12 {
+            let (r, k) = req(i as f32);
+            tx.send(r).unwrap();
+            keep.push(k);
+        }
+        let mut last = b.current_wait();
+        for round in 0..3 {
+            assert_eq!(b.next_batch(&rx).unwrap().len(), 4);
+            assert!(
+                b.current_wait() < last,
+                "round {round}: deadline must shrink under pressure ({:?} -> {:?})",
+                last,
+                b.current_wait()
+            );
+            last = b.current_wait();
+        }
+        assert_eq!(b.current_wait(), base / 8, "halved once per full batch");
+        // Floor: pressure can never drive the deadline to zero.
+        for i in 0..16 {
+            let (r, k) = req(i as f32);
+            tx.send(r).unwrap();
+            keep.push(k);
+        }
+        for _ in 0..4 {
+            b.next_batch(&rx).unwrap();
+        }
+        assert_eq!(b.current_wait(), base / 16, "shrink floor is base/16");
+        // Idle: each deadline flush (partial batch) doubles the deadline
+        // back toward — and never past — the configured base.
+        let mut grew = b.current_wait();
+        for round in 0..5 {
+            let (r, k) = req(round as f32);
+            tx.send(r).unwrap();
+            keep.push(k);
+            let got = b.next_batch(&rx).unwrap();
+            assert_eq!(got.len(), 1, "idle flush ships the partial batch");
+            assert!(
+                b.current_wait() >= grew,
+                "round {round}: deadline must recover when idle"
+            );
+            grew = b.current_wait();
+        }
+        assert_eq!(b.current_wait(), base, "recovery saturates at the base");
+    }
+
+    #[test]
+    fn fixed_batcher_deadline_never_moves() {
+        let base = Duration::from_millis(8);
+        let (tx, rx) = sync_channel(16);
+        let mut b = Batcher::new(2, base);
+        let mut keep = Vec::new();
+        for i in 0..4 {
+            let (r, k) = req(i as f32);
+            tx.send(r).unwrap();
+            keep.push(k);
+        }
+        for _ in 0..2 {
+            assert_eq!(b.next_batch(&rx).unwrap().len(), 2);
+            assert_eq!(b.current_wait(), base);
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //!   does not wait for the server, so queue growth and rejections are
 //!   visible instead of being absorbed into client think time.
 
-use super::metrics::VariantStats;
+use super::metrics::{ScaleEvent, VariantStats};
 use super::{Coordinator, Reply, Request, Snapshot};
 use crate::data::synth::SynthSet;
 use anyhow::Result;
@@ -73,12 +73,12 @@ pub struct VariantBench {
     pub throughput_rps: f64,
     /// Mean end-to-end latency, µs.
     pub mean_latency_us: f64,
-    /// Histogram-derived p50 latency, µs.
-    pub p50_us: u64,
-    /// Histogram-derived p95 latency, µs.
-    pub p95_us: u64,
-    /// Histogram-derived p99 latency, µs.
-    pub p99_us: u64,
+    /// Histogram-bucket upper bound on p50 latency, µs (`p50≤`).
+    pub p50_le_us: u64,
+    /// Histogram-bucket upper bound on p95 latency, µs (`p95≤`).
+    pub p95_le_us: u64,
+    /// Histogram-bucket upper bound on p99 latency, µs (`p99≤`).
+    pub p99_le_us: u64,
     /// Max observed latency, µs. Cumulative over the coordinator's
     /// lifetime, not just this run (a max cannot be un-merged from the
     /// histogram delta) — only differs from the run's own max when the
@@ -86,6 +86,12 @@ pub struct VariantBench {
     pub max_us: u64,
     /// Mean batch occupancy seen by this variant's workers.
     pub mean_batch: f64,
+    /// Autoscaler scale-up events during the run.
+    pub scale_ups: u64,
+    /// Autoscaler scale-down events during the run.
+    pub scale_downs: u64,
+    /// Live shard count at the end of the run.
+    pub shards: u64,
 }
 
 /// Whole-run summary.
@@ -95,8 +101,16 @@ pub struct BenchSummary {
     pub mode: &'static str,
     /// Total wall time for the whole mix.
     pub wall: Duration,
+    /// Intra-batch parallelism the stack ran with (read from the
+    /// [`Coordinator`], so it cannot drift from the serving config).
+    pub intra_batch: usize,
     /// Per-variant rows, sorted by name.
     pub rows: Vec<VariantBench>,
+    /// Per-shard occupancy over the run: (shard label `variant#k`,
+    /// requests served, mean batch occupancy), sorted by label.
+    pub shard_rows: Vec<(String, u64, f64)>,
+    /// Autoscaler transitions that happened during the run, in order.
+    pub scale_events: Vec<ScaleEvent>,
 }
 
 /// Escape a string for embedding in a JSON string literal. Variant
@@ -123,22 +137,49 @@ impl BenchSummary {
     }
 
     /// Machine-readable JSON (hand-rolled — the offline crate set has
-    /// no serde; the schema is flat and fixed).
+    /// no serde; the schema is flat and fixed, documented field by field
+    /// in `docs/serving.md`). Percentile keys carry the `_le_` infix
+    /// because they are histogram-bucket **upper bounds**, not exact
+    /// order statistics.
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
         out.push_str(&format!("  \"wall_s\": {:.6},\n", self.wall.as_secs_f64()));
+        out.push_str(&format!("  \"intra_batch\": {},\n", self.intra_batch));
         out.push_str(&format!(
             "  \"aggregate_rps\": {:.3},\n",
             self.aggregate_rps()
         ));
+        out.push_str("  \"scale_events\": [\n");
+        for (i, e) in self.scale_events.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"variant\": \"{}\", \"from\": {}, \"to\": {}}}{}\n",
+                json_escape(&e.variant),
+                e.from,
+                e.to,
+                if i + 1 == self.scale_events.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"shards\": [\n");
+        for (i, (label, requests, mean_batch)) in self.shard_rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"shard\": \"{}\", \"requests\": {}, \"mean_batch\": {:.3}}}{}\n",
+                json_escape(label),
+                requests,
+                mean_batch,
+                if i + 1 == self.shard_rows.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ],\n");
         out.push_str("  \"variants\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
             out.push_str(&format!(
                 "    {{\"variant\": \"{}\", \"completed\": {}, \"rejected\": {}, \
                  \"errors\": {}, \"top1\": {:.6}, \"throughput_rps\": {:.3}, \
-                 \"mean_latency_us\": {:.1}, \"p50_us\": {}, \"p95_us\": {}, \
-                 \"p99_us\": {}, \"max_us\": {}, \"mean_batch\": {:.3}}}{}\n",
+                 \"mean_latency_us\": {:.1}, \"p50_le_us\": {}, \"p95_le_us\": {}, \
+                 \"p99_le_us\": {}, \"max_us\": {}, \"mean_batch\": {:.3}, \
+                 \"scale_ups\": {}, \"scale_downs\": {}, \"shards\": {}}}{}\n",
                 json_escape(&r.variant),
                 r.completed,
                 r.rejected,
@@ -146,11 +187,14 @@ impl BenchSummary {
                 r.top1,
                 r.throughput_rps,
                 r.mean_latency_us,
-                r.p50_us,
-                r.p95_us,
-                r.p99_us,
+                r.p50_le_us,
+                r.p95_le_us,
+                r.p99_le_us,
                 r.max_us,
                 r.mean_batch,
+                r.scale_ups,
+                r.scale_downs,
+                r.shards,
                 if i + 1 == self.rows.len() { "" } else { "," }
             ));
         }
@@ -158,31 +202,44 @@ impl BenchSummary {
         out
     }
 
-    /// Human-readable table.
+    /// Human-readable table. Percentile columns are histogram-bucket
+    /// upper bounds (`p50≤` …).
     pub fn render(&self) -> String {
         let mut out = format!(
-            "serve-bench ({} loop, {:.2?} wall, {:.0} req/s aggregate)\n",
+            "serve-bench ({} loop, {:.2?} wall, {:.0} req/s aggregate, intra-batch {})\n",
             self.mode,
             self.wall,
-            self.aggregate_rps()
+            self.aggregate_rps(),
+            self.intra_batch,
         );
         out.push_str(
-            "variant    done    rej    err    top1    req/s    p50(ms)  p95(ms)  p99(ms)  batch\n",
+            "variant    done    rej    err    top1    req/s    p50≤(ms) p95≤(ms) p99≤(ms) batch  shards\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{:<10} {:<7} {:<6} {:<6} {:<7.4} {:<8.1} {:<8.3} {:<8.3} {:<8.3} {:.2}\n",
+                "{:<10} {:<7} {:<6} {:<6} {:<7.4} {:<8.1} {:<8.3} {:<8.3} {:<8.3} {:<6.2} {}\n",
                 r.variant,
                 r.completed,
                 r.rejected,
                 r.errors,
                 r.top1,
                 r.throughput_rps,
-                r.p50_us as f64 / 1000.0,
-                r.p95_us as f64 / 1000.0,
-                r.p99_us as f64 / 1000.0,
+                r.p50_le_us as f64 / 1000.0,
+                r.p95_le_us as f64 / 1000.0,
+                r.p99_le_us as f64 / 1000.0,
                 r.mean_batch,
+                r.shards,
             ));
+        }
+        if !self.scale_events.is_empty() {
+            out.push_str("scale events: ");
+            let evs: Vec<String> = self
+                .scale_events
+                .iter()
+                .map(|e| format!("{} {}->{}", e.variant, e.from, e.to))
+                .collect();
+            out.push_str(&evs.join(", "));
+            out.push('\n');
         }
         out
     }
@@ -406,18 +463,57 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
             },
             throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
             mean_latency_us: s.mean_latency_us(),
-            p50_us: s.p50_us(),
-            p95_us: s.p95_us(),
-            p99_us: s.p99_us(),
+            p50_le_us: s.p50_us(),
+            p95_le_us: s.p95_us(),
+            p99_le_us: s.p99_us(),
             max_us: s.max_latency_us,
             mean_batch: s.mean_batch(),
+            scale_ups: s.scale_ups,
+            scale_downs: s.scale_downs,
+            shards: s.shards,
         });
     }
     rows.sort_by(|a, b| a.variant.cmp(&b.variant));
+    // Per-shard occupancy over the interval (shards of driven variants
+    // only), and the scale events recorded during the run: the lifetime
+    // `events_total` counter says how many of the retained events are
+    // ours, which stays correct even after the bounded log evicts old
+    // entries (a run with more than the retention cap of transitions
+    // reports the most recent ones).
+    let shard_rows: Vec<(String, u64, f64)> = snap
+        .shard_rows
+        .iter()
+        .filter(|(label, _)| {
+            rows.iter().any(|r| {
+                label
+                    .rsplit_once('#')
+                    .map(|(v, _)| v == r.variant)
+                    .unwrap_or(false)
+            })
+        })
+        .filter_map(|(label, sh)| {
+            let base = baseline
+                .shard_rows
+                .iter()
+                .find(|(l, _)| l == label)
+                .map(|(_, s)| s.clone())
+                .unwrap_or_default();
+            let d = sh.delta_since(&base);
+            // Shards idle for the whole run (e.g. retired before it
+            // started) carry no information — keep the JSON tidy.
+            (d.requests > 0).then(|| (label.clone(), d.requests, d.mean_batch()))
+        })
+        .collect();
+    let new_events = (snap.events_total - baseline.events_total) as usize;
+    let scale_events =
+        snap.events[snap.events.len().saturating_sub(new_events)..].to_vec();
     Ok(BenchSummary {
         mode: if cfg.open_loop { "open" } else { "closed" },
         wall,
+        intra_batch: coord.intra_batch(),
         rows,
+        shard_rows,
+        scale_events,
     })
 }
 
@@ -430,6 +526,7 @@ mod tests {
         let summary = BenchSummary {
             mode: "closed",
             wall: Duration::from_millis(1500),
+            intra_batch: 2,
             rows: vec![
                 VariantBench {
                     variant: "fp32".into(),
@@ -439,11 +536,14 @@ mod tests {
                     top1: 0.71,
                     throughput_rps: 66.7,
                     mean_latency_us: 1200.0,
-                    p50_us: 1000,
-                    p95_us: 3000,
-                    p99_us: 9000,
+                    p50_le_us: 1000,
+                    p95_le_us: 3000,
+                    p99_le_us: 9000,
                     max_us: 9500,
                     mean_batch: 3.5,
+                    scale_ups: 1,
+                    scale_downs: 0,
+                    shards: 2,
                 },
                 VariantBench {
                     variant: "p16".into(),
@@ -453,13 +553,26 @@ mod tests {
                     top1: 0.70,
                     throughput_rps: 60.0,
                     mean_latency_us: 1500.0,
-                    p50_us: 1000,
-                    p95_us: 3000,
-                    p99_us: 10000,
+                    p50_le_us: 1000,
+                    p95_le_us: 3000,
+                    p99_le_us: 10000,
                     max_us: 12000,
                     mean_batch: 4.0,
+                    scale_ups: 0,
+                    scale_downs: 0,
+                    shards: 1,
                 },
             ],
+            shard_rows: vec![
+                ("fp32#0".into(), 60, 3.4),
+                ("fp32#1".into(), 40, 3.6),
+                ("p16#0".into(), 90, 4.0),
+            ],
+            scale_events: vec![ScaleEvent {
+                variant: "fp32".into(),
+                from: 1,
+                to: 2,
+            }],
         };
         let json = summary.to_json();
         // Structure: balanced braces/brackets, one object per variant.
@@ -468,22 +581,33 @@ mod tests {
         for key in [
             "\"mode\"",
             "\"wall_s\"",
+            "\"intra_batch\"",
             "\"aggregate_rps\"",
             "\"variants\"",
             "\"throughput_rps\"",
-            "\"p50_us\"",
-            "\"p95_us\"",
-            "\"p99_us\"",
+            "\"p50_le_us\"",
+            "\"p95_le_us\"",
+            "\"p99_le_us\"",
             "\"rejected\"",
             "\"mean_batch\"",
+            "\"scale_events\"",
+            "\"scale_ups\"",
+            "\"scale_downs\"",
+            "\"shards\"",
+            "\"shard\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
+        // The old unlabelled keys are gone: `p50_us` must not resurface
+        // (it would mislabel bucket bounds as exact percentiles).
+        assert!(!json.contains("\"p50_us\"") && !json.contains("\"p99_us\""));
+        assert!(json.contains("\"from\": 1") && json.contains("\"to\": 2"));
         assert!((summary.aggregate_rps() - 126.7).abs() < 1e-9);
-        // Rows are comma-separated: exactly one separator for two rows.
-        assert_eq!(json.matches("},\n").count(), 1);
         let table = summary.render();
         assert!(table.contains("fp32") && table.contains("p16"));
+        assert!(table.contains("p99≤"), "render labels percentile bounds");
+        assert!(table.contains("intra-batch 2"));
+        assert!(table.contains("scale events: fp32 1->2"));
     }
 
     #[test]

@@ -1,12 +1,25 @@
 //! Serving metrics: per-variant request counts, latency distribution
-//! (with histogram-derived percentiles), queue rejections and batch-size
-//! occupancy — what `repro serve`/`serve-bench` report alongside the
-//! Top-1 numbers.
+//! (with histogram-derived percentiles), queue rejections, batch-size
+//! occupancy — now including **per-shard** occupancy — and autoscaler
+//! scale events. This is what `repro serve`/`serve-bench` report
+//! alongside the Top-1 numbers.
+//!
+//! ## Percentile semantics
+//!
+//! Latencies are recorded into the fixed histogram [`BUCKETS_US`], so a
+//! reported percentile is the **upper bound of the bucket holding that
+//! rank**, tightened to the observed max — an *at-most* figure, not an
+//! interpolated sample. All rendered tables and the serve-bench JSON
+//! label these columns `p50≤`/`p95≤`/`p99≤` (`p50_le_us` … in JSON) to
+//! make the bucket semantics explicit; see `docs/serving.md` for the
+//! bucket scheme. Sub-bucket sketches (t-digest/HDR) remain future work.
 
 use std::collections::HashMap;
 use std::time::Duration;
 
-/// Fixed latency histogram buckets (µs).
+/// Fixed latency histogram bucket upper bounds (µs). A latency `l` is
+/// counted in the first bucket with `l <= bound`; the last bucket is
+/// open-ended.
 pub const BUCKETS_US: [u64; 8] = [100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, u64::MAX];
 
 /// Per-variant counters.
@@ -26,13 +39,20 @@ pub struct VariantStats {
     pub occupancy_sum: u64,
     /// Latency histogram counts per [`BUCKETS_US`].
     pub hist: [u64; 8],
+    /// Autoscaler scale-up events applied to this variant.
+    pub scale_ups: u64,
+    /// Autoscaler scale-down events applied to this variant.
+    pub scale_downs: u64,
+    /// Live shard count (gauge — last value recorded, not a counter).
+    pub shards: u64,
 }
 
 impl VariantStats {
-    /// Histogram-derived latency quantile (µs) for `q` in `(0, 1]`: the
-    /// upper bound of the bucket holding the q-quantile rank, tightened
-    /// to the observed max (which is also what the open-ended last
-    /// bucket reports). Returns 0 before any request is served.
+    /// Histogram-derived latency quantile bound (µs) for `q` in `(0, 1]`:
+    /// the **upper bound** of the bucket holding the q-quantile rank,
+    /// tightened to the observed max (which is also what the open-ended
+    /// last bucket reports). An "at most" figure — render it as `p99≤`,
+    /// not `p99`. Returns 0 before any request is served.
     pub fn percentile_us(&self, q: f64) -> u64 {
         if self.requests == 0 {
             return 0;
@@ -48,17 +68,17 @@ impl VariantStats {
         self.max_latency_us
     }
 
-    /// Median latency (µs), histogram-derived.
+    /// Median latency bound (µs), histogram-derived (`p50≤`).
     pub fn p50_us(&self) -> u64 {
         self.percentile_us(0.50)
     }
 
-    /// 95th-percentile latency (µs), histogram-derived.
+    /// 95th-percentile latency bound (µs), histogram-derived (`p95≤`).
     pub fn p95_us(&self) -> u64 {
         self.percentile_us(0.95)
     }
 
-    /// 99th-percentile latency (µs), histogram-derived.
+    /// 99th-percentile latency bound (µs), histogram-derived (`p99≤`).
     pub fn p99_us(&self) -> u64 {
         self.percentile_us(0.99)
     }
@@ -88,8 +108,9 @@ impl VariantStats {
     /// to it: a rank landing in a closed bucket reports that bucket's
     /// bound as usual, but one landing in the open-ended last bucket
     /// reports the lifetime max — which may predate the interval.
-    /// Callers that need clean tail numbers should bench against a
-    /// fresh coordinator (as `repro serve-bench` does).
+    /// The `shards` gauge keeps the current (self) value. Callers that
+    /// need clean tail numbers should bench against a fresh coordinator
+    /// (as `repro serve-bench` does).
     pub fn delta_since(&self, base: &VariantStats) -> VariantStats {
         let mut hist = [0u64; 8];
         for (i, h) in hist.iter_mut().enumerate() {
@@ -103,14 +124,66 @@ impl VariantStats {
             total_exec_us: self.total_exec_us.saturating_sub(base.total_exec_us),
             occupancy_sum: self.occupancy_sum.saturating_sub(base.occupancy_sum),
             hist,
+            scale_ups: self.scale_ups.saturating_sub(base.scale_ups),
+            scale_downs: self.scale_downs.saturating_sub(base.scale_downs),
+            shards: self.shards,
         }
     }
+}
+
+/// Per-shard counters (keyed by the worker label `variant#k`).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    /// Requests served by this shard.
+    pub requests: u64,
+    /// Sum of batch occupancies this shard executed.
+    pub occupancy_sum: u64,
+}
+
+impl ShardStats {
+    /// Mean batch occupancy on this shard.
+    pub fn mean_batch(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.requests as f64
+        }
+    }
+
+    /// Interval view: counter-wise subtraction against a baseline.
+    pub fn delta_since(&self, base: &ShardStats) -> ShardStats {
+        ShardStats {
+            requests: self.requests.saturating_sub(base.requests),
+            occupancy_sum: self.occupancy_sum.saturating_sub(base.occupancy_sum),
+        }
+    }
+}
+
+/// Cap on the retained scale-event log (oldest evicted first). The
+/// per-variant scale counters stay exact regardless.
+pub const MAX_SCALE_EVENTS: usize = 256;
+
+/// One autoscaler transition, in application order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScaleEvent {
+    /// Variant whose shard set changed.
+    pub variant: String,
+    /// Shard count before the transition.
+    pub from: usize,
+    /// Shard count after the transition.
+    pub to: usize,
 }
 
 /// Mutable metrics registry.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     per_variant: HashMap<String, VariantStats>,
+    per_shard: HashMap<String, ShardStats>,
+    events: Vec<ScaleEvent>,
+    /// Lifetime count of scale events ever recorded — unlike `events`,
+    /// never truncated, so interval consumers can tell how many of the
+    /// retained events are theirs even after eviction.
+    events_total: u64,
 }
 
 impl Metrics {
@@ -132,9 +205,60 @@ impl Metrics {
         s.hist[idx] += 1;
     }
 
+    /// Record one executed batch of `batch_n` requests on the shard
+    /// labelled `label` (`variant#k`). Called once per batch — the
+    /// shard's mean occupancy stays consistent with the variant-level
+    /// one because each of the batch's `batch_n` requests contributes
+    /// an occupancy of `batch_n`. Allocates only on a shard's first
+    /// batch.
+    pub fn observe_shard(&mut self, label: &str, batch_n: u64) {
+        if let Some(sh) = self.per_shard.get_mut(label) {
+            sh.requests += batch_n;
+            sh.occupancy_sum += batch_n * batch_n;
+        } else {
+            self.per_shard.insert(
+                label.to_string(),
+                ShardStats {
+                    requests: batch_n,
+                    occupancy_sum: batch_n * batch_n,
+                },
+            );
+        }
+    }
+
     /// Record one admission rejection (all shard queues full).
     pub fn record_rejected(&mut self, variant: &str) {
         self.per_variant.entry(variant.to_string()).or_default().rejected += 1;
+    }
+
+    /// Set the live shard-count gauge for a variant (at start-up and
+    /// after every scale event).
+    pub fn record_shards(&mut self, variant: &str, shards: usize) {
+        self.per_variant.entry(variant.to_string()).or_default().shards = shards as u64;
+    }
+
+    /// Record one autoscaler transition `from -> to` shards. Updates the
+    /// scale counters, the shard gauge, and the event log. The log keeps
+    /// the most recent [`MAX_SCALE_EVENTS`] transitions (the per-variant
+    /// counters remain exact for the full lifetime), so a long-lived
+    /// flapping server cannot grow it without bound.
+    pub fn record_scale(&mut self, variant: &str, from: usize, to: usize) {
+        let s = self.per_variant.entry(variant.to_string()).or_default();
+        if to > from {
+            s.scale_ups += 1;
+        } else if to < from {
+            s.scale_downs += 1;
+        }
+        s.shards = to as u64;
+        if self.events.len() >= MAX_SCALE_EVENTS {
+            self.events.remove(0);
+        }
+        self.events.push(ScaleEvent {
+            variant: variant.to_string(),
+            from,
+            to,
+        });
+        self.events_total += 1;
     }
 
     /// Immutable snapshot for reporting.
@@ -145,7 +269,18 @@ impl Metrics {
             .map(|(k, v)| (k.clone(), v.clone()))
             .collect();
         rows.sort_by(|a, b| a.0.cmp(&b.0));
-        Snapshot { rows }
+        let mut shard_rows: Vec<(String, ShardStats)> = self
+            .per_shard
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        shard_rows.sort_by(|a, b| a.0.cmp(&b.0));
+        Snapshot {
+            rows,
+            shard_rows,
+            events: self.events.clone(),
+            events_total: self.events_total,
+        }
     }
 }
 
@@ -154,17 +289,29 @@ impl Metrics {
 pub struct Snapshot {
     /// (variant, stats) sorted by name.
     pub rows: Vec<(String, VariantStats)>,
+    /// (shard label `variant#k`, stats) sorted by label — the per-shard
+    /// occupancy view.
+    pub shard_rows: Vec<(String, ShardStats)>,
+    /// Autoscaler transitions, in application order (the most recent
+    /// [`MAX_SCALE_EVENTS`]; older entries are evicted).
+    pub events: Vec<ScaleEvent>,
+    /// Lifetime scale-event count (never truncated). `events_total -
+    /// baseline.events_total` is how many of `events` belong to an
+    /// interval, robust to eviction.
+    pub events_total: u64,
 }
 
 impl Snapshot {
-    /// Render a compact table (latencies in ms).
+    /// Render a compact table (latencies in ms). Percentile columns are
+    /// histogram-bucket **upper bounds** and labelled `≤` accordingly;
+    /// when shards or scale events exist they get their own sections.
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "variant    reqs    rej     mean(ms)  p50(ms)   p99(ms)   max(ms)   mean_batch\n",
+            "variant    reqs    rej     mean(ms)  p50≤(ms)  p99≤(ms)  max(ms)   mean_batch  shards\n",
         );
         for (name, s) in &self.rows {
             out.push_str(&format!(
-                "{name:<10} {:<7} {:<7} {:<9.3} {:<9.3} {:<9.3} {:<9.3} {:.2}\n",
+                "{name:<10} {:<7} {:<7} {:<9.3} {:<9.3} {:<9.3} {:<9.3} {:<11.2} {}\n",
                 s.requests,
                 s.rejected,
                 s.mean_latency_us() / 1000.0,
@@ -172,7 +319,24 @@ impl Snapshot {
                 s.p99_us() as f64 / 1000.0,
                 s.max_latency_us as f64 / 1000.0,
                 s.mean_batch(),
+                s.shards,
             ));
+        }
+        if !self.shard_rows.is_empty() {
+            out.push_str("shard occupancy:\n");
+            for (label, sh) in &self.shard_rows {
+                out.push_str(&format!(
+                    "  {label:<12} reqs {:<7} mean_batch {:.2}\n",
+                    sh.requests,
+                    sh.mean_batch()
+                ));
+            }
+        }
+        if !self.events.is_empty() {
+            out.push_str("scale events:\n");
+            for e in &self.events {
+                out.push_str(&format!("  {} {} -> {} shards\n", e.variant, e.from, e.to));
+            }
         }
         out
     }
@@ -199,8 +363,82 @@ mod tests {
         assert_eq!(p16.mean_batch(), 6.0);
         let rendered = s.render();
         assert!(rendered.contains("p16"));
-        assert!(rendered.contains("p50"));
+        assert!(rendered.contains("p50≤"), "percentile columns are bounds");
         assert!(rendered.contains("rej"));
+    }
+
+    #[test]
+    fn per_shard_occupancy_is_tracked_per_worker() {
+        let mut m = Metrics::new();
+        // Shard p16#0 executes a 4-batch then a 2-batch; p16#1 one
+        // single-sample batch. observe_shard is per *batch*: each of a
+        // batch's n requests contributes occupancy n.
+        m.observe_shard("p16#0", 4);
+        m.observe_shard("p16#0", 2);
+        m.observe_shard("p16#1", 1);
+        let s = m.snapshot();
+        assert_eq!(s.shard_rows.len(), 2);
+        let s0 = &s.shard_rows.iter().find(|(l, _)| l == "p16#0").unwrap().1;
+        let s1 = &s.shard_rows.iter().find(|(l, _)| l == "p16#1").unwrap().1;
+        assert_eq!(s0.requests, 6);
+        assert_eq!(s0.occupancy_sum, 20); // 4·4 + 2·2
+        assert!((s0.mean_batch() - 20.0 / 6.0).abs() < 1e-12);
+        assert_eq!(s1.requests, 1);
+        assert_eq!(s1.mean_batch(), 1.0);
+        assert!(s.render().contains("p16#0"));
+        // Interval view subtracts baselines shard-wise.
+        let d = s0.delta_since(&ShardStats {
+            requests: 4,
+            occupancy_sum: 16,
+        });
+        assert_eq!(d.requests, 2);
+        assert_eq!(d.occupancy_sum, 4);
+    }
+
+    #[test]
+    fn scale_event_log_is_bounded() {
+        let mut m = Metrics::new();
+        for i in 0..(MAX_SCALE_EVENTS + 10) {
+            let (from, to) = if i % 2 == 0 { (1, 2) } else { (2, 1) };
+            m.record_scale("v", from, to);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.events.len(), MAX_SCALE_EVENTS, "log evicts oldest");
+        // The counters stay exact past the eviction horizon.
+        let v = &s.rows[0].1;
+        assert_eq!(v.scale_ups + v.scale_downs, (MAX_SCALE_EVENTS + 10) as u64);
+        assert_eq!(
+            s.events_total,
+            (MAX_SCALE_EVENTS + 10) as u64,
+            "lifetime count survives eviction"
+        );
+    }
+
+    #[test]
+    fn scale_events_update_counters_gauge_and_log() {
+        let mut m = Metrics::new();
+        m.record_shards("p8", 1);
+        assert_eq!(m.snapshot().rows[0].1.shards, 1);
+        m.record_scale("p8", 1, 2);
+        m.record_scale("p8", 2, 3);
+        m.record_scale("p8", 3, 2);
+        let s = m.snapshot();
+        let p8 = &s.rows[0].1;
+        assert_eq!(p8.scale_ups, 2);
+        assert_eq!(p8.scale_downs, 1);
+        assert_eq!(p8.shards, 2, "gauge tracks the latest transition");
+        assert_eq!(s.events.len(), 3);
+        assert_eq!(
+            s.events[0],
+            ScaleEvent {
+                variant: "p8".into(),
+                from: 1,
+                to: 2
+            }
+        );
+        let rendered = s.render();
+        assert!(rendered.contains("scale events:"));
+        assert!(rendered.contains("p8 1 -> 2 shards"));
     }
 
     #[test]
@@ -248,9 +486,11 @@ mod tests {
         m.observe("v", Duration::from_micros(200), Duration::from_micros(1), 2);
         m.observe("v", Duration::from_micros(200), Duration::from_micros(1), 2);
         m.record_rejected("v");
+        m.record_scale("v", 1, 2);
         let base = m.snapshot().rows[0].1.clone();
         m.observe("v", Duration::from_micros(2_000), Duration::from_micros(5), 4);
         m.record_rejected("v");
+        m.record_scale("v", 2, 3);
         let cur = &m.snapshot().rows[0].1;
         let d = cur.delta_since(&base);
         assert_eq!(d.requests, 1);
@@ -260,6 +500,8 @@ mod tests {
         assert_eq!(d.hist[1], 0, "pre-baseline bucket counts removed");
         assert_eq!(d.hist[3], 1);
         assert_eq!(d.p50_us(), 2_000, "percentiles reflect only the interval");
+        assert_eq!(d.scale_ups, 1, "only the in-interval scale event");
+        assert_eq!(d.shards, 3, "gauge keeps the current value");
         // Delta against an empty base is the identity.
         let id = cur.delta_since(&VariantStats::default());
         assert_eq!(id.requests, cur.requests);

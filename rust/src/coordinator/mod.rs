@@ -5,8 +5,8 @@
 //! dynamic batcher in front of per-variant [`InferBackend`]s. Requests
 //! name a variant ("fp32", "p8", "p16", "p32", "hybrid" — offline
 //! elasticity, §IV-A); the batcher coalesces them up to the backend's
-//! batch size or a deadline, pads the tail, executes, and fans results
-//! back out.
+//! batch size or a deadline (optionally adaptive — see [`Batcher`]),
+//! pads the tail, executes, and fans results back out.
 //!
 //! Two execution backends implement [`InferBackend`]
 //! ([`ServeConfig::backend`] selects one):
@@ -18,24 +18,41 @@
 //!   variant's posit format. No artifacts required: the full serving
 //!   stack runs from a clean checkout.
 //!
-//! Scaling: each variant is sharded across [`ServeConfig::shards`]
-//! worker threads, each owning its backend instance and a bounded
-//! request queue. The router spreads load round-robin or least-queued
-//! ([`ServeConfig::routing`]); when every shard queue of a variant is
-//! full, non-blocking submits are *rejected* and counted in
-//! [`Metrics`]. Worker init failures (e.g. PJRT unavailable) surface as
-//! an error from [`Coordinator::start`] instead of killing the thread
-//! silently.
+//! Scaling happens on three axes (see `docs/ARCHITECTURE.md` for the
+//! full picture):
+//!
+//! 1. **Shards** — each variant is sharded across worker threads, each
+//!    owning its backend instance and a bounded request queue. The
+//!    router spreads load round-robin or least-queued
+//!    ([`ServeConfig::routing`]); when every shard queue of a variant is
+//!    full, non-blocking submits are *rejected* and counted in
+//!    [`Metrics`].
+//! 2. **Intra-batch parallelism** — [`ServeConfig::intra_batch`] fans
+//!    the independent samples of one batch across a scoped [`Pool`]
+//!    inside the native backend, bit-identically to sequential
+//!    execution.
+//! 3. **Autoscaling** — when [`ServeConfig::autoscale`] is enabled, a
+//!    controller thread grows/shrinks each variant's live shard set
+//!    between configured bounds from the in-flight gauges
+//!    ([`autoscale`]); every transition is recorded as a scale event in
+//!    [`Metrics`].
+//!
+//! Worker init failures (e.g. PJRT unavailable) surface as an error from
+//! [`Coordinator::start`] instead of killing the thread silently.
 
+pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
+pub mod pool;
 
+pub use autoscale::{AutoscaleConfig, ScaleAction, ShardScaler};
 pub use backend::{InferBackend, PjrtBackend, PvuBackend, NATIVE_VARIANTS};
 pub use batcher::{Batcher, Request};
 pub use loadgen::{run_bench, BenchConfig, BenchSummary, VariantBench};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{Metrics, ScaleEvent, Snapshot};
+pub use pool::Pool;
 
 use crate::cnn;
 use crate::posit::{PositSpec, P16, P32, P8};
@@ -45,8 +62,9 @@ use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Which execution engine the workers run.
@@ -87,16 +105,33 @@ impl Routing {
 pub struct ServeConfig {
     /// Artifacts directory (PJRT backend only).
     pub artifacts: PathBuf,
-    /// Max time a request waits for its batch to fill.
+    /// Max time a request waits for its batch to fill. With
+    /// [`ServeConfig::adaptive_wait`] this is the *base* deadline the
+    /// batcher adapts from.
     pub max_wait: Duration,
     /// Bounded queue depth per shard (backpressure).
     pub queue_depth: usize,
-    /// Worker threads per variant.
+    /// Worker threads per variant at start-up. Clamped into the
+    /// autoscale `[min_shards, max_shards]` band when
+    /// [`ServeConfig::autoscale`] is enabled.
     pub shards: usize,
     /// Shard-selection policy.
     pub routing: Routing,
     /// Execution engine.
     pub backend: BackendChoice,
+    /// Intra-batch parallelism (`--intra-batch`): each native worker
+    /// fans the independent samples of a batch across up to this many
+    /// cores via a scoped [`Pool`]. 1 (the default) executes
+    /// sequentially; outputs are bit-identical either way. PJRT
+    /// executables have their own internal parallelism and ignore this.
+    pub intra_batch: usize,
+    /// Use the adaptive batcher deadline ([`Batcher::adaptive`]): the
+    /// fill deadline halves when batches fill to capacity (queue
+    /// pressure) and recovers toward `max_wait` when idle.
+    pub adaptive_wait: bool,
+    /// Shard autoscaler policy. Disabled unless
+    /// [`AutoscaleConfig::max_shards`] is non-zero.
+    pub autoscale: AutoscaleConfig,
 }
 
 impl Default for ServeConfig {
@@ -108,6 +143,9 @@ impl Default for ServeConfig {
             shards: 1,
             routing: Routing::RoundRobin,
             backend: BackendChoice::Pjrt,
+            intra_batch: 1,
+            adaptive_wait: false,
+            autoscale: AutoscaleConfig::default(),
         }
     }
 }
@@ -125,16 +163,33 @@ pub struct Reply {
 /// are not `Send`; only this closure crosses the thread boundary).
 type Factory = Arc<dyn Fn() -> Result<Box<dyn InferBackend>> + Send + Sync>;
 
+/// Init-verdict channel: `(worker label, Ok | error string)`.
+type InitTx = Sender<(String, std::result::Result<(), String>)>;
+
 /// One worker's request queue + in-flight gauge.
 struct Shard {
     tx: SyncSender<Request>,
     inflight: Arc<AtomicUsize>,
 }
 
-/// All shards of one variant.
+/// All live shards of one variant. The shard set is behind an `RwLock`
+/// so the autoscaler can grow/shrink it while the router keeps serving;
+/// `factory` lets scale-ups build new backends long after `start`.
 struct VariantRoute {
-    shards: Vec<Shard>,
+    shards: RwLock<Vec<Shard>>,
     cursor: AtomicUsize,
+    factory: Factory,
+    /// Monotonic shard-id source, so labels stay unique across
+    /// scale-down/scale-up cycles.
+    next_shard_id: AtomicUsize,
+}
+
+/// Worker-spawn parameters shared by start-time and scale-time spawns.
+#[derive(Clone)]
+struct ShardSpawn {
+    max_wait: Duration,
+    adaptive_wait: bool,
+    queue_depth: usize,
 }
 
 /// Everything a worker thread needs, bundled to cross `spawn`.
@@ -143,27 +198,208 @@ struct WorkerCtx {
     variant: String,
     factory: Factory,
     max_wait: Duration,
+    adaptive_wait: bool,
     metrics: Arc<Mutex<Metrics>>,
     inflight: Arc<AtomicUsize>,
-    init_tx: std::sync::mpsc::Sender<(String, std::result::Result<(), String>)>,
+    /// Init verdict channel: the shared one `Coordinator::start` awaits
+    /// in bulk, or a private one `spawn_shard` awaits synchronously for
+    /// runtime (autoscaler/manual) spawns.
+    init_tx: InitTx,
 }
 
-/// The running coordinator: router + sharded per-variant workers.
+/// The running coordinator: router + sharded per-variant workers +
+/// optional autoscale controller.
+///
+/// ```
+/// use posar::coordinator::{BackendChoice, Coordinator, ServeConfig};
+/// use posar::data::synth::{CLASSES, FEAT};
+///
+/// let cfg = ServeConfig {
+///     backend: BackendChoice::Pvu { batch: 2 }, // native: no artifacts
+///     intra_batch: 2,                           // fan samples across 2 cores
+///     ..ServeConfig::default()
+/// };
+/// let coord = Coordinator::start(&cfg, Some(&["p16"])).expect("start");
+/// let reply = coord.infer("p16", vec![0.25; FEAT]).expect("infer");
+/// assert_eq!(reply.probs.len(), CLASSES);
+/// coord.shutdown();
+/// ```
 pub struct Coordinator {
-    routes: HashMap<String, VariantRoute>,
+    routes: Arc<HashMap<String, VariantRoute>>,
     routing: Routing,
     metrics: Arc<Mutex<Metrics>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    spawn: ShardSpawn,
+    /// Intra-batch pool width the native workers were built with.
+    intra_batch: usize,
+    /// Dropping this stops the autoscale controller.
+    scaler_stop: Option<Sender<()>>,
+    scaler_handle: Option<JoinHandle<()>>,
     /// Manifest the workers were built from (synthesized for the
     /// native backend).
     pub manifest: Manifest,
 }
 
+/// Spawn one worker shard for `variant` and register it in the route.
+/// Returns the variant's live shard count *measured under the same
+/// write lock as the registration*, so concurrent scalers (controller +
+/// manual) each observe a real transition. `init_tx` is `Some` for
+/// start-time workers (whose verdicts `Coordinator::start` awaits in
+/// bulk). Runtime spawns pass `None` and are awaited *here*: the shard
+/// is only routed once its backend actually initialized, so a failed
+/// scale-up can never leave a dead shard receiving traffic.
+fn spawn_shard(
+    variant: &str,
+    route: &VariantRoute,
+    spawn: &ShardSpawn,
+    metrics: &Arc<Mutex<Metrics>>,
+    handles: &Mutex<Vec<JoinHandle<()>>>,
+    init_tx: Option<InitTx>,
+) -> Result<usize> {
+    let shard_id = route.next_shard_id.fetch_add(1, Ordering::Relaxed);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(spawn.queue_depth);
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let (worker_init_tx, own_rx) = match init_tx {
+        Some(shared) => (shared, None),
+        None => {
+            let (t, r) = std::sync::mpsc::channel();
+            (t, Some(r))
+        }
+    };
+    let ctx = WorkerCtx {
+        label: format!("{variant}#{shard_id}"),
+        variant: variant.to_string(),
+        factory: Arc::clone(&route.factory),
+        max_wait: spawn.max_wait,
+        adaptive_wait: spawn.adaptive_wait,
+        metrics: Arc::clone(metrics),
+        inflight: Arc::clone(&inflight),
+        init_tx: worker_init_tx,
+    };
+    let handle = std::thread::Builder::new()
+        .name(format!("posar-serve-{variant}-{shard_id}"))
+        .spawn(move || worker(ctx, rx))
+        .map_err(|e| anyhow!("spawn: {e}"))?;
+    if let Some(own_rx) = own_rx {
+        match own_rx.recv() {
+            Ok((_, Ok(()))) => {}
+            Ok((label, Err(e))) => {
+                let _ = handle.join();
+                return Err(anyhow!("shard {label} init failed: {e}"));
+            }
+            Err(_) => {
+                let _ = handle.join();
+                return Err(anyhow!(
+                    "shard {variant}#{shard_id} died before reporting init"
+                ));
+            }
+        }
+    }
+    let live = {
+        let mut shards = route.shards.write().unwrap();
+        shards.push(Shard { tx, inflight });
+        shards.len()
+    };
+    handles.lock().unwrap().push(handle);
+    Ok(live)
+}
+
+/// Join (and drop) worker handles whose threads have already exited —
+/// retired shards leave finished threads behind, and a long-lived
+/// flapping autoscaler must not accumulate them without bound.
+fn reap_finished(handles: &Mutex<Vec<JoinHandle<()>>>) {
+    let mut handles = handles.lock().unwrap();
+    let mut i = 0;
+    while i < handles.len() {
+        if handles[i].is_finished() {
+            let _ = handles.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// The autoscale controller loop: one [`ShardScaler`] per variant, fed
+/// from the in-flight gauges every `cfg.interval`; decisions are applied
+/// by spawning or retiring shards and recorded as scale events.
+fn controller(
+    cfg: AutoscaleConfig,
+    routes: Arc<HashMap<String, VariantRoute>>,
+    metrics: Arc<Mutex<Metrics>>,
+    handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    spawn: ShardSpawn,
+    stop: Receiver<()>,
+) {
+    let mut scalers: HashMap<&String, ShardScaler> = routes
+        .keys()
+        .map(|k| (k, ShardScaler::new(cfg.clone())))
+        .collect();
+    loop {
+        match stop.recv_timeout(cfg.interval) {
+            Err(RecvTimeoutError::Timeout) => {}
+            // Explicit stop or the coordinator dropped: either way, done.
+            Ok(()) | Err(RecvTimeoutError::Disconnected) => return,
+        }
+        for (name, route) in routes.iter() {
+            let (n, inflight) = {
+                let shards = route.shards.read().unwrap();
+                let load: usize = shards
+                    .iter()
+                    .map(|s| s.inflight.load(Ordering::Relaxed))
+                    .sum();
+                (shards.len(), load)
+            };
+            if n == 0 {
+                continue; // shutting down
+            }
+            match scalers.get_mut(name).expect("scaler per variant").observe(inflight, n) {
+                Some(ScaleAction::Up) => {
+                    // Transition counts come from spawn_shard's write
+                    // lock, not the stale gauge read above — concurrent
+                    // manual scaling cannot produce impossible events.
+                    match spawn_shard(name, route, &spawn, &metrics, &handles, None) {
+                        Ok(to) => metrics.lock().unwrap().record_scale(name, to - 1, to),
+                        // The decision is dropped but never silently: the
+                        // scaler re-arms after its sustain window.
+                        Err(e) => eprintln!("autoscaler: scale-up of {name} failed: {e}"),
+                    }
+                }
+                Some(ScaleAction::Down) => {
+                    let retired_from = {
+                        let mut shards = route.shards.write().unwrap();
+                        // Re-check the *configured* floor under the write
+                        // lock (never below 1 regardless): a concurrent
+                        // manual scale_down may have shrunk the set since
+                        // the gauge read that produced this decision.
+                        if shards.len() > cfg.min_shards.max(1) {
+                            let from = shards.len();
+                            shards.pop();
+                            Some(from)
+                        } else {
+                            None
+                        }
+                    };
+                    if let Some(from) = retired_from {
+                        // Dropping the Shard closed its queue: the worker
+                        // drains what it already accepted, then exits.
+                        metrics.lock().unwrap().record_scale(name, from, from - 1);
+                    }
+                    // Retired workers finish asynchronously; reclaim any
+                    // that have already exited.
+                    reap_finished(&handles);
+                }
+                None => {}
+            }
+        }
+    }
+}
+
 impl Coordinator {
     /// Start `cfg.shards` workers per manifest variant (optionally
-    /// filtered). Every worker's backend init is awaited: any failure
-    /// tears the coordinator down and is returned here, so callers
-    /// fail fast instead of discovering a dead variant at `infer` time.
+    /// filtered), plus the autoscale controller when enabled. Every
+    /// start-time worker's backend init is awaited: any failure tears
+    /// the coordinator down and is returned here, so callers fail fast
+    /// instead of discovering a dead variant at `infer` time.
     pub fn start(cfg: &ServeConfig, only: Option<&[&str]>) -> Result<Self> {
         let manifest = match &cfg.backend {
             BackendChoice::Pjrt => Manifest::load(&cfg.artifacts)?,
@@ -175,9 +411,25 @@ impl Coordinator {
             BackendChoice::Pjrt => None,
         };
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let shards_per_variant = cfg.shards.max(1);
+        let handles = Arc::new(Mutex::new(Vec::new()));
+        // With autoscaling on, the start-time count must already sit in
+        // the [min_shards, max_shards] band — the scaler only moves on
+        // load signals, so it would never repair an out-of-band start
+        // (e.g. floor 2 with --shards 1 on an idle variant).
+        let shards_per_variant = if cfg.autoscale.enabled() {
+            cfg.shards
+                .max(1)
+                .max(cfg.autoscale.min_shards.max(1))
+                .min(cfg.autoscale.max_shards)
+        } else {
+            cfg.shards.max(1)
+        };
+        let spawn = ShardSpawn {
+            max_wait: cfg.max_wait,
+            adaptive_wait: cfg.adaptive_wait,
+            queue_depth: cfg.queue_depth,
+        };
         let mut routes = HashMap::new();
-        let mut handles = Vec::new();
         let (init_tx, init_rx) =
             std::sync::mpsc::channel::<(String, std::result::Result<(), String>)>();
         let mut n_workers = 0usize;
@@ -201,40 +453,25 @@ impl Coordinator {
                     let params = Arc::clone(params.as_ref().expect("params loaded for PVU"));
                     let vname = name.clone();
                     let batch = *batch;
+                    let intra = cfg.intra_batch.max(1);
                     Arc::new(move || {
-                        let be = PvuBackend::new(&vname, batch, &params)?;
+                        let be = PvuBackend::new(&vname, batch, &params)?.with_intra(intra);
                         Ok(Box::new(be) as Box<dyn InferBackend>)
                     })
                 }
             };
-            let mut shards = Vec::with_capacity(shards_per_variant);
-            for shard_id in 0..shards_per_variant {
-                let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(cfg.queue_depth);
-                let inflight = Arc::new(AtomicUsize::new(0));
-                let ctx = WorkerCtx {
-                    label: format!("{name}#{shard_id}"),
-                    variant: name.clone(),
-                    factory: Arc::clone(&factory),
-                    max_wait: cfg.max_wait,
-                    metrics: Arc::clone(&metrics),
-                    inflight: Arc::clone(&inflight),
-                    init_tx: init_tx.clone(),
-                };
-                let handle = std::thread::Builder::new()
-                    .name(format!("posar-serve-{name}-{shard_id}"))
-                    .spawn(move || worker(ctx, rx))
-                    .map_err(|e| anyhow!("spawn: {e}"))?;
-                shards.push(Shard { tx, inflight });
-                handles.push(handle);
+            let route = VariantRoute {
+                shards: RwLock::new(Vec::with_capacity(shards_per_variant)),
+                cursor: AtomicUsize::new(0),
+                factory,
+                next_shard_id: AtomicUsize::new(0),
+            };
+            for _ in 0..shards_per_variant {
+                spawn_shard(&name, &route, &spawn, &metrics, &handles, Some(init_tx.clone()))?;
                 n_workers += 1;
             }
-            routes.insert(
-                name,
-                VariantRoute {
-                    shards,
-                    cursor: AtomicUsize::new(0),
-                },
-            );
+            metrics.lock().unwrap().record_shards(&name, shards_per_variant);
+            routes.insert(name, route);
         }
         drop(init_tx);
         anyhow::ensure!(!routes.is_empty(), "no variants started");
@@ -251,19 +488,49 @@ impl Coordinator {
             }
         }
         if !failures.is_empty() {
-            drop(routes); // close every queue: healthy workers exit
-            for h in handles.drain(..) {
+            for route in routes.values() {
+                route.shards.write().unwrap().clear(); // close every queue
+            }
+            drop(routes);
+            for h in handles.lock().unwrap().drain(..) {
                 let _ = h.join();
             }
             return Err(anyhow!("worker init failed: {}", failures.join("; ")));
+        }
+        let routes = Arc::new(routes);
+        let (mut scaler_stop, mut scaler_handle) = (None, None);
+        if cfg.autoscale.enabled() {
+            let (stop_tx, stop_rx) = std::sync::mpsc::channel::<()>();
+            let asc = cfg.autoscale.clone();
+            let routes2 = Arc::clone(&routes);
+            let metrics2 = Arc::clone(&metrics);
+            let handles2 = Arc::clone(&handles);
+            let spawn2 = spawn.clone();
+            let h = std::thread::Builder::new()
+                .name("posar-autoscale".into())
+                .spawn(move || controller(asc, routes2, metrics2, handles2, spawn2, stop_rx))
+                .map_err(|e| anyhow!("spawn autoscaler: {e}"))?;
+            scaler_stop = Some(stop_tx);
+            scaler_handle = Some(h);
         }
         Ok(Coordinator {
             routes,
             routing: cfg.routing,
             metrics,
             handles,
+            spawn,
+            intra_batch: cfg.intra_batch.max(1),
+            scaler_stop,
+            scaler_handle,
             manifest,
         })
+    }
+
+    /// Intra-batch pool width the native workers run with (1 =
+    /// sequential; PJRT workers ignore it). Reported in the serve-bench
+    /// summary so throughput stays attributable to the knob.
+    pub fn intra_batch(&self) -> usize {
+        self.intra_batch
     }
 
     /// Variants currently served.
@@ -273,14 +540,53 @@ impl Coordinator {
         v
     }
 
+    /// Live shard count of a variant (0 for unknown variants).
+    pub fn shard_count(&self, variant: &str) -> usize {
+        self.routes
+            .get(variant)
+            .map(|r| r.shards.read().unwrap().len())
+            .unwrap_or(0)
+    }
+
+    /// Manually add one shard to a variant (the autoscaler's scale-up
+    /// actuation, exposed for operators/tests). Returns the new count,
+    /// measured under the registration lock.
+    pub fn scale_up(&self, variant: &str) -> Result<usize> {
+        let route = self
+            .routes
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant {variant:?}"))?;
+        let to = spawn_shard(variant, route, &self.spawn, &self.metrics, &self.handles, None)?;
+        self.metrics.lock().unwrap().record_scale(variant, to - 1, to);
+        Ok(to)
+    }
+
+    /// Manually retire one shard of a variant (never the last one). The
+    /// retired worker drains its queue and exits. Returns the new count.
+    pub fn scale_down(&self, variant: &str) -> Result<usize> {
+        let route = self
+            .routes
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant {variant:?}"))?;
+        let from = {
+            let mut shards = route.shards.write().unwrap();
+            anyhow::ensure!(shards.len() > 1, "cannot retire the last shard of {variant:?}");
+            let from = shards.len();
+            shards.pop();
+            from
+        };
+        self.metrics.lock().unwrap().record_scale(variant, from, from - 1);
+        reap_finished(&self.handles);
+        Ok(from - 1)
+    }
+
     /// Shard order to try for one submit: the preferred shard first
     /// (rotating cursor or lightest in-flight load), then the rest.
-    fn preferred_shard(&self, route: &VariantRoute) -> usize {
-        let n = route.shards.len();
+    fn preferred_shard(&self, shards: &[Shard], cursor: &AtomicUsize) -> usize {
+        let n = shards.len();
         match self.routing {
-            Routing::RoundRobin => route.cursor.fetch_add(1, Ordering::Relaxed) % n,
-            Routing::LeastQueued => route
-                .shards
+            Routing::RoundRobin => cursor.fetch_add(1, Ordering::Relaxed) % n,
+            Routing::LeastQueued => shards
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, s)| s.inflight.load(Ordering::Relaxed))
@@ -298,22 +604,35 @@ impl Coordinator {
         let route = self.routes.get(variant).ok_or_else(|| {
             anyhow!("unknown variant {variant:?} (have {:?})", self.variants())
         })?;
-        let n = route.shards.len();
-        let first = self.preferred_shard(route);
+        // The read lock only covers shard *selection* (and the brief
+        // try_send scan below). A blocking send must not hold it: it can
+        // park for queue_depth × exec-time, which would stall the
+        // autoscaler's write lock — and, behind that pending writer,
+        // every other submit to the variant.
+        let shards = route.shards.read().unwrap();
+        let n = shards.len();
+        anyhow::ensure!(n > 0, "variant {variant:?} has no live shards");
+        let first = self.preferred_shard(&shards, &route.cursor);
         if block {
-            let shard = &route.shards[first];
-            shard.inflight.fetch_add(1, Ordering::Relaxed);
-            match shard.tx.send(req) {
+            // Clone the queue handle and gauge, then release the lock
+            // before parking. The clone also makes a concurrent
+            // scale-down safe: a retiring shard's queue stays open until
+            // this sender drops, so the request is still served.
+            let tx = shards[first].tx.clone();
+            let inflight = Arc::clone(&shards[first].inflight);
+            drop(shards);
+            inflight.fetch_add(1, Ordering::Relaxed);
+            match tx.send(req) {
                 Ok(()) => Ok(true),
                 Err(_) => {
-                    shard.inflight.fetch_sub(1, Ordering::Relaxed);
+                    inflight.fetch_sub(1, Ordering::Relaxed);
                     Err(anyhow!("worker {variant} stopped"))
                 }
             }
         } else {
             let mut req = req;
             for k in 0..n {
-                let shard = &route.shards[(first + k) % n];
+                let shard = &shards[(first + k) % n];
                 shard.inflight.fetch_add(1, Ordering::Relaxed);
                 match shard.tx.try_send(req) {
                     Ok(()) => return Ok(true),
@@ -327,6 +646,7 @@ impl Coordinator {
                     }
                 }
             }
+            drop(shards);
             self.metrics.lock().unwrap().record_rejected(variant);
             Ok(false)
         }
@@ -376,12 +696,33 @@ impl Coordinator {
         self.metrics.lock().unwrap().snapshot()
     }
 
-    /// Stop all workers and join.
-    pub fn shutdown(mut self) {
-        self.routes.clear(); // closing the channels stops the workers
-        for h in self.handles.drain(..) {
+    /// Stop the controller and all workers, idempotently. Order matters:
+    /// the controller is joined *before* the queues close, so it cannot
+    /// spawn a shard into a coordinator that is tearing down.
+    fn stop(&mut self) {
+        drop(self.scaler_stop.take());
+        if let Some(h) = self.scaler_handle.take() {
             let _ = h.join();
         }
+        for route in self.routes.values() {
+            route.shards.write().unwrap().clear(); // closing the queues stops the workers
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop all workers (and the autoscale controller) and join.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // `shutdown` already ran `stop` for the common path; this covers
+        // coordinators dropped on error paths (and is idempotent).
+        self.stop();
     }
 }
 
@@ -422,21 +763,24 @@ pub(crate) fn argmax(row: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
-/// Worker loop: build the backend (reporting the verdict to `start`),
-/// then drain-batch-encode-execute-reply until the queue closes.
+/// Worker loop: build the backend (reporting the verdict to `start` for
+/// start-time workers), then drain-batch-encode-execute-reply until the
+/// queue closes — which happens at shutdown *or* when the autoscaler
+/// retires this shard.
 fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
     let WorkerCtx {
         label,
         variant,
         factory,
         max_wait,
+        adaptive_wait,
         metrics,
         inflight,
         init_tx,
     } = ctx;
     let mut be = match factory() {
         Ok(be) => {
-            let _ = init_tx.send((label, Ok(())));
+            let _ = init_tx.send((label.clone(), Ok(())));
             be
         }
         Err(e) => {
@@ -444,14 +788,18 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
             return;
         }
     };
-    // Drop our init sender immediately: `start` uses channel closure to
-    // detect workers that died without reporting.
+    // Drop the init sender: `start` uses channel closure to detect
+    // workers that died without reporting.
     drop(init_tx);
     let batch_size = be.batch();
     let feat = be.feat();
     let classes = be.classes();
     let input_spec = variant_input_spec(&variant);
-    let mut batcher = Batcher::new(batch_size, max_wait);
+    let mut batcher = if adaptive_wait {
+        Batcher::adaptive(batch_size, max_wait)
+    } else {
+        Batcher::new(batch_size, max_wait)
+    };
     let mut x = vec![0f32; batch_size * feat];
     loop {
         let Some(batch) = batcher.next_batch(&rx) else {
@@ -507,6 +855,10 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
                     for req in &batch {
                         m.observe(&variant, req.enqueued.elapsed(), dt, n as u64);
                     }
+                    // One shard-occupancy update per batch, reusing the
+                    // worker's label — no per-request allocation inside
+                    // the global metrics lock.
+                    m.observe_shard(&label, n as u64);
                 }
                 for (i, req) in batch.into_iter().enumerate() {
                     let row = probs[i * classes..(i + 1) * classes].to_vec();

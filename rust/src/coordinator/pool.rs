@@ -1,0 +1,151 @@
+//! A small dependency-free scoped worker pool for intra-batch
+//! parallelism.
+//!
+//! [`Pool`] is the fork–join primitive behind
+//! [`crate::coordinator::PvuBackend`]'s `--intra-batch` mode: the samples
+//! of a serving batch are independent, so a worker thread can fan them
+//! across cores and multiply native throughput without touching the
+//! router (ROADMAP: "parallelize *within* a batch"). The offline build
+//! has no rayon/crossbeam, so this is built entirely on
+//! [`std::thread::scope`]: [`Pool::map_chunks`] statically deals
+//! disjoint `&mut` output chunks round-robin over the workers — task `i`
+//! writes chunk `i`, which makes the output *placement* (and therefore
+//! the result bytes) independent of thread interleaving. That is the
+//! property the serving stack's bit-exactness guarantee rests on.
+//!
+//! Threads are spawned per invocation and joined before it returns
+//! (scoped fork–join), so borrowed inputs need no `'static` bound and a
+//! `Pool` holds no OS resources between calls. Spawn cost is ~tens of
+//! microseconds per helper — noise next to the millisecond-scale posit
+//! CNN forwards it parallelizes; a batch that cheap should use
+//! `threads = 1` (everything then runs inline on the caller).
+
+/// A scoped fork–join worker pool of a fixed width.
+///
+/// Holds no threads while idle: each [`Pool::map_chunks`] call spawns up
+/// to `threads - 1` scoped helpers (the caller is the first worker) and
+/// joins them before returning. A width of 1 executes everything inline
+/// on the caller.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// Pool of `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        Pool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Worker width this pool fans out to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `out` into `chunk`-sized pieces and run `f(i, chunk_i)` for
+    /// each, distributing chunks round-robin over the workers (chunk `i`
+    /// goes to worker `i % workers`). Each chunk is visited exactly once
+    /// and mutably, with no locking — the chunk-to-task mapping is fixed
+    /// by index, so results are identical for every pool width.
+    ///
+    /// A trailing remainder chunk (when `out.len()` is not a multiple of
+    /// `chunk`) is passed through like any other, shorter.
+    pub fn map_chunks<T, F>(&self, out: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk > 0, "chunk size must be positive");
+        if out.is_empty() {
+            return;
+        }
+        let n_chunks = out.len().div_ceil(chunk);
+        let workers = self.threads.min(n_chunks);
+        if workers <= 1 {
+            for (i, c) in out.chunks_mut(chunk).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        // Deal the disjoint chunks round-robin up front; each worker owns
+        // its hand outright, so no synchronization is needed at all.
+        let mut hands: Vec<Vec<(usize, &mut [T])>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, c) in out.chunks_mut(chunk).enumerate() {
+            hands[i % workers].push((i, c));
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            let mut hands = hands.into_iter();
+            let mine = hands.next().expect("workers >= 1");
+            for hand in hands {
+                s.spawn(move || {
+                    for (i, c) in hand {
+                        f(i, c);
+                    }
+                });
+            }
+            for (i, c) in mine {
+                f(i, c);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_chunk_visited_exactly_once() {
+        for threads in [1, 2, 5] {
+            let pool = Pool::new(threads);
+            let mut hits = vec![0u32; 37];
+            pool.map_chunks(&mut hits, 1, |_, c| {
+                c[0] += 1;
+            });
+            assert!(
+                hits.iter().all(|&h| h == 1),
+                "threads={threads}: {hits:?}"
+            );
+        }
+        // Empty output: no tasks, no calls.
+        Pool::new(4).map_chunks(&mut [0u8; 0], 1, |_, _| panic!("no chunks, no calls"));
+    }
+
+    #[test]
+    fn width_clamps_to_one() {
+        let pool = Pool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let mut out = vec![0usize; 8];
+        pool.map_chunks(&mut out, 1, |i, c| c[0] = i);
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_chunks_output_is_width_independent() {
+        // The bit-exactness property in miniature: same bytes out for
+        // every pool width, remainder chunk included.
+        let reference: Vec<u64> = {
+            let mut out = vec![0u64; 11];
+            Pool::new(1).map_chunks(&mut out, 3, |i, c| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = (i * 100 + j) as u64;
+                }
+            });
+            out
+        };
+        assert_eq!(reference[..4], [0, 1, 2, 100]);
+        assert_eq!(*reference.last().unwrap(), 300 + 1); // chunk 3 has len 2
+        for threads in [2, 3, 8] {
+            let mut out = vec![0u64; 11];
+            Pool::new(threads).map_chunks(&mut out, 3, |i, c| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = (i * 100 + j) as u64;
+                }
+            });
+            assert_eq!(out, reference, "threads={threads}");
+        }
+    }
+}

@@ -31,10 +31,15 @@
 //! - [`runtime`] — PJRT loader/executor for AOT-compiled JAX artifacts
 //!   (plus the synthesized manifest of the native serving backend).
 //! - [`coordinator`] — the L3 serving stack: router with sharded
-//!   per-variant workers, dynamic batcher, pluggable inference
-//!   backends (native PVU — no artifacts needed — or PJRT), histogram
-//!   metrics with p50/p95/p99 + rejection counters, and the
-//!   closed/open-loop load generator behind `repro serve-bench`.
+//!   per-variant workers, dynamic batcher (optionally adaptive
+//!   deadline), a dependency-free scoped worker pool for intra-batch
+//!   parallelism ([`coordinator::Pool`]), a shard autoscaler driven by
+//!   the in-flight gauges ([`coordinator::autoscale`]), pluggable
+//!   inference backends (native PVU — no artifacts needed — or PJRT),
+//!   histogram metrics with `p50≤`/`p95≤`/`p99≤` bucket bounds +
+//!   rejection counters + scale events, and the closed/open-loop load
+//!   generator behind `repro serve-bench`. See `docs/ARCHITECTURE.md`
+//!   and `docs/serving.md`.
 //! - [`report`] — table/figure renderers that regenerate the paper's
 //!   evaluation section.
 

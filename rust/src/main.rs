@@ -6,7 +6,7 @@
 
 use posar::cnn;
 use posar::coordinator::{
-    run_bench, BackendChoice, BenchConfig, Coordinator, Routing, ServeConfig,
+    run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Routing, ServeConfig,
 };
 use posar::report;
 use std::time::{Duration, Instant};
@@ -36,18 +36,31 @@ paper reproduction:
 
 serving:
   serve [--backend pvu|pjrt] [--requests N] [--variants a,b,..]
-        [--shards S] [--routing rr|lq]
+        [--shards S] [--routing rr|lq] [--intra-batch P]
+        [--adaptive-wait] [--autoscale-max M] [--autoscale-min m]
+        [--scale-interval-ms I]
                          batched inference. Backend `pvu` (default) runs
                          the CNN natively on the Posit Vector Unit — no
                          artifacts needed; `pjrt` serves the AOT
-                         executables (needs `make artifacts`)
+                         executables (needs `make artifacts`).
+                         --intra-batch fans each batch's samples across
+                         P cores (bit-identical to sequential);
+                         --autoscale-max M lets a controller grow/shrink
+                         live shards per variant between m (default 1)
+                         and M from the in-flight gauges;
+                         --adaptive-wait shrinks the batcher deadline
+                         under queue pressure (see docs/serving.md)
   serve-bench [--smoke] [--backend pvu|pjrt] [--requests N]
               [--concurrency C] [--batch B] [--shards S]
               [--queue-depth D] [--routing rr|lq] [--variants a,b,..]
+              [--intra-batch P] [--adaptive-wait] [--autoscale-max M]
+              [--autoscale-min m] [--scale-interval-ms I]
               [--open --rate R --duration-ms MS] [--json PATH]
                          closed/open-loop load generator; prints a JSON
-                         summary (throughput, p50/p95/p99, rejections)
-                         to stdout and a table to stderr. `--smoke` is
+                         summary (throughput, p50≤/p95≤/p99≤ bucket
+                         bounds, rejections, scale events, per-shard
+                         occupancy — schema in docs/serving.md) to
+                         stdout and a table to stderr. `--smoke` is
                          the CI configuration: native backend, small
                          request count
 
@@ -157,7 +170,15 @@ fn main() {
 fn serve_config(args: &[String], default_batch: usize) -> anyhow::Result<ServeConfig> {
     let backend = flag(args, "--backend").unwrap_or_else(|| "pvu".to_string());
     let backend = match backend.as_str() {
-        "pjrt" => BackendChoice::Pjrt,
+        "pjrt" => {
+            // A flag that silently doesn't apply must error, not measure
+            // the wrong configuration (the strict_num policy).
+            anyhow::ensure!(
+                flag(args, "--batch").is_none(),
+                "--batch applies to the pvu backend only (PJRT batch is baked into the executable)"
+            );
+            BackendChoice::Pjrt
+        }
         "pvu" => BackendChoice::Pvu {
             batch: strict_num(args, "--batch", default_batch as u64)? as usize,
         },
@@ -168,11 +189,40 @@ fn serve_config(args: &[String], default_batch: usize) -> anyhow::Result<ServeCo
         Some(s) => Routing::parse(&s)
             .ok_or_else(|| anyhow::anyhow!("unknown routing {s:?} (expected rr or lq)"))?,
     };
+    // Autoscaling is off unless --autoscale-max is given (max 0 = off).
+    // Inconsistent bounds are errors, not silent no-ops (same policy as
+    // strict_num: a typo'd knob must not measure the wrong config).
+    let autoscale = AutoscaleConfig {
+        min_shards: strict_num(args, "--autoscale-min", 1)? as usize,
+        max_shards: strict_num(args, "--autoscale-max", 0)? as usize,
+        interval: Duration::from_millis(strict_num(args, "--scale-interval-ms", 25)?),
+        ..AutoscaleConfig::default()
+    };
+    if autoscale.max_shards == 0 {
+        anyhow::ensure!(
+            flag(args, "--autoscale-min").is_none(),
+            "--autoscale-min requires --autoscale-max (autoscaling is off without it)"
+        );
+    } else {
+        anyhow::ensure!(
+            (1..=autoscale.max_shards).contains(&autoscale.min_shards),
+            "--autoscale-min {} must be between 1 and --autoscale-max {}",
+            autoscale.min_shards,
+            autoscale.max_shards
+        );
+    }
+    anyhow::ensure!(
+        autoscale.interval >= Duration::from_millis(1),
+        "--scale-interval-ms must be at least 1 (0 would busy-spin the controller)"
+    );
     Ok(ServeConfig {
         backend,
         shards: strict_num(args, "--shards", 1)? as usize,
         queue_depth: strict_num(args, "--queue-depth", 256)? as usize,
         routing,
+        intra_batch: strict_num(args, "--intra-batch", 1)? as usize,
+        adaptive_wait: args.iter().any(|a| a == "--adaptive-wait"),
+        autoscale,
         ..ServeConfig::default()
     })
 }
@@ -216,6 +266,12 @@ fn serve(args: &[String], variants: Option<&str>) -> anyhow::Result<()> {
 fn serve_bench(args: &[String]) -> anyhow::Result<()> {
     let smoke = args.iter().any(|a| a == "--smoke");
     let open = args.iter().any(|a| a == "--open");
+    if !open {
+        anyhow::ensure!(
+            flag(args, "--rate").is_none() && flag(args, "--duration-ms").is_none(),
+            "--rate/--duration-ms apply to the open-loop generator (add --open)"
+        );
+    }
     let mut cfg = serve_config(args, if smoke { 4 } else { 8 })?;
     if smoke && !args.iter().any(|a| a == "--shards") {
         cfg.shards = 2; // exercise the sharded router in CI
@@ -244,10 +300,12 @@ fn serve_bench(args: &[String]) -> anyhow::Result<()> {
     let coord = Coordinator::start(&cfg, filter.as_deref())?;
     let (set, canonical) = cnn::weights::set_or_generate(requests.clamp(64, 256));
     eprintln!(
-        "serve-bench: {:?} shards={} routing={:?} variants={:?} ({})",
+        "serve-bench: {:?} shards={} intra-batch={} routing={:?} autoscale-max={} variants={:?} ({})",
         cfg.backend,
         cfg.shards.max(1),
+        cfg.intra_batch.max(1),
         cfg.routing,
+        cfg.autoscale.max_shards,
         coord.variants(),
         if canonical { "canonical test set" } else { "generated data" }
     );

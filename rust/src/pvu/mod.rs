@@ -45,6 +45,22 @@
 //! decode-once + quire (the LUTs cannot express a deferred rounding).
 //! All paths are enforced bit-identical to the scalar core by
 //! `rust/tests/pvu_exact.rs` and the `repro pvu` report.
+//!
+//! # Example
+//!
+//! ```
+//! use posar::posit::{self, P16};
+//! use posar::pvu;
+//!
+//! // Encode two slices into Posit(16,2), run PVU vector ops, decode.
+//! let a: Vec<u32> = [1.0, 2.5, -0.75].iter().map(|&v| posit::from_f64(P16, v)).collect();
+//! let b: Vec<u32> = [0.5, 0.25, 0.75].iter().map(|&v| posit::from_f64(P16, v)).collect();
+//! let sum = pvu::vadd(P16, &a, &b);
+//! assert_eq!(posit::to_f64(P16, sum[0]), 1.5);
+//! // The quire-fused dot rounds once: 1·0.5 + 2.5·0.25 − 0.75·0.75.
+//! let d = pvu::dot(P16, &a, &b);
+//! assert_eq!(posit::to_f64(P16, d), 0.5625);
+//! ```
 
 pub mod cost;
 pub mod gemv;

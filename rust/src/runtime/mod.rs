@@ -202,8 +202,8 @@ impl Executable {
     }
 
     /// Classify a batch: argmax per sample (the shared
-    /// [`crate::coordinator::argmax`], so PJRT and native serving
-    /// resolve ties identically).
+    /// `crate::coordinator::argmax` — a crate-private helper — so PJRT
+    /// and native serving resolve ties identically).
     pub fn classify(&self, x: &[f32]) -> Result<Vec<usize>> {
         let probs = self.run(x)?;
         Ok(probs

@@ -4,11 +4,13 @@
 
 use posar::cnn;
 use posar::coordinator::{
-    run_bench, BackendChoice, BenchConfig, Coordinator, Request, Routing, ServeConfig,
+    run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Request, Routing,
+    ServeConfig,
 };
 use posar::data::synth;
 use posar::posit::{P16, P8};
 use posar::sim::{Machine, Posar};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::time::{Duration, Instant};
 
@@ -58,6 +60,155 @@ fn native_backend_bit_exact_with_scalar_cnn_path() {
             assert_eq!(reply.class, want_class, "{vname} sample {i}");
         }
     }
+    coord.shutdown();
+}
+
+/// The `--intra-batch` acceptance bar: a coordinator fanning each batch
+/// across a worker pool serves **bit-identical** replies to a sequential
+/// one, for every native engine kind (scalar FP32, LUT P8, decode-once
+/// P16, hybrid) — parallelism must be pure mechanism, never policy.
+#[test]
+fn intra_batch_parallel_serving_is_bit_exact_with_sequential() {
+    let seq = Coordinator::start(&native_cfg(4, 1), Some(&["fp32", "p8", "p16", "hybrid"]))
+        .expect("sequential");
+    let par_cfg = ServeConfig {
+        intra_batch: 3,
+        ..native_cfg(4, 1)
+    };
+    let par = Coordinator::start(&par_cfg, Some(&["fp32", "p8", "p16", "hybrid"]))
+        .expect("parallel");
+    let set = synth::generate(0x9A11, 6);
+    for vname in ["fp32", "p8", "p16", "hybrid"] {
+        // Sequential reference replies, one request at a time.
+        let want: Vec<_> = (0..set.len())
+            .map(|i| seq.infer(vname, set.sample(i).to_vec()).expect("seq infer"))
+            .collect();
+        // Fire all samples at the parallel coordinator *concurrently*,
+        // so the batcher actually coalesces multi-sample batches for
+        // the pool to fan out (sequential submits would batch singly).
+        let mut got: Vec<Option<posar::coordinator::Reply>> = vec![None; set.len()];
+        std::thread::scope(|s| {
+            for (i, slot) in got.iter_mut().enumerate() {
+                let par = &par;
+                let set = &set;
+                s.spawn(move || {
+                    *slot = Some(par.infer(vname, set.sample(i).to_vec()).expect("par infer"));
+                });
+            }
+        });
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            let b = b.as_ref().expect("reply collected");
+            assert_eq!(a.class, b.class, "{vname} sample {i}");
+            assert_eq!(a.probs.len(), b.probs.len(), "{vname} sample {i}");
+            for (c, (&x, &y)) in a.probs.iter().zip(&b.probs).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{vname} sample {i} class {c}: {x} != {y}"
+                );
+            }
+        }
+    }
+    seq.shutdown();
+    par.shutdown();
+}
+
+/// The autoscaler end-to-end: sustained in-flight pressure grows a
+/// variant's live shard set to `max_shards`, idleness shrinks it back to
+/// `min_shards` (after the cooldown), and both transitions land in the
+/// metrics as scale events. Also exercises the adaptive batcher deadline
+/// in a live worker.
+#[test]
+fn autoscaler_scales_live_shards_within_bounds() {
+    let cfg = ServeConfig {
+        backend: BackendChoice::Pvu { batch: 1 },
+        shards: 1,
+        max_wait: Duration::from_millis(1),
+        adaptive_wait: true,
+        autoscale: AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 2,
+            high_inflight: 1,
+            low_inflight: 1,
+            sustain: 1,
+            cooldown: 2,
+            interval: Duration::from_millis(5),
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(&cfg, Some(&["p8"])).expect("start");
+    assert_eq!(coord.shard_count("p8"), 1);
+    let set = synth::generate(0xA5CA, 2);
+    // Phase 1 — pressure: blocking clients keep the in-flight gauge
+    // above the high watermark until the controller scales up.
+    let stop = AtomicBool::new(false);
+    let mut reached_max = false;
+    std::thread::scope(|s| {
+        for c in 0..6 {
+            let coord = &coord;
+            let set = &set;
+            let stop = &stop;
+            s.spawn(move || {
+                let mut i = c;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = coord.infer("p8", set.sample(i % set.len()).to_vec());
+                    i += 1;
+                }
+            });
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while Instant::now() < deadline {
+            if coord.shard_count("p8") >= 2 {
+                reached_max = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert!(reached_max, "sustained in-flight must scale up to max_shards");
+    assert!(
+        coord.shard_count("p8") <= 2,
+        "shard count must never exceed max_shards"
+    );
+    // Phase 2 — idle: the controller retires the extra shard once the
+    // cooldown expires, and never drops below min_shards.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while coord.shard_count("p8") > 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.shard_count("p8"), 1, "idle variant must return to min_shards");
+    // Retired shard or not, the variant keeps serving.
+    let reply = coord.infer("p8", set.sample(0).to_vec()).expect("serve after scale-down");
+    assert_eq!(reply.probs.len(), 10);
+    let snap = coord.metrics();
+    let p8 = &snap.rows.iter().find(|(n, _)| n == "p8").expect("row").1;
+    assert!(p8.scale_ups >= 1, "scale-up event must be counted");
+    assert!(p8.scale_downs >= 1, "scale-down event must be counted");
+    assert_eq!(p8.shards, 1, "shard gauge tracks the live count");
+    assert!(snap.events.len() >= 2, "events log records every transition");
+    let rendered = snap.render();
+    assert!(rendered.contains("scale events:"), "{rendered}");
+    coord.shutdown();
+}
+
+/// Manual scale actuation: `scale_up`/`scale_down` move the live shard
+/// set (never retiring the last shard) and label new shards uniquely.
+#[test]
+fn manual_scale_up_down_respects_floor() {
+    let coord = Coordinator::start(&native_cfg(2, 1), Some(&["fp32"])).expect("start");
+    assert_eq!(coord.shard_count("fp32"), 1);
+    assert_eq!(coord.scale_up("fp32").expect("up"), 2);
+    assert_eq!(coord.shard_count("fp32"), 2);
+    assert_eq!(coord.scale_down("fp32").expect("down"), 1);
+    assert!(
+        coord.scale_down("fp32").is_err(),
+        "the last shard must never be retired"
+    );
+    assert!(coord.scale_up("nope").is_err(), "unknown variant errors");
+    let set = synth::generate(0x0DD5, 1);
+    let reply = coord.infer("fp32", set.sample(0).to_vec()).expect("still serving");
+    assert_eq!(reply.probs.len(), 10);
     coord.shutdown();
 }
 
@@ -223,12 +374,25 @@ fn serve_bench_closed_loop_smoke() {
         assert_eq!(row.completed, 9, "{}", row.variant);
         assert_eq!(row.errors, 0, "{}", row.variant);
         assert!(row.throughput_rps > 0.0);
-        assert!(row.p50_us <= row.p99_us);
+        assert!(row.p50_le_us <= row.p99_le_us);
         assert!((0.0..=1.0).contains(&row.top1));
+        assert_eq!(row.shards, 2, "shard gauge rides along in the summary");
     }
     assert!(summary.aggregate_rps() > 0.0);
+    // Per-shard occupancy covers the driven variants (2 shards each).
+    assert_eq!(summary.shard_rows.len(), 4, "{:?}", summary.shard_rows);
+    assert!(summary.shard_rows.iter().any(|(l, n, _)| l == "fp32#0" && *n > 0));
+    assert!(summary.scale_events.is_empty(), "no autoscaler configured");
     let json = summary.to_json();
-    for key in ["\"p50_us\"", "\"p95_us\"", "\"p99_us\"", "\"throughput_rps\""] {
+    for key in [
+        "\"p50_le_us\"",
+        "\"p95_le_us\"",
+        "\"p99_le_us\"",
+        "\"throughput_rps\"",
+        "\"scale_events\"",
+        "\"shard\"",
+        "\"intra_batch\"",
+    ] {
         assert!(json.contains(key), "missing {key}");
     }
     coord.shutdown();
