@@ -14,7 +14,9 @@
 //!   `Coordinator::start`), which ticks every [`AutoscaleConfig::interval`],
 //!   reads the gauges, applies the decisions by spawning or retiring
 //!   worker shards, and records each transition as a scale event in the
-//!   metrics registry.
+//!   metrics registry — annotated with the variant's sketch-derived p99
+//!   latency at decision time, so a transition can be read back against
+//!   the tail it answered to (`docs/OBSERVABILITY.md`).
 //!
 //! The policy is the classic asymmetric one: scale **up fast** (a
 //! sustained high per-shard backlog for [`AutoscaleConfig::sustain`]

@@ -41,7 +41,9 @@ pub trait InferBackend {
     fn classes(&self) -> usize;
     /// Execute one padded batch. `x` holds `batch()·feat()` values with
     /// rows `n..batch()` zero-padded; returns at least `n·classes()`
-    /// probabilities (row-major — padding rows may be omitted).
+    /// probabilities (row-major — padding rows may be omitted). The wall
+    /// time of this call is what the coordinator's metrics record as the
+    /// `exec` stage (per variant and per `variant#k` shard).
     fn run(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>>;
 }
 

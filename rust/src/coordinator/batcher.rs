@@ -17,14 +17,37 @@ use anyhow::Result;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
-/// One enqueued request.
+/// One enqueued request, carrying its trace context: a coordinator-wide
+/// id plus the clock readings the per-stage timers are cut from.
 pub struct Request {
     /// Flat feature vector (`feat` values).
     pub features: Vec<f32>,
     /// Where to send the result.
     pub reply: SyncSender<Result<Reply>>,
-    /// Enqueue timestamp (for latency accounting).
+    /// Coordinator-wide request id (assigned at admission; used for
+    /// deterministic trace sampling). 0 until `Coordinator::submit`
+    /// stamps it.
+    pub id: u64,
+    /// Enqueue timestamp (start of the `queue` stage).
     pub enqueued: Instant,
+    /// When the batcher pulled this request off the shard queue (end of
+    /// `queue`, start of `batch`). `None` until [`Batcher::next_batch`]
+    /// stamps it.
+    pub dequeued: Option<Instant>,
+}
+
+impl Request {
+    /// New request enqueued *now*, with no id assigned yet (the
+    /// coordinator stamps one at admission).
+    pub fn new(features: Vec<f32>, reply: SyncSender<Result<Reply>>) -> Self {
+        Request {
+            features,
+            reply,
+            id: 0,
+            enqueued: Instant::now(),
+            dequeued: None,
+        }
+    }
 }
 
 /// Deadline-bounded batch assembler, with an optionally adaptive
@@ -94,7 +117,8 @@ impl Batcher {
     /// full or the (possibly adaptive) deadline has elapsed. Returns
     /// `None` when the channel is closed and empty (shutdown).
     pub fn next_batch(&mut self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
-        let first = rx.recv().ok()?;
+        let mut first = rx.recv().ok()?;
+        first.dequeued = Some(Instant::now());
         let deadline = Instant::now() + self.wait;
         let mut batch = vec![first];
         while batch.len() < self.batch {
@@ -103,7 +127,10 @@ impl Batcher {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(req) => batch.push(req),
+                Ok(mut req) => {
+                    req.dequeued = Some(Instant::now());
+                    batch.push(req);
+                }
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
@@ -120,14 +147,25 @@ mod tests {
 
     fn req(v: f32) -> (Request, Receiver<Result<Reply>>) {
         let (tx, rx) = sync_channel(1);
-        (
-            Request {
-                features: vec![v],
-                reply: tx,
-                enqueued: Instant::now(),
-            },
-            rx,
-        )
+        (Request::new(vec![v], tx), rx)
+    }
+
+    #[test]
+    fn next_batch_stamps_the_dequeue_instant() {
+        let (tx, rx) = sync_channel(16);
+        let mut b = Batcher::new(2, Duration::from_millis(20));
+        let mut keep = Vec::new();
+        for i in 0..2 {
+            let (r, k) = req(i as f32);
+            assert!(r.dequeued.is_none(), "unstamped until the batcher pulls it");
+            tx.send(r).unwrap();
+            keep.push(k);
+        }
+        let batch = b.next_batch(&rx).unwrap();
+        for r in &batch {
+            let dq = r.dequeued.expect("every batched request is stamped");
+            assert!(dq >= r.enqueued, "dequeue cannot precede enqueue");
+        }
     }
 
     #[test]

@@ -1,0 +1,549 @@
+//! `repro bench-compare`: diff two serve-bench JSON snapshots and flag
+//! regressions beyond a threshold — the in-repo perf-trajectory check.
+//!
+//! The repo commits a baseline (`BENCH_serve.json`); CI re-runs the
+//! smoke bench and compares report-only, so the numbers travel with the
+//! history instead of living only in ephemeral CI artifacts. The
+//! comparison is schema-tolerant: unknown keys are ignored, and the old
+//! file may still use the pre-sketch `p99_le_us` bound field (it is
+//! read as the p99 fallback), so baselines never have to be rewritten
+//! in lockstep with the emitter.
+//!
+//! Compared per variant (old → new):
+//!
+//! | metric           | direction     |
+//! |------------------|---------------|
+//! | `throughput_rps` | higher better |
+//! | `mean_latency_us`| lower better  |
+//! | `p99_us`         | lower better  |
+//! | `top1`           | higher better |
+//!
+//! A change is a **regression** when it moves in the bad direction by
+//! more than the threshold percentage. Variants present in the old
+//! snapshot but missing from the new one are regressions outright.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Minimal owned JSON value (the vendored-`anyhow` spirit: the build
+/// has no crates.io access, so the subset we need lives here).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any number (parsed as f64 — bench snapshots carry nothing that
+    /// needs more than 53 bits of integer precision).
+    Num(f64),
+    /// String (escapes decoded).
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object, in source order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object member lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn str_val(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Recursive-descent JSON parser over bytes.
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(anyhow!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek().map(|b| b as char)
+            ))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(anyhow!("invalid literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.obj(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(anyhow!(
+                "unexpected {:?} at byte {}",
+                other.map(|b| b as char),
+                self.i
+            )),
+        }
+    }
+
+    fn obj(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut members = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(members));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            let val = self.value()?;
+            members.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(members));
+                }
+                _ => return Err(anyhow!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(anyhow!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let c = self
+                .peek()
+                .ok_or_else(|| anyhow!("unterminated string at byte {}", self.i))?;
+            self.i += 1;
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| anyhow!("dangling escape at byte {}", self.i))?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)
+                                .context("invalid \\u escape")?;
+                            self.i += 4;
+                            // Surrogate pairs don't appear in bench
+                            // snapshots; map lone surrogates to U+FFFD.
+                            let ch = char::from_u32(code).unwrap_or('\u{fffd}');
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        other => return Err(anyhow!("bad escape {:?}", other as char)),
+                    }
+                }
+                c => out.push(c),
+            }
+        }
+        String::from_utf8(out).context("invalid utf-8 in string")
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])?;
+        let n: f64 = text
+            .parse()
+            .with_context(|| format!("invalid number {text:?}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+/// Parse a complete JSON document (trailing non-whitespace is an error).
+pub fn parse_json(text: &str) -> Result<Json> {
+    let mut p = P {
+        b: text.as_bytes(),
+        i: 0,
+    };
+    let v = p.value()?;
+    p.ws();
+    anyhow::ensure!(p.i == p.b.len(), "trailing data at byte {}", p.i);
+    Ok(v)
+}
+
+/// One compared metric for one variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delta {
+    /// Variant name.
+    pub variant: String,
+    /// Metric key (`throughput_rps`, `mean_latency_us`, `p99_us`, `top1`).
+    pub metric: &'static str,
+    /// Baseline value.
+    pub old: f64,
+    /// Candidate value.
+    pub new: f64,
+    /// Signed percent change, `(new - old) / old * 100`.
+    pub change_pct: f64,
+    /// Whether the change exceeds the threshold in the bad direction.
+    pub regression: bool,
+}
+
+/// Full comparison outcome.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    /// Regression threshold (percent, in the metric's bad direction).
+    pub threshold_pct: f64,
+    /// Per-variant metric deltas, in baseline variant order.
+    pub deltas: Vec<Delta>,
+    /// Variants in the baseline but not the candidate (regressions).
+    pub missing: Vec<String>,
+    /// Variants in the candidate but not the baseline (informational).
+    pub added: Vec<String>,
+}
+
+impl CompareReport {
+    /// Whether anything regressed (metric beyond threshold, or a
+    /// variant disappeared).
+    pub fn has_regressions(&self) -> bool {
+        !self.missing.is_empty() || self.deltas.iter().any(|d| d.regression)
+    }
+
+    /// Human-readable table, regressions flagged.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "bench-compare (threshold ±{:.1}% in the bad direction)\n",
+            self.threshold_pct
+        );
+        out.push_str("variant    metric            old           new           change\n");
+        for d in &self.deltas {
+            out.push_str(&format!(
+                "{:<10} {:<17} {:<13.3} {:<13.3} {:>+8.2}%{}\n",
+                d.variant,
+                d.metric,
+                d.old,
+                d.new,
+                d.change_pct,
+                if d.regression { "  REGRESSION" } else { "" }
+            ));
+        }
+        for v in &self.missing {
+            out.push_str(&format!("{v:<10} missing from the new snapshot  REGRESSION\n"));
+        }
+        for v in &self.added {
+            out.push_str(&format!("{v:<10} new variant (no baseline)\n"));
+        }
+        out.push_str(if self.has_regressions() {
+            "result: REGRESSIONS FOUND\n"
+        } else {
+            "result: ok\n"
+        });
+        out
+    }
+}
+
+/// (metric key, higher-is-better, fallback keys tried in order when the
+/// primary key is absent — lets new binaries compare against old-schema
+/// baselines that only carried `p99_le_us` bounds).
+const METRICS: [(&str, bool, &[&str]); 4] = [
+    ("throughput_rps", true, &[]),
+    ("mean_latency_us", false, &[]),
+    ("p99_us", false, &["p99_le_us"]),
+    ("top1", true, &[]),
+];
+
+fn metric_value(variant: &Json, key: &str, fallbacks: &[&str]) -> Option<f64> {
+    variant
+        .get(key)
+        .or_else(|| fallbacks.iter().find_map(|k| variant.get(k)))
+        .and_then(Json::num)
+}
+
+fn variants_of(doc: &Json) -> Vec<(String, &Json)> {
+    doc.get("variants")
+        .and_then(Json::arr)
+        .map(|rows| {
+            rows.iter()
+                .filter_map(|row| {
+                    row.get("variant")
+                        .and_then(Json::str_val)
+                        .map(|name| (name.to_string(), row))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Compare two serve-bench JSON documents. `threshold_pct` is the
+/// allowed movement in each metric's bad direction before it counts as
+/// a regression.
+pub fn compare_json(old_text: &str, new_text: &str, threshold_pct: f64) -> Result<CompareReport> {
+    let old = parse_json(old_text).context("parsing old snapshot")?;
+    let new = parse_json(new_text).context("parsing new snapshot")?;
+    let old_vars = variants_of(&old);
+    let new_vars = variants_of(&new);
+    anyhow::ensure!(
+        !old_vars.is_empty(),
+        "old snapshot has no variants[] rows — not a serve-bench JSON?"
+    );
+    let mut deltas = Vec::new();
+    let mut missing = Vec::new();
+    for (name, old_row) in &old_vars {
+        let Some((_, new_row)) = new_vars.iter().find(|(n, _)| n == name) else {
+            missing.push(name.clone());
+            continue;
+        };
+        for (metric, higher_better, fallbacks) in METRICS {
+            let (Some(o), Some(n)) = (
+                metric_value(old_row, metric, fallbacks),
+                metric_value(new_row, metric, fallbacks),
+            ) else {
+                continue; // metric absent on either side: skip, stay schema-tolerant
+            };
+            if o == 0.0 {
+                continue; // no baseline signal to compare against
+            }
+            let change_pct = (n - o) / o * 100.0;
+            let bad = if higher_better { -change_pct } else { change_pct };
+            deltas.push(Delta {
+                variant: name.clone(),
+                metric,
+                old: o,
+                new: n,
+                change_pct,
+                regression: bad > threshold_pct,
+            });
+        }
+    }
+    let added = new_vars
+        .iter()
+        .filter(|(n, _)| !old_vars.iter().any(|(o, _)| o == n))
+        .map(|(n, _)| n.clone())
+        .collect();
+    Ok(CompareReport {
+        threshold_pct,
+        deltas,
+        missing,
+        added,
+    })
+}
+
+/// File-path front end for [`compare_json`].
+pub fn compare_files(old: &Path, new: &Path, threshold_pct: f64) -> Result<CompareReport> {
+    let old_text = std::fs::read_to_string(old)
+        .with_context(|| format!("reading {}", old.display()))?;
+    let new_text = std::fs::read_to_string(new)
+        .with_context(|| format!("reading {}", new.display()))?;
+    compare_json(&old_text, &new_text, threshold_pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot(p99: u64, rps: f64, top1: f64) -> String {
+        format!(
+            r#"{{"benchmark": "serve-bench", "variants": [
+                 {{"variant": "fp32", "p99_us": {p99}, "mean_latency_us": 500.0,
+                   "throughput_rps": {rps}, "top1": {top1}, "extra_key": [1, 2]}},
+                 {{"variant": "p16", "p99_us": 800, "mean_latency_us": 400.0,
+                   "throughput_rps": 120.0, "top1": 0.71}}
+               ]}}"#
+        )
+    }
+
+    #[test]
+    fn parser_round_trips_scalars_nesting_and_escapes() {
+        let v = parse_json(
+            r#"{"a": [1, -2.5, 1e3], "s": "q\"\\\nA", "t": true, "n": null, "o": {}}"#,
+        )
+        .unwrap();
+        let a = v.get("a").unwrap().arr().unwrap();
+        assert_eq!(a[0].num(), Some(1.0));
+        assert_eq!(a[1].num(), Some(-2.5));
+        assert_eq!(a[2].num(), Some(1000.0));
+        assert_eq!(v.get("s").unwrap().str_val(), Some("q\"\\\nA"));
+        assert_eq!(v.get("t"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("n"), Some(&Json::Null));
+        assert_eq!(v.get("o"), Some(&Json::Obj(vec![])));
+        assert!(parse_json("{\"k\": 1} trailing").is_err());
+        assert!(parse_json("{\"k\": }").is_err());
+        assert!(parse_json("").is_err());
+    }
+
+    #[test]
+    fn identical_snapshots_compare_clean() {
+        let s = snapshot(1000, 100.0, 0.70);
+        let r = compare_json(&s, &s, 10.0).unwrap();
+        assert!(!r.has_regressions());
+        assert_eq!(r.deltas.len(), 8, "4 metrics x 2 variants");
+        assert!(r.deltas.iter().all(|d| d.change_pct == 0.0));
+        assert!(r.render().contains("result: ok"));
+    }
+
+    #[test]
+    fn injected_regression_is_flagged() {
+        // Acceptance criterion: a tampered snapshot (p99 quadrupled,
+        // throughput halved) must be flagged beyond a 20% threshold.
+        let old = snapshot(1000, 100.0, 0.70);
+        let new = snapshot(4000, 50.0, 0.70);
+        let r = compare_json(&old, &new, 20.0).unwrap();
+        assert!(r.has_regressions());
+        let p99 = r
+            .deltas
+            .iter()
+            .find(|d| d.variant == "fp32" && d.metric == "p99_us")
+            .unwrap();
+        assert!(p99.regression);
+        assert!((p99.change_pct - 300.0).abs() < 1e-9);
+        let rps = r
+            .deltas
+            .iter()
+            .find(|d| d.variant == "fp32" && d.metric == "throughput_rps")
+            .unwrap();
+        assert!(rps.regression, "halved throughput is a regression");
+        // p16 was untouched: no false positives there.
+        assert!(r
+            .deltas
+            .iter()
+            .filter(|d| d.variant == "p16")
+            .all(|d| !d.regression));
+        assert!(r.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn improvements_and_within_threshold_noise_pass() {
+        let old = snapshot(1000, 100.0, 0.70);
+        // p99 improved 40%, throughput up 10%, top1 wiggled within noise.
+        let new = snapshot(600, 110.0, 0.699);
+        let r = compare_json(&old, &new, 20.0).unwrap();
+        assert!(!r.has_regressions(), "{}", r.render());
+    }
+
+    #[test]
+    fn missing_variant_is_a_regression_and_added_is_not() {
+        let old = snapshot(1000, 100.0, 0.70);
+        let new = r#"{"variants": [
+            {"variant": "fp32", "p99_us": 1000, "mean_latency_us": 500.0,
+             "throughput_rps": 100.0, "top1": 0.70},
+            {"variant": "p8", "p99_us": 700, "mean_latency_us": 300.0,
+             "throughput_rps": 150.0, "top1": 0.55}
+        ]}"#;
+        let r = compare_json(&old, new, 20.0).unwrap();
+        assert_eq!(r.missing, vec!["p16".to_string()], "dropped variant");
+        assert!(r.has_regressions());
+        assert_eq!(r.added, vec!["p8".to_string()]);
+        assert!(r.render().contains("missing from the new snapshot"));
+    }
+
+    #[test]
+    fn old_schema_p99_le_us_is_read_as_the_p99_fallback() {
+        let old = r#"{"variants": [{"variant": "fp32", "p99_le_us": 1000,
+            "mean_latency_us": 500.0, "throughput_rps": 100.0, "top1": 0.70}]}"#;
+        let new = snapshot(4000, 100.0, 0.70);
+        let r = compare_json(old, &new, 20.0).unwrap();
+        let p99 = r.deltas.iter().find(|d| d.metric == "p99_us").unwrap();
+        assert_eq!(p99.old, 1000.0, "read from p99_le_us");
+        assert!(p99.regression);
+    }
+
+    #[test]
+    fn zero_baselines_and_non_bench_docs_are_handled() {
+        let old = r#"{"variants": [{"variant": "fp32", "p99_us": 0,
+            "mean_latency_us": 0, "throughput_rps": 0, "top1": 0}]}"#;
+        let new = snapshot(99999, 0.001, 0.0);
+        let r = compare_json(old, &new, 20.0).unwrap();
+        assert!(r.deltas.is_empty(), "zero baselines are skipped, not divided by");
+        assert!(!r.has_regressions());
+        assert!(compare_json("{}", &new, 20.0).is_err(), "no variants[] -> error");
+    }
+}

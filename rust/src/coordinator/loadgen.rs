@@ -3,9 +3,11 @@
 //!
 //! Drives a running [`Coordinator`] with concurrent clients over a
 //! variant mix and summarizes the run from the coordinator's own
-//! histogram metrics: throughput, p50/p95/p99 latency, rejection counts
-//! and mean batch occupancy, as a human table and as machine-readable
-//! JSON (the `BENCH_*.json` trajectory format).
+//! latency sketches: throughput, exact p50/p95/p99/p99.9 latency (to
+//! within the sketch's 3.125% relative error), per-stage breakdown
+//! (queue / batch-wait / encode / execute), rejection counts and mean
+//! batch occupancy, as a human table and as machine-readable JSON (the
+//! `BENCH_*.json` trajectory format `repro bench-compare` diffs).
 //!
 //! Two client models:
 //! - **closed loop** — `concurrency` clients per variant, each issuing
@@ -17,7 +19,8 @@
 //!   does not wait for the server, so queue growth and rejections are
 //!   visible instead of being absorbed into client think time.
 
-use super::metrics::{ScaleEvent, VariantStats};
+use super::metrics::{ScaleEvent, Stage, VariantStats};
+use super::sketch;
 use super::{Coordinator, Reply, Request, Snapshot};
 use crate::data::synth::SynthSet;
 use anyhow::Result;
@@ -56,7 +59,10 @@ impl Default for BenchConfig {
 }
 
 /// Per-variant results: client-side counts merged with the
-/// coordinator's histogram metrics.
+/// coordinator's sketch metrics. Percentiles are exact order statistics
+/// to within the sketch's relative-error bound
+/// ([`sketch::MAX_RELATIVE_ERROR`], 3.125%) — not histogram bucket
+/// bounds.
 #[derive(Clone, Debug)]
 pub struct VariantBench {
     /// Variant name.
@@ -73,17 +79,31 @@ pub struct VariantBench {
     pub throughput_rps: f64,
     /// Mean end-to-end latency, µs.
     pub mean_latency_us: f64,
-    /// Histogram-bucket upper bound on p50 latency, µs (`p50≤`).
-    pub p50_le_us: u64,
-    /// Histogram-bucket upper bound on p95 latency, µs (`p95≤`).
-    pub p95_le_us: u64,
-    /// Histogram-bucket upper bound on p99 latency, µs (`p99≤`).
-    pub p99_le_us: u64,
+    /// Median end-to-end latency, µs.
+    pub p50_us: u64,
+    /// 95th-percentile end-to-end latency, µs.
+    pub p95_us: u64,
+    /// 99th-percentile end-to-end latency, µs.
+    pub p99_us: u64,
+    /// 99.9th-percentile end-to-end latency, µs.
+    pub p999_us: u64,
     /// Max observed latency, µs. Cumulative over the coordinator's
-    /// lifetime, not just this run (a max cannot be un-merged from the
-    /// histogram delta) — only differs from the run's own max when the
+    /// lifetime, not just this run (an extremum cannot be un-merged from
+    /// the sketch delta) — only differs from the run's own max when the
     /// same coordinator served traffic before `run_bench`.
     pub max_us: u64,
+    /// Mean queue-stage time (admission → batcher pickup), µs.
+    pub stage_queue_us: f64,
+    /// Mean batch-wait-stage time (pickup → dispatch), µs.
+    pub stage_batch_us: f64,
+    /// Mean encode-stage time (pad + posit input quantization), µs.
+    pub stage_encode_us: f64,
+    /// Mean execute-stage time (backend run), µs.
+    pub stage_exec_us: f64,
+    /// 99th-percentile queue-stage time, µs (the overload tail).
+    pub stage_queue_p99_us: u64,
+    /// 99th-percentile execute-stage time, µs.
+    pub stage_exec_p99_us: u64,
     /// Mean batch occupancy seen by this variant's workers.
     pub mean_batch: f64,
     /// Autoscaler scale-up events during the run.
@@ -92,6 +112,19 @@ pub struct VariantBench {
     pub scale_downs: u64,
     /// Live shard count at the end of the run.
     pub shards: u64,
+}
+
+/// One shard's interval stats in a [`BenchSummary`].
+#[derive(Clone, Debug)]
+pub struct ShardBench {
+    /// Shard label `variant#k`.
+    pub label: String,
+    /// Requests this shard served during the run.
+    pub requests: u64,
+    /// Mean batch occupancy this shard executed at.
+    pub mean_batch: f64,
+    /// 99th-percentile per-batch execute wall time, µs.
+    pub exec_p99_us: u64,
 }
 
 /// Whole-run summary.
@@ -106,9 +139,8 @@ pub struct BenchSummary {
     pub intra_batch: usize,
     /// Per-variant rows, sorted by name.
     pub rows: Vec<VariantBench>,
-    /// Per-shard occupancy over the run: (shard label `variant#k`,
-    /// requests served, mean batch occupancy), sorted by label.
-    pub shard_rows: Vec<(String, u64, f64)>,
+    /// Per-shard occupancy/exec over the run, sorted by label.
+    pub shard_rows: Vec<ShardBench>,
     /// Autoscaler transitions that happened during the run, in order.
     pub scale_events: Vec<ScaleEvent>,
 }
@@ -116,8 +148,9 @@ pub struct BenchSummary {
 /// Escape a string for embedding in a JSON string literal. Variant
 /// names normally come from a fixed set, but PJRT manifests are
 /// user-authored files — a quote or backslash in a name must not
-/// produce syntactically invalid BENCH_* JSON.
-fn json_escape(s: &str) -> String {
+/// produce syntactically invalid BENCH_* JSON. (Shared with the span
+/// tracer's JSONL emitter.)
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -138,9 +171,10 @@ impl BenchSummary {
 
     /// Machine-readable JSON (hand-rolled — the offline crate set has
     /// no serde; the schema is flat and fixed, documented field by field
-    /// in `docs/serving.md`). Percentile keys carry the `_le_` infix
-    /// because they are histogram-bucket **upper bounds**, not exact
-    /// order statistics.
+    /// in `docs/serving.md`). Percentile keys (`p50_us`, `p99_us`, …)
+    /// are **exact** order statistics to within the sketch's relative
+    /// error; the top-level `sketch` object records the scheme so a
+    /// snapshot is self-describing.
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
@@ -150,24 +184,34 @@ impl BenchSummary {
             "  \"aggregate_rps\": {:.3},\n",
             self.aggregate_rps()
         ));
+        out.push_str(&format!(
+            "  \"sketch\": {{\"scheme\": \"log-linear\", \"sub_bucket_bits\": {}, \
+             \"max_relative_error\": {}, \"max_value_us\": {}}},\n",
+            sketch::SUB_BITS,
+            sketch::MAX_RELATIVE_ERROR,
+            sketch::MAX_VALUE_US,
+        ));
         out.push_str("  \"scale_events\": [\n");
         for (i, e) in self.scale_events.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"variant\": \"{}\", \"from\": {}, \"to\": {}}}{}\n",
+                "    {{\"variant\": \"{}\", \"from\": {}, \"to\": {}, \"p99_us\": {}}}{}\n",
                 json_escape(&e.variant),
                 e.from,
                 e.to,
+                e.p99_us,
                 if i + 1 == self.scale_events.len() { "" } else { "," }
             ));
         }
         out.push_str("  ],\n");
         out.push_str("  \"shards\": [\n");
-        for (i, (label, requests, mean_batch)) in self.shard_rows.iter().enumerate() {
+        for (i, sh) in self.shard_rows.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"shard\": \"{}\", \"requests\": {}, \"mean_batch\": {:.3}}}{}\n",
-                json_escape(label),
-                requests,
-                mean_batch,
+                "    {{\"shard\": \"{}\", \"requests\": {}, \"mean_batch\": {:.3}, \
+                 \"exec_p99_us\": {}}}{}\n",
+                json_escape(&sh.label),
+                sh.requests,
+                sh.mean_batch,
+                sh.exec_p99_us,
                 if i + 1 == self.shard_rows.len() { "" } else { "," }
             ));
         }
@@ -177,8 +221,12 @@ impl BenchSummary {
             out.push_str(&format!(
                 "    {{\"variant\": \"{}\", \"completed\": {}, \"rejected\": {}, \
                  \"errors\": {}, \"top1\": {:.6}, \"throughput_rps\": {:.3}, \
-                 \"mean_latency_us\": {:.1}, \"p50_le_us\": {}, \"p95_le_us\": {}, \
-                 \"p99_le_us\": {}, \"max_us\": {}, \"mean_batch\": {:.3}, \
+                 \"mean_latency_us\": {:.1}, \"p50_us\": {}, \"p95_us\": {}, \
+                 \"p99_us\": {}, \"p999_us\": {}, \"max_us\": {}, \
+                 \"stage_queue_us\": {:.1}, \"stage_batch_us\": {:.1}, \
+                 \"stage_encode_us\": {:.1}, \"stage_exec_us\": {:.1}, \
+                 \"stage_queue_p99_us\": {}, \"stage_exec_p99_us\": {}, \
+                 \"mean_batch\": {:.3}, \
                  \"scale_ups\": {}, \"scale_downs\": {}, \"shards\": {}}}{}\n",
                 json_escape(&r.variant),
                 r.completed,
@@ -187,10 +235,17 @@ impl BenchSummary {
                 r.top1,
                 r.throughput_rps,
                 r.mean_latency_us,
-                r.p50_le_us,
-                r.p95_le_us,
-                r.p99_le_us,
+                r.p50_us,
+                r.p95_us,
+                r.p99_us,
+                r.p999_us,
                 r.max_us,
+                r.stage_queue_us,
+                r.stage_batch_us,
+                r.stage_encode_us,
+                r.stage_exec_us,
+                r.stage_queue_p99_us,
+                r.stage_exec_p99_us,
                 r.mean_batch,
                 r.scale_ups,
                 r.scale_downs,
@@ -202,8 +257,9 @@ impl BenchSummary {
         out
     }
 
-    /// Human-readable table. Percentile columns are histogram-bucket
-    /// upper bounds (`p50≤` …).
+    /// Human-readable table. Percentile columns are sketch-derived
+    /// exact quantiles (≤3.2% relative error), followed by a per-stage
+    /// mean breakdown.
     pub fn render(&self) -> String {
         let mut out = format!(
             "serve-bench ({} loop, {:.2?} wall, {:.0} req/s aggregate, intra-batch {})\n",
@@ -213,22 +269,34 @@ impl BenchSummary {
             self.intra_batch,
         );
         out.push_str(
-            "variant    done    rej    err    top1    req/s    p50≤(ms) p95≤(ms) p99≤(ms) batch  shards\n",
+            "variant    done    rej    err    top1    req/s    p50(ms)  p95(ms)  p99(ms)  p99.9(ms) batch  shards\n",
         );
         for r in &self.rows {
             out.push_str(&format!(
-                "{:<10} {:<7} {:<6} {:<6} {:<7.4} {:<8.1} {:<8.3} {:<8.3} {:<8.3} {:<6.2} {}\n",
+                "{:<10} {:<7} {:<6} {:<6} {:<7.4} {:<8.1} {:<8.3} {:<8.3} {:<8.3} {:<9.3} {:<6.2} {}\n",
                 r.variant,
                 r.completed,
                 r.rejected,
                 r.errors,
                 r.top1,
                 r.throughput_rps,
-                r.p50_le_us as f64 / 1000.0,
-                r.p95_le_us as f64 / 1000.0,
-                r.p99_le_us as f64 / 1000.0,
+                r.p50_us as f64 / 1000.0,
+                r.p95_us as f64 / 1000.0,
+                r.p99_us as f64 / 1000.0,
+                r.p999_us as f64 / 1000.0,
                 r.mean_batch,
                 r.shards,
+            ));
+        }
+        out.push_str("stage means (ms):\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "  {:<10} queue {:<8.3} batch {:<8.3} encode {:<8.3} exec {:<8.3}\n",
+                r.variant,
+                r.stage_queue_us / 1000.0,
+                r.stage_batch_us / 1000.0,
+                r.stage_encode_us / 1000.0,
+                r.stage_exec_us / 1000.0,
             ));
         }
         if !self.scale_events.is_empty() {
@@ -236,7 +304,15 @@ impl BenchSummary {
             let evs: Vec<String> = self
                 .scale_events
                 .iter()
-                .map(|e| format!("{} {}->{}", e.variant, e.from, e.to))
+                .map(|e| {
+                    format!(
+                        "{} {}->{} (p99 {:.3}ms)",
+                        e.variant,
+                        e.from,
+                        e.to,
+                        e.p99_us as f64 / 1000.0
+                    )
+                })
                 .collect();
             out.push_str(&evs.join(", "));
             out.push('\n');
@@ -358,11 +434,7 @@ fn open_loop(
                     });
                     let i = (j + k * clients) % set.len();
                     let (rtx, rrx) = sync_channel(1);
-                    let req = Request {
-                        features: set.sample(i).to_vec(),
-                        reply: rtx,
-                        enqueued: Instant::now(),
-                    };
+                    let req = Request::new(set.sample(i).to_vec(), rtx);
                     match coord.submit(variant, req, false) {
                         Ok(true) => pending.push((i, rrx)),
                         Ok(false) => {} // shed: counted by the coordinator
@@ -463,10 +535,17 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
             },
             throughput_rps: completed as f64 / wall.as_secs_f64().max(1e-9),
             mean_latency_us: s.mean_latency_us(),
-            p50_le_us: s.p50_us(),
-            p95_le_us: s.p95_us(),
-            p99_le_us: s.p99_us(),
-            max_us: s.max_latency_us,
+            p50_us: s.p50_us(),
+            p95_us: s.p95_us(),
+            p99_us: s.p99_us(),
+            p999_us: s.p999_us(),
+            max_us: s.max_us(),
+            stage_queue_us: s.stage(Stage::Queue).mean_us(),
+            stage_batch_us: s.stage(Stage::BatchWait).mean_us(),
+            stage_encode_us: s.stage(Stage::Encode).mean_us(),
+            stage_exec_us: s.stage(Stage::Exec).mean_us(),
+            stage_queue_p99_us: s.stage(Stage::Queue).quantile_us(0.99),
+            stage_exec_p99_us: s.stage(Stage::Exec).quantile_us(0.99),
             mean_batch: s.mean_batch(),
             scale_ups: s.scale_ups,
             scale_downs: s.scale_downs,
@@ -480,7 +559,7 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
     // ours, which stays correct even after the bounded log evicts old
     // entries (a run with more than the retention cap of transitions
     // reports the most recent ones).
-    let shard_rows: Vec<(String, u64, f64)> = snap
+    let shard_rows: Vec<ShardBench> = snap
         .shard_rows
         .iter()
         .filter(|(label, _)| {
@@ -501,7 +580,12 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
             let d = sh.delta_since(&base);
             // Shards idle for the whole run (e.g. retired before it
             // started) carry no information — keep the JSON tidy.
-            (d.requests > 0).then(|| (label.clone(), d.requests, d.mean_batch()))
+            (d.requests > 0).then(|| ShardBench {
+                label: label.clone(),
+                requests: d.requests,
+                mean_batch: d.mean_batch(),
+                exec_p99_us: d.exec.quantile_us(0.99),
+            })
         })
         .collect();
     let new_events = (snap.events_total - baseline.events_total) as usize;
@@ -521,73 +605,93 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
 mod tests {
     use super::*;
 
+    fn bench_row(variant: &str, completed: u64, rejected: u64, shards: u64) -> VariantBench {
+        VariantBench {
+            variant: variant.into(),
+            completed,
+            rejected,
+            errors: 0,
+            top1: 0.71,
+            throughput_rps: completed as f64 / 1.5,
+            mean_latency_us: 1200.0,
+            p50_us: 1000,
+            p95_us: 3000,
+            p99_us: 9000,
+            p999_us: 9400,
+            max_us: 9500,
+            stage_queue_us: 300.0,
+            stage_batch_us: 250.0,
+            stage_encode_us: 50.0,
+            stage_exec_us: 600.0,
+            stage_queue_p99_us: 2000,
+            stage_exec_p99_us: 1500,
+            mean_batch: 3.5,
+            scale_ups: 1,
+            scale_downs: 0,
+            shards,
+        }
+    }
+
     #[test]
     fn json_summary_is_well_formed_and_complete() {
         let summary = BenchSummary {
             mode: "closed",
             wall: Duration::from_millis(1500),
             intra_batch: 2,
-            rows: vec![
-                VariantBench {
-                    variant: "fp32".into(),
-                    completed: 100,
-                    rejected: 0,
-                    errors: 0,
-                    top1: 0.71,
-                    throughput_rps: 66.7,
-                    mean_latency_us: 1200.0,
-                    p50_le_us: 1000,
-                    p95_le_us: 3000,
-                    p99_le_us: 9000,
-                    max_us: 9500,
-                    mean_batch: 3.5,
-                    scale_ups: 1,
-                    scale_downs: 0,
-                    shards: 2,
-                },
-                VariantBench {
-                    variant: "p16".into(),
-                    completed: 90,
-                    rejected: 10,
-                    errors: 0,
-                    top1: 0.70,
-                    throughput_rps: 60.0,
-                    mean_latency_us: 1500.0,
-                    p50_le_us: 1000,
-                    p95_le_us: 3000,
-                    p99_le_us: 10000,
-                    max_us: 12000,
-                    mean_batch: 4.0,
-                    scale_ups: 0,
-                    scale_downs: 0,
-                    shards: 1,
-                },
-            ],
+            rows: vec![bench_row("fp32", 100, 0, 2), bench_row("p16", 90, 10, 1)],
             shard_rows: vec![
-                ("fp32#0".into(), 60, 3.4),
-                ("fp32#1".into(), 40, 3.6),
-                ("p16#0".into(), 90, 4.0),
+                ShardBench {
+                    label: "fp32#0".into(),
+                    requests: 60,
+                    mean_batch: 3.4,
+                    exec_p99_us: 1400,
+                },
+                ShardBench {
+                    label: "fp32#1".into(),
+                    requests: 40,
+                    mean_batch: 3.6,
+                    exec_p99_us: 1600,
+                },
+                ShardBench {
+                    label: "p16#0".into(),
+                    requests: 90,
+                    mean_batch: 4.0,
+                    exec_p99_us: 1200,
+                },
             ],
             scale_events: vec![ScaleEvent {
                 variant: "fp32".into(),
                 from: 1,
                 to: 2,
+                p99_us: 9000,
             }],
         };
         let json = summary.to_json();
-        // Structure: balanced braces/brackets, one object per variant.
+        // Structure: balanced braces/brackets, one object per variant,
+        // and the whole document round-trips through the parser.
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+        let doc = super::super::compare::parse_json(&json).expect("valid JSON");
         for key in [
             "\"mode\"",
             "\"wall_s\"",
             "\"intra_batch\"",
             "\"aggregate_rps\"",
+            "\"sketch\"",
+            "\"sub_bucket_bits\"",
+            "\"max_relative_error\"",
             "\"variants\"",
             "\"throughput_rps\"",
-            "\"p50_le_us\"",
-            "\"p95_le_us\"",
-            "\"p99_le_us\"",
+            "\"p50_us\"",
+            "\"p95_us\"",
+            "\"p99_us\"",
+            "\"p999_us\"",
+            "\"stage_queue_us\"",
+            "\"stage_batch_us\"",
+            "\"stage_encode_us\"",
+            "\"stage_exec_us\"",
+            "\"stage_queue_p99_us\"",
+            "\"stage_exec_p99_us\"",
             "\"rejected\"",
             "\"mean_batch\"",
             "\"scale_events\"",
@@ -595,19 +699,31 @@ mod tests {
             "\"scale_downs\"",
             "\"shards\"",
             "\"shard\"",
+            "\"exec_p99_us\"",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
-        // The old unlabelled keys are gone: `p50_us` must not resurface
-        // (it would mislabel bucket bounds as exact percentiles).
-        assert!(!json.contains("\"p50_us\"") && !json.contains("\"p99_us\""));
+        // The histogram-era bound fields must not resurface: percentiles
+        // are exact now, the `_le_` spelling would mislabel them.
+        assert!(!json.contains("_le_us"), "bound-era keys are gone");
+        assert_eq!(
+            doc.get("sketch")
+                .and_then(|s| s.get("max_relative_error"))
+                .and_then(|v| v.num()),
+            Some(0.03125),
+            "snapshot is sketch-self-describing"
+        );
         assert!(json.contains("\"from\": 1") && json.contains("\"to\": 2"));
-        assert!((summary.aggregate_rps() - 126.7).abs() < 1e-9);
+        assert!(json.contains("\"p99_us\": 9000"), "scale events carry p99");
+        let want_rps = 100.0 / 1.5 + 90.0 / 1.5;
+        assert!((summary.aggregate_rps() - want_rps).abs() < 1e-9);
         let table = summary.render();
         assert!(table.contains("fp32") && table.contains("p16"));
-        assert!(table.contains("p99≤"), "render labels percentile bounds");
+        assert!(table.contains("p99(ms)"), "exact quantile columns");
+        assert!(!table.contains('≤'), "no bound labels remain");
+        assert!(table.contains("stage means"));
         assert!(table.contains("intra-batch 2"));
-        assert!(table.contains("scale events: fp32 1->2"));
+        assert!(table.contains("scale events: fp32 1->2 (p99 9.000ms)"));
     }
 
     #[test]

@@ -1,44 +1,92 @@
-//! Serving metrics: per-variant request counts, latency distribution
-//! (with histogram-derived percentiles), queue rejections, batch-size
-//! occupancy — now including **per-shard** occupancy — and autoscaler
+//! Serving metrics: per-variant request counts, exact-tail latency
+//! sketches, per-stage timers, queue rejections, batch-size occupancy
+//! (including **per-shard** occupancy and execute tails) and autoscaler
 //! scale events. This is what `repro serve`/`serve-bench` report
 //! alongside the Top-1 numbers.
 //!
 //! ## Percentile semantics
 //!
-//! Latencies are recorded into the fixed histogram [`BUCKETS_US`], so a
-//! reported percentile is the **upper bound of the bucket holding that
-//! rank**, tightened to the observed max — an *at-most* figure, not an
-//! interpolated sample. All rendered tables and the serve-bench JSON
-//! label these columns `p50≤`/`p95≤`/`p99≤` (`p50_le_us` … in JSON) to
-//! make the bucket semantics explicit; see `docs/serving.md` for the
-//! bucket scheme. Sub-bucket sketches (t-digest/HDR) remain future work.
+//! Latencies are recorded into a log-linear [`LatencySketch`] (HDR-style
+//! octave buckets, 32 linear sub-buckets each), so a reported quantile
+//! is within [`sketch::MAX_RELATIVE_ERROR`] (3.125%) of the exact order
+//! statistic at any scale — `p50_us`/`p99_us` are **exact-tail** figures
+//! now, not the bucket upper bounds the old fixed 8-bucket histogram
+//! reported as `p50≤`/`p99≤`. See `docs/OBSERVABILITY.md` for the
+//! sketch scheme.
+//!
+//! ## Stage model
+//!
+//! Every request's end-to-end latency decomposes into four stages,
+//! each tracked by its own sketch (see [`Stage`]):
+//!
+//! 1. **queue** — admission (`submit`) to the batcher pulling the
+//!    request off the shard queue.
+//! 2. **batch** — batcher pickup to batch dispatch (time spent waiting
+//!    for the batch to fill or the deadline to flush).
+//! 3. **encode** — host-side pad + posit input quantization of the
+//!    dispatched batch.
+//! 4. **exec** — backend execution ([`super::InferBackend::run`]).
+//!
+//! The stages are cut from the same clock readings as the end-to-end
+//! measurement, so per request `queue + batch + encode + exec` equals
+//! the end-to-end latency up to the final reply fan-out (enforced
+//! within 5% by `rust/tests/serving_native.rs`).
 
-use std::collections::HashMap;
+use super::sketch::{self, LatencySketch};
+use std::collections::{HashMap, VecDeque};
 use std::time::Duration;
 
-/// Fixed latency histogram bucket upper bounds (µs). A latency `l` is
-/// counted in the first bucket with `l <= bound`; the last bucket is
-/// open-ended.
-pub const BUCKETS_US: [u64; 8] = [100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, u64::MAX];
+/// Request-lifecycle stages, in pipeline order. `as usize` indexes the
+/// per-stage sketch arrays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Shard queue wait: admission → batcher pickup.
+    Queue = 0,
+    /// Batch fill wait: batcher pickup → batch dispatch.
+    BatchWait = 1,
+    /// Host-side pad + posit input encode of the batch.
+    Encode = 2,
+    /// Backend execution of the batch.
+    Exec = 3,
+}
 
-/// Per-variant counters.
+/// Number of tracked stages.
+pub const STAGE_COUNT: usize = 4;
+
+/// Stage names in [`Stage`] order — the JSON/Prometheus spellings.
+pub const STAGE_NAMES: [&str; STAGE_COUNT] = ["queue", "batch", "encode", "exec"];
+
+/// Per-request stage durations, measured by the worker from the shared
+/// clock readings (enqueue, dequeue, dispatch, execute).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageSample {
+    /// Admission → batcher pickup.
+    pub queue: Duration,
+    /// Batcher pickup → batch dispatch.
+    pub batch_wait: Duration,
+    /// Pad + input-encode of the dispatched batch.
+    pub encode: Duration,
+    /// Backend execution.
+    pub exec: Duration,
+}
+
+/// Quantiles exposed by the Prometheus exposition.
+const PROM_QUANTILES: [(&str, f64); 4] =
+    [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99), ("0.999", 0.999)];
+
+/// Per-variant counters and sketches.
 #[derive(Clone, Debug, Default)]
 pub struct VariantStats {
     /// Requests served.
     pub requests: u64,
     /// Requests rejected at admission (every shard queue full).
     pub rejected: u64,
-    /// Total end-to-end latency (queue + execute), µs.
-    pub total_latency_us: u64,
-    /// Max end-to-end latency, µs.
-    pub max_latency_us: u64,
-    /// Total batch-execute wall time, µs.
-    pub total_exec_us: u64,
+    /// End-to-end latency sketch (queue + batch + encode + execute).
+    pub latency: LatencySketch,
+    /// Per-stage duration sketches, indexed by [`Stage`] `as usize`.
+    pub stages: [LatencySketch; STAGE_COUNT],
     /// Sum of batch occupancies (for the mean batch size).
     pub occupancy_sum: u64,
-    /// Latency histogram counts per [`BUCKETS_US`].
-    pub hist: [u64; 8],
     /// Autoscaler scale-up events applied to this variant.
     pub scale_ups: u64,
     /// Autoscaler scale-down events applied to this variant.
@@ -48,48 +96,46 @@ pub struct VariantStats {
 }
 
 impl VariantStats {
-    /// Histogram-derived latency quantile bound (µs) for `q` in `(0, 1]`:
-    /// the **upper bound** of the bucket holding the q-quantile rank,
-    /// tightened to the observed max (which is also what the open-ended
-    /// last bucket reports). An "at most" figure — render it as `p99≤`,
-    /// not `p99`. Returns 0 before any request is served.
+    /// Latency quantile (µs) for `q` in `(0, 1]`, within
+    /// [`sketch::MAX_RELATIVE_ERROR`] of the exact order statistic.
+    /// Returns 0 before any request is served.
     pub fn percentile_us(&self, q: f64) -> u64 {
-        if self.requests == 0 {
-            return 0;
-        }
-        let rank = ((q * self.requests as f64).ceil() as u64).clamp(1, self.requests);
-        let mut cum = 0u64;
-        for (i, &count) in self.hist.iter().enumerate() {
-            cum += count;
-            if cum >= rank {
-                return BUCKETS_US[i].min(self.max_latency_us);
-            }
-        }
-        self.max_latency_us
+        self.latency.quantile_us(q)
     }
 
-    /// Median latency bound (µs), histogram-derived (`p50≤`).
+    /// Median end-to-end latency (µs).
     pub fn p50_us(&self) -> u64 {
         self.percentile_us(0.50)
     }
 
-    /// 95th-percentile latency bound (µs), histogram-derived (`p95≤`).
+    /// 95th-percentile end-to-end latency (µs).
     pub fn p95_us(&self) -> u64 {
         self.percentile_us(0.95)
     }
 
-    /// 99th-percentile latency bound (µs), histogram-derived (`p99≤`).
+    /// 99th-percentile end-to-end latency (µs).
     pub fn p99_us(&self) -> u64 {
         self.percentile_us(0.99)
     }
 
+    /// 99.9th-percentile end-to-end latency (µs).
+    pub fn p999_us(&self) -> u64 {
+        self.percentile_us(0.999)
+    }
+
+    /// Max observed end-to-end latency (µs).
+    pub fn max_us(&self) -> u64 {
+        self.latency.max_us()
+    }
+
     /// Mean end-to-end latency (µs).
     pub fn mean_latency_us(&self) -> f64 {
-        if self.requests == 0 {
-            0.0
-        } else {
-            self.total_latency_us as f64 / self.requests as f64
-        }
+        self.latency.mean_us()
+    }
+
+    /// One stage's duration sketch.
+    pub fn stage(&self, s: Stage) -> &LatencySketch {
+        &self.stages[s as usize]
     }
 
     /// Mean batch occupancy.
@@ -102,28 +148,23 @@ impl VariantStats {
     }
 
     /// Stats accumulated since `base` was snapshotted: counter-wise
-    /// subtraction, so means and percentile *ranks* derived from the
-    /// result cover only the interval. `max_latency_us` stays
-    /// cumulative (a max cannot be un-merged), and percentiles clamp
-    /// to it: a rank landing in a closed bucket reports that bucket's
-    /// bound as usual, but one landing in the open-ended last bucket
-    /// reports the lifetime max — which may predate the interval.
-    /// The `shards` gauge keeps the current (self) value. Callers that
-    /// need clean tail numbers should bench against a fresh coordinator
-    /// (as `repro serve-bench` does).
+    /// subtraction (sketches included), so means and quantile *ranks*
+    /// derived from the result cover only the interval. Sketch extrema
+    /// stay cumulative (a min/max cannot be un-merged) and the `shards`
+    /// gauge keeps the current (self) value. Callers that need clean
+    /// tail numbers should bench against a fresh coordinator (as
+    /// `repro serve-bench` does).
     pub fn delta_since(&self, base: &VariantStats) -> VariantStats {
-        let mut hist = [0u64; 8];
-        for (i, h) in hist.iter_mut().enumerate() {
-            *h = self.hist[i].saturating_sub(base.hist[i]);
+        let mut stages: [LatencySketch; STAGE_COUNT] = Default::default();
+        for (i, st) in stages.iter_mut().enumerate() {
+            *st = self.stages[i].delta_since(&base.stages[i]);
         }
         VariantStats {
             requests: self.requests.saturating_sub(base.requests),
             rejected: self.rejected.saturating_sub(base.rejected),
-            total_latency_us: self.total_latency_us.saturating_sub(base.total_latency_us),
-            max_latency_us: self.max_latency_us,
-            total_exec_us: self.total_exec_us.saturating_sub(base.total_exec_us),
+            latency: self.latency.delta_since(&base.latency),
+            stages,
             occupancy_sum: self.occupancy_sum.saturating_sub(base.occupancy_sum),
-            hist,
             scale_ups: self.scale_ups.saturating_sub(base.scale_ups),
             scale_downs: self.scale_downs.saturating_sub(base.scale_downs),
             shards: self.shards,
@@ -138,6 +179,10 @@ pub struct ShardStats {
     pub requests: u64,
     /// Sum of batch occupancies this shard executed.
     pub occupancy_sum: u64,
+    /// Per-*batch* execute wall-time sketch (one record per executed
+    /// batch, not per request) — the shard-local exec tail the variant
+    /// sketches can't attribute.
+    pub exec: LatencySketch,
 }
 
 impl ShardStats {
@@ -155,6 +200,7 @@ impl ShardStats {
         ShardStats {
             requests: self.requests.saturating_sub(base.requests),
             occupancy_sum: self.occupancy_sum.saturating_sub(base.occupancy_sum),
+            exec: self.exec.delta_since(&base.exec),
         }
     }
 }
@@ -172,6 +218,10 @@ pub struct ScaleEvent {
     pub from: usize,
     /// Shard count after the transition.
     pub to: usize,
+    /// The variant's sketch-derived p99 latency (µs) at the moment the
+    /// transition was recorded — the tail signal the decision answered
+    /// to (0 when the variant had served nothing yet).
+    pub p99_us: u64,
 }
 
 /// Mutable metrics registry.
@@ -179,7 +229,9 @@ pub struct ScaleEvent {
 pub struct Metrics {
     per_variant: HashMap<String, VariantStats>,
     per_shard: HashMap<String, ShardStats>,
-    events: Vec<ScaleEvent>,
+    /// Ring of recent scale events: `pop_front` eviction is O(1), so a
+    /// long-lived flapping server pays nothing at the cap.
+    events: VecDeque<ScaleEvent>,
     /// Lifetime count of scale events ever recorded — unlike `events`,
     /// never truncated, so interval consumers can tell how many of the
     /// retained events are theirs even after eviction.
@@ -192,37 +244,44 @@ impl Metrics {
         Self::default()
     }
 
-    /// Record one served request.
-    pub fn observe(&mut self, variant: &str, latency: Duration, exec: Duration, batch_n: u64) {
+    /// Record one served request: its end-to-end latency, its per-stage
+    /// breakdown, and the occupancy of the batch it rode in.
+    pub fn observe(
+        &mut self,
+        variant: &str,
+        latency: Duration,
+        stages: &StageSample,
+        batch_n: u64,
+    ) {
         let s = self.per_variant.entry(variant.to_string()).or_default();
-        let us = latency.as_micros() as u64;
         s.requests += 1;
-        s.total_latency_us += us;
-        s.max_latency_us = s.max_latency_us.max(us);
-        s.total_exec_us += exec.as_micros() as u64;
+        s.latency.record_duration(latency);
+        s.stages[Stage::Queue as usize].record_duration(stages.queue);
+        s.stages[Stage::BatchWait as usize].record_duration(stages.batch_wait);
+        s.stages[Stage::Encode as usize].record_duration(stages.encode);
+        s.stages[Stage::Exec as usize].record_duration(stages.exec);
         s.occupancy_sum += batch_n;
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(7);
-        s.hist[idx] += 1;
     }
 
-    /// Record one executed batch of `batch_n` requests on the shard
-    /// labelled `label` (`variant#k`). Called once per batch — the
-    /// shard's mean occupancy stays consistent with the variant-level
-    /// one because each of the batch's `batch_n` requests contributes
-    /// an occupancy of `batch_n`. Allocates only on a shard's first
-    /// batch.
-    pub fn observe_shard(&mut self, label: &str, batch_n: u64) {
+    /// Record one executed batch of `batch_n` requests (taking `exec`
+    /// wall time) on the shard labelled `label` (`variant#k`). Called
+    /// once per batch — the shard's mean occupancy stays consistent with
+    /// the variant-level one because each of the batch's `batch_n`
+    /// requests contributes an occupancy of `batch_n`. Allocates only on
+    /// a shard's first batch.
+    pub fn observe_shard(&mut self, label: &str, batch_n: u64, exec: Duration) {
         if let Some(sh) = self.per_shard.get_mut(label) {
             sh.requests += batch_n;
             sh.occupancy_sum += batch_n * batch_n;
+            sh.exec.record_duration(exec);
         } else {
-            self.per_shard.insert(
-                label.to_string(),
-                ShardStats {
-                    requests: batch_n,
-                    occupancy_sum: batch_n * batch_n,
-                },
-            );
+            let mut sh = ShardStats {
+                requests: batch_n,
+                occupancy_sum: batch_n * batch_n,
+                exec: LatencySketch::new(),
+            };
+            sh.exec.record_duration(exec);
+            self.per_shard.insert(label.to_string(), sh);
         }
     }
 
@@ -237,13 +296,16 @@ impl Metrics {
         self.per_variant.entry(variant.to_string()).or_default().shards = shards as u64;
     }
 
-    /// Record one autoscaler transition `from -> to` shards. Updates the
-    /// scale counters, the shard gauge, and the event log. The log keeps
-    /// the most recent [`MAX_SCALE_EVENTS`] transitions (the per-variant
-    /// counters remain exact for the full lifetime), so a long-lived
-    /// flapping server cannot grow it without bound.
+    /// Record one autoscaler transition `from -> to` shards, annotated
+    /// with the variant's current sketch-derived p99 (the tail the
+    /// decision was answering to). Updates the scale counters, the shard
+    /// gauge, and the event log. The log keeps the most recent
+    /// [`MAX_SCALE_EVENTS`] transitions (the per-variant counters remain
+    /// exact for the full lifetime), so a long-lived flapping server
+    /// cannot grow it without bound.
     pub fn record_scale(&mut self, variant: &str, from: usize, to: usize) {
         let s = self.per_variant.entry(variant.to_string()).or_default();
+        let p99_us = s.latency.quantile_us(0.99);
         if to > from {
             s.scale_ups += 1;
         } else if to < from {
@@ -251,12 +313,13 @@ impl Metrics {
         }
         s.shards = to as u64;
         if self.events.len() >= MAX_SCALE_EVENTS {
-            self.events.remove(0);
+            self.events.pop_front();
         }
-        self.events.push(ScaleEvent {
+        self.events.push_back(ScaleEvent {
             variant: variant.to_string(),
             from,
             to,
+            p99_us,
         });
         self.events_total += 1;
     }
@@ -278,7 +341,7 @@ impl Metrics {
         Snapshot {
             rows,
             shard_rows,
-            events: self.events.clone(),
+            events: self.events.iter().cloned().collect(),
             events_total: self.events_total,
         }
     }
@@ -290,7 +353,7 @@ pub struct Snapshot {
     /// (variant, stats) sorted by name.
     pub rows: Vec<(String, VariantStats)>,
     /// (shard label `variant#k`, stats) sorted by label — the per-shard
-    /// occupancy view.
+    /// occupancy/exec view.
     pub shard_rows: Vec<(String, ShardStats)>,
     /// Autoscaler transitions, in application order (the most recent
     /// [`MAX_SCALE_EVENTS`]; older entries are evicted).
@@ -301,42 +364,205 @@ pub struct Snapshot {
     pub events_total: u64,
 }
 
+/// Escape a label value for the Prometheus text exposition (`\` → `\\`,
+/// `"` → `\"`, newline → `\n`).
+fn prom_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 impl Snapshot {
     /// Render a compact table (latencies in ms). Percentile columns are
-    /// histogram-bucket **upper bounds** and labelled `≤` accordingly;
-    /// when shards or scale events exist they get their own sections.
+    /// sketch-derived quantiles (≤3.2% relative error); when shards or
+    /// scale events exist they get their own sections.
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "variant    reqs    rej     mean(ms)  p50≤(ms)  p99≤(ms)  max(ms)   mean_batch  shards\n",
+            "variant    reqs    rej     mean(ms)  p50(ms)   p99(ms)   p99.9(ms) max(ms)   mean_batch  shards\n",
         );
         for (name, s) in &self.rows {
             out.push_str(&format!(
-                "{name:<10} {:<7} {:<7} {:<9.3} {:<9.3} {:<9.3} {:<9.3} {:<11.2} {}\n",
+                "{name:<10} {:<7} {:<7} {:<9.3} {:<9.3} {:<9.3} {:<9.3} {:<9.3} {:<11.2} {}\n",
                 s.requests,
                 s.rejected,
                 s.mean_latency_us() / 1000.0,
                 s.p50_us() as f64 / 1000.0,
                 s.p99_us() as f64 / 1000.0,
-                s.max_latency_us as f64 / 1000.0,
+                s.p999_us() as f64 / 1000.0,
+                s.max_us() as f64 / 1000.0,
                 s.mean_batch(),
                 s.shards,
             ));
+        }
+        let staged: Vec<_> = self.rows.iter().filter(|(_, s)| s.requests > 0).collect();
+        if !staged.is_empty() {
+            out.push_str("stage means (ms):\n");
+            for (name, s) in staged {
+                out.push_str(&format!("  {name:<10}"));
+                for (i, sname) in STAGE_NAMES.iter().enumerate() {
+                    out.push_str(&format!(" {sname} {:<8.3}", s.stages[i].mean_us() / 1000.0));
+                }
+                out.push('\n');
+            }
         }
         if !self.shard_rows.is_empty() {
             out.push_str("shard occupancy:\n");
             for (label, sh) in &self.shard_rows {
                 out.push_str(&format!(
-                    "  {label:<12} reqs {:<7} mean_batch {:.2}\n",
+                    "  {label:<12} reqs {:<7} mean_batch {:<6.2} exec_p99(ms) {:.3}\n",
                     sh.requests,
-                    sh.mean_batch()
+                    sh.mean_batch(),
+                    sh.exec.quantile_us(0.99) as f64 / 1000.0,
                 ));
             }
         }
         if !self.events.is_empty() {
             out.push_str("scale events:\n");
             for e in &self.events {
-                out.push_str(&format!("  {} {} -> {} shards\n", e.variant, e.from, e.to));
+                out.push_str(&format!(
+                    "  {} {} -> {} shards (p99 {:.3}ms)\n",
+                    e.variant,
+                    e.from,
+                    e.to,
+                    e.p99_us as f64 / 1000.0
+                ));
             }
+        }
+        out
+    }
+
+    /// Render the Prometheus text exposition format: counters, gauges,
+    /// and `summary`-convention quantile series for the end-to-end and
+    /// per-stage sketches. Deterministic ordering (rows are sorted), so
+    /// the output diffs cleanly.
+    pub fn render_prom(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# HELP posar_requests_total Requests served per variant.\n");
+        out.push_str("# TYPE posar_requests_total counter\n");
+        for (name, s) in &self.rows {
+            out.push_str(&format!(
+                "posar_requests_total{{variant=\"{}\"}} {}\n",
+                prom_escape(name),
+                s.requests
+            ));
+        }
+        out.push_str("# HELP posar_rejected_total Admission rejections per variant.\n");
+        out.push_str("# TYPE posar_rejected_total counter\n");
+        for (name, s) in &self.rows {
+            out.push_str(&format!(
+                "posar_rejected_total{{variant=\"{}\"}} {}\n",
+                prom_escape(name),
+                s.rejected
+            ));
+        }
+        out.push_str(
+            "# HELP posar_latency_us End-to-end request latency, sketch-derived quantiles (relative error <= 3.125%).\n",
+        );
+        out.push_str("# TYPE posar_latency_us summary\n");
+        for (name, s) in &self.rows {
+            let v = prom_escape(name);
+            for (qs, q) in PROM_QUANTILES {
+                out.push_str(&format!(
+                    "posar_latency_us{{variant=\"{v}\",quantile=\"{qs}\"}} {}\n",
+                    s.latency.quantile_us(q)
+                ));
+            }
+            out.push_str(&format!(
+                "posar_latency_us_sum{{variant=\"{v}\"}} {}\n",
+                s.latency.sum_us()
+            ));
+            out.push_str(&format!(
+                "posar_latency_us_count{{variant=\"{v}\"}} {}\n",
+                s.latency.count()
+            ));
+        }
+        out.push_str(
+            "# HELP posar_stage_us Per-stage request latency (queue|batch|encode|exec), sketch-derived quantiles.\n",
+        );
+        out.push_str("# TYPE posar_stage_us summary\n");
+        for (name, s) in &self.rows {
+            let v = prom_escape(name);
+            for (i, sname) in STAGE_NAMES.iter().enumerate() {
+                let sk = &s.stages[i];
+                for (qs, q) in PROM_QUANTILES {
+                    out.push_str(&format!(
+                        "posar_stage_us{{variant=\"{v}\",stage=\"{sname}\",quantile=\"{qs}\"}} {}\n",
+                        sk.quantile_us(q)
+                    ));
+                }
+                out.push_str(&format!(
+                    "posar_stage_us_sum{{variant=\"{v}\",stage=\"{sname}\"}} {}\n",
+                    sk.sum_us()
+                ));
+                out.push_str(&format!(
+                    "posar_stage_us_count{{variant=\"{v}\",stage=\"{sname}\"}} {}\n",
+                    sk.count()
+                ));
+            }
+        }
+        out.push_str("# HELP posar_shards Live shard count per variant.\n");
+        out.push_str("# TYPE posar_shards gauge\n");
+        for (name, s) in &self.rows {
+            out.push_str(&format!(
+                "posar_shards{{variant=\"{}\"}} {}\n",
+                prom_escape(name),
+                s.shards
+            ));
+        }
+        out.push_str("# HELP posar_scale_ups_total Autoscaler scale-up transitions per variant.\n");
+        out.push_str("# TYPE posar_scale_ups_total counter\n");
+        for (name, s) in &self.rows {
+            out.push_str(&format!(
+                "posar_scale_ups_total{{variant=\"{}\"}} {}\n",
+                prom_escape(name),
+                s.scale_ups
+            ));
+        }
+        out.push_str(
+            "# HELP posar_scale_downs_total Autoscaler scale-down transitions per variant.\n",
+        );
+        out.push_str("# TYPE posar_scale_downs_total counter\n");
+        for (name, s) in &self.rows {
+            out.push_str(&format!(
+                "posar_scale_downs_total{{variant=\"{}\"}} {}\n",
+                prom_escape(name),
+                s.scale_downs
+            ));
+        }
+        out.push_str("# HELP posar_shard_requests_total Requests served per worker shard.\n");
+        out.push_str("# TYPE posar_shard_requests_total counter\n");
+        for (label, sh) in &self.shard_rows {
+            out.push_str(&format!(
+                "posar_shard_requests_total{{shard=\"{}\"}} {}\n",
+                prom_escape(label),
+                sh.requests
+            ));
+        }
+        out.push_str("# HELP posar_shard_exec_us Per-batch execute wall time per shard.\n");
+        out.push_str("# TYPE posar_shard_exec_us summary\n");
+        for (label, sh) in &self.shard_rows {
+            let l = prom_escape(label);
+            for (qs, q) in [("0.5", 0.5), ("0.99", 0.99)] {
+                out.push_str(&format!(
+                    "posar_shard_exec_us{{shard=\"{l}\",quantile=\"{qs}\"}} {}\n",
+                    sh.exec.quantile_us(q)
+                ));
+            }
+            out.push_str(&format!(
+                "posar_shard_exec_us_sum{{shard=\"{l}\"}} {}\n",
+                sh.exec.sum_us()
+            ));
+            out.push_str(&format!(
+                "posar_shard_exec_us_count{{shard=\"{l}\"}} {}\n",
+                sh.exec.count()
+            ));
         }
         out
     }
@@ -346,36 +572,89 @@ impl Snapshot {
 mod tests {
     use super::*;
 
+    fn sample(queue: u64, batch: u64, encode: u64, exec: u64) -> StageSample {
+        StageSample {
+            queue: Duration::from_micros(queue),
+            batch_wait: Duration::from_micros(batch),
+            encode: Duration::from_micros(encode),
+            exec: Duration::from_micros(exec),
+        }
+    }
+
     #[test]
     fn observe_and_snapshot() {
         let mut m = Metrics::new();
-        m.observe("p16", Duration::from_micros(500), Duration::from_micros(400), 4);
-        m.observe("p16", Duration::from_micros(1500), Duration::from_micros(900), 8);
-        m.observe("fp32", Duration::from_micros(200), Duration::from_micros(100), 1);
+        m.observe("p16", Duration::from_micros(500), &sample(50, 40, 10, 400), 4);
+        m.observe("p16", Duration::from_micros(1500), &sample(300, 290, 10, 900), 8);
+        m.observe("fp32", Duration::from_micros(200), &sample(50, 40, 10, 100), 1);
         let s = m.snapshot();
         assert_eq!(s.rows.len(), 2);
         let p16 = &s.rows.iter().find(|(n, _)| n == "p16").unwrap().1;
         assert_eq!(p16.requests, 2);
-        assert_eq!(p16.max_latency_us, 1500);
+        assert_eq!(p16.max_us(), 1500);
         assert_eq!(p16.occupancy_sum, 12);
-        assert_eq!(p16.hist[2], 1); // 500µs lands in the <=1000µs bucket
-        assert_eq!(p16.hist[3], 1); // 1500µs in the <=3000µs bucket
         assert_eq!(p16.mean_batch(), 6.0);
+        assert_eq!(p16.latency.count(), 2);
+        // Stage sketches see one record per request each.
+        for i in 0..STAGE_COUNT {
+            assert_eq!(p16.stages[i].count(), 2, "stage {}", STAGE_NAMES[i]);
+        }
+        assert_eq!(p16.stage(Stage::Exec).max_us(), 900);
+        assert_eq!(p16.stage(Stage::Queue).sum_us(), 350);
         let rendered = s.render();
         assert!(rendered.contains("p16"));
-        assert!(rendered.contains("p50≤"), "percentile columns are bounds");
+        assert!(rendered.contains("p50(ms)"), "exact quantile columns");
+        assert!(rendered.contains("stage means"));
         assert!(rendered.contains("rej"));
     }
 
     #[test]
-    fn per_shard_occupancy_is_tracked_per_worker() {
+    fn exact_percentiles_from_the_sketch() {
+        let mut m = Metrics::new();
+        // 60 requests at 200µs, 30 at 2ms, 10 at 50ms: the three-mode
+        // distribution the old histogram could only bound (p50≤300,
+        // p95≤100_000). The sketch resolves each mode to within 3.125%.
+        for _ in 0..60 {
+            m.observe("v", Duration::from_micros(200), &sample(0, 0, 0, 200), 1);
+        }
+        for _ in 0..30 {
+            m.observe("v", Duration::from_micros(2_000), &sample(0, 0, 0, 2_000), 1);
+        }
+        for _ in 0..10 {
+            m.observe("v", Duration::from_micros(50_000), &sample(0, 0, 0, 50_000), 1);
+        }
+        let s = &m.snapshot().rows[0].1;
+        assert_eq!(s.requests, 100);
+        assert!(s.p50_us() >= 200 && s.p50_us() <= 207, "got {}", s.p50_us());
+        assert!(s.p95_us() >= 50_000 && s.p95_us() <= 51_563, "got {}", s.p95_us());
+        assert!(s.p99_us() >= 50_000 && s.p99_us() <= 51_563);
+        assert!(s.p50_us() <= s.p95_us() && s.p95_us() <= s.p99_us());
+        assert!(s.p99_us() <= s.max_us());
+        assert!(s.p999_us() <= s.max_us());
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let empty = VariantStats::default();
+        assert_eq!(empty.percentile_us(0.99), 0);
+        let mut m = Metrics::new();
+        // One request: every quantile is the single observed value
+        // (sub-32µs values are exact in the sketch).
+        m.observe("v", Duration::from_micros(40), &sample(0, 0, 0, 40), 1);
+        let s = &m.snapshot().rows[0].1;
+        assert_eq!(s.p50_us(), 40);
+        assert_eq!(s.p99_us(), 40);
+    }
+
+    #[test]
+    fn per_shard_occupancy_and_exec_are_tracked_per_worker() {
         let mut m = Metrics::new();
         // Shard p16#0 executes a 4-batch then a 2-batch; p16#1 one
         // single-sample batch. observe_shard is per *batch*: each of a
         // batch's n requests contributes occupancy n.
-        m.observe_shard("p16#0", 4);
-        m.observe_shard("p16#0", 2);
-        m.observe_shard("p16#1", 1);
+        m.observe_shard("p16#0", 4, Duration::from_micros(800));
+        m.observe_shard("p16#0", 2, Duration::from_micros(500));
+        m.observe_shard("p16#1", 1, Duration::from_micros(300));
         let s = m.snapshot();
         assert_eq!(s.shard_rows.len(), 2);
         let s0 = &s.shard_rows.iter().find(|(l, _)| l == "p16#0").unwrap().1;
@@ -383,16 +662,23 @@ mod tests {
         assert_eq!(s0.requests, 6);
         assert_eq!(s0.occupancy_sum, 20); // 4·4 + 2·2
         assert!((s0.mean_batch() - 20.0 / 6.0).abs() < 1e-12);
+        assert_eq!(s0.exec.count(), 2, "one exec record per batch");
+        assert_eq!(s0.exec.max_us(), 800);
         assert_eq!(s1.requests, 1);
         assert_eq!(s1.mean_batch(), 1.0);
         assert!(s.render().contains("p16#0"));
+        assert!(s.render().contains("exec_p99"));
         // Interval view subtracts baselines shard-wise.
-        let d = s0.delta_since(&ShardStats {
+        let mut base = ShardStats {
             requests: 4,
             occupancy_sum: 16,
-        });
+            exec: LatencySketch::new(),
+        };
+        base.exec.record(800);
+        let d = s0.delta_since(&base);
         assert_eq!(d.requests, 2);
         assert_eq!(d.occupancy_sum, 4);
+        assert_eq!(d.exec.count(), 1, "interval keeps only the 2-batch exec");
     }
 
     #[test]
@@ -415,10 +701,15 @@ mod tests {
     }
 
     #[test]
-    fn scale_events_update_counters_gauge_and_log() {
+    fn scale_events_update_counters_gauge_log_and_p99_annotation() {
         let mut m = Metrics::new();
         m.record_shards("p8", 1);
         assert_eq!(m.snapshot().rows[0].1.shards, 1);
+        // Give the variant a tail before the first transition so the
+        // event carries the p99 that triggered it.
+        for _ in 0..100 {
+            m.observe("p8", Duration::from_micros(1_000), &sample(0, 0, 0, 1_000), 1);
+        }
         m.record_scale("p8", 1, 2);
         m.record_scale("p8", 2, 3);
         m.record_scale("p8", 3, 2);
@@ -428,67 +719,27 @@ mod tests {
         assert_eq!(p8.scale_downs, 1);
         assert_eq!(p8.shards, 2, "gauge tracks the latest transition");
         assert_eq!(s.events.len(), 3);
-        assert_eq!(
-            s.events[0],
-            ScaleEvent {
-                variant: "p8".into(),
-                from: 1,
-                to: 2
-            }
+        assert_eq!(s.events[0].variant, "p8");
+        assert_eq!((s.events[0].from, s.events[0].to), (1, 2));
+        let p99 = s.events[0].p99_us;
+        assert!(
+            (1_000..=1_032).contains(&p99),
+            "event carries the sketch p99 at decision time, got {p99}"
         );
         let rendered = s.render();
         assert!(rendered.contains("scale events:"));
-        assert!(rendered.contains("p8 1 -> 2 shards"));
-    }
-
-    #[test]
-    fn percentiles_from_histogram_buckets() {
-        let mut m = Metrics::new();
-        // 60 requests at 200µs (≤300 bucket), 30 at 2ms (≤3000), 10 at
-        // 50ms (≤100_000): a known three-bucket distribution.
-        for _ in 0..60 {
-            m.observe("v", Duration::from_micros(200), Duration::from_micros(1), 1);
-        }
-        for _ in 0..30 {
-            m.observe("v", Duration::from_micros(2_000), Duration::from_micros(1), 1);
-        }
-        for _ in 0..10 {
-            m.observe("v", Duration::from_micros(50_000), Duration::from_micros(1), 1);
-        }
-        let s = &m.snapshot().rows[0].1;
-        assert_eq!(s.requests, 100);
-        // rank 50 falls in the ≤300µs bucket.
-        assert_eq!(s.p50_us(), 300);
-        // rank 95/99 fall in the ≤100ms bucket, tightened to the max.
-        assert_eq!(s.p95_us(), 50_000);
-        assert_eq!(s.p99_us(), 50_000);
-        // Quantile ordering always holds.
-        assert!(s.p50_us() <= s.p95_us() && s.p95_us() <= s.p99_us());
-        assert!(s.p99_us() <= s.max_latency_us);
-    }
-
-    #[test]
-    fn percentile_edges() {
-        let empty = VariantStats::default();
-        assert_eq!(empty.percentile_us(0.99), 0);
-        let mut m = Metrics::new();
-        // One request below the first bucket bound: every quantile is
-        // tightened to the observed max, not the 100µs bucket bound.
-        m.observe("v", Duration::from_micros(40), Duration::from_micros(1), 1);
-        let s = &m.snapshot().rows[0].1;
-        assert_eq!(s.p50_us(), 40);
-        assert_eq!(s.p99_us(), 40);
+        assert!(rendered.contains("p8 1 -> 2 shards (p99 1.000ms)"), "{rendered}");
     }
 
     #[test]
     fn delta_since_isolates_an_interval() {
         let mut m = Metrics::new();
-        m.observe("v", Duration::from_micros(200), Duration::from_micros(1), 2);
-        m.observe("v", Duration::from_micros(200), Duration::from_micros(1), 2);
+        m.observe("v", Duration::from_micros(200), &sample(100, 50, 10, 40), 2);
+        m.observe("v", Duration::from_micros(200), &sample(100, 50, 10, 40), 2);
         m.record_rejected("v");
         m.record_scale("v", 1, 2);
         let base = m.snapshot().rows[0].1.clone();
-        m.observe("v", Duration::from_micros(2_000), Duration::from_micros(5), 4);
+        m.observe("v", Duration::from_micros(2_000), &sample(1_000, 500, 100, 400), 4);
         m.record_rejected("v");
         m.record_scale("v", 2, 3);
         let cur = &m.snapshot().rows[0].1;
@@ -497,15 +748,16 @@ mod tests {
         assert_eq!(d.rejected, 1);
         assert_eq!(d.occupancy_sum, 4);
         assert_eq!(d.mean_latency_us(), 2_000.0);
-        assert_eq!(d.hist[1], 0, "pre-baseline bucket counts removed");
-        assert_eq!(d.hist[3], 1);
-        assert_eq!(d.p50_us(), 2_000, "percentiles reflect only the interval");
+        assert!(d.p50_us() >= 2_000, "percentiles reflect only the interval");
+        assert_eq!(d.latency.count(), 1);
+        assert_eq!(d.stage(Stage::Queue).count(), 1, "stage deltas ride along");
+        assert!((d.stage(Stage::Queue).mean_us() - 1_000.0).abs() < 1e-9);
         assert_eq!(d.scale_ups, 1, "only the in-interval scale event");
         assert_eq!(d.shards, 3, "gauge keeps the current value");
         // Delta against an empty base is the identity.
         let id = cur.delta_since(&VariantStats::default());
         assert_eq!(id.requests, cur.requests);
-        assert_eq!(id.hist, cur.hist);
+        assert_eq!(id.latency, cur.latency);
     }
 
     #[test]
@@ -518,5 +770,39 @@ mod tests {
         assert_eq!(p8.rejected, 2);
         assert_eq!(p8.requests, 0);
         assert!(s.render().contains("p8"));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_every_family() {
+        let mut m = Metrics::new();
+        m.observe("p16", Duration::from_micros(750), &sample(100, 50, 10, 590), 2);
+        m.observe_shard("p16#0", 2, Duration::from_micros(590));
+        m.record_rejected("p16");
+        m.record_scale("p16", 1, 2);
+        let prom = m.snapshot().render_prom();
+        for needle in [
+            "# TYPE posar_requests_total counter",
+            "posar_requests_total{variant=\"p16\"} 1",
+            "posar_rejected_total{variant=\"p16\"} 1",
+            "# TYPE posar_latency_us summary",
+            "posar_latency_us{variant=\"p16\",quantile=\"0.99\"}",
+            "posar_latency_us_sum{variant=\"p16\"} 750",
+            "posar_latency_us_count{variant=\"p16\"} 1",
+            "posar_stage_us{variant=\"p16\",stage=\"queue\",quantile=\"0.5\"}",
+            "posar_stage_us{variant=\"p16\",stage=\"exec\",quantile=\"0.999\"}",
+            "posar_stage_us_count{variant=\"p16\",stage=\"batch\"} 1",
+            "posar_shards{variant=\"p16\"} 2",
+            "posar_scale_ups_total{variant=\"p16\"} 1",
+            "posar_scale_downs_total{variant=\"p16\"} 0",
+            "posar_shard_requests_total{shard=\"p16#0\"} 2",
+            "posar_shard_exec_us{shard=\"p16#0\",quantile=\"0.99\"}",
+        ] {
+            assert!(prom.contains(needle), "missing {needle:?} in:\n{prom}");
+        }
+        // Label escaping: hostile variant names stay one line, quoted.
+        let mut m = Metrics::new();
+        m.record_rejected("a\"b\\c");
+        let prom = m.snapshot().render_prom();
+        assert!(prom.contains("posar_rejected_total{variant=\"a\\\"b\\\\c\"} 1"));
     }
 }

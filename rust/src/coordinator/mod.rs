@@ -39,20 +39,36 @@
 //!
 //! Worker init failures (e.g. PJRT unavailable) surface as an error from
 //! [`Coordinator::start`] instead of killing the thread silently.
+//!
+//! **Observability** (see `docs/OBSERVABILITY.md`): every request is
+//! timed through four stages (queue → batch-wait → encode → execute)
+//! into per-variant log-linear latency sketches ([`metrics`], exact-tail
+//! p50/p99/p99.9 within 3.125% relative error), per-shard execute
+//! sketches ride under `variant#k` labels, and an optional [`Tracer`]
+//! ([`ServeConfig::trace`]) emits JSONL span records for sampled/slow
+//! requests. [`Snapshot::render_prom`] exposes it all in the Prometheus
+//! text format, and `repro bench-compare` diffs two serve-bench JSON
+//! snapshots for regressions.
 
 pub mod autoscale;
 pub mod backend;
 pub mod batcher;
+pub mod compare;
 pub mod loadgen;
 pub mod metrics;
 pub mod pool;
+pub mod sketch;
+pub mod trace;
 
 pub use autoscale::{AutoscaleConfig, ScaleAction, ShardScaler};
 pub use backend::{InferBackend, PjrtBackend, PvuBackend, NATIVE_VARIANTS};
 pub use batcher::{Batcher, Request};
+pub use compare::{compare_files, compare_json, CompareReport};
 pub use loadgen::{run_bench, BenchConfig, BenchSummary, VariantBench};
-pub use metrics::{Metrics, ScaleEvent, Snapshot};
+pub use metrics::{Metrics, ScaleEvent, Snapshot, Stage, StageSample};
 pub use pool::Pool;
+pub use sketch::LatencySketch;
+pub use trace::{Span, TraceConfig, Tracer};
 
 use crate::cnn;
 use crate::posit::{PositSpec, P16, P32, P8};
@@ -61,11 +77,11 @@ use crate::runtime::Manifest;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Which execution engine the workers run.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -132,6 +148,10 @@ pub struct ServeConfig {
     /// Shard autoscaler policy. Disabled unless
     /// [`AutoscaleConfig::max_shards`] is non-zero.
     pub autoscale: AutoscaleConfig,
+    /// Span-trace sampling (`--trace-sample` / `--trace-slow-us` /
+    /// `--trace-file`). Off by default; when enabled the workers emit
+    /// one JSONL record per selected request (see [`trace`]).
+    pub trace: TraceConfig,
 }
 
 impl Default for ServeConfig {
@@ -146,6 +166,7 @@ impl Default for ServeConfig {
             intra_batch: 1,
             adaptive_wait: false,
             autoscale: AutoscaleConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -190,6 +211,9 @@ struct ShardSpawn {
     max_wait: Duration,
     adaptive_wait: bool,
     queue_depth: usize,
+    /// Shared span sink (None = tracing off). Rides along so shards
+    /// spawned at scale-up time trace exactly like start-time ones.
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// Everything a worker thread needs, bundled to cross `spawn`.
@@ -201,6 +225,7 @@ struct WorkerCtx {
     adaptive_wait: bool,
     metrics: Arc<Mutex<Metrics>>,
     inflight: Arc<AtomicUsize>,
+    tracer: Option<Arc<Tracer>>,
     /// Init verdict channel: the shared one `Coordinator::start` awaits
     /// in bulk, or a private one `spawn_shard` awaits synchronously for
     /// runtime (autoscaler/manual) spawns.
@@ -230,6 +255,8 @@ pub struct Coordinator {
     metrics: Arc<Mutex<Metrics>>,
     handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
     spawn: ShardSpawn,
+    /// Admission-order request-id source (trace sampling key).
+    next_req_id: AtomicU64,
     /// Intra-batch pool width the native workers were built with.
     intra_batch: usize,
     /// Dropping this stops the autoscale controller.
@@ -274,6 +301,7 @@ fn spawn_shard(
         adaptive_wait: spawn.adaptive_wait,
         metrics: Arc::clone(metrics),
         inflight: Arc::clone(&inflight),
+        tracer: spawn.tracer.clone(),
         init_tx: worker_init_tx,
     };
     let handle = std::thread::Builder::new()
@@ -428,6 +456,7 @@ impl Coordinator {
             max_wait: cfg.max_wait,
             adaptive_wait: cfg.adaptive_wait,
             queue_depth: cfg.queue_depth,
+            tracer: Tracer::from_config(&cfg.trace)?.map(Arc::new),
         };
         let mut routes = HashMap::new();
         let (init_tx, init_rx) =
@@ -519,6 +548,7 @@ impl Coordinator {
             metrics,
             handles,
             spawn,
+            next_req_id: AtomicU64::new(0),
             intra_batch: cfg.intra_batch.max(1),
             scaler_stop,
             scaler_handle,
@@ -600,10 +630,12 @@ impl Coordinator {
     /// tries every shard and, when all queues are full, records a
     /// rejection and returns `Ok(false)` (the request is dropped; its
     /// reply channel disconnects, which a waiting client observes).
-    pub fn submit(&self, variant: &str, req: Request, block: bool) -> Result<bool> {
+    pub fn submit(&self, variant: &str, mut req: Request, block: bool) -> Result<bool> {
         let route = self.routes.get(variant).ok_or_else(|| {
             anyhow!("unknown variant {variant:?} (have {:?})", self.variants())
         })?;
+        // Admission stamps the coordinator-wide id the tracer samples on.
+        req.id = self.next_req_id.fetch_add(1, Ordering::Relaxed);
         // The read lock only covers shard *selection* (and the brief
         // try_send scan below). A blocking send must not hold it: it can
         // park for queue_depth × exec-time, which would stall the
@@ -630,7 +662,6 @@ impl Coordinator {
                 }
             }
         } else {
-            let mut req = req;
             for k in 0..n {
                 let shard = &shards[(first + k) % n];
                 shard.inflight.fetch_add(1, Ordering::Relaxed);
@@ -656,15 +687,7 @@ impl Coordinator {
     /// (backpressure: blocks while the chosen shard's queue is full).
     pub fn infer(&self, variant: &str, features: Vec<f32>) -> Result<Reply> {
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
-        self.submit(
-            variant,
-            Request {
-                features,
-                reply: rtx,
-                enqueued: std::time::Instant::now(),
-            },
-            true,
-        )?;
+        self.submit(variant, Request::new(features, rtx), true)?;
         rrx.recv().map_err(|_| anyhow!("worker {variant} dropped reply"))?
     }
 
@@ -673,15 +696,7 @@ impl Coordinator {
     /// rejection) — the open-loop load-shedding path.
     pub fn try_infer(&self, variant: &str, features: Vec<f32>) -> Result<Option<Reply>> {
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
-        let accepted = self.submit(
-            variant,
-            Request {
-                features,
-                reply: rtx,
-                enqueued: std::time::Instant::now(),
-            },
-            false,
-        )?;
+        let accepted = self.submit(variant, Request::new(features, rtx), false)?;
         if !accepted {
             return Ok(None);
         }
@@ -694,6 +709,11 @@ impl Coordinator {
     /// Metrics snapshot.
     pub fn metrics(&self) -> Snapshot {
         self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Span records written so far (`None` when tracing is disabled).
+    pub fn trace_written(&self) -> Option<u64> {
+        self.spawn.tracer.as_ref().map(|t| t.written())
     }
 
     /// Stop the controller and all workers, idempotently. Order matters:
@@ -776,6 +796,7 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
         adaptive_wait,
         metrics,
         inflight,
+        tracer,
         init_tx,
     } = ctx;
     let mut be = match factory() {
@@ -805,6 +826,9 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
         let Some(batch) = batcher.next_batch(&rx) else {
             return; // channel closed and drained
         };
+        // Batch dispatch instant: closes every member's batch-wait stage
+        // (the last dequeue is at most a deadline-poll behind this).
+        let dispatched = Instant::now();
         // Shape-check before the copy loop: a malformed request must
         // error its own reply, not kill the shard.
         let (batch, bad): (Vec<Request>, Vec<Request>) = batch
@@ -838,7 +862,7 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
             let q = encode_batch(spec, &x[..filled]);
             x[..filled].copy_from_slice(&q);
         }
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let outcome = be.run(&x, n).and_then(|probs| {
             anyhow::ensure!(
                 probs.len() >= n * classes,
@@ -850,15 +874,53 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
         match outcome {
             Ok(probs) => {
                 let dt = t0.elapsed();
+                let done = Instant::now();
+                // Cut the four stages from the shared clock readings, so
+                // per request queue + batch + encode + exec sums to the
+                // end-to-end latency (up to the reply fan-out below).
+                let stages_of = |req: &Request| {
+                    let dq = req.dequeued.unwrap_or(dispatched);
+                    StageSample {
+                        queue: dq.saturating_duration_since(req.enqueued),
+                        batch_wait: dispatched.saturating_duration_since(dq),
+                        encode: t0.saturating_duration_since(dispatched),
+                        exec: dt,
+                    }
+                };
                 {
                     let mut m = metrics.lock().unwrap();
                     for req in &batch {
-                        m.observe(&variant, req.enqueued.elapsed(), dt, n as u64);
+                        let e2e = done.saturating_duration_since(req.enqueued);
+                        m.observe(&variant, e2e, &stages_of(req), n as u64);
                     }
-                    // One shard-occupancy update per batch, reusing the
-                    // worker's label — no per-request allocation inside
-                    // the global metrics lock.
-                    m.observe_shard(&label, n as u64);
+                    // One shard update per batch (occupancy + the batch's
+                    // execute wall time), reusing the worker's label — no
+                    // per-request allocation inside the global metrics
+                    // lock.
+                    m.observe_shard(&label, n as u64, dt);
+                }
+                // Span emission happens outside the metrics lock; the
+                // selection test is lock-free, so unsampled requests pay
+                // only an integer compare.
+                if let Some(tr) = &tracer {
+                    for req in &batch {
+                        let e2e = done.saturating_duration_since(req.enqueued);
+                        let e2e_us = sketch::duration_us(e2e);
+                        if tr.should_emit(req.id, e2e_us) {
+                            let s = stages_of(req);
+                            tr.emit(&Span {
+                                id: req.id,
+                                variant: &variant,
+                                shard: &label,
+                                batch_n: n as u64,
+                                queue_us: sketch::duration_us(s.queue),
+                                batch_us: sketch::duration_us(s.batch_wait),
+                                encode_us: sketch::duration_us(s.encode),
+                                exec_us: sketch::duration_us(s.exec),
+                                e2e_us,
+                            });
+                        }
+                    }
                 }
                 for (i, req) in batch.into_iter().enumerate() {
                     let row = probs[i * classes..(i + 1) * classes].to_vec();

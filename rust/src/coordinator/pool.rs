@@ -13,6 +13,11 @@
 //! the result bytes) independent of thread interleaving. That is the
 //! property the serving stack's bit-exactness guarantee rests on.
 //!
+//! A `map_chunks` call runs entirely inside the worker's backend
+//! `run()`, so its wall time lands in the metrics' `exec` stage — widen
+//! the pool and the per-shard `exec` sketches are where the speedup
+//! shows up.
+//!
 //! Threads are spawned per invocation and joined before it returns
 //! (scoped fork–join), so borrowed inputs need no `'static` bound and a
 //! `Pool` holds no OS resources between calls. Spawn cost is ~tens of

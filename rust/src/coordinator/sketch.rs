@@ -1,0 +1,371 @@
+//! Dependency-free HDR-style log-linear latency sketch.
+//!
+//! [`LatencySketch`] buckets microsecond values by octave, with
+//! `2^SUB_BITS = 32` linear sub-buckets per octave — the HdrHistogram
+//! layout, sized for serving latencies. Every bucket spans at most
+//! `1/32` of its lower bound, so a reported quantile is within
+//! [`MAX_RELATIVE_ERROR`] (3.125%) of the true order statistic at any
+//! scale from 1 µs to [`MAX_VALUE_US`] (~71 minutes). That replaces the
+//! old fixed 8-bucket histogram, whose "percentiles" were bucket upper
+//! bounds up to 3× the true value.
+//!
+//! Sketches are **mergeable** (element-wise count addition — shard
+//! sketches combine into a variant sketch without rank error) and
+//! support counter-wise **interval deltas** ([`LatencySketch::delta_since`])
+//! for warm-start benchmarking. Memory is a fixed 896 × u64 counter
+//! array per sketch (~7 KiB), allocated once.
+
+use std::time::Duration;
+
+/// Linear sub-buckets per octave, as a bit count: `2^5 = 32`.
+pub const SUB_BITS: u32 = 5;
+
+/// Sub-buckets per octave.
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Largest recordable value in µs (`u32::MAX` ≈ 71.6 minutes). Larger
+/// values saturate here instead of widening the bucket table — far
+/// beyond any serving latency worth resolving.
+pub const MAX_VALUE_US: u64 = u32::MAX as u64;
+
+/// Worst-case relative error of a reported quantile: a bucket spans at
+/// most `1/2^SUB_BITS` of its lower bound.
+pub const MAX_RELATIVE_ERROR: f64 = 1.0 / SUB as f64;
+
+/// Bucket count covering `0..=MAX_VALUE_US`: values below `SUB` get one
+/// exact bucket each, and each of the remaining `31 - SUB_BITS + 1`
+/// octaves contributes `SUB` sub-buckets.
+const N_BUCKETS: usize = (31 - SUB_BITS as usize) * SUB as usize + 2 * SUB as usize;
+
+/// Convert a duration to saturating microseconds (the sketch's unit).
+pub(crate) fn duration_us(d: Duration) -> u64 {
+    u64::try_from(d.as_micros()).unwrap_or(u64::MAX)
+}
+
+/// Bucket index of a (clamped) value: exact below `SUB`, log-linear
+/// above — top octave bit selects the octave, the next `SUB_BITS` bits
+/// select the linear sub-bucket.
+fn index(v: u64) -> usize {
+    let v = v.min(MAX_VALUE_US);
+    if v < SUB {
+        v as usize
+    } else {
+        let top = 63 - u64::from(v.leading_zeros());
+        let shift = top - u64::from(SUB_BITS);
+        (shift * SUB + (v >> shift)) as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (the value a quantile landing in
+/// the bucket reports, before tightening to the observed max).
+fn bucket_high(i: usize) -> u64 {
+    let i = i as u64;
+    if i < SUB {
+        i
+    } else {
+        let shift = i / SUB - 1;
+        let mantissa = i % SUB + SUB;
+        (mantissa << shift) + (1 << shift) - 1
+    }
+}
+
+/// A mergeable log-linear latency histogram with bounded-relative-error
+/// quantiles (see the module docs for the layout).
+#[derive(Clone, PartialEq)]
+pub struct LatencySketch {
+    counts: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    /// `u64::MAX` while empty (so `min` folds correctly under merge).
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencySketch {
+    fn default() -> Self {
+        LatencySketch {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for LatencySketch {
+    /// The 896-counter array is noise in test output; print the summary
+    /// statistics instead.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencySketch")
+            .field("count", &self.count)
+            .field("min_us", &self.min_us())
+            .field("p50_us", &self.quantile_us(0.5))
+            .field("p99_us", &self.quantile_us(0.99))
+            .field("max_us", &self.max_us)
+            .finish()
+    }
+}
+
+impl LatencySketch {
+    /// Empty sketch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one value in µs (clamped to [`MAX_VALUE_US`]).
+    pub fn record(&mut self, us: u64) {
+        let v = us.min(MAX_VALUE_US);
+        self.counts[index(v)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(v);
+        self.min_us = self.min_us.min(v);
+        self.max_us = self.max_us.max(v);
+    }
+
+    /// Record one duration.
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(duration_us(d));
+    }
+
+    /// Values recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Whether anything has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Sum of recorded values, µs (saturating).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Mean recorded value, µs (0 while empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Smallest recorded value, µs (0 while empty).
+    pub fn min_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_us
+        }
+    }
+
+    /// Largest recorded value, µs (0 while empty).
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// The `q`-quantile (q in `(0, 1]`), µs: the upper bound of the
+    /// bucket holding rank `ceil(q·count)`, tightened to the observed
+    /// max — within [`MAX_RELATIVE_ERROR`] of the exact order statistic.
+    /// Returns 0 while empty.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_high(i).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Fold another sketch in: counter-wise addition, so the merge of
+    /// shard sketches ranks identically to one sketch that had seen
+    /// every value (merging is associative and commutative).
+    pub fn merge(&mut self, other: &LatencySketch) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Interval view: counter-wise subtraction against an earlier
+    /// snapshot of the *same* sketch. Quantile ranks and the mean then
+    /// cover only the interval. `min_us`/`max_us` stay cumulative — an
+    /// extremum cannot be un-merged — so a quantile landing in the top
+    /// occupied bucket may report the lifetime max; benches that need
+    /// clean tails should start from a fresh coordinator.
+    pub fn delta_since(&self, base: &LatencySketch) -> LatencySketch {
+        let mut out = LatencySketch::default();
+        for (o, (a, b)) in out.counts.iter_mut().zip(self.counts.iter().zip(&base.counts)) {
+            *o = a.saturating_sub(*b);
+        }
+        out.count = self.count.saturating_sub(base.count);
+        out.sum_us = self.sum_us.saturating_sub(base.sum_us);
+        out.min_us = self.min_us;
+        out.max_us = self.max_us;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    #[test]
+    fn bucket_layout_is_consistent_and_monotonic() {
+        // Every representable value maps into a bucket whose upper bound
+        // is ≥ the value and within the relative-error band of it.
+        let mut probe: Vec<u64> = (0..2048).collect();
+        let mut rng = Rng::new(0x5EE7);
+        for _ in 0..4000 {
+            probe.push(rng.below(MAX_VALUE_US + 1));
+        }
+        probe.push(MAX_VALUE_US);
+        for &v in &probe {
+            let i = index(v);
+            assert!(i < N_BUCKETS, "v={v} index {i} out of range");
+            let high = bucket_high(i);
+            assert!(high >= v, "v={v}: bucket high {high} below the value");
+            let err = (high - v) as f64 / (v.max(1)) as f64;
+            assert!(
+                err <= MAX_RELATIVE_ERROR,
+                "v={v}: bucket high {high} errs by {err}"
+            );
+            // Exact region: one bucket per value.
+            if v < 32 {
+                assert_eq!(high, v);
+            }
+        }
+        // Bucket highs are strictly increasing — no overlapping buckets.
+        for i in 1..N_BUCKETS {
+            assert!(bucket_high(i) > bucket_high(i - 1), "bucket {i}");
+        }
+        assert_eq!(bucket_high(N_BUCKETS - 1), MAX_VALUE_US);
+    }
+
+    #[test]
+    fn quantiles_stay_within_the_relative_error_bound() {
+        // Property test over log-uniform latencies (1 µs .. ~100 s):
+        // every reported quantile within 3.125% of the exact order
+        // statistic, across several seeds.
+        for seed in [1u64, 0xDECAF, 0xA11CE] {
+            let mut rng = Rng::new(seed);
+            let mut s = LatencySketch::new();
+            let mut vals: Vec<u64> = (0..5000)
+                .map(|_| 10f64.powf(rng.range(0.0, 8.0)) as u64)
+                .collect();
+            for &v in &vals {
+                s.record(v);
+            }
+            vals.sort_unstable();
+            for q in [0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+                let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+                let exact = vals[rank - 1] as f64;
+                let got = s.quantile_us(q) as f64;
+                // The sketch reports the bucket's upper bound, so it
+                // never under-reports and over-reports by ≤ 1/32.
+                assert!(
+                    got >= exact && got <= exact * (1.0 + MAX_RELATIVE_ERROR) + 1.0,
+                    "seed {seed} q={q}: exact {exact} got {got}"
+                );
+            }
+            assert_eq!(s.count(), 5000);
+            assert_eq!(s.min_us(), vals[0]);
+            assert_eq!(s.max_us(), *vals.last().unwrap());
+            let mean: f64 = vals.iter().map(|&v| v as f64).sum::<f64>() / vals.len() as f64;
+            assert!((s.mean_us() - mean).abs() < 1e-6 * mean.max(1.0));
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_single_sketch() {
+        let mut rng = Rng::new(0xFACE);
+        let mut shards = [
+            LatencySketch::new(),
+            LatencySketch::new(),
+            LatencySketch::new(),
+        ];
+        let mut all = LatencySketch::new();
+        for i in 0..3000 {
+            let v = rng.below(5_000_000);
+            shards[i % 3].record(v);
+            all.record(v);
+        }
+        // (a ∪ b) ∪ c == a ∪ (b ∪ c) — and both equal the single sketch
+        // that saw every value.
+        let mut left = shards[0].clone();
+        left.merge(&shards[1]);
+        left.merge(&shards[2]);
+        let mut bc = shards[1].clone();
+        bc.merge(&shards[2]);
+        let mut right = shards[0].clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "merge must be associative");
+        assert_eq!(left, all, "merged shards must rank like one sketch");
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(left.quantile_us(q), all.quantile_us(q));
+        }
+    }
+
+    #[test]
+    fn saturates_at_the_value_cap() {
+        let mut s = LatencySketch::new();
+        s.record(u64::MAX);
+        s.record(MAX_VALUE_US + 1);
+        assert_eq!(s.max_us(), MAX_VALUE_US);
+        assert_eq!(s.quantile_us(1.0), MAX_VALUE_US);
+        assert_eq!(s.count(), 2);
+    }
+
+    #[test]
+    fn empty_sketch_reports_zeros() {
+        let s = LatencySketch::new();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile_us(0.99), 0);
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.min_us(), 0);
+        assert_eq!(s.max_us(), 0);
+    }
+
+    #[test]
+    fn delta_since_isolates_an_interval() {
+        let mut s = LatencySketch::new();
+        for _ in 0..100 {
+            s.record(100);
+        }
+        let base = s.clone();
+        for _ in 0..10 {
+            s.record(10_000);
+        }
+        let d = s.delta_since(&base);
+        assert_eq!(d.count(), 10);
+        // All interval values are 10 ms; the bucket bound tightens to
+        // the observed max, so the quantile is exact here.
+        assert_eq!(d.quantile_us(0.5), 10_000, "pre-baseline values removed");
+        assert!((d.mean_us() - 10_000.0).abs() < 1.0);
+        // Extrema stay cumulative (documented): the min is lifetime.
+        assert_eq!(d.min_us(), 100);
+        // Delta against an empty base is the identity.
+        let id = s.delta_since(&LatencySketch::default());
+        assert_eq!(id, s);
+    }
+
+    #[test]
+    fn record_duration_uses_microseconds() {
+        let mut s = LatencySketch::new();
+        s.record_duration(Duration::from_millis(3));
+        assert_eq!(s.sum_us(), 3_000);
+        assert!(s.quantile_us(1.0) >= 3_000 && s.quantile_us(1.0) <= 3_094);
+    }
+}

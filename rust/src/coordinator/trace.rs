@@ -1,0 +1,249 @@
+//! Per-request span tracing: the individual-request complement to the
+//! aggregate sketches in [`super::metrics`].
+//!
+//! Sketches answer *"what is the p99?"*; spans answer *"where did this
+//! slow request spend its time?"*. The worker hands every finished
+//! request to [`Tracer::should_emit`], which selects
+//!
+//! * every `sample_every`-th request (deterministic modular sampling on
+//!   the admission-assigned request id — reproducible under a fixed
+//!   workload, no RNG), and
+//! * every request slower than `slow_us` end-to-end (the tail you would
+//!   grep for first),
+//!
+//! and [`Tracer::emit`] appends one JSON object per span, one per line
+//! (JSONL), to the configured sink:
+//!
+//! ```json
+//! {"id":7,"variant":"p16","shard":"p16#0","batch_n":4,
+//!  "queue_us":120,"batch_us":310,"encode_us":22,"exec_us":640,"e2e_us":1094}
+//! ```
+//!
+//! All durations are integer microseconds, cut from the same clock
+//! readings as the metrics stages, so `queue_us + batch_us + encode_us +
+//! exec_us ≈ e2e_us` per line (see `docs/OBSERVABILITY.md`). Enabled by
+//! `repro serve|serve-bench --trace-sample N [--trace-slow-us T]
+//! [--trace-file PATH]`.
+
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Span-tracing configuration (all off by default).
+#[derive(Clone, Debug, Default)]
+pub struct TraceConfig {
+    /// Emit every `sample_every`-th request (by admission id). 0 turns
+    /// modular sampling off.
+    pub sample_every: u64,
+    /// Also emit any request whose end-to-end latency reaches this many
+    /// microseconds. 0 turns the slow filter off.
+    pub slow_us: u64,
+    /// Span sink path; `None` means the default `trace_spans.jsonl`
+    /// (only consulted when tracing is enabled at all).
+    pub path: Option<PathBuf>,
+}
+
+impl TraceConfig {
+    /// Whether any selection rule is active.
+    pub fn enabled(&self) -> bool {
+        self.sample_every > 0 || self.slow_us > 0
+    }
+}
+
+/// One finished request's stage breakdown, borrowed from the worker at
+/// emission time.
+#[derive(Clone, Copy, Debug)]
+pub struct Span<'a> {
+    /// Admission-assigned request id.
+    pub id: u64,
+    /// Variant served (`fp32`, `p16`, ...).
+    pub variant: &'a str,
+    /// Worker shard label (`variant#k`).
+    pub shard: &'a str,
+    /// Occupancy of the batch this request rode in.
+    pub batch_n: u64,
+    /// Queue-stage duration (µs).
+    pub queue_us: u64,
+    /// Batch-wait-stage duration (µs).
+    pub batch_us: u64,
+    /// Encode-stage duration (µs).
+    pub encode_us: u64,
+    /// Execute-stage duration (µs).
+    pub exec_us: u64,
+    /// End-to-end latency (µs).
+    pub e2e_us: u64,
+}
+
+/// JSONL span sink shared by all worker shards. Selection
+/// ([`Tracer::should_emit`]) is lock-free; only emission serializes on
+/// the writer lock, so tracing costs the hot path nothing for
+/// non-selected requests.
+pub struct Tracer {
+    sample_every: u64,
+    slow_us: u64,
+    out: Mutex<Box<dyn Write + Send>>,
+    written: AtomicU64,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("sample_every", &self.sample_every)
+            .field("slow_us", &self.slow_us)
+            .field("written", &self.written.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// Build a tracer from config: `Ok(None)` when tracing is disabled,
+    /// otherwise a tracer writing to `config.path` (default
+    /// `trace_spans.jsonl`), truncating any previous file.
+    pub fn from_config(config: &TraceConfig) -> Result<Option<Tracer>> {
+        if !config.enabled() {
+            return Ok(None);
+        }
+        let path = config
+            .path
+            .clone()
+            .unwrap_or_else(|| PathBuf::from("trace_spans.jsonl"));
+        let file = File::create(&path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(Some(Self::to_writer(
+            config.sample_every,
+            config.slow_us,
+            Box::new(BufWriter::new(file)),
+        )))
+    }
+
+    /// Tracer over an arbitrary sink (tests use an in-memory buffer).
+    pub fn to_writer(sample_every: u64, slow_us: u64, out: Box<dyn Write + Send>) -> Tracer {
+        Tracer {
+            sample_every,
+            slow_us,
+            out: Mutex::new(out),
+            written: AtomicU64::new(0),
+        }
+    }
+
+    /// Selection rule: modular sample on the request id, or end-to-end
+    /// latency at/above the slow threshold. Cheap — no lock taken.
+    pub fn should_emit(&self, id: u64, e2e_us: u64) -> bool {
+        (self.sample_every > 0 && id % self.sample_every == 0)
+            || (self.slow_us > 0 && e2e_us >= self.slow_us)
+    }
+
+    /// Append one JSONL span record and flush it (spans must survive an
+    /// abort — they exist to debug misbehaving runs).
+    pub fn emit(&self, span: &Span<'_>) {
+        let line = format!(
+            "{{\"id\":{},\"variant\":\"{}\",\"shard\":\"{}\",\"batch_n\":{},\"queue_us\":{},\"batch_us\":{},\"encode_us\":{},\"exec_us\":{},\"e2e_us\":{}}}\n",
+            span.id,
+            crate::coordinator::loadgen::json_escape(span.variant),
+            crate::coordinator::loadgen::json_escape(span.shard),
+            span.batch_n,
+            span.queue_us,
+            span.batch_us,
+            span.encode_us,
+            span.exec_us,
+            span.e2e_us,
+        );
+        let mut out = self.out.lock().unwrap();
+        // A dead sink (disk full, closed pipe) must not take the serving
+        // path down with it; spans are best-effort.
+        if out.write_all(line.as_bytes()).is_ok() {
+            let _ = out.flush();
+            self.written.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Spans successfully written so far.
+    pub fn written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Cloneable in-memory `Write` sink.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl SharedBuf {
+        fn contents(&self) -> String {
+            String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+        }
+    }
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn span(id: u64, e2e_us: u64) -> Span<'static> {
+        Span {
+            id,
+            variant: "p16",
+            shard: "p16#0",
+            batch_n: 4,
+            queue_us: 100,
+            batch_us: 50,
+            encode_us: 10,
+            exec_us: e2e_us.saturating_sub(160),
+            e2e_us,
+        }
+    }
+
+    #[test]
+    fn config_enablement() {
+        assert!(!TraceConfig::default().enabled());
+        assert!(TraceConfig { sample_every: 8, ..Default::default() }.enabled());
+        assert!(TraceConfig { slow_us: 5_000, ..Default::default() }.enabled());
+        assert!(
+            Tracer::from_config(&TraceConfig::default()).unwrap().is_none(),
+            "disabled config builds no tracer (and touches no file)"
+        );
+    }
+
+    #[test]
+    fn modular_sampling_and_slow_filter() {
+        let t = Tracer::to_writer(4, 10_000, Box::new(SharedBuf::default()));
+        assert!(t.should_emit(0, 100), "id 0 is sampled (0 % 4 == 0)");
+        assert!(t.should_emit(8, 100));
+        assert!(!t.should_emit(9, 100));
+        assert!(t.should_emit(9, 10_000), "slow requests always emit");
+        // Slow-only config: no modular term, and no % 0 panic.
+        let slow_only = Tracer::to_writer(0, 5_000, Box::new(SharedBuf::default()));
+        assert!(!slow_only.should_emit(0, 100));
+        assert!(slow_only.should_emit(3, 5_000));
+    }
+
+    #[test]
+    fn emits_one_json_line_per_span() {
+        let buf = SharedBuf::default();
+        let t = Tracer::to_writer(1, 0, Box::new(buf.clone()));
+        t.emit(&span(7, 1_094));
+        t.emit(&span(8, 2_000));
+        assert_eq!(t.written(), 2);
+        let text = buf.contents();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            "{\"id\":7,\"variant\":\"p16\",\"shard\":\"p16#0\",\"batch_n\":4,\
+             \"queue_us\":100,\"batch_us\":50,\"encode_us\":10,\"exec_us\":934,\"e2e_us\":1094}"
+        );
+        assert!(lines[1].contains("\"id\":8"));
+    }
+}

@@ -36,10 +36,12 @@
 //!   parallelism ([`coordinator::Pool`]), a shard autoscaler driven by
 //!   the in-flight gauges ([`coordinator::autoscale`]), pluggable
 //!   inference backends (native PVU — no artifacts needed — or PJRT),
-//!   histogram metrics with `p50≤`/`p95≤`/`p99≤` bucket bounds +
-//!   rejection counters + scale events, and the closed/open-loop load
-//!   generator behind `repro serve-bench`. See `docs/ARCHITECTURE.md`
-//!   and `docs/serving.md`.
+//!   exact-tail telemetry (log-linear latency sketches with per-stage
+//!   timers — [`coordinator::LatencySketch`] — JSONL span tracing,
+//!   Prometheus exposition, and the `bench-compare` perf-trajectory
+//!   diff), and the closed/open-loop load generator behind
+//!   `repro serve-bench`. See `docs/ARCHITECTURE.md`,
+//!   `docs/serving.md` and `docs/OBSERVABILITY.md`.
 //! - [`report`] — table/figure renderers that regenerate the paper's
 //!   evaluation section.
 

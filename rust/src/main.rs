@@ -6,7 +6,8 @@
 
 use posar::cnn;
 use posar::coordinator::{
-    run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Routing, ServeConfig,
+    compare_files, run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Routing,
+    ServeConfig, TraceConfig,
 };
 use posar::report;
 use std::time::{Duration, Instant};
@@ -38,7 +39,8 @@ serving:
   serve [--backend pvu|pjrt] [--requests N] [--variants a,b,..]
         [--shards S] [--routing rr|lq] [--intra-batch P]
         [--adaptive-wait] [--autoscale-max M] [--autoscale-min m]
-        [--scale-interval-ms I]
+        [--scale-interval-ms I] [--trace-sample N] [--trace-slow-us T]
+        [--trace-file PATH] [--prom PATH]
                          batched inference. Backend `pvu` (default) runs
                          the CNN natively on the Posit Vector Unit — no
                          artifacts needed; `pjrt` serves the AOT
@@ -49,20 +51,34 @@ serving:
                          live shards per variant between m (default 1)
                          and M from the in-flight gauges;
                          --adaptive-wait shrinks the batcher deadline
-                         under queue pressure (see docs/serving.md)
+                         under queue pressure (see docs/serving.md);
+                         --trace-sample N emits every Nth request (and
+                         --trace-slow-us T any request slower than T µs)
+                         as a JSONL span record to --trace-file
+                         (default trace_spans.jsonl); --prom PATH writes
+                         the Prometheus text exposition at exit
   serve-bench [--smoke] [--backend pvu|pjrt] [--requests N]
               [--concurrency C] [--batch B] [--shards S]
               [--queue-depth D] [--routing rr|lq] [--variants a,b,..]
               [--intra-batch P] [--adaptive-wait] [--autoscale-max M]
               [--autoscale-min m] [--scale-interval-ms I]
               [--open --rate R --duration-ms MS] [--json PATH]
+              [--trace-sample N] [--trace-slow-us T] [--trace-file PATH]
+              [--prom PATH]
                          closed/open-loop load generator; prints a JSON
-                         summary (throughput, p50≤/p95≤/p99≤ bucket
-                         bounds, rejections, scale events, per-shard
-                         occupancy — schema in docs/serving.md) to
-                         stdout and a table to stderr. `--smoke` is
-                         the CI configuration: native backend, small
-                         request count
+                         summary (throughput, exact p50/p95/p99/p99.9
+                         from the latency sketch, per-stage breakdown,
+                         rejections, scale events, per-shard occupancy —
+                         schema in docs/serving.md) to stdout and a
+                         table to stderr. `--smoke` is the CI
+                         configuration: native backend, small request
+                         count
+  bench-compare OLD.json NEW.json [--threshold PCT]
+                         diff two serve-bench JSON snapshots; flags
+                         per-variant throughput/latency/p99/top1
+                         changes beyond PCT%  (default 20) in the bad
+                         direction and exits 1 on regressions (the
+                         in-repo baseline lives at BENCH_serve.json)
 
 misc:
   golden [path]          dump posit golden vectors plus PVU golden
@@ -152,6 +168,17 @@ fn main() {
                 std::process::exit(1);
             }
         },
+        "bench-compare" => match bench_compare(&args) {
+            Ok(clean) => {
+                if !clean {
+                    std::process::exit(1); // regressions found
+                }
+            }
+            Err(e) => {
+                eprintln!("bench-compare failed: {e}");
+                std::process::exit(2);
+            }
+        },
         "golden" => {
             let path = args
                 .get(1)
@@ -215,6 +242,20 @@ fn serve_config(args: &[String], default_batch: usize) -> anyhow::Result<ServeCo
         autoscale.interval >= Duration::from_millis(1),
         "--scale-interval-ms must be at least 1 (0 would busy-spin the controller)"
     );
+    // Span tracing: off unless a selection rule (--trace-sample /
+    // --trace-slow-us) is given. A lone --trace-file is an error under
+    // the strict_num policy — it would silently trace nothing.
+    let trace = TraceConfig {
+        sample_every: strict_num(args, "--trace-sample", 0)?,
+        slow_us: strict_num(args, "--trace-slow-us", 0)?,
+        path: flag(args, "--trace-file").map(std::path::PathBuf::from),
+    };
+    if !trace.enabled() {
+        anyhow::ensure!(
+            flag(args, "--trace-file").is_none(),
+            "--trace-file requires --trace-sample or --trace-slow-us (tracing is off without them)"
+        );
+    }
     Ok(ServeConfig {
         backend,
         shards: strict_num(args, "--shards", 1)? as usize,
@@ -223,8 +264,56 @@ fn serve_config(args: &[String], default_batch: usize) -> anyhow::Result<ServeCo
         intra_batch: strict_num(args, "--intra-batch", 1)? as usize,
         adaptive_wait: args.iter().any(|a| a == "--adaptive-wait"),
         autoscale,
+        trace,
         ..ServeConfig::default()
     })
+}
+
+/// Shared post-run telemetry emission for `serve`/`serve-bench`: write
+/// the Prometheus exposition when `--prom PATH` was given, and note how
+/// many trace spans landed when tracing was on.
+fn emit_telemetry(args: &[String], coord: &Coordinator) -> anyhow::Result<()> {
+    if let Some(path) = flag(args, "--prom") {
+        std::fs::write(&path, coord.metrics().render_prom())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(written) = coord.trace_written() {
+        eprintln!("trace: {written} span records written");
+    }
+    Ok(())
+}
+
+/// `bench-compare OLD.json NEW.json [--threshold PCT]`: returns
+/// `Ok(false)` when regressions were found (exit 1 at the call site).
+fn bench_compare(args: &[String]) -> anyhow::Result<bool> {
+    // Positional operands: everything after the subcommand that isn't a
+    // flag or a flag's value.
+    let mut paths = Vec::new();
+    let mut skip = false;
+    for a in &args[1..] {
+        if skip {
+            skip = false;
+            continue;
+        }
+        if a.starts_with("--") {
+            skip = true; // all bench-compare flags take a value
+            continue;
+        }
+        paths.push(a.as_str());
+    }
+    anyhow::ensure!(
+        paths.len() == 2,
+        "usage: repro bench-compare OLD.json NEW.json [--threshold PCT] (got {} paths)",
+        paths.len()
+    );
+    let threshold = strict_num(args, "--threshold", 20)? as f64;
+    let report = compare_files(
+        std::path::Path::new(paths[0]),
+        std::path::Path::new(paths[1]),
+        threshold,
+    )?;
+    print!("{}", report.render());
+    Ok(!report.has_regressions())
 }
 
 /// The serving driver: start the selected backend's workers, push a
@@ -255,6 +344,7 @@ fn serve(args: &[String], variants: Option<&str>) -> anyhow::Result<()> {
     let summary = run_bench(&coord, &set, &bcfg)?;
     println!("\n{}", summary.render());
     println!("{}", coord.metrics().render());
+    emit_telemetry(args, &coord)?;
     coord.shutdown();
     Ok(())
 }
@@ -326,6 +416,7 @@ fn serve_bench(args: &[String]) -> anyhow::Result<()> {
         std::fs::write(&path, &json)?;
         eprintln!("wrote {path}");
     }
+    emit_telemetry(args, &coord)?;
     coord.shutdown();
     // A bench whose requests errored (or that completed nothing) must
     // exit non-zero, or the CI serving smoke stays green while the

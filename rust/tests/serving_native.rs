@@ -4,8 +4,8 @@
 
 use posar::cnn;
 use posar::coordinator::{
-    run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Request, Routing,
-    ServeConfig,
+    compare_json, run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Request,
+    Routing, ServeConfig, Stage, TraceConfig,
 };
 use posar::data::synth;
 use posar::posit::{P16, P8};
@@ -280,10 +280,58 @@ fn sharded_native_serving_with_metrics() {
     assert!(fp32.mean_batch() >= 1.0);
     assert!(fp32.p50_us() <= fp32.p95_us());
     assert!(fp32.p95_us() <= fp32.p99_us());
-    assert!(fp32.p99_us() <= fp32.max_latency_us);
+    assert!(fp32.p99_us() <= fp32.max_us());
     assert!(fp32.p50_us() > 0, "served requests have nonzero latency");
+    // Every request passed through all four stages.
+    for stage in [Stage::Queue, Stage::BatchWait, Stage::Encode, Stage::Exec] {
+        assert_eq!(
+            fp32.stage(stage).count(),
+            fp32.requests,
+            "stage {stage:?} records once per request"
+        );
+    }
+    assert!(
+        fp32.stage(Stage::Exec).mean_us() > 0.0,
+        "execution takes nonzero time"
+    );
     let rendered = snap.render();
     assert!(rendered.contains("fp32") && rendered.contains("p50"));
+    let prom = snap.render_prom();
+    assert!(prom.contains("posar_requests_total{variant=\"fp32\"} 24"));
+    assert!(prom.contains("posar_stage_us{variant=\"fp32\",stage=\"exec\",quantile=\"0.99\"}"));
+    coord.shutdown();
+}
+
+/// The stage decomposition must actually account for the end-to-end
+/// latency: per variant, the four stage means sum to within 5% of the
+/// e2e mean (they are cut from the same clock readings; only the reply
+/// fan-out is outside the stages).
+#[test]
+fn stage_durations_sum_to_end_to_end_latency() {
+    let coord = Coordinator::start(&native_cfg(2, 2), Some(&["fp32", "p16"])).expect("start");
+    let set = synth::generate(0x57A6, 6);
+    let cfg = BenchConfig {
+        concurrency: 4,
+        requests: 48,
+        ..Default::default()
+    };
+    run_bench(&coord, &set, &cfg).expect("bench");
+    let snap = coord.metrics();
+    for (name, s) in &snap.rows {
+        assert!(s.requests > 0, "{name} served");
+        let stage_sum: f64 = [Stage::Queue, Stage::BatchWait, Stage::Encode, Stage::Exec]
+            .iter()
+            .map(|&st| s.stage(st).mean_us())
+            .sum();
+        let e2e = s.mean_latency_us();
+        assert!(e2e > 0.0, "{name} e2e mean");
+        let rel = (stage_sum - e2e).abs() / e2e;
+        assert!(
+            rel <= 0.05,
+            "{name}: stage sum {stage_sum:.1}µs vs e2e {e2e:.1}µs ({:.2}% apart)",
+            rel * 100.0
+        );
+    }
     coord.shutdown();
 }
 
@@ -300,11 +348,7 @@ fn full_queues_reject_and_count() {
     let coord = Coordinator::start(&cfg, Some(&["fp32"])).expect("start");
     let set = synth::generate(0xF00D, 1);
     let feats = set.sample(0).to_vec();
-    let req = |reply| Request {
-        features: feats.clone(),
-        reply,
-        enqueued: Instant::now(),
-    };
+    let req = |reply| Request::new(feats.clone(), reply);
     // A: rendezvous reply — the worker blocks sending it until we recv.
     let (atx, arx) = sync_channel(0);
     assert!(coord.submit("fp32", req(atx), false).expect("submit A"));
@@ -374,26 +418,115 @@ fn serve_bench_closed_loop_smoke() {
         assert_eq!(row.completed, 9, "{}", row.variant);
         assert_eq!(row.errors, 0, "{}", row.variant);
         assert!(row.throughput_rps > 0.0);
-        assert!(row.p50_le_us <= row.p99_le_us);
+        assert!(row.p50_us <= row.p99_us);
+        assert!(row.p99_us <= row.p999_us && row.p999_us <= row.max_us);
+        assert!(row.stage_exec_us > 0.0, "execute stage is measured");
         assert!((0.0..=1.0).contains(&row.top1));
         assert_eq!(row.shards, 2, "shard gauge rides along in the summary");
     }
     assert!(summary.aggregate_rps() > 0.0);
     // Per-shard occupancy covers the driven variants (2 shards each).
     assert_eq!(summary.shard_rows.len(), 4, "{:?}", summary.shard_rows);
-    assert!(summary.shard_rows.iter().any(|(l, n, _)| l == "fp32#0" && *n > 0));
+    assert!(summary
+        .shard_rows
+        .iter()
+        .any(|sh| sh.label == "fp32#0" && sh.requests > 0));
     assert!(summary.scale_events.is_empty(), "no autoscaler configured");
     let json = summary.to_json();
     for key in [
-        "\"p50_le_us\"",
-        "\"p95_le_us\"",
-        "\"p99_le_us\"",
+        "\"p50_us\"",
+        "\"p95_us\"",
+        "\"p99_us\"",
+        "\"p999_us\"",
+        "\"stage_queue_us\"",
+        "\"stage_exec_us\"",
+        "\"sketch\"",
         "\"throughput_rps\"",
         "\"scale_events\"",
         "\"shard\"",
+        "\"exec_p99_us\"",
         "\"intra_batch\"",
     ] {
         assert!(json.contains(key), "missing {key}");
     }
+    assert!(!json.contains("_le_us"), "bound-era fields must not resurface");
     coord.shutdown();
+}
+
+/// `bench-compare` against the stack's real JSON: a run compared to
+/// itself is clean, and the same JSON with a tampered (quadrupled) p99
+/// is flagged as a regression.
+#[test]
+fn bench_compare_flags_tampered_snapshot() {
+    let coord = Coordinator::start(&native_cfg(2, 1), Some(&["fp32"])).expect("start");
+    let set = synth::generate(0xC0DE, 4);
+    let cfg = BenchConfig {
+        concurrency: 2,
+        requests: 8,
+        ..Default::default()
+    };
+    let summary = run_bench(&coord, &set, &cfg).expect("bench");
+    coord.shutdown();
+    let json = summary.to_json();
+    let clean = compare_json(&json, &json, 20.0).expect("self-compare");
+    assert!(!clean.has_regressions(), "{}", clean.render());
+    // Inject: quadruple the real p99 in the "new" snapshot.
+    let row = &summary.rows[0];
+    let needle = format!("\"p99_us\": {}", row.p99_us);
+    assert!(json.contains(&needle), "emitted JSON carries the exact p99");
+    let tampered = json.replace(&needle, &format!("\"p99_us\": {}", row.p99_us * 4));
+    let report = compare_json(&json, &tampered, 20.0).expect("compare");
+    assert!(
+        report.has_regressions(),
+        "a 4x p99 must be flagged:\n{}",
+        report.render()
+    );
+}
+
+/// Span tracing end-to-end: a traced coordinator writes JSONL records
+/// whose stage durations sum to the recorded end-to-end latency, one
+/// line per sampled request.
+#[test]
+fn trace_spans_emit_jsonl_with_consistent_stages() {
+    let path = std::env::temp_dir().join(format!("posar_trace_{}.jsonl", std::process::id()));
+    let cfg = ServeConfig {
+        trace: TraceConfig {
+            sample_every: 1, // every request
+            slow_us: 0,
+            path: Some(path.clone()),
+        },
+        ..native_cfg(2, 1)
+    };
+    let coord = Coordinator::start(&cfg, Some(&["p8"])).expect("start");
+    let set = synth::generate(0x7ACE, 4);
+    let n = 10usize;
+    for i in 0..n {
+        coord.infer("p8", set.sample(i % set.len()).to_vec()).expect("infer");
+    }
+    assert_eq!(coord.trace_written(), Some(n as u64));
+    coord.shutdown();
+    let text = std::fs::read_to_string(&path).expect("trace file");
+    std::fs::remove_file(&path).ok();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), n, "one JSONL record per sampled request");
+    for line in lines {
+        let span = posar::coordinator::compare::parse_json(line).expect("valid JSON line");
+        let field = |k: &str| {
+            span.get(k)
+                .and_then(|v| v.num())
+                .unwrap_or_else(|| panic!("span field {k} in {line}"))
+        };
+        assert_eq!(span.get("variant").and_then(|v| v.str_val()), Some("p8"));
+        assert!(span
+            .get("shard")
+            .and_then(|v| v.str_val())
+            .is_some_and(|s| s.starts_with("p8#")));
+        let stages = field("queue_us") + field("batch_us") + field("encode_us") + field("exec_us");
+        let e2e = field("e2e_us");
+        assert!(
+            (stages - e2e).abs() <= (e2e * 0.05).max(5.0),
+            "stage sum {stages} vs e2e {e2e} in {line}"
+        );
+        assert!(field("batch_n") >= 1.0);
+    }
 }
