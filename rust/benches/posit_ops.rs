@@ -166,4 +166,39 @@ fn main() {
         let w = pvu::vfrom_f32(P8, &xs);
         black_box(pvu::vto_f32(P8, &w));
     });
+
+    // Per-backend variants of the same kernels: every backend this host
+    // supports (scalar fallback always included), via the `*_with`
+    // entry points. `repro pvu --simd-report` prints the same matrix
+    // with the §V-C modeled speedup alongside.
+    println!("\n== PVU SIMD backends (scalar fallback vs detected lanes) ==");
+    for be in pvu::simd::available() {
+        let tag = be.name();
+        bench(&format!("p8/vadd[{tag}]"), N as u64, || {
+            black_box(pvu::vadd_with(be, P8, &a8, &b8));
+        });
+        bench(&format!("p8/vmul[{tag}]"), N as u64, || {
+            black_box(pvu::vmul_with(be, P8, &a8, &b8));
+        });
+        bench(&format!("p8/vrelu[{tag}]"), N as u64, || {
+            black_box(pvu::vrelu_with(be, P8, &a8));
+        });
+        bench(&format!("p16/vadd[{tag}]"), N as u64, || {
+            black_box(pvu::vadd_with(be, P16, &a16, &b16));
+        });
+        bench(&format!("p16/vfma[{tag}]"), N as u64, || {
+            black_box(pvu::vfma_with(be, P16, &a16, &b16, &a16));
+        });
+        bench(&format!("p16/vrelu[{tag}]"), N as u64, || {
+            black_box(pvu::vrelu_with(be, P16, &a16));
+        });
+        bench(&format!("p16/dot[{tag}]"), N as u64, || {
+            black_box(pvu::dot_with(be, P16, &a16, &b16));
+        });
+        let a32 = operands(P32, 15);
+        let b32 = operands(P32, 16);
+        bench(&format!("p32/vadd[{tag}]"), N as u64, || {
+            black_box(pvu::vadd_with(be, P32, &a32, &b32));
+        });
+    }
 }

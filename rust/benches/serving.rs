@@ -24,11 +24,14 @@ fn main() {
     for i in 0..batch.min(set.len()) {
         x[i * FEAT..(i + 1) * FEAT].copy_from_slice(set.sample(i));
     }
+    // One probs arena reused across iterations, like a serving worker.
+    let mut probs = Vec::new();
     println!("== native PVU backend execution (batch = {batch}) ==");
     for v in NATIVE_VARIANTS {
         let mut be = PvuBackend::new(v, batch, &params).expect("native backend");
         bench(&format!("native/{v}"), batch as u64, || {
-            black_box(be.run(&x, batch).expect("run"));
+            be.run(&x, batch, &mut probs).expect("run");
+            black_box(&probs);
         });
     }
 
@@ -45,13 +48,15 @@ fn main() {
     for v in ["p8", "p16"] {
         let mut seq = PvuBackend::new(v, batch, &params).expect("native backend");
         bench(&format!("intra1/{v}"), batch as u64, || {
-            black_box(seq.run(&x, batch).expect("run"));
+            seq.run(&x, batch, &mut probs).expect("run");
+            black_box(&probs);
         });
         let mut par = PvuBackend::new(v, batch, &params)
             .expect("native backend")
             .with_intra(threads);
         bench(&format!("intra{threads}/{v}"), batch as u64, || {
-            black_box(par.run(&x, batch).expect("run"));
+            par.run(&x, batch, &mut probs).expect("run");
+            black_box(&probs);
         });
     }
 

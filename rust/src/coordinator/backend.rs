@@ -40,11 +40,14 @@ pub trait InferBackend {
     /// Probability classes per sample.
     fn classes(&self) -> usize;
     /// Execute one padded batch. `x` holds `batch()·feat()` values with
-    /// rows `n..batch()` zero-padded; returns at least `n·classes()`
-    /// probabilities (row-major — padding rows may be omitted). The wall
-    /// time of this call is what the coordinator's metrics record as the
-    /// `exec` stage (per variant and per `variant#k` shard).
-    fn run(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>>;
+    /// rows `n..batch()` zero-padded; on success `out` holds at least
+    /// `n·classes()` probabilities (row-major — padding rows may be
+    /// omitted). `out` is a caller-owned arena: it is cleared and
+    /// refilled on every call, so a serving worker that keeps one buffer
+    /// per thread pays no per-batch allocation. The wall time of this
+    /// call is what the coordinator's metrics record as the `exec` stage
+    /// (per variant and per `variant#k` shard).
+    fn run(&mut self, x: &[f32], n: usize, out: &mut Vec<f32>) -> Result<()>;
 }
 
 /// The PJRT AOT backend: one client + compiled executable per worker.
@@ -78,9 +81,12 @@ impl InferBackend for PjrtBackend {
     fn classes(&self) -> usize {
         self.exe.classes
     }
-    fn run(&mut self, x: &[f32], _n: usize) -> Result<Vec<f32>> {
+    fn run(&mut self, x: &[f32], _n: usize, out: &mut Vec<f32>) -> Result<()> {
         // The executable's shape is baked: always the full padded batch.
-        self.exe.run(x)
+        let probs = self.exe.run(x)?;
+        out.clear();
+        out.extend_from_slice(&probs);
+        Ok(())
     }
 }
 
@@ -185,7 +191,7 @@ impl InferBackend for PvuBackend {
         CLASSES
     }
 
-    fn run(&mut self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+    fn run(&mut self, x: &[f32], n: usize, out: &mut Vec<f32>) -> Result<()> {
         anyhow::ensure!(
             x.len() == self.batch * FEAT,
             "expected {}·{FEAT} inputs, got {}",
@@ -196,20 +202,22 @@ impl InferBackend for PvuBackend {
         // Fan the independent samples across the intra-batch pool: task i
         // reads input row i and owns output row i exclusively, and cycle
         // totals are an order-insensitive sum — so the result (probs and
-        // cycles both) is bit-identical for every pool width.
-        let mut probs = vec![0f32; n * CLASSES];
+        // cycles both) is bit-identical for every pool width. `out` is
+        // the caller's arena: resized, never reallocated at steady state.
+        out.clear();
+        out.resize(n * CLASSES, 0f32);
         let cycles = AtomicU64::new(0);
         let (engine, pc) = (&self.engine, &self.pc);
-        self.pool.map_chunks(&mut probs, CLASSES, |i, out| {
+        self.pool.map_chunks(out, CLASSES, |i, row_out| {
             let sample = &x[i * FEAT..(i + 1) * FEAT];
             let (row, c) = run_sample(engine, pc, sample);
-            for (o, &v) in out.iter_mut().zip(&row) {
+            for (o, &v) in row_out.iter_mut().zip(&row) {
                 *o = v as f32;
             }
             cycles.fetch_add(c, Ordering::Relaxed);
         });
         self.cycles += cycles.load(Ordering::Relaxed);
-        Ok(probs)
+        Ok(())
     }
 }
 
@@ -230,11 +238,13 @@ mod tests {
         for i in 0..2 {
             x[i * FEAT..(i + 1) * FEAT].copy_from_slice(set.sample(i));
         }
+        // One arena reused across every variant: the out-param contract.
+        let mut probs = Vec::new();
         for v in NATIVE_VARIANTS {
             let mut be = PvuBackend::new(v, batch, &params).expect(v);
             assert_eq!(be.variant(), v);
             assert_eq!((be.batch(), be.feat(), be.classes()), (batch, FEAT, CLASSES));
-            let probs = be.run(&x, 2).expect(v);
+            be.run(&x, 2, &mut probs).expect(v);
             assert_eq!(probs.len(), 2 * CLASSES);
             for row in probs.chunks(CLASSES) {
                 // Softmax rows sum to ~1; low-precision formats round
@@ -260,8 +270,9 @@ mod tests {
             let mut seq = PvuBackend::new(v, batch, &params).unwrap();
             let mut par = PvuBackend::new(v, batch, &params).unwrap().with_intra(3);
             assert_eq!(par.intra(), 3);
-            let a = seq.run(&x, 4).unwrap();
-            let b = par.run(&x, 4).unwrap();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            seq.run(&x, 4, &mut a).unwrap();
+            par.run(&x, 4, &mut b).unwrap();
             assert_eq!(
                 a.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
                 b.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
@@ -278,10 +289,11 @@ mod tests {
         let mut x = vec![0f32; 4 * FEAT];
         x[..FEAT].copy_from_slice(set.sample(0));
         let mut be = PvuBackend::new("p16", 4, &params).unwrap();
-        let probs = be.run(&x, 1).unwrap();
+        let mut probs = vec![1f32; 99]; // stale arena contents must be cleared
+        be.run(&x, 1, &mut probs).unwrap();
         assert_eq!(probs.len(), CLASSES);
         // Bad shapes are errors, not panics.
-        assert!(be.run(&x[..FEAT], 1).is_err());
-        assert!(be.run(&x, 5).is_err());
+        assert!(be.run(&x[..FEAT], 1, &mut probs).is_err());
+        assert!(be.run(&x, 5, &mut probs).is_err());
     }
 }

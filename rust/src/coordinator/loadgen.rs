@@ -137,6 +137,10 @@ pub struct BenchSummary {
     /// Intra-batch parallelism the stack ran with (read from the
     /// [`Coordinator`], so it cannot drift from the serving config).
     pub intra_batch: usize,
+    /// SIMD backend the PVU kernels executed on ("scalar", "avx2",
+    /// "neon") — [`Coordinator::simd_backend`], i.e. what CPU feature
+    /// detection picked modulo the `PVU_SIMD` override.
+    pub simd_backend: &'static str,
     /// Per-variant rows, sorted by name.
     pub rows: Vec<VariantBench>,
     /// Per-shard occupancy/exec over the run, sorted by label.
@@ -180,6 +184,10 @@ impl BenchSummary {
         out.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
         out.push_str(&format!("  \"wall_s\": {:.6},\n", self.wall.as_secs_f64()));
         out.push_str(&format!("  \"intra_batch\": {},\n", self.intra_batch));
+        out.push_str(&format!(
+            "  \"simd_backend\": \"{}\",\n",
+            json_escape(self.simd_backend)
+        ));
         out.push_str(&format!(
             "  \"aggregate_rps\": {:.3},\n",
             self.aggregate_rps()
@@ -262,11 +270,12 @@ impl BenchSummary {
     /// mean breakdown.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "serve-bench ({} loop, {:.2?} wall, {:.0} req/s aggregate, intra-batch {})\n",
+            "serve-bench ({} loop, {:.2?} wall, {:.0} req/s aggregate, intra-batch {}, simd {})\n",
             self.mode,
             self.wall,
             self.aggregate_rps(),
             self.intra_batch,
+            self.simd_backend,
         );
         out.push_str(
             "variant    done    rej    err    top1    req/s    p50(ms)  p95(ms)  p99(ms)  p99.9(ms) batch  shards\n",
@@ -595,6 +604,7 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
         mode: if cfg.open_loop { "open" } else { "closed" },
         wall,
         intra_batch: coord.intra_batch(),
+        simd_backend: coord.simd_backend(),
         rows,
         shard_rows,
         scale_events,
@@ -638,6 +648,7 @@ mod tests {
             mode: "closed",
             wall: Duration::from_millis(1500),
             intra_batch: 2,
+            simd_backend: "avx2",
             rows: vec![bench_row("fp32", 100, 0, 2), bench_row("p16", 90, 10, 1)],
             shard_rows: vec![
                 ShardBench {
@@ -676,6 +687,7 @@ mod tests {
             "\"mode\"",
             "\"wall_s\"",
             "\"intra_batch\"",
+            "\"simd_backend\"",
             "\"aggregate_rps\"",
             "\"sketch\"",
             "\"sub_bucket_bits\"",
@@ -722,7 +734,8 @@ mod tests {
         assert!(table.contains("p99(ms)"), "exact quantile columns");
         assert!(!table.contains('≤'), "no bound labels remain");
         assert!(table.contains("stage means"));
-        assert!(table.contains("intra-batch 2"));
+        assert!(table.contains("intra-batch 2, simd avx2"));
+        assert!(json.contains("\"simd_backend\": \"avx2\""));
         assert!(table.contains("scale events: fp32 1->2 (p99 9.000ms)"));
     }
 

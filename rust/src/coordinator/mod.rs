@@ -28,9 +28,11 @@
 //!    full, non-blocking submits are *rejected* and counted in
 //!    [`Metrics`].
 //! 2. **Intra-batch parallelism** — [`ServeConfig::intra_batch`] fans
-//!    the independent samples of one batch across a scoped [`Pool`]
-//!    inside the native backend, bit-identically to sequential
-//!    execution.
+//!    the independent samples of one batch across a persistent [`Pool`]
+//!    of pinned workers inside the native backend, bit-identically to
+//!    sequential execution. The PVU kernels underneath additionally run
+//!    on the process-wide SIMD backend ([`crate::pvu::simd`], reported
+//!    by [`Coordinator::simd_backend`]).
 //! 3. **Autoscaling** — when [`ServeConfig::autoscale`] is enabled, a
 //!    controller thread grows/shrinks each variant's live shard set
 //!    between configured bounds from the in-flight gauges
@@ -137,9 +139,10 @@ pub struct ServeConfig {
     pub backend: BackendChoice,
     /// Intra-batch parallelism (`--intra-batch`): each native worker
     /// fans the independent samples of a batch across up to this many
-    /// cores via a scoped [`Pool`]. 1 (the default) executes
-    /// sequentially; outputs are bit-identical either way. PJRT
-    /// executables have their own internal parallelism and ignore this.
+    /// cores via a persistent [`Pool`] of pinned workers. 1 (the
+    /// default) executes sequentially; outputs are bit-identical either
+    /// way. PJRT executables have their own internal parallelism and
+    /// ignore this.
     pub intra_batch: usize,
     /// Use the adaptive batcher deadline ([`Batcher::adaptive`]): the
     /// fill deadline halves when batches fill to capacity (queue
@@ -563,6 +566,15 @@ impl Coordinator {
         self.intra_batch
     }
 
+    /// Name of the SIMD backend the PVU kernels selected at startup
+    /// ("scalar", "avx2", "neon" — [`crate::pvu::simd::active`], which
+    /// honours the `PVU_SIMD` override). Reported in the serve-bench
+    /// summary next to `intra_batch` so measured throughput stays
+    /// attributable to the execution configuration.
+    pub fn simd_backend(&self) -> &'static str {
+        pvu::simd::active().name()
+    }
+
     /// Variants currently served.
     pub fn variants(&self) -> Vec<String> {
         let mut v: Vec<String> = self.routes.keys().cloned().collect();
@@ -768,7 +780,18 @@ pub fn variant_input_spec(name: &str) -> Option<PositSpec> {
 /// backends — the batch handed to the executor is guaranteed to be in
 /// the variant's input format even for graphs that omit the q(x) step.
 pub fn encode_batch(spec: PositSpec, x: &[f32]) -> Vec<f32> {
-    pvu::vto_f32(spec, &pvu::vfrom_f32(spec, x))
+    let (mut bits, mut out) = (Vec::new(), Vec::new());
+    encode_batch_into(spec, x, &mut bits, &mut out);
+    out
+}
+
+/// Arena variant of [`encode_batch`]: quantizes `x` into `out` through
+/// the caller's posit-bit scratch buffer. Both vectors are cleared and
+/// refilled, so a serving worker that keeps them across batches pays no
+/// per-batch allocation at steady state.
+pub fn encode_batch_into(spec: PositSpec, x: &[f32], bits: &mut Vec<u32>, out: &mut Vec<f32>) {
+    pvu::vfrom_f32_into(spec, x, bits);
+    pvu::vto_f32_into(spec, bits, out);
 }
 
 /// Argmax of one probability row (`max_by` semantics: ties resolve to
@@ -822,6 +845,12 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
         Batcher::new(batch_size, max_wait)
     };
     let mut x = vec![0f32; batch_size * feat];
+    // Per-worker arenas reused across every batch: encode scratch (posit
+    // bits + quantized values) and the backend's probability rows. After
+    // the first full batch these never reallocate.
+    let mut enc_bits: Vec<u32> = Vec::new();
+    let mut enc: Vec<f32> = Vec::new();
+    let mut probs: Vec<f32> = Vec::new();
     loop {
         let Some(batch) = batcher.next_batch(&rx) else {
             return; // channel closed and drained
@@ -859,20 +888,20 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
         }
         if let Some(spec) = input_spec {
             let filled = n * feat;
-            let q = encode_batch(spec, &x[..filled]);
-            x[..filled].copy_from_slice(&q);
+            encode_batch_into(spec, &x[..filled], &mut enc_bits, &mut enc);
+            x[..filled].copy_from_slice(&enc);
         }
         let t0 = Instant::now();
-        let outcome = be.run(&x, n).and_then(|probs| {
+        let outcome = be.run(&x, n, &mut probs).and_then(|()| {
             anyhow::ensure!(
                 probs.len() >= n * classes,
                 "backend returned {} probs for {n}·{classes} outputs",
                 probs.len()
             );
-            Ok(probs)
+            Ok(())
         });
         match outcome {
-            Ok(probs) => {
+            Ok(()) => {
                 let dt = t0.elapsed();
                 let done = Instant::now();
                 // Cut the four stages from the shared clock readings, so
@@ -971,6 +1000,14 @@ mod tests {
             assert_eq!(
                 once.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 twice.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            // The arena variant refills dirty reused buffers to the
+            // same bytes as the allocating one.
+            let (mut bits, mut out) = (vec![7u32; 3], vec![9f32; 999]);
+            encode_batch_into(spec, &x, &mut bits, &mut out);
+            assert_eq!(
+                once.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                out.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
             );
         }
     }

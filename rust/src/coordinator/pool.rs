@@ -1,62 +1,135 @@
-//! A small dependency-free scoped worker pool for intra-batch
+//! A small dependency-free **persistent** worker pool for intra-batch
 //! parallelism.
 //!
 //! [`Pool`] is the fork–join primitive behind
 //! [`crate::coordinator::PvuBackend`]'s `--intra-batch` mode: the samples
 //! of a serving batch are independent, so a worker thread can fan them
 //! across cores and multiply native throughput without touching the
-//! router (ROADMAP: "parallelize *within* a batch"). The offline build
-//! has no rayon/crossbeam, so this is built entirely on
-//! [`std::thread::scope`]: [`Pool::map_chunks`] statically deals
-//! disjoint `&mut` output chunks round-robin over the workers — task `i`
-//! writes chunk `i`, which makes the output *placement* (and therefore
-//! the result bytes) independent of thread interleaving. That is the
-//! property the serving stack's bit-exactness guarantee rests on.
+//! router. The offline build has no rayon/crossbeam, so this is built
+//! entirely on `std`: `width - 1` dedicated helper threads are spawned
+//! **once** at [`Pool::new`] and pinned to the pool for its whole life,
+//! fed over bounded `sync_channel`s — a sub-millisecond batch no longer
+//! pays thread-spawn cost on every call (the spawn-per-batch
+//! `std::thread::scope` design this replaces cost ~tens of µs per helper
+//! per batch).
 //!
-//! A `map_chunks` call runs entirely inside the worker's backend
+//! [`Pool::map_chunks`] statically deals disjoint `&mut` output chunks
+//! round-robin over the workers — chunk `i` goes to worker `i % width`
+//! (the caller is worker 0) — which makes the output *placement* (and
+//! therefore the result bytes) independent of both pool width and thread
+//! interleaving. That is the property the serving stack's bit-exactness
+//! guarantee rests on, and it is byte-compatible with the old scoped
+//! implementation.
+//!
+//! A `map_chunks` call runs entirely inside the serving worker's backend
 //! `run()`, so its wall time lands in the metrics' `exec` stage — widen
 //! the pool and the per-shard `exec` sketches are where the speedup
 //! shows up.
 //!
-//! Threads are spawned per invocation and joined before it returns
-//! (scoped fork–join), so borrowed inputs need no `'static` bound and a
-//! `Pool` holds no OS resources between calls. Spawn cost is ~tens of
-//! microseconds per helper — noise next to the millisecond-scale posit
-//! CNN forwards it parallelizes; a batch that cheap should use
-//! `threads = 1` (everything then runs inline on the caller).
+//! **Lifetimes.** Helpers execute borrowed closures even though their
+//! channels require `'static` tasks: the task box is lifetime-erased and
+//! the caller blocks until every helper acknowledges completion before
+//! `map_chunks` returns, so no task can outlive the borrow it captures.
+//! Panics inside a task are caught on the worker, reported over the
+//! acknowledgement channel, and re-raised on the caller **after** all
+//! outstanding tasks finish — a panicking closure never unwinds past
+//! live borrows, and the pool stays usable afterwards.
+//!
+//! **Shutdown.** Clones of a `Pool` share the same workers; when the
+//! last clone drops, the task channels close, every helper's `recv`
+//! loop ends, and the handles are joined exactly once. ("Pinned" means
+//! each helper is a named, dedicated thread owned by this pool for its
+//! whole lifetime — `std` exposes no portable CPU-affinity API.)
 
-/// A scoped fork–join worker pool of a fixed width.
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A task shipped to a pinned helper: lifetime-erased in `map_chunks`,
+/// which blocks until the helper acknowledges it ran.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-width pool of persistent pinned worker threads.
 ///
-/// Holds no threads while idle: each [`Pool::map_chunks`] call spawns up
-/// to `threads - 1` scoped helpers (the caller is the first worker) and
-/// joins them before returning. A width of 1 executes everything inline
-/// on the caller.
-#[derive(Clone, Debug)]
+/// `width - 1` helpers are spawned at construction (the caller is the
+/// first worker) and live until the last clone of the pool drops. A
+/// width of 1 spawns nothing and executes everything inline.
+#[derive(Clone)]
 pub struct Pool {
-    threads: usize,
+    shared: Arc<Shared>,
+}
+
+struct Shared {
+    width: usize,
+    /// One bounded channel per helper; helper `k` serves `txs[k]`.
+    txs: Vec<SyncSender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pool")
+            .field("threads", &self.shared.width)
+            .finish()
+    }
+}
+
+impl Drop for Shared {
+    fn drop(&mut self) {
+        // Last clone gone: close every task channel so the helpers'
+        // recv loops end, then reap each handle exactly once. A helper
+        // can only be mid-task here if some `map_chunks` never returned,
+        // which the ack protocol rules out.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Task>) {
+    while let Ok(task) = rx.recv() {
+        task();
+    }
 }
 
 impl Pool {
-    /// Pool of `threads` workers (clamped to at least 1).
+    /// Pool of `threads` workers (clamped to at least 1). Spawns the
+    /// `threads - 1` pinned helpers immediately.
     pub fn new(threads: usize) -> Self {
+        let width = threads.max(1);
+        let mut txs = Vec::with_capacity(width - 1);
+        let mut handles = Vec::with_capacity(width - 1);
+        for k in 1..width {
+            let (tx, rx) = sync_channel::<Task>(1);
+            let h = std::thread::Builder::new()
+                .name(format!("pvu-pool-{k}"))
+                .spawn(move || worker_loop(rx))
+                .expect("spawn pool worker");
+            txs.push(tx);
+            handles.push(h);
+        }
         Pool {
-            threads: threads.max(1),
+            shared: Arc::new(Shared { width, txs, handles }),
         }
     }
 
-    /// Worker width this pool fans out to.
+    /// Worker width this pool fans out to (helpers + the caller).
     pub fn threads(&self) -> usize {
-        self.threads
+        self.shared.width
     }
 
     /// Split `out` into `chunk`-sized pieces and run `f(i, chunk_i)` for
     /// each, distributing chunks round-robin over the workers (chunk `i`
-    /// goes to worker `i % workers`). Each chunk is visited exactly once
-    /// and mutably, with no locking — the chunk-to-task mapping is fixed
-    /// by index, so results are identical for every pool width.
+    /// goes to worker `i % workers`, the caller being worker 0). Each
+    /// chunk is visited exactly once and mutably, with no locking — the
+    /// chunk-to-task mapping is fixed by index, so results are identical
+    /// for every pool width.
     ///
     /// A trailing remainder chunk (when `out.len()` is not a multiple of
-    /// `chunk`) is passed through like any other, shorter.
+    /// `chunk`) is passed through like any other, shorter. An empty
+    /// `out` returns immediately without touching the workers.
     pub fn map_chunks<T, F>(&self, out: &mut [T], chunk: usize, f: F)
     where
         T: Send,
@@ -67,7 +140,7 @@ impl Pool {
             return;
         }
         let n_chunks = out.len().div_ceil(chunk);
-        let workers = self.threads.min(n_chunks);
+        let workers = self.shared.width.min(n_chunks);
         if workers <= 1 {
             for (i, c) in out.chunks_mut(chunk).enumerate() {
                 f(i, c);
@@ -81,20 +154,57 @@ impl Pool {
             hands[i % workers].push((i, c));
         }
         let f = &f;
-        std::thread::scope(|s| {
-            let mut hands = hands.into_iter();
-            let mine = hands.next().expect("workers >= 1");
-            for hand in hands {
-                s.spawn(move || {
+        let (ack_tx, ack_rx) = channel::<std::thread::Result<()>>();
+        let mut hands = hands.into_iter();
+        let mine = hands.next().expect("workers >= 2 here");
+        let helpers = workers - 1;
+        for (k, hand) in hands.enumerate() {
+            let ack = ack_tx.clone();
+            let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| {
                     for (i, c) in hand {
                         f(i, c);
                     }
-                });
+                }));
+                // The receiver outlives every task (we hold it below
+                // until all acks arrive), so this send cannot fail.
+                let _ = ack.send(r);
+            });
+            // SAFETY: the task borrows `out` and `f`, but `map_chunks`
+            // does not return (or unwind) before collecting one ack per
+            // dispatched task, so the erased lifetime cannot be
+            // outlived. The ack is sent even on panic (caught above).
+            let task: Task = unsafe { std::mem::transmute(task) };
+            if let Err(e) = self.shared.txs[k].send(task) {
+                // Unreachable in practice (helpers outlive the pool),
+                // but if a channel were closed we get the task back —
+                // run it inline so the ack count still balances.
+                (e.0)();
             }
+        }
+        drop(ack_tx);
+        let my_result = catch_unwind(AssertUnwindSafe(|| {
             for (i, c) in mine {
                 f(i, c);
             }
-        });
+        }));
+        // Collect every helper ack BEFORE propagating any panic: tasks
+        // hold borrows into `out`/`f` until acknowledged.
+        let mut first_panic = None;
+        for _ in 0..helpers {
+            match ack_rx.recv().expect("helper dropped ack without sending") {
+                Ok(()) => {}
+                Err(p) => {
+                    let _ = first_panic.get_or_insert(p);
+                }
+            }
+        }
+        if let Err(p) = my_result {
+            let _ = first_panic.get_or_insert(p);
+        }
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
     }
 }
 
@@ -115,7 +225,7 @@ mod tests {
                 "threads={threads}: {hits:?}"
             );
         }
-        // Empty output: no tasks, no calls.
+        // Empty output: no tasks, no calls, workers untouched.
         Pool::new(4).map_chunks(&mut [0u8; 0], 1, |_, _| panic!("no chunks, no calls"));
     }
 
@@ -152,5 +262,72 @@ mod tests {
             });
             assert_eq!(out, reference, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn workers_persist_across_many_calls() {
+        // The whole point of the persistent pool: many small batches on
+        // the same threads, no respawn, results identical every time.
+        let pool = Pool::new(3);
+        for round in 0..50u64 {
+            let mut out = vec![0u64; 17];
+            pool.map_chunks(&mut out, 2, |i, c| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = round * 1000 + (i * 10 + j) as u64;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                let (ci, cj) = (i / 2, i % 2);
+                assert_eq!(v, round * 1000 + (ci * 10 + cj) as u64, "round {round} idx {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_then_reuse_then_drop_joins_cleanly() {
+        // Empty map_chunks must not consume or wedge the workers, clones
+        // share them, and the last drop reaps the threads exactly once
+        // (a double-join or a leaked channel would hang or panic here).
+        let pool = Pool::new(4);
+        let clone = pool.clone();
+        pool.map_chunks(&mut [0u8; 0], 3, |_, _| unreachable!());
+        let mut out = vec![0u32; 9];
+        clone.map_chunks(&mut out, 1, |i, c| c[0] = i as u32 + 1);
+        assert_eq!(out, (1..=9).collect::<Vec<_>>());
+        drop(pool); // workers must survive: `clone` still holds them
+        let mut out2 = vec![0u32; 9];
+        clone.map_chunks(&mut out2, 1, |i, c| c[0] = i as u32 + 1);
+        assert_eq!(out2, out);
+        drop(clone); // last owner: joins every helper
+    }
+
+    #[test]
+    fn drop_does_not_hang_on_idle_workers() {
+        // Regression guard for shutdown: construct, never dispatch, drop.
+        // Run in a helper thread so a join deadlock fails fast as a
+        // missing completion rather than hanging the whole suite.
+        let t = std::thread::spawn(|| {
+            let pool = Pool::new(8);
+            assert_eq!(pool.threads(), 8);
+        });
+        t.join().expect("idle pool must drop cleanly");
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let pool = Pool::new(3);
+        let mut out = vec![0u32; 12];
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map_chunks(&mut out, 1, |i, _| {
+                if i == 7 {
+                    panic!("boom in chunk 7");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must reach the caller");
+        // The workers caught the panic locally: the pool is still whole.
+        let mut out2 = vec![0u32; 12];
+        pool.map_chunks(&mut out2, 1, |i, c| c[0] = i as u32);
+        assert_eq!(out2, (0..12).collect::<Vec<_>>());
     }
 }

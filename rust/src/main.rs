@@ -33,6 +33,11 @@ paper reproduction:
   pvu [--mm N]           Posit Vector Unit: LUT bit-exactness, measured
                          host speedup, SV-C packed-lane model, and the
                          PVU-vs-scalar level-two kernels (default MM 24)
+  pvu --simd-report [--n N]
+                         measured-vs-modeled SIMD speedup per kernel and
+                         format on the active backend (PVU_SIMD=off|
+                         scalar|avx2|neon|auto overrides detection;
+                         vector length N, default 4096; docs/SIMD.md)
   all                    everything above at quick-run sizes
 
 serving:
@@ -135,7 +140,13 @@ fn main() {
         "cnn" => print!("{}", report::cnn_report(num(&args, "--samples", 64) as usize)),
         "power" => print!("{}", report::power_report(num(&args, "--scale", 100))),
         "ablation" => print!("{}", report::quire_ablation()),
-        "pvu" => print!("{}", report::pvu_report(num(&args, "--mm", 24) as usize)),
+        "pvu" => {
+            if args.iter().any(|a| a == "--simd-report") {
+                print!("{}", report::simd_report(num(&args, "--n", 4096) as usize));
+            } else {
+                print!("{}", report::pvu_report(num(&args, "--mm", 24) as usize));
+            }
+        }
         "all" => {
             print!("{}", report::table1());
             print!("\n{}", report::table3(100));
@@ -150,6 +161,7 @@ fn main() {
             print!("\n{}", report::power_report(100));
             print!("\n{}", report::quire_ablation());
             print!("\n{}", report::pvu_report(16));
+            print!("\n{}", report::simd_report(1024));
         }
         "serve" => {
             let variants = flag(&args, "--variants");

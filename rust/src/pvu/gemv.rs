@@ -7,18 +7,56 @@
 //! for all `m·n` outputs. Compared to the scalar FMA chain this skips
 //! both the per-MAC rounding *and* the per-MAC encode/decode round trip.
 //!
+//! On SIMD backends with `ps ≤ 16`, the per-MAC decode is further split
+//! out as **blocked quire accumulation**: operands are decoded through
+//! the [`super::simd`] decode table in blocks of [`BLOCK`] (a tight
+//! table-load pass into a reusable buffer), then the block is drained
+//! into the quire. The quire itself is exact fixed-point, so the result
+//! is identical regardless of blocking — and the decode table is built
+//! from the scalar decoder, so every MAC sees byte-identical operands.
+//!
 //! The scalar-core reference for bit-exactness is a per-output
 //! [`Quire::add_product`] loop (same single rounding, pattern-level
 //! decode per MAC); `rust/tests/pvu_exact.rs` enforces equality.
 
+use super::simd::{self, DecodeLut, SimdBackend};
 use crate::posit::{decode, Decoded, PositSpec, Quire};
+
+/// Block size for the table-decode pass of the SIMD quire path: small
+/// enough that two blocks of [`Decoded`] stay L1-resident, large enough
+/// to amortize the loop split.
+const BLOCK: usize = 64;
 
 /// Quire-fused dot product `Σ a[i]·b[i]`, rounded once.
 pub fn dot(spec: PositSpec, a: &[u32], b: &[u32]) -> u32 {
+    dot_with(simd::active(), spec, a, b)
+}
+
+/// [`dot`] on an explicit SIMD backend.
+pub fn dot_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> u32 {
     assert_eq!(a.len(), b.len(), "dot length mismatch");
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return dot_blocked(spec, &l, a, b);
+    }
     let mut q = Quire::new(spec);
     for (&x, &y) in a.iter().zip(b) {
         q.add_product_decoded(&decode(spec, x), &decode(spec, y));
+    }
+    q.to_posit()
+}
+
+fn dot_blocked(spec: PositSpec, l: &DecodeLut, a: &[u32], b: &[u32]) -> u32 {
+    let mut q = Quire::new(spec);
+    let mut da: Vec<Decoded> = Vec::with_capacity(BLOCK);
+    let mut db: Vec<Decoded> = Vec::with_capacity(BLOCK);
+    for (ca, cb) in a.chunks(BLOCK).zip(b.chunks(BLOCK)) {
+        da.clear();
+        da.extend(ca.iter().map(|&v| l.decoded(v)));
+        db.clear();
+        db.extend(cb.iter().map(|&v| l.decoded(v)));
+        for (x, y) in da.iter().zip(&db) {
+            q.add_product_decoded(x, y);
+        }
     }
     q.to_posit()
 }
@@ -35,10 +73,26 @@ pub fn gemv(
     rows: usize,
     cols: usize,
 ) -> Vec<u32> {
+    gemv_with(simd::active(), spec, w, x, bias, rows, cols)
+}
+
+/// [`gemv`] on an explicit SIMD backend.
+pub fn gemv_with(
+    be: SimdBackend,
+    spec: PositSpec,
+    w: &[u32],
+    x: &[u32],
+    bias: Option<&[u32]>,
+    rows: usize,
+    cols: usize,
+) -> Vec<u32> {
     assert_eq!(w.len(), rows * cols, "gemv weight shape mismatch");
     assert_eq!(x.len(), cols, "gemv input length mismatch");
     if let Some(b) = bias {
         assert_eq!(b.len(), rows, "gemv bias length mismatch");
+    }
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return gemv_blocked(spec, &l, w, x, bias, rows, cols);
     }
     let dx: Vec<Decoded> = x.iter().map(|&v| decode(spec, v)).collect();
     let mut out = Vec::with_capacity(rows);
@@ -57,15 +111,68 @@ pub fn gemv(
     out
 }
 
+fn gemv_blocked(
+    spec: PositSpec,
+    l: &DecodeLut,
+    w: &[u32],
+    x: &[u32],
+    bias: Option<&[u32]>,
+    rows: usize,
+    cols: usize,
+) -> Vec<u32> {
+    let dx: Vec<Decoded> = x.iter().map(|&v| l.decoded(v)).collect();
+    let mut out = Vec::with_capacity(rows);
+    let mut q = Quire::new(spec);
+    let mut dw: Vec<Decoded> = Vec::with_capacity(BLOCK);
+    for r in 0..rows {
+        q.clear();
+        if let Some(b) = bias {
+            q.add_decoded(&l.decoded(b[r]));
+        }
+        let row = &w[r * cols..(r + 1) * cols];
+        for (cw, cx) in row.chunks(BLOCK).zip(dx.chunks(BLOCK)) {
+            dw.clear();
+            dw.extend(cw.iter().map(|&v| l.decoded(v)));
+            for (wv, xv) in dw.iter().zip(cx) {
+                q.add_product_decoded(wv, xv);
+            }
+        }
+        out.push(q.to_posit());
+    }
+    out
+}
+
 /// Quire-fused `C = A·B`: `a` row-major `m × k`, `b` row-major `k × n`,
 /// result row-major `m × n` with one rounding per entry. Both matrices
 /// are decoded once (`m·k + k·n` decodes for `m·k·n` MACs — the
-/// decode-once amortization at its strongest).
+/// decode-once amortization at its strongest; SIMD backends run those
+/// two decode passes through the decode table).
 pub fn gemm(spec: PositSpec, a: &[u32], b: &[u32], m: usize, k: usize, n: usize) -> Vec<u32> {
+    gemm_with(simd::active(), spec, a, b, m, k, n)
+}
+
+/// [`gemm`] on an explicit SIMD backend.
+pub fn gemm_with(
+    be: SimdBackend,
+    spec: PositSpec,
+    a: &[u32],
+    b: &[u32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<u32> {
     assert_eq!(a.len(), m * k, "gemm A shape mismatch");
     assert_eq!(b.len(), k * n, "gemm B shape mismatch");
-    let da: Vec<Decoded> = a.iter().map(|&v| decode(spec, v)).collect();
-    let db: Vec<Decoded> = b.iter().map(|&v| decode(spec, v)).collect();
+    let (da, db): (Vec<Decoded>, Vec<Decoded>) = match simd::lanes_lut(be, spec) {
+        Some(l) => (
+            a.iter().map(|&v| l.decoded(v)).collect(),
+            b.iter().map(|&v| l.decoded(v)).collect(),
+        ),
+        None => (
+            a.iter().map(|&v| decode(spec, v)).collect(),
+            b.iter().map(|&v| decode(spec, v)).collect(),
+        ),
+    };
     let mut out = Vec::with_capacity(m * n);
     let mut q = Quire::new(spec);
     for i in 0..m {
@@ -95,15 +202,17 @@ mod tests {
     }
 
     #[test]
-    fn dot_matches_scalar_quire_reference() {
-        for spec in [P8, P16, P32] {
-            let a = operands(spec, 11, 97);
-            let b = operands(spec, 12, 97);
-            let mut q = Quire::new(spec);
-            for (&x, &y) in a.iter().zip(&b) {
-                q.add_product(x, y);
+    fn dot_matches_scalar_quire_reference_all_backends() {
+        for be in simd::available() {
+            for spec in [P8, P16, P32] {
+                let a = operands(spec, 11, 97);
+                let b = operands(spec, 12, 97);
+                let mut q = Quire::new(spec);
+                for (&x, &y) in a.iter().zip(&b) {
+                    q.add_product(x, y);
+                }
+                assert_eq!(dot_with(be, spec, &a, &b), q.to_posit(), "{be:?} {spec:?}");
             }
-            assert_eq!(dot(spec, &a, &b), q.to_posit(), "{spec:?}");
         }
     }
 
@@ -126,26 +235,29 @@ mod tests {
     }
 
     #[test]
-    fn gemv_matches_per_row_dot_plus_bias() {
+    fn gemv_matches_per_row_dot_plus_bias_all_backends() {
         let spec = P16;
-        let (rows, cols) = (5, 17);
+        // cols > BLOCK so the blocked path crosses a block boundary.
+        let (rows, cols) = (5, BLOCK + 17);
         let w = operands(spec, 21, rows * cols);
         let x = operands(spec, 22, cols);
         let bias = operands(spec, 23, rows);
-        let y = gemv(spec, &w, &x, Some(&bias), rows, cols);
-        for r in 0..rows {
-            let mut q = Quire::new(spec);
-            q.add(bias[r]);
-            for c in 0..cols {
-                q.add_product(w[r * cols + c], x[c]);
+        for be in simd::available() {
+            let y = gemv_with(be, spec, &w, &x, Some(&bias), rows, cols);
+            for r in 0..rows {
+                let mut q = Quire::new(spec);
+                q.add(bias[r]);
+                for c in 0..cols {
+                    q.add_product(w[r * cols + c], x[c]);
+                }
+                assert_eq!(y[r], q.to_posit(), "{be:?} row {r}");
             }
-            assert_eq!(y[r], q.to_posit(), "row {r}");
+            // NaR in the input poisons exactly the rows that touch it.
+            let mut x2 = x.clone();
+            x2[0] = spec.nar();
+            let y2 = gemv_with(be, spec, &w, &x2, None, rows, cols);
+            assert!(y2.iter().all(|&v| v == spec.nar()));
         }
-        // NaR in the input poisons exactly the rows that touch it.
-        let mut x2 = x.clone();
-        x2[0] = spec.nar();
-        let y2 = gemv(spec, &w, &x2, None, rows, cols);
-        assert!(y2.iter().all(|&v| v == spec.nar()));
     }
 
     #[test]
@@ -154,12 +266,14 @@ mod tests {
         let (m, k, n) = (4, 9, 3);
         let a = operands(spec, 31, m * k);
         let b = operands(spec, 32, k * n);
-        let c = gemm(spec, &a, &b, m, k, n);
-        for i in 0..m {
-            for j in 0..n {
-                let row: Vec<u32> = (0..k).map(|kk| a[i * k + kk]).collect();
-                let col: Vec<u32> = (0..k).map(|kk| b[kk * n + j]).collect();
-                assert_eq!(c[i * n + j], dot(spec, &row, &col), "({i},{j})");
+        for be in simd::available() {
+            let c = gemm_with(be, spec, &a, &b, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let row: Vec<u32> = (0..k).map(|kk| a[i * k + kk]).collect();
+                    let col: Vec<u32> = (0..k).map(|kk| b[kk * n + j]).collect();
+                    assert_eq!(c[i * n + j], dot(spec, &row, &col), "{be:?} ({i},{j})");
+                }
             }
         }
     }

@@ -11,6 +11,7 @@
 //! indexed load: this is where the `repro pvu` report's measured
 //! host-time speedup over the decode/encode scalar path comes from.
 
+use super::simd::GATHER_PAD;
 use crate::posit::{self, P8};
 use std::sync::OnceLock;
 
@@ -31,7 +32,10 @@ fn idx(a: u32, b: u32) -> usize {
 
 impl P8Tables {
     fn build() -> Self {
-        let n = 1usize << 16;
+        // The binary tables carry GATHER_PAD trailing bytes so the AVX2
+        // backend's 32-bit gathers at the last index stay in bounds; the
+        // indexed accessors below never touch the padding.
+        let n = (1usize << 16) + GATHER_PAD;
         let mut add = vec![0u8; n];
         let mut sub = vec![0u8; n];
         let mut mul = vec![0u8; n];
@@ -95,6 +99,36 @@ impl P8Tables {
     #[inline]
     pub fn to_f32(&self, a: u32) -> f32 {
         self.to_f32[(a & 0xff) as usize]
+    }
+
+    /// Raw padded add table for the SIMD gather path.
+    #[inline]
+    pub(crate) fn add_raw(&self) -> &[u8] {
+        &self.add
+    }
+
+    /// Raw padded sub table for the SIMD gather path.
+    #[inline]
+    pub(crate) fn sub_raw(&self) -> &[u8] {
+        &self.sub
+    }
+
+    /// Raw padded mul table for the SIMD gather path.
+    #[inline]
+    pub(crate) fn mul_raw(&self) -> &[u8] {
+        &self.mul
+    }
+
+    /// Raw padded div table for the SIMD gather path.
+    #[inline]
+    pub(crate) fn div_raw(&self) -> &[u8] {
+        &self.div
+    }
+
+    /// Raw 256-entry posit→f32 table for the SIMD gather path.
+    #[inline]
+    pub(crate) fn to_f32_raw(&self) -> &[f32] {
+        &self.to_f32
     }
 }
 

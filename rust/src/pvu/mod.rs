@@ -27,11 +27,21 @@
 //!    chain *and* faster, because the decode-once operands skip the
 //!    per-MAC encode/decode round trip.
 //!
+//! 4. **[`simd`] — runtime-selected SIMD backends.** Every entry point
+//!    above dispatches through a process-wide backend (AVX2, NEON, or
+//!    the portable scalar fallback) picked once from CPU feature
+//!    detection, overridable with `PVU_SIMD=off|scalar|avx2|neon|auto`.
+//!    Pattern ops run as flipped unsigned lane compares, p8 LUT ops as
+//!    AVX2 gathers, and `ps ≤ 16` decode as one table load per lane —
+//!    while the combine/rounding stays single-sourced in the scalar
+//!    core, so every backend is bit-identical (see `docs/SIMD.md`).
+//!
 //! [`cost::PvuCost`] realizes the §V-C packed-lane claim in the `isa`/
 //! `sim` cycle model: a 32-bit datapath issues `32/ps` lanes per cycle,
 //! so modeled vector-op cost is `ceil(n / lanes) ×` the scalar latency of
 //! [`crate::isa::cost::posar`] — 4× throughput for P8, 2× for P16, parity
-//! for P32, exactly the paper's numbers.
+//! for P32, exactly the paper's numbers. `repro pvu --simd-report`
+//! prints the measured speedup next to that modeled figure.
 //!
 //! Since PR 4 the PVU is also the crate's **native serving engine**:
 //! [`crate::coordinator::PvuBackend`] executes the CNN tail through
@@ -65,13 +75,17 @@
 pub mod cost;
 pub mod gemv;
 pub mod lut;
+pub mod simd;
 pub mod vector;
 
 pub use cost::PvuCost;
-pub use gemv::{dot, gemm, gemv};
+pub use gemv::{dot, dot_with, gemm, gemm_with, gemv, gemv_with};
 pub use lut::{p8_tables, verify_p8_luts, P8Tables};
+pub use simd::{SimdBackend, SimdChoice};
 pub use vector::{
-    vadd, vaxpy, vdiv, vfma, vfrom_f32, vmax, vmul, vrelu, vscale, vsub, vsubs, vto_f32,
+    vadd, vadd_with, vaxpy, vaxpy_with, vdiv, vdiv_with, vfma, vfma_with, vfrom_f32,
+    vfrom_f32_into, vmax, vmax_with, vmul, vmul_with, vrelu, vrelu_with, vscale, vscale_with,
+    vsub, vsub_with, vsubs, vsubs_with, vto_f32, vto_f32_into, vto_f32_with,
 };
 
 #[cfg(test)]

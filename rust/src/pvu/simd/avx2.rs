@@ -1,0 +1,134 @@
+//! AVX2 kernels: 8×u32 lanes with gathered LUT lookups.
+//!
+//! Every function here is `#[target_feature(enable = "avx2")]` and must
+//! only be reached through the `super` dispatchers, which guarantee the
+//! CPU reported AVX2 at runtime. Unsigned lane compares use the classic
+//! sign-bias trick (`x ^ 0x8000_0000` turns unsigned order into signed
+//! order, which `vpcmpgtd` provides); posit-pattern compares additionally
+//! fold in the format's sign-bit flip, so both XORs collapse into one
+//! constant (`flip ^ 0x8000_0000`).
+
+use super::GATHER_PAD;
+use std::arch::x86_64::*;
+
+/// Gathered `out[i] = table[(a[i]&0xff)<<8 | (b[i]&0xff)]`.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2. `table` must carry
+/// [`GATHER_PAD`] bytes beyond the 64 kB payload (asserted).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn lut_map2(table: &[u8], a: &[u32], b: &[u32], out: &mut [u32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    assert!(
+        table.len() >= (1 << 16) + GATHER_PAD,
+        "p8 LUT must carry gather padding"
+    );
+    let n = a.len();
+    let ff = _mm256_set1_epi32(0xff);
+    let base = table.as_ptr() as *const i32;
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let idx = _mm256_or_si256(
+            _mm256_slli_epi32::<8>(_mm256_and_si256(va, ff)),
+            _mm256_and_si256(vb, ff),
+        );
+        // Byte-scale gather: each lane loads table[idx..idx+4); the low
+        // byte is the table value (little-endian), the rest is masked.
+        let g = _mm256_i32gather_epi32::<1>(base, idx);
+        let r = _mm256_and_si256(g, ff);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 8;
+    }
+    while i < n {
+        out[i] = table[(((a[i] & 0xff) << 8) | (b[i] & 0xff)) as usize] as u32;
+        i += 1;
+    }
+}
+
+/// `out[i] = if x[i] > 0 (as a posit pattern) { x[i] } else { 0 }`.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn relu(mask: u32, flip: u32, x: &[u32], out: &mut [u32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let vmask = _mm256_set1_epi32(mask as i32);
+    let vbias = _mm256_set1_epi32((flip ^ 0x8000_0000) as i32);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        let m = _mm256_and_si256(v, vmask);
+        // (pattern ^ flip) >u flip  ⟺  (pattern ^ bias) >s bias.
+        let keep = _mm256_cmpgt_epi32(_mm256_xor_si256(m, vbias), vbias);
+        let r = _mm256_and_si256(v, keep);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 8;
+    }
+    while i < n {
+        out[i] = if ((x[i] & mask) ^ flip) > flip { x[i] } else { 0 };
+        i += 1;
+    }
+}
+
+/// `out[i] = cmp_max(a[i], b[i])` as a pattern compare + blend of the
+/// original lanes (ties and NaR resolve to `b`).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn max(mask: u32, flip: u32, a: &[u32], b: &[u32], out: &mut [u32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let n = a.len();
+    let vmask = _mm256_set1_epi32(mask as i32);
+    let vbias = _mm256_set1_epi32((flip ^ 0x8000_0000) as i32);
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let ka = _mm256_xor_si256(_mm256_and_si256(va, vmask), vbias);
+        let kb = _mm256_xor_si256(_mm256_and_si256(vb, vmask), vbias);
+        let gt = _mm256_cmpgt_epi32(ka, kb);
+        // Where a > b take the original a lane, else the original b lane.
+        let r = _mm256_blendv_epi8(vb, va, gt);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 8;
+    }
+    while i < n {
+        out[i] = if ((a[i] & mask) ^ flip) > ((b[i] & mask) ^ flip) {
+            a[i]
+        } else {
+            b[i]
+        };
+        i += 1;
+    }
+}
+
+/// Gathered `out[i] = table[x[i] & 0xff]` (posit→f32; element-scale
+/// gather, so the 256-entry table needs no padding).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 and `table.len() >= 256`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn p8_to_f32(table: &[f32], x: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert!(table.len() >= 256);
+    let n = x.len();
+    let ff = _mm256_set1_epi32(0xff);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        let idx = _mm256_and_si256(v, ff);
+        let g = _mm256_i32gather_ps::<4>(table.as_ptr(), idx);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), g);
+        i += 8;
+    }
+    while i < n {
+        out[i] = table[(x[i] & 0xff) as usize];
+        i += 1;
+    }
+}

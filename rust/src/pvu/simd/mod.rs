@@ -1,0 +1,478 @@
+//! Runtime-selected SIMD execution for the PVU.
+//!
+//! The §V-C packed-lane claim (4× P8 / 2× P16 per 32-bit issue slot)
+//! was, until this module, only a *cycle model* ([`super::cost::PvuCost`]).
+//! Here it becomes real data-level parallelism, in three stages that keep
+//! the bit-exactness contract intact:
+//!
+//! 1. **Pattern ops** (`vrelu`/`vmax`) never decode at all: posits order
+//!    like two's-complement integers, so a masked XOR-flip turns the
+//!    comparison into an unsigned integer compare — 8 lanes per AVX2
+//!    vector, 4 per NEON vector.
+//! 2. **Posit(8,1) LUT ops** gather from the exact 64 kB function tables
+//!    of [`super::lut`] (`vpgatherdd` on AVX2; NEON has no gather, so the
+//!    LUT loop stays scalar-indexed there). The tables are built from the
+//!    scalar core, so gathered results are bit-exact by construction.
+//! 3. **Arbitrary `(ps, es)` with `ps ≤ 16`** splits decode out of the
+//!    op: a per-spec [`DecodeLut`] (built by calling the scalar
+//!    [`crate::posit::decode`] once per pattern) replaces the branchy
+//!    regime/exponent/fraction extraction with one table load per lane.
+//!    The combine (`real_add`/`real_mul`/`real_div`) and the rounding
+//!    [`crate::posit::encode`] stay single-sourced in the scalar core —
+//!    there is no second arithmetic implementation to drift.
+//!
+//! The backend is chosen **once per process** ([`active`]) from CPU
+//! feature detection, overridable with `PVU_SIMD=off|scalar|avx2|neon|auto`
+//! (forcing an unavailable backend falls back to scalar — the reported
+//! name is always the path actually taken). Serve-bench JSON reports it
+//! as `simd_backend`; `repro pvu --simd-report` prints measured vs
+//! modeled speedups. See `docs/SIMD.md`.
+
+use crate::posit::{decode, Decoded, PositSpec, Real};
+use std::sync::{Arc, Mutex, OnceLock};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+pub(crate) mod lanes;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// A SIMD execution backend for the PVU kernels.
+///
+/// `Scalar` is the always-available portable path (the decode-once loops
+/// that were the only path before this module existed); `Avx2` and
+/// `Neon` are the `std::arch` paths, only ever selected when the CPU
+/// reports the feature at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// Portable scalar fallback (always available).
+    Scalar,
+    /// x86-64 AVX2: 8×u32 lanes, gathered LUT lookups.
+    Avx2,
+    /// AArch64 NEON: 4×u32 lanes (no gather — LUTs stay scalar-indexed).
+    Neon,
+}
+
+impl SimdBackend {
+    /// Stable lowercase name, as reported in serve-bench JSON
+    /// (`simd_backend`) and the simd-report header.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+}
+
+/// A parsed `PVU_SIMD` setting: automatic detection or a forced backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdChoice {
+    /// Pick the best backend the CPU supports.
+    Auto,
+    /// Force a specific backend (downgraded to scalar if unsupported).
+    Force(SimdBackend),
+}
+
+impl SimdChoice {
+    /// Parse a `PVU_SIMD` value. `off` is an alias for `scalar`;
+    /// unrecognized values return `None`.
+    pub fn parse(s: &str) -> Option<SimdChoice> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(SimdChoice::Auto),
+            "off" | "scalar" => Some(SimdChoice::Force(SimdBackend::Scalar)),
+            "avx2" => Some(SimdChoice::Force(SimdBackend::Avx2)),
+            "neon" => Some(SimdChoice::Force(SimdBackend::Neon)),
+            _ => None,
+        }
+    }
+}
+
+/// Whether this CPU can actually execute `be` (compile target *and*
+/// runtime feature detection).
+pub fn supported(be: SimdBackend) -> bool {
+    match be {
+        SimdBackend::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        _ => false,
+    }
+}
+
+/// The best backend this CPU supports.
+pub fn detect() -> SimdBackend {
+    if supported(SimdBackend::Avx2) {
+        return SimdBackend::Avx2;
+    }
+    if supported(SimdBackend::Neon) {
+        return SimdBackend::Neon;
+    }
+    SimdBackend::Scalar
+}
+
+/// Resolve a choice against this CPU: `Auto` detects; forcing an
+/// unsupported backend downgrades to scalar (never to a trap).
+pub fn resolve(choice: SimdChoice) -> SimdBackend {
+    match choice {
+        SimdChoice::Auto => detect(),
+        SimdChoice::Force(be) if supported(be) => be,
+        SimdChoice::Force(_) => SimdBackend::Scalar,
+    }
+}
+
+/// Resolve a raw `PVU_SIMD` value; unrecognized values warn once on
+/// stderr and fall back to scalar (the safe default).
+pub fn resolve_env_value(v: &str) -> SimdBackend {
+    match SimdChoice::parse(v) {
+        Some(c) => resolve(c),
+        None => {
+            eprintln!("PVU_SIMD={v:?} not recognized (off|scalar|avx2|neon|auto); using scalar");
+            SimdBackend::Scalar
+        }
+    }
+}
+
+static ACTIVE: OnceLock<SimdBackend> = OnceLock::new();
+
+/// The process-wide backend, selected once on first use from `PVU_SIMD`
+/// (unset means `auto`). Every public `pvu::v*`/`dot`/`gemv`/`gemm`
+/// entry point dispatches through this.
+pub fn active() -> SimdBackend {
+    *ACTIVE.get_or_init(|| match std::env::var("PVU_SIMD") {
+        Ok(v) => resolve_env_value(&v),
+        Err(_) => resolve(SimdChoice::Auto),
+    })
+}
+
+/// Every backend this CPU can run, scalar first. Benches and the
+/// exactness tests sweep this list.
+pub fn available() -> Vec<SimdBackend> {
+    let mut v = vec![SimdBackend::Scalar];
+    for be in [SimdBackend::Avx2, SimdBackend::Neon] {
+        if supported(be) {
+            v.push(be);
+        }
+    }
+    v
+}
+
+// ---- per-spec decode LUT (the table-split decode stage) ---------------
+
+/// Cap on `ps` for decode tables: 2^16 entries × 12 B = 768 kB worst
+/// case. Wider formats (P32) run one lane per word anyway — exactly the
+/// paper's packing table — so they keep the portable decode loop.
+const MAX_TABLE_PS: u32 = 16;
+
+const TAG_POS: u8 = 0;
+const TAG_NEG: u8 = 1;
+const TAG_ZERO: u8 = 2;
+const TAG_NAR: u8 = 3;
+
+/// One decoded pattern, narrowed to 12 bytes. For `ps ≤ 16` every field
+/// of the scalar [`Real`] fits losslessly (asserted at build time).
+#[derive(Clone, Copy)]
+pub(crate) struct DecEntry {
+    frac: u32,
+    scale: i32,
+    fs: u8,
+    tag: u8,
+}
+
+impl DecEntry {
+    #[inline]
+    pub(crate) fn is_nar(self) -> bool {
+        self.tag == TAG_NAR
+    }
+
+    #[inline]
+    pub(crate) fn is_zero(self) -> bool {
+        self.tag == TAG_ZERO
+    }
+
+    #[inline]
+    pub(crate) fn is_num(self) -> bool {
+        self.tag == TAG_POS || self.tag == TAG_NEG
+    }
+}
+
+/// Rehydrate the scalar core's [`Real`] from a table entry. Field-exact:
+/// the entry was narrowed from a `decode()` result, so the combine and
+/// encode see byte-identical inputs to the scalar path.
+#[inline]
+pub(crate) fn real_of(e: DecEntry) -> Real {
+    Real {
+        sign: e.tag == TAG_NEG,
+        scale: e.scale as i64,
+        frac: e.frac as u128,
+        fs: e.fs as u32,
+        sticky: false,
+    }
+}
+
+/// A full decode table for one `(ps, es)` spec: pattern → unpacked
+/// fields, built by calling the scalar [`decode`] once per pattern.
+pub(crate) struct DecodeLut {
+    spec: PositSpec,
+    mask: u32,
+    entries: Vec<DecEntry>,
+}
+
+impl DecodeLut {
+    fn build(spec: PositSpec) -> Self {
+        assert!(spec.ps <= MAX_TABLE_PS, "decode LUT capped at ps={MAX_TABLE_PS}");
+        let n = spec.mask() as usize + 1;
+        let mut entries = Vec::with_capacity(n);
+        for bits in 0..n as u32 {
+            entries.push(match decode(spec, bits) {
+                Decoded::Zero => DecEntry { frac: 0, scale: 0, fs: 0, tag: TAG_ZERO },
+                Decoded::NaR => DecEntry { frac: 0, scale: 0, fs: 0, tag: TAG_NAR },
+                Decoded::Num(r) => {
+                    assert!(
+                        !r.sticky
+                            && r.frac <= u128::from(u32::MAX)
+                            && r.fs <= u32::from(u8::MAX)
+                            && i32::try_from(r.scale).is_ok(),
+                        "decode LUT narrowing must be lossless"
+                    );
+                    DecEntry {
+                        frac: r.frac as u32,
+                        scale: r.scale as i32,
+                        fs: r.fs as u8,
+                        tag: if r.sign { TAG_NEG } else { TAG_POS },
+                    }
+                }
+            });
+        }
+        DecodeLut { spec, mask: spec.mask(), entries }
+    }
+
+    /// The decoded fields of `bits` (masked to the spec width, like the
+    /// scalar decoder).
+    #[inline]
+    pub(crate) fn entry(&self, bits: u32) -> DecEntry {
+        self.entries[(bits & self.mask) as usize]
+    }
+
+    /// The scalar core's [`Decoded`] for `bits` — bit-identical to
+    /// `decode(spec, bits)` (pinned by the exactness suite).
+    #[inline]
+    pub(crate) fn decoded(&self, bits: u32) -> Decoded {
+        let e = self.entry(bits);
+        match e.tag {
+            TAG_ZERO => Decoded::Zero,
+            TAG_NAR => Decoded::NaR,
+            _ => Decoded::Num(real_of(e)),
+        }
+    }
+}
+
+static DECODE_LUTS: OnceLock<Mutex<Vec<Arc<DecodeLut>>>> = OnceLock::new();
+
+/// The process-wide decode table for `spec`, built on first use;
+/// `None` for formats wider than [`MAX_TABLE_PS`].
+pub(crate) fn decode_lut(spec: PositSpec) -> Option<Arc<DecodeLut>> {
+    if spec.ps > MAX_TABLE_PS {
+        return None;
+    }
+    let cache = DECODE_LUTS.get_or_init(|| Mutex::new(Vec::new()));
+    let mut g = cache.lock().expect("decode LUT cache poisoned");
+    if let Some(l) = g.iter().find(|l| l.spec == spec) {
+        return Some(Arc::clone(l));
+    }
+    let l = Arc::new(DecodeLut::build(spec));
+    g.push(Arc::clone(&l));
+    Some(l)
+}
+
+/// The decode table to use for a backend: `None` on the scalar backend
+/// (which is defined as the pure decode-once loops — the measured
+/// baseline) and for wide formats.
+pub(crate) fn lanes_lut(be: SimdBackend, spec: PositSpec) -> Option<Arc<DecodeLut>> {
+    if be == SimdBackend::Scalar {
+        return None;
+    }
+    decode_lut(spec)
+}
+
+// ---- dispatched low-level kernels -------------------------------------
+
+/// Extra bytes appended to the u8 function tables so a 32-bit gather at
+/// the last index stays in bounds (`vpgatherdd` always loads 4 bytes per
+/// lane). [`super::lut`] builds its tables with this padding.
+pub(crate) const GATHER_PAD: usize = 4;
+
+/// Elementwise binary op through a padded 64 kB Posit(8,1) table:
+/// gathered on AVX2, scalar-indexed elsewhere.
+pub(crate) fn lut_map2(be: SimdBackend, table: &[u8], a: &[u32], b: &[u32]) -> Vec<u32> {
+    debug_assert_eq!(a.len(), b.len());
+    let mut out = vec![0u32; a.len()];
+    #[cfg(target_arch = "x86_64")]
+    if be == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected when the CPU reports it,
+        // and the table carries the gather padding (asserted inside).
+        unsafe { avx2::lut_map2(table, a, b, &mut out) };
+        return out;
+    }
+    let _ = be;
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = table[(((x & 0xff) << 8) | (y & 0xff)) as usize] as u32;
+    }
+    out
+}
+
+/// Elementwise `max(x, 0)` as a pure pattern test. The masked pattern
+/// XOR-flipped by the sign bit orders exactly like the posit values, so
+/// `x > 0` is one unsigned compare — no decode on any backend.
+pub(crate) fn relu(be: SimdBackend, spec: PositSpec, x: &[u32]) -> Vec<u32> {
+    let mask = spec.mask();
+    let flip = 1u32 << (spec.ps - 1);
+    let mut out = vec![0u32; x.len()];
+    #[cfg(target_arch = "x86_64")]
+    if be == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected when the CPU reports it.
+        unsafe { avx2::relu(mask, flip, x, &mut out) };
+        return out;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if be == SimdBackend::Neon {
+        // SAFETY: Neon is only ever selected when the CPU reports it.
+        unsafe { neon::relu(mask, flip, x, &mut out) };
+        return out;
+    }
+    let _ = be;
+    for (o, &xi) in out.iter_mut().zip(x) {
+        *o = if ((xi & mask) ^ flip) > flip { xi } else { 0 };
+    }
+    out
+}
+
+/// Elementwise `max(a, b)` as a pattern compare + blend of the original
+/// lanes (ties and NaR resolve to `b`, exactly like
+/// [`crate::posit::cmp_max`] — NaR is the minimum pattern).
+pub(crate) fn max(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    debug_assert_eq!(a.len(), b.len());
+    let mask = spec.mask();
+    let flip = 1u32 << (spec.ps - 1);
+    let mut out = vec![0u32; a.len()];
+    #[cfg(target_arch = "x86_64")]
+    if be == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected when the CPU reports it.
+        unsafe { avx2::max(mask, flip, a, b, &mut out) };
+        return out;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if be == SimdBackend::Neon {
+        // SAFETY: Neon is only ever selected when the CPU reports it.
+        unsafe { neon::max(mask, flip, a, b, &mut out) };
+        return out;
+    }
+    let _ = be;
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = if ((x & mask) ^ flip) > ((y & mask) ^ flip) { x } else { y };
+    }
+    out
+}
+
+/// Posit(8,1) → f32 through the 256-entry table, filling `out`
+/// (gathered on AVX2).
+pub(crate) fn p8_to_f32_fill(be: SimdBackend, table: &[f32], x: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    assert!(table.len() >= 256, "p8 to_f32 table must cover every pattern");
+    #[cfg(target_arch = "x86_64")]
+    if be == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected when the CPU reports it;
+        // indices are masked to 0..=255 against the 256-entry table.
+        unsafe { avx2::p8_to_f32(table, x, out) };
+        return;
+    }
+    let _ = be;
+    for (o, &xi) in out.iter_mut().zip(x) {
+        *o = table[(xi & 0xff) as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::{P16, P8};
+
+    #[test]
+    fn choice_parsing_covers_every_documented_spelling() {
+        assert_eq!(SimdChoice::parse("auto"), Some(SimdChoice::Auto));
+        assert_eq!(SimdChoice::parse("off"), Some(SimdChoice::Force(SimdBackend::Scalar)));
+        assert_eq!(SimdChoice::parse("scalar"), Some(SimdChoice::Force(SimdBackend::Scalar)));
+        assert_eq!(SimdChoice::parse("AVX2"), Some(SimdChoice::Force(SimdBackend::Avx2)));
+        assert_eq!(SimdChoice::parse(" neon "), Some(SimdChoice::Force(SimdBackend::Neon)));
+        assert_eq!(SimdChoice::parse("sse9"), None);
+        assert_eq!(SimdChoice::parse(""), None);
+    }
+
+    #[test]
+    fn forced_paths_resolve_to_what_they_report() {
+        // `off` must always land on (and report) the scalar path.
+        assert_eq!(resolve_env_value("off"), SimdBackend::Scalar);
+        assert_eq!(resolve_env_value("off").name(), "scalar");
+        // Unrecognized values fall back to scalar, never to a trap.
+        assert_eq!(resolve_env_value("bogus"), SimdBackend::Scalar);
+        // Forcing a supported backend keeps it; an unsupported one
+        // downgrades to scalar — either way the resolved backend is
+        // exactly the one `name()` reports.
+        for be in [SimdBackend::Avx2, SimdBackend::Neon] {
+            let got = resolve(SimdChoice::Force(be));
+            if supported(be) {
+                assert_eq!(got, be);
+            } else {
+                assert_eq!(got, SimdBackend::Scalar);
+            }
+        }
+        // Auto resolves to something this CPU can run.
+        assert!(available().contains(&resolve(SimdChoice::Auto)));
+        assert!(available().contains(&active()));
+        assert_eq!(available()[0], SimdBackend::Scalar);
+    }
+
+    #[test]
+    fn decode_lut_matches_scalar_decoder_exhaustively() {
+        for spec in [P8, P16, PositSpec::new(11, 0)] {
+            let l = decode_lut(spec).expect("narrow specs have decode tables");
+            for bits in 0..=spec.mask() {
+                let want = decode(spec, bits);
+                let got = l.decoded(bits);
+                match (want, got) {
+                    (Decoded::Zero, Decoded::Zero) | (Decoded::NaR, Decoded::NaR) => {}
+                    (Decoded::Num(w), Decoded::Num(g)) => {
+                        assert_eq!(w.sign, g.sign, "{spec:?} {bits:#x}");
+                        assert_eq!(w.scale, g.scale, "{spec:?} {bits:#x}");
+                        assert_eq!(w.frac, g.frac, "{spec:?} {bits:#x}");
+                        assert_eq!(w.fs, g.fs, "{spec:?} {bits:#x}");
+                        assert_eq!(w.sticky, g.sticky, "{spec:?} {bits:#x}");
+                    }
+                    _ => panic!("tag mismatch for {spec:?} {bits:#x}"),
+                }
+            }
+        }
+        assert!(decode_lut(crate::posit::P32).is_none(), "P32 is one lane per word");
+    }
+
+    #[test]
+    fn pattern_kernels_match_scalar_core_on_every_backend() {
+        let specs = [P8, P16, crate::posit::P32, PositSpec::new(12, 1)];
+        for be in available() {
+            for spec in specs {
+                let mut rng = crate::data::Rng::new(0x51AD + spec.ps as u64);
+                let a: Vec<u32> = (0..257).map(|_| rng.bits32(spec.ps)).collect();
+                let mut b: Vec<u32> = (0..257).map(|_| rng.bits32(spec.ps)).collect();
+                b[0] = spec.nar();
+                b[1] = a[1]; // tie resolves to b on every path
+                let r = relu(be, spec, &a);
+                let m = max(be, spec, &a, &b);
+                for i in 0..a.len() {
+                    assert_eq!(r[i], crate::posit::cmp_max(spec, a[i], 0), "{be:?} {spec:?} {i}");
+                    assert_eq!(m[i], crate::posit::cmp_max(spec, a[i], b[i]), "{be:?} {spec:?} {i}");
+                }
+            }
+        }
+    }
+}

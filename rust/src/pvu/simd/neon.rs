@@ -1,0 +1,73 @@
+//! NEON kernels: 4×u32 lanes for the pattern ops.
+//!
+//! AArch64 NEON has native unsigned compares (`cmhi`) and bit-select
+//! (`bsl`), so no sign-bias trick is needed — the posit sign-bit flip is
+//! the only XOR. NEON has no gather instruction, so the Posit(8,1) LUT
+//! lookups stay scalar-indexed on this backend (the `super::lut_map2`
+//! dispatcher's portable loop); the decode-table lane path in
+//! [`super::lanes`] is backend-independent and covers the rest.
+//!
+//! Every function here is only reached through the `super` dispatchers,
+//! which guarantee NEON was detected at runtime. This module is
+//! compiled only on `aarch64`, so x86 CI never type-checks it — the
+//! kernels are intentionally minimal and mirror `avx2.rs` one for one.
+
+use std::arch::aarch64::*;
+
+/// `out[i] = if x[i] > 0 (as a posit pattern) { x[i] } else { 0 }`.
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn relu(mask: u32, flip: u32, x: &[u32], out: &mut [u32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let vmask = vdupq_n_u32(mask);
+    let vflip = vdupq_n_u32(flip);
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = vld1q_u32(x.as_ptr().add(i));
+        let m = vandq_u32(v, vmask);
+        // (pattern ^ flip) >u flip — native unsigned compare.
+        let keep = vcgtq_u32(veorq_u32(m, vflip), vflip);
+        vst1q_u32(out.as_mut_ptr().add(i), vandq_u32(v, keep));
+        i += 4;
+    }
+    while i < n {
+        out[i] = if ((x[i] & mask) ^ flip) > flip { x[i] } else { 0 };
+        i += 1;
+    }
+}
+
+/// `out[i] = cmp_max(a[i], b[i])` as a pattern compare + bit-select of
+/// the original lanes (ties and NaR resolve to `b`).
+///
+/// # Safety
+/// Caller must ensure the CPU supports NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn max(mask: u32, flip: u32, a: &[u32], b: &[u32], out: &mut [u32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let n = a.len();
+    let vmask = vdupq_n_u32(mask);
+    let vflip = vdupq_n_u32(flip);
+    let mut i = 0;
+    while i + 4 <= n {
+        let va = vld1q_u32(a.as_ptr().add(i));
+        let vb = vld1q_u32(b.as_ptr().add(i));
+        let ka = veorq_u32(vandq_u32(va, vmask), vflip);
+        let kb = veorq_u32(vandq_u32(vb, vmask), vflip);
+        let gt = vcgtq_u32(ka, kb);
+        // Where a > b take the original a lane, else the original b lane.
+        vst1q_u32(out.as_mut_ptr().add(i), vbslq_u32(gt, va, vb));
+        i += 4;
+    }
+    while i < n {
+        out[i] = if ((a[i] & mask) ^ flip) > ((b[i] & mask) ^ flip) {
+            a[i]
+        } else {
+            b[i]
+        };
+        i += 1;
+    }
+}

@@ -8,20 +8,35 @@
 //! line, so results are bit-identical to `posit::{add,sub,mul,div,fma}`
 //! (enforced by `rust/tests/pvu_exact.rs`).
 //!
-//! Posit(8,1) slices short-circuit to the [`super::lut`] tables, which is
-//! the §V-C "four Posit(8,1) per instruction" fast path in software form.
+//! Every public kernel dispatches through the process-wide SIMD backend
+//! ([`super::simd::active`], overridable with `PVU_SIMD`): Posit(8,1)
+//! slices go to the [`super::lut`] tables (gathered on AVX2 — the §V-C
+//! "four Posit(8,1) per instruction" fast path in software form),
+//! `ps ≤ 16` formats to the table-split decode lanes of
+//! [`super::simd::lanes`], and everything else to the portable
+//! decode-once loops below — which are also, verbatim, the `Scalar`
+//! backend. The `*_with` variants take an explicit backend so benches
+//! and the exactness suite can pin both paths side by side.
 
 use super::lut::p8_tables;
+use super::simd::{self, SimdBackend};
 use crate::posit::{
     self, decode, encode, real_add, real_div, real_mul, Decoded, PositSpec, Real, P8,
 };
 
 /// Elementwise `a[i] + b[i]` (bit-identical to [`posit::add`]).
 pub fn vadd(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vadd_with(simd::active(), spec, a, b)
+}
+
+/// [`vadd`] on an explicit SIMD backend.
+pub fn vadd_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vadd length mismatch");
     if spec == P8 {
-        let t = p8_tables();
-        return a.iter().zip(b).map(|(&x, &y)| t.add(x, y)).collect();
+        return simd::lut_map2(be, p8_tables().add_raw(), a, b);
+    }
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return simd::lanes::vaddsub(spec, &l, a, b, false);
     }
     a.iter()
         .zip(b)
@@ -31,10 +46,17 @@ pub fn vadd(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
 
 /// Elementwise `a[i] - b[i]` (bit-identical to [`posit::sub`]).
 pub fn vsub(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vsub_with(simd::active(), spec, a, b)
+}
+
+/// [`vsub`] on an explicit SIMD backend.
+pub fn vsub_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vsub length mismatch");
     if spec == P8 {
-        let t = p8_tables();
-        return a.iter().zip(b).map(|(&x, &y)| t.sub(x, y)).collect();
+        return simd::lut_map2(be, p8_tables().sub_raw(), a, b);
+    }
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return simd::lanes::vaddsub(spec, &l, a, b, true);
     }
     a.iter()
         .zip(b)
@@ -44,10 +66,17 @@ pub fn vsub(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
 
 /// Elementwise `a[i] · b[i]` (bit-identical to [`posit::mul`]).
 pub fn vmul(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vmul_with(simd::active(), spec, a, b)
+}
+
+/// [`vmul`] on an explicit SIMD backend.
+pub fn vmul_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vmul length mismatch");
     if spec == P8 {
-        let t = p8_tables();
-        return a.iter().zip(b).map(|(&x, &y)| t.mul(x, y)).collect();
+        return simd::lut_map2(be, p8_tables().mul_raw(), a, b);
+    }
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return simd::lanes::vmul(spec, &l, a, b);
     }
     a.iter()
         .zip(b)
@@ -57,10 +86,17 @@ pub fn vmul(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
 
 /// Elementwise `a[i] / b[i]` (bit-identical to [`posit::div`]).
 pub fn vdiv(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vdiv_with(simd::active(), spec, a, b)
+}
+
+/// [`vdiv`] on an explicit SIMD backend.
+pub fn vdiv_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vdiv length mismatch");
     if spec == P8 {
-        let t = p8_tables();
-        return a.iter().zip(b).map(|(&x, &y)| t.div(x, y)).collect();
+        return simd::lut_map2(be, p8_tables().div_raw(), a, b);
+    }
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return simd::lanes::vdiv(spec, &l, a, b);
     }
     a.iter()
         .zip(b)
@@ -69,10 +105,19 @@ pub fn vdiv(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
 }
 
 /// Elementwise fused `a[i]·b[i] + c[i]`, single rounding (bit-identical
-/// to [`posit::fma`]). Always decode-once: a fused op cannot go through
-/// the binary LUTs without double rounding.
+/// to [`posit::fma`]). Never goes through the binary LUTs — a fused op
+/// cannot without double rounding — but `ps ≤ 16` formats (Posit(8,1)
+/// included) use the table-split decode lanes on SIMD backends.
 pub fn vfma(spec: PositSpec, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
+    vfma_with(simd::active(), spec, a, b, c)
+}
+
+/// [`vfma`] on an explicit SIMD backend.
+pub fn vfma_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
     assert!(a.len() == b.len() && b.len() == c.len(), "vfma length mismatch");
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return simd::lanes::vfma(spec, &l, a, b, c);
+    }
     (0..a.len())
         .map(|i| {
             fma_one(
@@ -88,7 +133,15 @@ pub fn vfma(spec: PositSpec, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
 /// `alpha·x[i] + y[i]` with `alpha` decoded **once** for the whole slice
 /// (bit-identical to `posit::fma(spec, alpha, x[i], y[i])`).
 pub fn vaxpy(spec: PositSpec, alpha: u32, x: &[u32], y: &[u32]) -> Vec<u32> {
+    vaxpy_with(simd::active(), spec, alpha, x, y)
+}
+
+/// [`vaxpy`] on an explicit SIMD backend.
+pub fn vaxpy_with(be: SimdBackend, spec: PositSpec, alpha: u32, x: &[u32], y: &[u32]) -> Vec<u32> {
     assert_eq!(x.len(), y.len(), "vaxpy length mismatch");
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return simd::lanes::vaxpy(spec, &l, alpha, x, y);
+    }
     let da = decode(spec, alpha);
     x.iter()
         .zip(y)
@@ -99,9 +152,18 @@ pub fn vaxpy(spec: PositSpec, alpha: u32, x: &[u32], y: &[u32]) -> Vec<u32> {
 /// `alpha·x[i]` with `alpha` decoded once (bit-identical to
 /// `posit::mul(spec, alpha, x[i])`).
 pub fn vscale(spec: PositSpec, alpha: u32, x: &[u32]) -> Vec<u32> {
+    vscale_with(simd::active(), spec, alpha, x)
+}
+
+/// [`vscale`] on an explicit SIMD backend. Posit(8,1) keeps the direct
+/// LUT loop on every backend (a broadcast operand needs no gather).
+pub fn vscale_with(be: SimdBackend, spec: PositSpec, alpha: u32, x: &[u32]) -> Vec<u32> {
     if spec == P8 {
         let t = p8_tables();
         return x.iter().map(|&xi| t.mul(alpha, xi)).collect();
+    }
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return simd::lanes::vscale(spec, &l, alpha, x);
     }
     let da = decode(spec, alpha);
     x.iter()
@@ -113,9 +175,18 @@ pub fn vscale(spec: PositSpec, alpha: u32, x: &[u32]) -> Vec<u32> {
 /// `posit::sub(spec, x[i], s)`). The centering pass of the PVU-backed
 /// linear-regression and k-means kernels.
 pub fn vsubs(spec: PositSpec, x: &[u32], s: u32) -> Vec<u32> {
+    vsubs_with(simd::active(), spec, x, s)
+}
+
+/// [`vsubs`] on an explicit SIMD backend. Posit(8,1) keeps the direct
+/// LUT loop on every backend (a broadcast operand needs no gather).
+pub fn vsubs_with(be: SimdBackend, spec: PositSpec, x: &[u32], s: u32) -> Vec<u32> {
     if spec == P8 {
         let t = p8_tables();
         return x.iter().map(|&xi| t.sub(xi, s)).collect();
+    }
+    if let Some(l) = simd::lanes_lut(be, spec) {
+        return simd::lanes::vsubs(spec, &l, x, s);
     }
     let ds = decode(spec, s);
     x.iter()
@@ -125,20 +196,39 @@ pub fn vsubs(spec: PositSpec, x: &[u32], s: u32) -> Vec<u32> {
 
 /// Elementwise `max(x[i], 0)` (bit-identical to
 /// `posit::cmp_max(spec, x[i], 0)`). Pure pattern test — posits order
-/// like two's-complement integers, so no decode at all.
+/// like two's-complement integers, so no decode at all; SIMD backends
+/// run it 8 (AVX2) or 4 (NEON) lanes at a time.
 pub fn vrelu(spec: PositSpec, x: &[u32]) -> Vec<u32> {
-    x.iter()
-        .map(|&xi| if spec.to_i32_pattern(xi) > 0 { xi } else { 0 })
-        .collect()
+    vrelu_with(simd::active(), spec, x)
+}
+
+/// [`vrelu`] on an explicit SIMD backend.
+pub fn vrelu_with(be: SimdBackend, spec: PositSpec, x: &[u32]) -> Vec<u32> {
+    if be == SimdBackend::Scalar {
+        return x
+            .iter()
+            .map(|&xi| if spec.to_i32_pattern(xi) > 0 { xi } else { 0 })
+            .collect();
+    }
+    simd::relu(be, spec, x)
 }
 
 /// Elementwise `max(a[i], b[i])` (bit-identical to [`posit::cmp_max`]).
 pub fn vmax(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vmax_with(simd::active(), spec, a, b)
+}
+
+/// [`vmax`] on an explicit SIMD backend.
+pub fn vmax_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vmax length mismatch");
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| posit::cmp_max(spec, x, y))
-        .collect()
+    if be == SimdBackend::Scalar {
+        return a
+            .iter()
+            .zip(b)
+            .map(|(&x, &y)| posit::cmp_max(spec, x, y))
+            .collect();
+    }
+    simd::max(be, spec, a, b)
 }
 
 /// Batch f32 → posit conversion (bit-identical to [`posit::from_f32`]).
@@ -147,14 +237,42 @@ pub fn vfrom_f32(spec: PositSpec, x: &[f32]) -> Vec<u32> {
     x.iter().map(|&v| posit::from_f32(spec, v)).collect()
 }
 
+/// [`vfrom_f32`] into a reusable buffer (cleared first) — the serving
+/// workers' per-worker encode arena path, no per-batch allocation.
+pub fn vfrom_f32_into(spec: PositSpec, x: &[f32], out: &mut Vec<u32>) {
+    out.clear();
+    out.extend(x.iter().map(|&v| posit::from_f32(spec, v)));
+}
+
 /// Batch posit → f32 conversion (bit-identical to [`posit::to_f32`]);
-/// Posit(8,1) reads the 256-entry table.
+/// Posit(8,1) reads the 256-entry table (gathered on AVX2).
 pub fn vto_f32(spec: PositSpec, x: &[u32]) -> Vec<f32> {
+    vto_f32_with(simd::active(), spec, x)
+}
+
+/// [`vto_f32`] on an explicit SIMD backend.
+pub fn vto_f32_with(be: SimdBackend, spec: PositSpec, x: &[u32]) -> Vec<f32> {
+    let mut out = vec![0f32; x.len()];
+    vto_f32_fill(be, spec, x, &mut out);
+    out
+}
+
+/// [`vto_f32`] into a reusable buffer (cleared first) — the serving
+/// workers' per-worker encode arena path, no per-batch allocation.
+pub fn vto_f32_into(spec: PositSpec, x: &[u32], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(x.len(), 0f32);
+    vto_f32_fill(simd::active(), spec, x, out);
+}
+
+fn vto_f32_fill(be: SimdBackend, spec: PositSpec, x: &[u32], out: &mut [f32]) {
     if spec == P8 {
-        let t = p8_tables();
-        return x.iter().map(|&xi| t.to_f32(xi)).collect();
+        simd::p8_to_f32_fill(be, p8_tables().to_f32_raw(), x, out);
+        return;
     }
-    x.iter().map(|&xi| posit::to_f32(spec, xi)).collect()
+    for (o, &xi) in out.iter_mut().zip(x) {
+        *o = posit::to_f32(spec, xi);
+    }
 }
 
 // ---- per-element dispatch, mirroring the scalar core ------------------
@@ -253,59 +371,89 @@ mod tests {
     }
 
     #[test]
-    fn elementwise_matches_scalar_all_formats() {
-        for spec in [P8, P16, P32, PositSpec::new(12, 1)] {
-            let a = operands(spec, 0xA0 + spec.ps as u64, 300);
-            let b = operands(spec, 0xB0 + spec.ps as u64, 300);
-            let add = vadd(spec, &a, &b);
-            let sub = vsub(spec, &a, &b);
-            let mul = vmul(spec, &a, &b);
-            let div = vdiv(spec, &a, &b);
-            let max = vmax(spec, &a, &b);
-            let relu = vrelu(spec, &a);
-            for i in 0..a.len() {
-                assert_eq!(add[i], posit::add(spec, a[i], b[i]), "add {spec:?} {i}");
-                assert_eq!(sub[i], posit::sub(spec, a[i], b[i]), "sub {spec:?} {i}");
-                assert_eq!(mul[i], posit::mul(spec, a[i], b[i]), "mul {spec:?} {i}");
-                assert_eq!(div[i], posit::div(spec, a[i], b[i]), "div {spec:?} {i}");
-                assert_eq!(max[i], posit::cmp_max(spec, a[i], b[i]), "max {spec:?} {i}");
-                assert_eq!(relu[i], posit::cmp_max(spec, a[i], 0), "relu {spec:?} {i}");
+    fn elementwise_matches_scalar_all_formats_all_backends() {
+        for be in simd::available() {
+            for spec in [P8, P16, P32, PositSpec::new(12, 1)] {
+                let a = operands(spec, 0xA0 + spec.ps as u64, 300);
+                let b = operands(spec, 0xB0 + spec.ps as u64, 300);
+                let add = vadd_with(be, spec, &a, &b);
+                let sub = vsub_with(be, spec, &a, &b);
+                let mul = vmul_with(be, spec, &a, &b);
+                let div = vdiv_with(be, spec, &a, &b);
+                let max = vmax_with(be, spec, &a, &b);
+                let relu = vrelu_with(be, spec, &a);
+                for i in 0..a.len() {
+                    let tag = format!("{be:?} {spec:?} {i}");
+                    assert_eq!(add[i], posit::add(spec, a[i], b[i]), "add {tag}");
+                    assert_eq!(sub[i], posit::sub(spec, a[i], b[i]), "sub {tag}");
+                    assert_eq!(mul[i], posit::mul(spec, a[i], b[i]), "mul {tag}");
+                    assert_eq!(div[i], posit::div(spec, a[i], b[i]), "div {tag}");
+                    assert_eq!(max[i], posit::cmp_max(spec, a[i], b[i]), "max {tag}");
+                    assert_eq!(relu[i], posit::cmp_max(spec, a[i], 0), "relu {tag}");
+                }
             }
         }
     }
 
     #[test]
-    fn fused_matches_scalar_fma() {
-        for spec in [P8, P16, P32] {
-            let a = operands(spec, 1, 200);
-            let b = operands(spec, 2, 200);
-            let c = operands(spec, 3, 200);
-            let f = vfma(spec, &a, &b, &c);
-            let alpha = a[7];
-            let axpy = vaxpy(spec, alpha, &b, &c);
-            let scaled = vscale(spec, alpha, &b);
-            let centered = vsubs(spec, &b, alpha);
-            for i in 0..a.len() {
-                assert_eq!(f[i], posit::fma(spec, a[i], b[i], c[i]), "fma {spec:?} {i}");
-                assert_eq!(axpy[i], posit::fma(spec, alpha, b[i], c[i]));
-                assert_eq!(scaled[i], posit::mul(spec, alpha, b[i]));
-                assert_eq!(centered[i], posit::sub(spec, b[i], alpha));
+    fn fused_matches_scalar_fma_all_backends() {
+        for be in simd::available() {
+            for spec in [P8, P16, P32] {
+                let a = operands(spec, 1, 200);
+                let b = operands(spec, 2, 200);
+                let c = operands(spec, 3, 200);
+                let f = vfma_with(be, spec, &a, &b, &c);
+                let alpha = a[7];
+                let axpy = vaxpy_with(be, spec, alpha, &b, &c);
+                let scaled = vscale_with(be, spec, alpha, &b);
+                let centered = vsubs_with(be, spec, &b, alpha);
+                for i in 0..a.len() {
+                    let tag = format!("{be:?} {spec:?} {i}");
+                    assert_eq!(f[i], posit::fma(spec, a[i], b[i], c[i]), "fma {tag}");
+                    assert_eq!(axpy[i], posit::fma(spec, alpha, b[i], c[i]), "axpy {tag}");
+                    assert_eq!(scaled[i], posit::mul(spec, alpha, b[i]), "scale {tag}");
+                    assert_eq!(centered[i], posit::sub(spec, b[i], alpha), "subs {tag}");
+                }
             }
         }
     }
 
     #[test]
-    fn converters_match_scalar() {
+    fn converters_match_scalar_on_every_backend() {
         let mut rng = Rng::new(9);
         let xs: Vec<f32> = (0..200)
             .map(|_| (rng.normal() * 10f64.powi(rng.below(9) as i32 - 4)) as f32)
             .collect();
         for spec in [P8, P16, P32] {
             let w = vfrom_f32(spec, &xs);
-            let back = vto_f32(spec, &w);
-            for i in 0..xs.len() {
-                assert_eq!(w[i], posit::from_f32(spec, xs[i]));
-                assert_eq!(back[i].to_bits(), posit::to_f32(spec, w[i]).to_bits());
+            for be in simd::available() {
+                let back = vto_f32_with(be, spec, &w);
+                for i in 0..xs.len() {
+                    assert_eq!(w[i], posit::from_f32(spec, xs[i]));
+                    assert_eq!(
+                        back[i].to_bits(),
+                        posit::to_f32(spec, w[i]).to_bits(),
+                        "{be:?} {spec:?} {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers_and_match() {
+        let spec = P16;
+        let xs: Vec<f32> = (0..37).map(|i| i as f32 * 0.37 - 5.0).collect();
+        let mut bits = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..3 {
+            vfrom_f32_into(spec, &xs, &mut bits);
+            assert_eq!(bits, vfrom_f32(spec, &xs));
+            vto_f32_into(spec, &bits, &mut vals);
+            let want = vto_f32(spec, &bits);
+            assert_eq!(vals.len(), want.len());
+            for (g, w) in vals.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits());
             }
         }
     }

@@ -3,10 +3,15 @@
 //! must be **bit-identical** to the scalar `posit::{add,sub,mul,div,
 //! fma,...}` path. The LUT and decode-once kernels are exact by
 //! construction, so the assertion is exact equality — not tolerance.
+//!
+//! Every kernel runs under **every SIMD backend this host supports**
+//! (the scalar fallback always included) via the `*_with` entry points:
+//! the SIMD paths share the scalar core's combine/rounding, so AVX2,
+//! NEON and scalar must agree byte for byte on every `(ps, es)`.
 
 use posar::data::Rng;
 use posar::posit::{self, PositSpec, Quire, P16, P32, P8};
-use posar::pvu;
+use posar::pvu::{self, simd};
 
 fn random_patterns(spec: PositSpec, seed: u64, n: usize) -> Vec<u32> {
     // Raw patterns: includes 0, NaR, maxpos/minpos and every regime.
@@ -18,53 +23,85 @@ const SPECS: [PositSpec; 4] = [P8, P16, P32, PositSpec { ps: 12, es: 1 }];
 
 #[test]
 fn property_elementwise_kernels_bit_identical() {
-    for spec in SPECS {
-        let a = random_patterns(spec, 0x100 + spec.ps as u64, 513);
-        let b = random_patterns(spec, 0x200 + spec.ps as u64, 513);
-        let c = random_patterns(spec, 0x300 + spec.ps as u64, 513);
-        let add = pvu::vadd(spec, &a, &b);
-        let sub = pvu::vsub(spec, &a, &b);
-        let mul = pvu::vmul(spec, &a, &b);
-        let div = pvu::vdiv(spec, &a, &b);
-        let fma = pvu::vfma(spec, &a, &b, &c);
-        let max = pvu::vmax(spec, &a, &b);
-        let relu = pvu::vrelu(spec, &a);
-        for i in 0..a.len() {
-            let (x, y, z) = (a[i], b[i], c[i]);
-            assert_eq!(add[i], posit::add(spec, x, y), "add {spec:?} {x:#x} {y:#x}");
-            assert_eq!(sub[i], posit::sub(spec, x, y), "sub {spec:?} {x:#x} {y:#x}");
-            assert_eq!(mul[i], posit::mul(spec, x, y), "mul {spec:?} {x:#x} {y:#x}");
-            assert_eq!(div[i], posit::div(spec, x, y), "div {spec:?} {x:#x} {y:#x}");
-            assert_eq!(
-                fma[i],
-                posit::fma(spec, x, y, z),
-                "fma {spec:?} {x:#x} {y:#x} {z:#x}"
-            );
-            assert_eq!(max[i], posit::cmp_max(spec, x, y), "max {spec:?}");
-            assert_eq!(relu[i], posit::cmp_max(spec, x, 0), "relu {spec:?} {x:#x}");
+    for be in simd::available() {
+        for spec in SPECS {
+            let a = random_patterns(spec, 0x100 + spec.ps as u64, 513);
+            let b = random_patterns(spec, 0x200 + spec.ps as u64, 513);
+            let c = random_patterns(spec, 0x300 + spec.ps as u64, 513);
+            let add = pvu::vadd_with(be, spec, &a, &b);
+            let sub = pvu::vsub_with(be, spec, &a, &b);
+            let mul = pvu::vmul_with(be, spec, &a, &b);
+            let div = pvu::vdiv_with(be, spec, &a, &b);
+            let fma = pvu::vfma_with(be, spec, &a, &b, &c);
+            let max = pvu::vmax_with(be, spec, &a, &b);
+            let relu = pvu::vrelu_with(be, spec, &a);
+            for i in 0..a.len() {
+                let (x, y, z) = (a[i], b[i], c[i]);
+                assert_eq!(
+                    add[i],
+                    posit::add(spec, x, y),
+                    "add {be:?} {spec:?} {x:#x} {y:#x}"
+                );
+                assert_eq!(
+                    sub[i],
+                    posit::sub(spec, x, y),
+                    "sub {be:?} {spec:?} {x:#x} {y:#x}"
+                );
+                assert_eq!(
+                    mul[i],
+                    posit::mul(spec, x, y),
+                    "mul {be:?} {spec:?} {x:#x} {y:#x}"
+                );
+                assert_eq!(
+                    div[i],
+                    posit::div(spec, x, y),
+                    "div {be:?} {spec:?} {x:#x} {y:#x}"
+                );
+                assert_eq!(
+                    fma[i],
+                    posit::fma(spec, x, y, z),
+                    "fma {be:?} {spec:?} {x:#x} {y:#x} {z:#x}"
+                );
+                assert_eq!(max[i], posit::cmp_max(spec, x, y), "max {be:?} {spec:?}");
+                assert_eq!(
+                    relu[i],
+                    posit::cmp_max(spec, x, 0),
+                    "relu {be:?} {spec:?} {x:#x}"
+                );
+            }
         }
     }
 }
 
 #[test]
 fn property_decode_once_scalar_operands_bit_identical() {
-    for spec in SPECS {
-        let x = random_patterns(spec, 0x400 + spec.ps as u64, 257);
-        let y = random_patterns(spec, 0x500 + spec.ps as u64, 257);
-        // Include the special scalars explicitly.
-        for alpha in [0u32, spec.nar(), spec.one(), spec.maxpos(), x[3]] {
-            let axpy = pvu::vaxpy(spec, alpha, &x, &y);
-            let scaled = pvu::vscale(spec, alpha, &x);
-            let centered = pvu::vsubs(spec, &x, alpha);
-            for i in 0..x.len() {
-                assert_eq!(
-                    axpy[i],
-                    posit::fma(spec, alpha, x[i], y[i]),
-                    "vaxpy {spec:?} alpha={alpha:#x} x={:#x}",
-                    x[i]
-                );
-                assert_eq!(scaled[i], posit::mul(spec, alpha, x[i]), "vscale {spec:?}");
-                assert_eq!(centered[i], posit::sub(spec, x[i], alpha), "vsubs {spec:?}");
+    for be in simd::available() {
+        for spec in SPECS {
+            let x = random_patterns(spec, 0x400 + spec.ps as u64, 257);
+            let y = random_patterns(spec, 0x500 + spec.ps as u64, 257);
+            // Include the special scalars explicitly.
+            for alpha in [0u32, spec.nar(), spec.one(), spec.maxpos(), x[3]] {
+                let axpy = pvu::vaxpy_with(be, spec, alpha, &x, &y);
+                let scaled = pvu::vscale_with(be, spec, alpha, &x);
+                let centered = pvu::vsubs_with(be, spec, &x, alpha);
+                for i in 0..x.len() {
+                    assert_eq!(
+                        axpy[i],
+                        posit::fma(spec, alpha, x[i], y[i]),
+                        "vaxpy {be:?} {spec:?} alpha={alpha:#x} x={:#x}",
+                        x[i]
+                    );
+                    assert_eq!(
+                        scaled[i],
+                        posit::mul(spec, alpha, x[i]),
+                        "vscale {be:?} {spec:?}"
+                    );
+                    assert_eq!(
+                        centered[i],
+                        posit::sub(spec, x[i], alpha),
+                        "vsubs {be:?} {spec:?}"
+                    );
+                }
             }
         }
     }
@@ -78,57 +115,67 @@ fn property_batch_converters_bit_identical() {
         .collect();
     for spec in SPECS {
         let w = pvu::vfrom_f32(spec, &xs);
-        let back = pvu::vto_f32(spec, &w);
         for i in 0..xs.len() {
             assert_eq!(w[i], posit::from_f32(spec, xs[i]), "vfrom_f32 {spec:?}");
-            assert_eq!(
-                back[i].to_bits(),
-                posit::to_f32(spec, w[i]).to_bits(),
-                "vto_f32 {spec:?} {:#x}",
-                w[i]
-            );
+        }
+        for be in simd::available() {
+            let back = pvu::vto_f32_with(be, spec, &w);
+            for i in 0..xs.len() {
+                assert_eq!(
+                    back[i].to_bits(),
+                    posit::to_f32(spec, w[i]).to_bits(),
+                    "vto_f32 {be:?} {spec:?} {:#x}",
+                    w[i]
+                );
+            }
         }
     }
 }
 
 #[test]
 fn property_quire_fused_family_bit_identical() {
-    for spec in [P8, P16, P32] {
-        let n = 129;
-        let a = random_patterns(spec, 0x600 + spec.ps as u64, n);
-        let b = random_patterns(spec, 0x700 + spec.ps as u64, n);
-        // dot == scalar quire reference.
-        let mut q = Quire::new(spec);
-        for i in 0..n {
-            q.add_product(a[i], b[i]);
-        }
-        assert_eq!(pvu::dot(spec, &a, &b), q.to_posit(), "dot {spec:?}");
-
-        // gemv == per-row scalar quire reference, bias folded in.
-        let (rows, cols) = (7, 18);
-        let w = random_patterns(spec, 0x800 + spec.ps as u64, rows * cols);
-        let x = random_patterns(spec, 0x900 + spec.ps as u64, cols);
-        let bias = random_patterns(spec, 0xA00 + spec.ps as u64, rows);
-        let y = pvu::gemv(spec, &w, &x, Some(&bias), rows, cols);
-        for r in 0..rows {
+    for be in simd::available() {
+        for spec in [P8, P16, P32] {
+            let n = 129;
+            let a = random_patterns(spec, 0x600 + spec.ps as u64, n);
+            let b = random_patterns(spec, 0x700 + spec.ps as u64, n);
+            // dot == scalar quire reference.
             let mut q = Quire::new(spec);
-            q.add(bias[r]);
-            for c in 0..cols {
-                q.add_product(w[r * cols + c], x[c]);
+            for i in 0..n {
+                q.add_product(a[i], b[i]);
             }
-            assert_eq!(y[r], q.to_posit(), "gemv {spec:?} row {r}");
-        }
+            assert_eq!(pvu::dot_with(be, spec, &a, &b), q.to_posit(), "dot {be:?} {spec:?}");
 
-        // gemm == dot of (row i of A, column j of B) per output.
-        let (m, k, nn) = (5, 11, 4);
-        let ma = random_patterns(spec, 0xB00 + spec.ps as u64, m * k);
-        let mb = random_patterns(spec, 0xC00 + spec.ps as u64, k * nn);
-        let mc = pvu::gemm(spec, &ma, &mb, m, k, nn);
-        for i in 0..m {
-            for j in 0..nn {
-                let row: Vec<u32> = (0..k).map(|kk| ma[i * k + kk]).collect();
-                let col: Vec<u32> = (0..k).map(|kk| mb[kk * nn + j]).collect();
-                assert_eq!(mc[i * nn + j], pvu::dot(spec, &row, &col), "gemm {spec:?}");
+            // gemv == per-row scalar quire reference, bias folded in.
+            let (rows, cols) = (7, 18);
+            let w = random_patterns(spec, 0x800 + spec.ps as u64, rows * cols);
+            let x = random_patterns(spec, 0x900 + spec.ps as u64, cols);
+            let bias = random_patterns(spec, 0xA00 + spec.ps as u64, rows);
+            let y = pvu::gemv_with(be, spec, &w, &x, Some(&bias), rows, cols);
+            for r in 0..rows {
+                let mut q = Quire::new(spec);
+                q.add(bias[r]);
+                for c in 0..cols {
+                    q.add_product(w[r * cols + c], x[c]);
+                }
+                assert_eq!(y[r], q.to_posit(), "gemv {be:?} {spec:?} row {r}");
+            }
+
+            // gemm == dot of (row i of A, column j of B) per output.
+            let (m, k, nn) = (5, 11, 4);
+            let ma = random_patterns(spec, 0xB00 + spec.ps as u64, m * k);
+            let mb = random_patterns(spec, 0xC00 + spec.ps as u64, k * nn);
+            let mc = pvu::gemm_with(be, spec, &ma, &mb, m, k, nn);
+            for i in 0..m {
+                for j in 0..nn {
+                    let row: Vec<u32> = (0..k).map(|kk| ma[i * k + kk]).collect();
+                    let col: Vec<u32> = (0..k).map(|kk| mb[kk * nn + j]).collect();
+                    assert_eq!(
+                        mc[i * nn + j],
+                        pvu::dot(spec, &row, &col),
+                        "gemm {be:?} {spec:?}"
+                    );
+                }
             }
         }
     }
@@ -139,17 +186,22 @@ fn p8_luts_exhaustively_bit_identical() {
     // Every entry of every table vs the scalar core — the strongest
     // statement: 4 × 65536 binary entries + 2 × 256 unary entries.
     assert_eq!(pvu::verify_p8_luts(), 0);
-    // And the slice entry points dispatch through them unchanged.
+    // And the slice entry points dispatch through them unchanged, on
+    // every backend (the AVX2 path gathers from the same tables).
     let all: Vec<u32> = (0..=255u32).collect();
-    for &a in &all {
-        let av = vec![a; 256];
-        assert_eq!(
-            pvu::vadd(P8, &av, &all),
-            all.iter().map(|&b| posit::add(P8, a, b)).collect::<Vec<_>>()
-        );
-        assert_eq!(
-            pvu::vdiv(P8, &av, &all),
-            all.iter().map(|&b| posit::div(P8, a, b)).collect::<Vec<_>>()
-        );
+    for be in simd::available() {
+        for &a in &all {
+            let av = vec![a; 256];
+            assert_eq!(
+                pvu::vadd_with(be, P8, &av, &all),
+                all.iter().map(|&b| posit::add(P8, a, b)).collect::<Vec<_>>(),
+                "{be:?} a={a:#x}"
+            );
+            assert_eq!(
+                pvu::vdiv_with(be, P8, &av, &all),
+                all.iter().map(|&b| posit::div(P8, a, b)).collect::<Vec<_>>(),
+                "{be:?} a={a:#x}"
+            );
+        }
     }
 }

@@ -1,0 +1,176 @@
+//! Differential SIMD fuzz: random `(ps, es)` formats — including odd
+//! widths and an `(8,0)` near-miss of the LUT'd Posit(8,1) — driven
+//! through every PVU kernel on every backend this host supports,
+//! asserting byte-identical results against the scalar core.
+//! Complements `tests/pvu_exact.rs` (fixed formats, exhaustive p8) with
+//! format-space coverage, and pins the forced-selection contract behind
+//! the `PVU_SIMD` override (the env variable itself is exercised
+//! end-to-end by the CI serve smoke, not here — mutating the process
+//! environment races parallel tests).
+
+use posar::data::Rng;
+use posar::posit::{self, PositSpec, Quire};
+use posar::pvu::{self, simd, SimdBackend, SimdChoice};
+
+/// Formats the fuzz sweeps: odd widths, every es in 0..=3, and (8,0) —
+/// same width as the LUT'd Posit(8,1) but a different format, so it
+/// must take the decode-table path, not the LUTs.
+const FUZZ_SPECS: [PositSpec; 12] = [
+    PositSpec { ps: 5, es: 0 },
+    PositSpec { ps: 6, es: 1 },
+    PositSpec { ps: 7, es: 2 },
+    PositSpec { ps: 8, es: 0 },
+    PositSpec { ps: 9, es: 0 },
+    PositSpec { ps: 10, es: 1 },
+    PositSpec { ps: 11, es: 3 },
+    PositSpec { ps: 12, es: 2 },
+    PositSpec { ps: 13, es: 2 },
+    PositSpec { ps: 14, es: 0 },
+    PositSpec { ps: 15, es: 1 },
+    PositSpec { ps: 16, es: 3 },
+];
+
+/// Random patterns with the special values injected up front: 0, NaR,
+/// ±1, maxpos, minpos — the edges every kernel's zero/NaR ladder and
+/// every rounding boundary must survive.
+fn patterns(spec: PositSpec, seed: u64, n: usize) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let one = spec.one();
+    let mut v = vec![0, spec.nar(), one, spec.negate(one), spec.maxpos(), 1];
+    while v.len() < n {
+        v.push(rng.bits32(spec.ps));
+    }
+    v.truncate(n);
+    v
+}
+
+#[test]
+fn fuzz_every_kernel_every_backend_every_format() {
+    // 193 lanes: not a multiple of the 8-lane AVX2 (or 4-lane NEON)
+    // width, so the vector main loop and the scalar tail both run.
+    let n = 193;
+    for be in simd::available() {
+        for spec in FUZZ_SPECS {
+            let a = patterns(spec, 0x1000 + spec.ps as u64 * 7 + spec.es as u64, n);
+            let b = patterns(spec, 0x2000 + spec.ps as u64 * 7 + spec.es as u64, n);
+            let c = patterns(spec, 0x3000 + spec.ps as u64 * 7 + spec.es as u64, n);
+            let add = pvu::vadd_with(be, spec, &a, &b);
+            let sub = pvu::vsub_with(be, spec, &a, &b);
+            let mul = pvu::vmul_with(be, spec, &a, &b);
+            let div = pvu::vdiv_with(be, spec, &a, &b);
+            let fma = pvu::vfma_with(be, spec, &a, &b, &c);
+            let max = pvu::vmax_with(be, spec, &a, &b);
+            let relu = pvu::vrelu_with(be, spec, &a);
+            let axpy = pvu::vaxpy_with(be, spec, a[7], &a, &b);
+            let scaled = pvu::vscale_with(be, spec, b[7], &a);
+            let centered = pvu::vsubs_with(be, spec, &a, c[7]);
+            for i in 0..n {
+                let (x, y, z) = (a[i], b[i], c[i]);
+                let tag = format!("{be:?} {spec:?} lane {i} x={x:#x} y={y:#x}");
+                assert_eq!(add[i], posit::add(spec, x, y), "add {tag}");
+                assert_eq!(sub[i], posit::sub(spec, x, y), "sub {tag}");
+                assert_eq!(mul[i], posit::mul(spec, x, y), "mul {tag}");
+                assert_eq!(div[i], posit::div(spec, x, y), "div {tag}");
+                assert_eq!(fma[i], posit::fma(spec, x, y, z), "fma {tag} z={z:#x}");
+                assert_eq!(max[i], posit::cmp_max(spec, x, y), "max {tag}");
+                assert_eq!(relu[i], posit::cmp_max(spec, x, 0), "relu {tag}");
+                assert_eq!(axpy[i], posit::fma(spec, a[7], x, y), "axpy {tag}");
+                assert_eq!(scaled[i], posit::mul(spec, b[7], x), "scale {tag}");
+                assert_eq!(centered[i], posit::sub(spec, x, c[7]), "subs {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzz_quire_fused_kernels_cross_block_boundaries() {
+    for be in simd::available() {
+        for spec in FUZZ_SPECS {
+            // Finite operands: a stray NaR would poison every output and
+            // hide real blocking bugs behind a constant.
+            let mut rng = Rng::new(0x4000 + spec.ps as u64);
+            let finite = |rng: &mut Rng, n: usize| -> Vec<u32> {
+                (0..n)
+                    .map(|_| posit::from_f64(spec, rng.range(-2.0, 2.0)))
+                    .collect()
+            };
+            // 131 > BLOCK (64): the blocked decode path wraps twice and
+            // ends on a partial block.
+            let n = 131;
+            let a = finite(&mut rng, n);
+            let b = finite(&mut rng, n);
+            let mut q = Quire::new(spec);
+            for i in 0..n {
+                q.add_product(a[i], b[i]);
+            }
+            assert_eq!(
+                pvu::dot_with(be, spec, &a, &b),
+                q.to_posit(),
+                "dot {be:?} {spec:?}"
+            );
+            let (rows, cols) = (3, 70);
+            let w = finite(&mut rng, rows * cols);
+            let x = finite(&mut rng, cols);
+            let y = pvu::gemv_with(be, spec, &w, &x, None, rows, cols);
+            for r in 0..rows {
+                let mut q = Quire::new(spec);
+                for cidx in 0..cols {
+                    q.add_product(w[r * cols + cidx], x[cidx]);
+                }
+                assert_eq!(y[r], q.to_posit(), "gemv {be:?} {spec:?} row {r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn p8_lut_gathers_exhaustive_mul_and_sub() {
+    // tests/pvu_exact.rs covers add/div exhaustively per backend; this
+    // closes the remaining gathered tables over all 65536 pairs.
+    let all: Vec<u32> = (0..=255u32).collect();
+    for be in simd::available() {
+        for &a in &all {
+            let av = vec![a; 256];
+            assert_eq!(
+                pvu::vmul_with(be, posit::P8, &av, &all),
+                all.iter()
+                    .map(|&b| posit::mul(posit::P8, a, b))
+                    .collect::<Vec<_>>(),
+                "{be:?} a={a:#x}"
+            );
+            assert_eq!(
+                pvu::vsub_with(be, posit::P8, &av, &all),
+                all.iter()
+                    .map(|&b| posit::sub(posit::P8, a, b))
+                    .collect::<Vec<_>>(),
+                "{be:?} a={a:#x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn forced_selection_reports_what_it_runs() {
+    // The parse → resolve pipeline is exactly what `PVU_SIMD` feeds
+    // (CI drives the env itself end-to-end: the serve smoke runs once
+    // with PVU_SIMD=off and greps `"simd_backend": "scalar"`).
+    assert_eq!(SimdChoice::parse("off"), Some(SimdChoice::Force(SimdBackend::Scalar)));
+    assert_eq!(simd::resolve_env_value("off").name(), "scalar");
+    assert_eq!(simd::resolve_env_value("scalar").name(), "scalar");
+    // Unparseable values fall back to the always-correct scalar path.
+    assert_eq!(simd::resolve_env_value("avx512-typo").name(), "scalar");
+    // Forcing an available backend selects exactly that backend.
+    for be in simd::available() {
+        assert_eq!(simd::resolve(SimdChoice::Force(be)), be);
+        assert!(simd::supported(be) || be == SimdBackend::Scalar);
+    }
+    // Forcing an unsupported backend degrades to scalar, never UB.
+    for be in [SimdBackend::Avx2, SimdBackend::Neon] {
+        if !simd::supported(be) {
+            assert_eq!(simd::resolve(SimdChoice::Force(be)), SimdBackend::Scalar);
+        }
+    }
+    // Auto and the process-wide active() land on a supported backend.
+    assert!(simd::available().contains(&simd::resolve(SimdChoice::Auto)));
+    assert!(simd::available().contains(&simd::active()));
+}
