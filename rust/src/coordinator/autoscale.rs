@@ -1,30 +1,35 @@
-//! Shard autoscaler: grow/shrink a variant's live worker shards from the
-//! in-flight gauges the least-queued router already maintains.
+//! Shard autoscaling policies: grow/shrink a variant's live worker
+//! shards from per-tick observations.
 //!
-//! The serving stack's elasticity loop (ROADMAP: "autoscaling: grow/
-//! shrink `shards` per variant from the in-flight gauges") splits into
-//! two halves:
+//! The serving stack's elasticity loop splits into two halves:
 //!
-//! - **Policy** — [`ShardScaler`], a pure per-variant state machine. It
-//!   is fed one observation per tick (total in-flight requests, live
-//!   shard count) and decides [`ScaleAction::Up`], [`ScaleAction::Down`]
-//!   or nothing. Being plain data in → data out, it is unit-testable
-//!   without threads, queues, or clocks.
+//! - **Policy** — a [`ScalePolicy`] implementation, a pure per-variant
+//!   state machine. It is fed one [`ScaleObservation`] per tick (total
+//!   in-flight requests, live shard count, sketch-measured interval
+//!   p99) and answers with a [`ScaleDecision`] or nothing. Being plain
+//!   data in → data out, every policy is unit-testable without
+//!   threads, queues, or clocks. Two policies ship:
+//!   [`ShardScaler`] (occupancy: per-shard in-flight backlog) and
+//!   [`SloScaler`] (`--slo-p99-us`: hold the sketch-measured p99 under
+//!   a latency objective). [`ScalePolicyChoice`] in `ServeConfig`
+//!   selects between them.
 //! - **Actuation** — the coordinator's controller thread (see
 //!   `Coordinator::start`), which ticks every [`AutoscaleConfig::interval`],
-//!   reads the gauges, applies the decisions by spawning or retiring
-//!   worker shards, and records each transition as a scale event in the
-//!   metrics registry — annotated with the variant's sketch-derived p99
-//!   latency at decision time, so a transition can be read back against
-//!   the tail it answered to (`docs/OBSERVABILITY.md`).
+//!   assembles the observation (gauges plus the per-interval latency
+//!   delta from the metrics registry's sketches), applies the decisions
+//!   by spawning or retiring worker shards, and records each transition
+//!   as a scale event — annotated with the variant's p99 at decision
+//!   time *and* the policy's stated reason, so a transition can be read
+//!   back against the tail it answered to (`docs/OBSERVABILITY.md`).
 //!
-//! The policy is the classic asymmetric one: scale **up fast** (a
-//! sustained high per-shard backlog for [`AutoscaleConfig::sustain`]
-//! consecutive ticks), scale **down slowly** (a sustained idle signal
-//! *and* an expired [`AutoscaleConfig::cooldown`]), and never leave the
-//! `[min_shards, max_shards]` band. Cooldown starts after *any* scale
-//! event, so the shard count cannot flap: a burst that triggers an
-//! up-scale holds the new capacity for at least `cooldown` ticks.
+//! Both policies are the classic asymmetric shape: scale **up fast** (a
+//! sustained breach for [`AutoscaleConfig::sustain`] consecutive ticks,
+//! never delayed by cooldown), scale **down slowly** (a sustained idle
+//! signal *and* an expired [`AutoscaleConfig::cooldown`]), and never
+//! leave the `[min_shards, max_shards]` band. Cooldown starts after
+//! *any* scale event, so the shard count cannot flap: a burst that
+//! triggers an up-scale holds the new capacity for at least `cooldown`
+//! ticks.
 
 use std::time::Duration;
 
@@ -37,11 +42,12 @@ pub struct AutoscaleConfig {
     /// entirely (the default — shard counts stay as configured).
     pub max_shards: usize,
     /// Per-shard in-flight load at or above which a tick counts as
-    /// pressured (the scale-up signal).
+    /// pressured (the occupancy policy's scale-up signal).
     pub high_inflight: usize,
     /// Per-shard in-flight load strictly below which a tick counts as
-    /// idle (the scale-down signal). With the default of 1, a variant is
-    /// idle when it has fewer waiting requests than shards.
+    /// idle (the occupancy policy's scale-down signal). With the default
+    /// of 1, a variant is idle when it has fewer waiting requests than
+    /// shards.
     pub low_inflight: usize,
     /// Consecutive pressured (resp. idle) ticks required before a scale
     /// decision fires. Filters one-tick noise.
@@ -83,9 +89,82 @@ pub enum ScaleAction {
     Down,
 }
 
-/// Per-variant scaling state machine. Feed it one [`ShardScaler::observe`]
-/// per tick; it answers with the action to apply, already bounds-checked
-/// against `[min_shards, max_shards]`.
+/// One controller tick's signals for one variant, assembled by the
+/// actuator and handed to the active [`ScalePolicy`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScaleObservation {
+    /// Total in-flight requests (queued + executing across all shards).
+    pub inflight: usize,
+    /// Live shard count.
+    pub shards: usize,
+    /// Sketch-measured p99 end-to-end latency (µs) over the *last
+    /// controller interval* — a `delta_since` of the variant's latency
+    /// sketch, not the lifetime tail. `None` when no request completed
+    /// in the interval (an idle tick).
+    pub p99_us: Option<u64>,
+}
+
+/// A scale action plus the policy's stated reason, recorded verbatim
+/// into the scale-event log.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScaleDecision {
+    /// What the actuator should do.
+    pub action: ScaleAction,
+    /// Why — e.g. `"slo: p99 4813us > target 2000us"`. Prefixed with
+    /// the policy name so event logs from different policies read
+    /// unambiguously.
+    pub reason: String,
+}
+
+impl ScaleDecision {
+    fn new(action: ScaleAction, reason: String) -> Option<Self> {
+        Some(ScaleDecision { action, reason })
+    }
+}
+
+/// A per-variant scaling policy: one observation in per tick, at most
+/// one bounds-checked decision out. Implementations must be `Send` —
+/// the controller thread owns one instance per variant.
+pub trait ScalePolicy: Send {
+    /// Policy name as it prefixes scale-event reasons (`"occupancy"`,
+    /// `"slo"`).
+    fn name(&self) -> &'static str;
+    /// One controller tick. Returns the decision the actuator should
+    /// apply, or `None` to hold.
+    fn observe(&mut self, obs: &ScaleObservation) -> Option<ScaleDecision>;
+}
+
+/// Which [`ScalePolicy`] the coordinator's controller runs. Selected
+/// from `ServeConfig::scale_policy` (CLI: default occupancy,
+/// `--slo-p99-us TARGET` for the SLO policy).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum ScalePolicyChoice {
+    /// Occupancy-driven [`ShardScaler`]: scale on per-shard in-flight
+    /// backlog.
+    #[default]
+    Occupancy,
+    /// SLO-driven [`SloScaler`]: scale to hold the sketch-measured
+    /// interval p99 under `target_us`.
+    SloP99 {
+        /// The latency objective, µs.
+        target_us: u64,
+    },
+}
+
+impl ScalePolicyChoice {
+    /// Instantiate the chosen policy's per-variant state machine.
+    pub fn build(&self, cfg: AutoscaleConfig) -> Box<dyn ScalePolicy> {
+        match self {
+            ScalePolicyChoice::Occupancy => Box::new(ShardScaler::new(cfg)),
+            ScalePolicyChoice::SloP99 { target_us } => Box::new(SloScaler::new(cfg, *target_us)),
+        }
+    }
+}
+
+/// Occupancy policy: per-variant scaling state machine over the
+/// in-flight gauges the least-queued router already maintains. Feed it
+/// one [`ShardScaler::observe`] per tick; it answers with the action to
+/// apply, already bounds-checked against `[min_shards, max_shards]`.
 #[derive(Clone, Debug)]
 pub struct ShardScaler {
     cfg: AutoscaleConfig,
@@ -145,6 +224,122 @@ impl ShardScaler {
     }
 }
 
+impl ScalePolicy for ShardScaler {
+    fn name(&self) -> &'static str {
+        "occupancy"
+    }
+
+    fn observe(&mut self, obs: &ScaleObservation) -> Option<ScaleDecision> {
+        let action = ShardScaler::observe(self, obs.inflight, obs.shards)?;
+        ScaleDecision::new(
+            action,
+            format!(
+                "occupancy: {} in-flight over {} shards",
+                obs.inflight,
+                obs.shards.max(1)
+            ),
+        )
+    }
+}
+
+/// SLO policy: hold the sketch-measured interval p99 under a latency
+/// objective.
+///
+/// Per tick, the variant is **breaching** when the interval p99 exceeds
+/// `target_us`, a **shrink candidate** when it is at or below *half*
+/// the target (comfortable headroom) or when the interval was idle (no
+/// completions — nothing to defend), and **holding** in the band
+/// between. Sustained breach scales up (fast: cooldown never delays
+/// it); a sustained shrink signal scales down once the cooldown from
+/// the previous scale event has expired. The half-target shrink
+/// threshold is the hysteresis that keeps up/down from oscillating
+/// around the objective.
+#[derive(Clone, Debug)]
+pub struct SloScaler {
+    cfg: AutoscaleConfig,
+    /// The p99 objective, µs.
+    target_us: u64,
+    /// Consecutive breaching ticks.
+    hot: u32,
+    /// Consecutive shrink-candidate ticks.
+    cold: u32,
+    /// Ticks left before another scale-down is allowed.
+    cooldown_left: u32,
+    /// Last observed interval p99 (for the decision reason).
+    last_p99: Option<u64>,
+}
+
+impl SloScaler {
+    /// Fresh state machine for one variant holding `target_us`.
+    pub fn new(cfg: AutoscaleConfig, target_us: u64) -> Self {
+        SloScaler {
+            cfg,
+            target_us,
+            hot: 0,
+            cold: 0,
+            cooldown_left: 0,
+            last_p99: None,
+        }
+    }
+}
+
+impl ScalePolicy for SloScaler {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+
+    fn observe(&mut self, obs: &ScaleObservation) -> Option<ScaleDecision> {
+        if !self.cfg.enabled() || self.target_us == 0 {
+            return None;
+        }
+        self.cooldown_left = self.cooldown_left.saturating_sub(1);
+        let shards = obs.shards.max(1);
+        self.last_p99 = obs.p99_us;
+        match obs.p99_us {
+            Some(p) if p > self.target_us => {
+                self.hot += 1;
+                self.cold = 0;
+            }
+            Some(p) if p.saturating_mul(2) <= self.target_us => {
+                self.cold += 1;
+                self.hot = 0;
+            }
+            Some(_) => {
+                // Inside the (target/2, target] band: holding.
+                self.hot = 0;
+                self.cold = 0;
+            }
+            None => {
+                // Idle interval: no completions, no tail to defend.
+                self.cold += 1;
+                self.hot = 0;
+            }
+        }
+        let sustain = self.cfg.sustain.max(1);
+        if self.hot >= sustain && shards < self.cfg.max_shards {
+            self.hot = 0;
+            self.cold = 0;
+            self.cooldown_left = self.cfg.cooldown;
+            let p = self.last_p99.unwrap_or(0);
+            return ScaleDecision::new(
+                ScaleAction::Up,
+                format!("slo: p99 {p}us > target {}us", self.target_us),
+            );
+        }
+        if self.cold >= sustain && shards > self.cfg.min_shards && self.cooldown_left == 0 {
+            self.cold = 0;
+            self.hot = 0;
+            self.cooldown_left = self.cfg.cooldown;
+            let reason = match self.last_p99 {
+                Some(p) => format!("slo: p99 {p}us <= half of target {}us", self.target_us),
+                None => format!("slo: idle interval under target {}us", self.target_us),
+            };
+            return ScaleDecision::new(ScaleAction::Down, reason);
+        }
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +353,15 @@ mod tests {
             sustain: 3,
             cooldown: 5,
             ..Default::default()
+        }
+    }
+
+    /// Shorthand observation for SLO-policy tests (occupancy ignored).
+    fn obs(p99_us: Option<u64>, shards: usize) -> ScaleObservation {
+        ScaleObservation {
+            inflight: 0,
+            shards,
+            p99_us,
         }
     }
 
@@ -237,5 +441,133 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(s.observe(8, 3), None);
         }
+    }
+
+    // --- SloScaler: the same transition suite against the p99 signal ---
+
+    #[test]
+    fn slo_disabled_config_never_scales() {
+        // max_shards 0 disables the policy outright...
+        let mut s = SloScaler::new(AutoscaleConfig::default(), 1_000);
+        for _ in 0..100 {
+            assert_eq!(s.observe(&obs(Some(1_000_000), 1)), None);
+        }
+        // ...and so does a zero target (nothing to hold).
+        let mut s = SloScaler::new(cfg(), 0);
+        for _ in 0..100 {
+            assert_eq!(s.observe(&obs(Some(1_000_000), 1)), None);
+        }
+    }
+
+    #[test]
+    fn slo_holds_inside_the_band() {
+        // p99 between target/2 and target: neither streak accumulates.
+        let mut s = SloScaler::new(cfg(), 2_000);
+        for _ in 0..50 {
+            assert_eq!(s.observe(&obs(Some(1_500), 2)), None);
+        }
+    }
+
+    #[test]
+    fn slo_breach_scales_up_after_sustain() {
+        let mut s = SloScaler::new(cfg(), 2_000);
+        // Two breaching ticks, then one in-band tick: streak resets.
+        assert_eq!(s.observe(&obs(Some(5_000), 1)), None);
+        assert_eq!(s.observe(&obs(Some(5_000), 1)), None);
+        assert_eq!(s.observe(&obs(Some(1_900), 1)), None);
+        // Three consecutive breaches: up on the third, reason annotated.
+        assert_eq!(s.observe(&obs(Some(5_000), 1)), None);
+        assert_eq!(s.observe(&obs(Some(5_000), 1)), None);
+        let d = s
+            .observe(&obs(Some(5_000), 1))
+            .expect("sustained breach must scale up");
+        assert_eq!(d.action, ScaleAction::Up);
+        assert_eq!(d.reason, "slo: p99 5000us > target 2000us");
+    }
+
+    #[test]
+    fn slo_up_respects_max_and_down_respects_min() {
+        // Breaching hard at the ceiling: hold.
+        let mut s = SloScaler::new(cfg(), 2_000);
+        for _ in 0..20 {
+            assert_eq!(s.observe(&obs(Some(1_000_000), 4)), None);
+        }
+        // Comfortable at the floor: hold.
+        let mut s = SloScaler::new(cfg(), 2_000);
+        for _ in 0..20 {
+            assert_eq!(s.observe(&obs(Some(10), 1)), None);
+        }
+    }
+
+    #[test]
+    fn slo_recovery_scales_down_only_after_cooldown() {
+        let mut s = SloScaler::new(cfg(), 2_000);
+        // Breach to trigger an up-scale: cooldown starts.
+        for _ in 0..2 {
+            assert_eq!(s.observe(&obs(Some(9_000), 1)), None);
+        }
+        let d = s.observe(&obs(Some(9_000), 1)).expect("up");
+        assert_eq!(d.action, ScaleAction::Up);
+        // Recovered (p99 well under half target) at 2 shards: sustain is
+        // satisfied after 3 ticks but the 5-tick cooldown must expire.
+        let mut fired_at = None;
+        for tick in 1..=10 {
+            if let Some(d) = s.observe(&obs(Some(100), 2)) {
+                assert_eq!(d.action, ScaleAction::Down);
+                assert_eq!(d.reason, "slo: p99 100us <= half of target 2000us");
+                fired_at = Some(tick);
+                break;
+            }
+        }
+        let fired_at = fired_at.expect("recovered variant must eventually scale down");
+        assert!(
+            fired_at > 3,
+            "down at tick {fired_at} ignored the cooldown (sustain alone is 3)"
+        );
+    }
+
+    #[test]
+    fn slo_idle_intervals_count_toward_scale_down() {
+        // No completions at all (p99 None): nothing to defend, shrink.
+        let mut s = SloScaler::new(cfg(), 2_000);
+        let mut down = None;
+        for _ in 0..10 {
+            if let Some(d) = s.observe(&obs(None, 2)) {
+                down = Some(d);
+                break;
+            }
+        }
+        let d = down.expect("idle variant must scale down");
+        assert_eq!(d.action, ScaleAction::Down);
+        assert_eq!(d.reason, "slo: idle interval under target 2000us");
+    }
+
+    #[test]
+    fn policies_are_interchangeable_behind_the_trait() {
+        // The same driver loop works against either choice; reasons are
+        // prefixed with the policy name.
+        let mut occupancy = ScalePolicyChoice::Occupancy.build(cfg());
+        let mut slo = ScalePolicyChoice::SloP99 { target_us: 2_000 }.build(cfg());
+        assert_eq!(occupancy.name(), "occupancy");
+        assert_eq!(slo.name(), "slo");
+        let pressured = ScaleObservation {
+            inflight: 100,
+            shards: 1,
+            p99_us: Some(50_000),
+        };
+        let mut got = (None, None);
+        for _ in 0..10 {
+            if let Some(d) = occupancy.observe(&pressured) {
+                got.0 = Some(d);
+            }
+            if let Some(d) = slo.observe(&pressured) {
+                got.1 = Some(d);
+            }
+        }
+        let (o, s) = (got.0.expect("occupancy up"), got.1.expect("slo up"));
+        assert_eq!(o.action, ScaleAction::Up);
+        assert!(o.reason.starts_with("occupancy: "), "{}", o.reason);
+        assert_eq!(s.action, ScaleAction::Up);
+        assert!(s.reason.starts_with("slo: "), "{}", s.reason);
     }
 }

@@ -522,7 +522,29 @@ mod tests {
         assert_eq!(r.missing, vec!["p16".to_string()], "dropped variant");
         assert!(r.has_regressions());
         assert_eq!(r.added, vec!["p8".to_string()]);
-        assert!(r.render().contains("missing from the new snapshot"));
+        let table = r.render();
+        assert!(table.contains("missing from the new snapshot"));
+        assert!(
+            table.contains("p8         new variant (no baseline)"),
+            "added variants get an informational line: {table}"
+        );
+        // An added variant alone is informational, never a regression:
+        // same comparison with the dropped variant restored.
+        let both = r#"{"variants": [
+            {"variant": "fp32", "p99_us": 1000, "mean_latency_us": 500.0,
+             "throughput_rps": 100.0, "top1": 0.70},
+            {"variant": "p16", "p99_us": 800, "mean_latency_us": 400.0,
+             "throughput_rps": 120.0, "top1": 0.71},
+            {"variant": "p8", "p99_us": 700, "mean_latency_us": 300.0,
+             "throughput_rps": 150.0, "top1": 0.55}
+        ]}"#;
+        let r = compare_json(&old, both, 20.0).unwrap();
+        assert_eq!(r.added, vec!["p8".to_string()]);
+        assert!(
+            !r.has_regressions(),
+            "new-only variants must not fail the gate: {}",
+            r.render()
+        );
     }
 
     #[test]

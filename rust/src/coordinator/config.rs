@@ -1,0 +1,533 @@
+//! Serving-configuration builder: every cross-flag rule in one place.
+//!
+//! `main.rs` used to interleave flag parsing with ad-hoc validation
+//! (`--batch` vs the PJRT backend, autoscale min/max/interval sanity,
+//! `--rate`/`--duration-ms` without `--open`, …), so each new flag grew
+//! another scattered `if`. The builder inverts that: the CLI layer only
+//! *collects* raw values ([`ServeConfigBuilder`]'s setters accept the
+//! `Option`s flag parsing naturally produces), and a single
+//! [`ServeConfigBuilder::validate`] checks every rule at once —
+//! returning one typed [`ConfigError`] — before
+//! [`ServeConfigBuilder::build`] assembles the [`ServeConfig`].
+//! `main.rs` becomes parse → build → run.
+//!
+//! Bench-only knobs (`--open`, `--rate`, `--duration-ms`, `--replay`)
+//! are collected too: they never land in `ServeConfig`, but their
+//! cross-flag rules (rate without open, replay against open) belong to
+//! the same validation pass.
+
+use super::autoscale::{AutoscaleConfig, ScalePolicyChoice};
+use super::{metrics, BackendChoice, Routing, ServeConfig, TraceConfig};
+use std::fmt;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// A serving-configuration contradiction, found by
+/// [`ServeConfigBuilder::validate`]. One variant per rule, so tests and
+/// callers can match on *which* rule fired instead of grepping message
+/// strings.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// `--backend` named neither `pvu` nor `pjrt`.
+    UnknownBackend(String),
+    /// `--routing` named neither round-robin nor least-queued.
+    UnknownRouting(String),
+    /// `--batch` given with the PJRT backend (batch size is baked into
+    /// the AOT executables).
+    BatchWithPjrt,
+    /// `--autoscale-min` without `--autoscale-max` (a floor alone
+    /// cannot enable the controller).
+    AutoscaleMinWithoutMax,
+    /// Autoscale bounds out of order or a zero floor.
+    AutoscaleBounds {
+        /// The offending floor.
+        min: usize,
+        /// The ceiling it must fit under.
+        max: usize,
+    },
+    /// `--scale-interval-ms 0` (the controller would busy-spin).
+    ScaleIntervalZero,
+    /// `--slo-p99-us` without `--autoscale-max` (the SLO policy needs
+    /// headroom to scale into).
+    SloWithoutAutoscale,
+    /// `--slo-p99-us 0` (no latency objective to hold).
+    SloZeroTarget,
+    /// `--scale-event-cap 0` (the ring must retain at least one event).
+    ScaleEventCapZero,
+    /// `--trace-file` without a selection rule (`--trace-sample` or
+    /// `--trace-slow-us`): nothing would ever be written.
+    TraceFileWithoutRule,
+    /// `--rate` only applies to the open-loop generator (add `--open`).
+    RateWithoutOpen,
+    /// `--duration-ms` only applies to the open-loop generator.
+    DurationWithoutOpen,
+    /// `--replay` supplies the arrival schedule itself — it conflicts
+    /// with `--open`/`--rate`/`--duration-ms`.
+    ReplayWithOpen,
+    /// `--rate` must be a positive, finite requests/second.
+    RateNotPositive(f64),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::UnknownBackend(b) => {
+                write!(f, "unknown --backend {b:?} (expected pvu or pjrt)")
+            }
+            ConfigError::UnknownRouting(r) => {
+                write!(f, "unknown --routing {r:?} (rr|round-robin|lq|least-queued)")
+            }
+            ConfigError::BatchWithPjrt => write!(
+                f,
+                "--batch applies to the native pvu backend; PJRT batch sizes are baked into the artifacts"
+            ),
+            ConfigError::AutoscaleMinWithoutMax => {
+                write!(f, "--autoscale-min requires --autoscale-max (the ceiling enables the controller)")
+            }
+            ConfigError::AutoscaleBounds { min, max } => write!(
+                f,
+                "--autoscale-min {min} must be between 1 and --autoscale-max {max}"
+            ),
+            ConfigError::ScaleIntervalZero => {
+                write!(f, "--scale-interval-ms must be at least 1 (0 would busy-spin the controller)")
+            }
+            ConfigError::SloWithoutAutoscale => write!(
+                f,
+                "--slo-p99-us requires --autoscale-max: the SLO policy needs shard headroom to scale into"
+            ),
+            ConfigError::SloZeroTarget => {
+                write!(f, "--slo-p99-us must be a positive latency objective in microseconds")
+            }
+            ConfigError::ScaleEventCapZero => {
+                write!(f, "--scale-event-cap must be at least 1 retained event")
+            }
+            ConfigError::TraceFileWithoutRule => write!(
+                f,
+                "--trace-file needs a selection rule: add --trace-sample N and/or --trace-slow-us T"
+            ),
+            ConfigError::RateWithoutOpen => {
+                write!(f, "--rate applies to the open-loop generator (add --open)")
+            }
+            ConfigError::DurationWithoutOpen => {
+                write!(f, "--duration-ms applies to the open-loop generator (add --open)")
+            }
+            ConfigError::ReplayWithOpen => write!(
+                f,
+                "--replay supplies the arrival schedule itself; drop --open/--rate/--duration-ms"
+            ),
+            ConfigError::RateNotPositive(r) => {
+                write!(f, "--rate must be a positive requests/second (got {r})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Collects raw, CLI-shaped serving inputs; [`Self::build`] validates
+/// them as a whole and produces a [`ServeConfig`]. Setters take the
+/// `Option`s that flag parsing naturally yields — `None` means "flag
+/// absent, use the default".
+#[derive(Clone, Debug, Default)]
+pub struct ServeConfigBuilder {
+    backend: Option<String>,
+    batch: Option<u64>,
+    /// Per-command default batch when `--batch` is absent (serve uses
+    /// 8, smoke benches 4). Zero falls back to 1.
+    default_batch: u64,
+    shards: Option<u64>,
+    queue_depth: Option<u64>,
+    routing: Option<String>,
+    intra_batch: Option<u64>,
+    adaptive_wait: bool,
+    autoscale_min: Option<u64>,
+    autoscale_max: Option<u64>,
+    scale_interval_ms: Option<u64>,
+    slo_p99_us: Option<u64>,
+    scale_event_cap: Option<u64>,
+    trace_sample: Option<u64>,
+    trace_slow_us: Option<u64>,
+    trace_file: Option<PathBuf>,
+    // Bench-only cross-flags: validated here, consumed by the bench
+    // layer, never stored in ServeConfig.
+    open: bool,
+    rate: Option<f64>,
+    duration_ms: Option<u64>,
+    replay: Option<String>,
+}
+
+impl ServeConfigBuilder {
+    /// `--backend` (pvu | pjrt; default pvu).
+    pub fn backend(mut self, v: Option<String>) -> Self {
+        self.backend = v;
+        self
+    }
+
+    /// `--batch` (native backend only).
+    pub fn batch(mut self, v: Option<u64>) -> Self {
+        self.batch = v;
+        self
+    }
+
+    /// Default batch size when `--batch` is absent.
+    pub fn default_batch(mut self, v: u64) -> Self {
+        self.default_batch = v;
+        self
+    }
+
+    /// `--shards`.
+    pub fn shards(mut self, v: Option<u64>) -> Self {
+        self.shards = v;
+        self
+    }
+
+    /// `--queue-depth`.
+    pub fn queue_depth(mut self, v: Option<u64>) -> Self {
+        self.queue_depth = v;
+        self
+    }
+
+    /// `--routing`.
+    pub fn routing(mut self, v: Option<String>) -> Self {
+        self.routing = v;
+        self
+    }
+
+    /// `--intra-batch`.
+    pub fn intra_batch(mut self, v: Option<u64>) -> Self {
+        self.intra_batch = v;
+        self
+    }
+
+    /// `--adaptive-wait`.
+    pub fn adaptive_wait(mut self, on: bool) -> Self {
+        self.adaptive_wait = on;
+        self
+    }
+
+    /// `--autoscale-min`.
+    pub fn autoscale_min(mut self, v: Option<u64>) -> Self {
+        self.autoscale_min = v;
+        self
+    }
+
+    /// `--autoscale-max`.
+    pub fn autoscale_max(mut self, v: Option<u64>) -> Self {
+        self.autoscale_max = v;
+        self
+    }
+
+    /// `--scale-interval-ms`.
+    pub fn scale_interval_ms(mut self, v: Option<u64>) -> Self {
+        self.scale_interval_ms = v;
+        self
+    }
+
+    /// `--slo-p99-us`: selects the SLO scale policy with this target.
+    pub fn slo_p99_us(mut self, v: Option<u64>) -> Self {
+        self.slo_p99_us = v;
+        self
+    }
+
+    /// `--scale-event-cap`.
+    pub fn scale_event_cap(mut self, v: Option<u64>) -> Self {
+        self.scale_event_cap = v;
+        self
+    }
+
+    /// `--trace-sample`.
+    pub fn trace_sample(mut self, v: Option<u64>) -> Self {
+        self.trace_sample = v;
+        self
+    }
+
+    /// `--trace-slow-us`.
+    pub fn trace_slow_us(mut self, v: Option<u64>) -> Self {
+        self.trace_slow_us = v;
+        self
+    }
+
+    /// `--trace-file`.
+    pub fn trace_file(mut self, v: Option<PathBuf>) -> Self {
+        self.trace_file = v;
+        self
+    }
+
+    /// `--open` (bench-only; participates in validation).
+    pub fn open(mut self, on: bool) -> Self {
+        self.open = on;
+        self
+    }
+
+    /// `--rate` (bench-only; participates in validation).
+    pub fn rate(mut self, v: Option<f64>) -> Self {
+        self.rate = v;
+        self
+    }
+
+    /// `--duration-ms` (bench-only; participates in validation).
+    pub fn duration_ms(mut self, v: Option<u64>) -> Self {
+        self.duration_ms = v;
+        self
+    }
+
+    /// `--replay` (bench-only; participates in validation).
+    pub fn replay(mut self, v: Option<String>) -> Self {
+        self.replay = v;
+        self
+    }
+
+    /// Check every cross-flag rule; the first violated rule (in the
+    /// order documented on [`ConfigError`]) is returned.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let backend = self.backend.as_deref().unwrap_or("pvu");
+        match backend {
+            "pvu" => {}
+            "pjrt" => {
+                if self.batch.is_some() {
+                    return Err(ConfigError::BatchWithPjrt);
+                }
+            }
+            other => return Err(ConfigError::UnknownBackend(other.to_string())),
+        }
+        if let Some(r) = self.routing.as_deref() {
+            if Routing::parse(r).is_none() {
+                return Err(ConfigError::UnknownRouting(r.to_string()));
+            }
+        }
+        let max = self.autoscale_max.unwrap_or(0) as usize;
+        if self.autoscale_min.is_some() && max == 0 {
+            return Err(ConfigError::AutoscaleMinWithoutMax);
+        }
+        if max > 0 {
+            let min = self.autoscale_min.unwrap_or(1) as usize;
+            if min == 0 || min > max {
+                return Err(ConfigError::AutoscaleBounds { min, max });
+            }
+        }
+        if self.scale_interval_ms == Some(0) {
+            return Err(ConfigError::ScaleIntervalZero);
+        }
+        match self.slo_p99_us {
+            Some(0) => return Err(ConfigError::SloZeroTarget),
+            Some(_) if max == 0 => return Err(ConfigError::SloWithoutAutoscale),
+            _ => {}
+        }
+        if self.scale_event_cap == Some(0) {
+            return Err(ConfigError::ScaleEventCapZero);
+        }
+        if self.trace_file.is_some()
+            && self.trace_sample.unwrap_or(0) == 0
+            && self.trace_slow_us.unwrap_or(0) == 0
+        {
+            return Err(ConfigError::TraceFileWithoutRule);
+        }
+        if self.replay.is_some() && (self.open || self.rate.is_some() || self.duration_ms.is_some())
+        {
+            return Err(ConfigError::ReplayWithOpen);
+        }
+        if !self.open {
+            if self.rate.is_some() {
+                return Err(ConfigError::RateWithoutOpen);
+            }
+            if self.duration_ms.is_some() {
+                return Err(ConfigError::DurationWithoutOpen);
+            }
+        }
+        if let Some(r) = self.rate {
+            if !(r.is_finite() && r > 0.0) {
+                return Err(ConfigError::RateNotPositive(r));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate, then assemble the [`ServeConfig`]. Fields not covered
+    /// by a setter keep their [`ServeConfig::default`] values.
+    pub fn build(self) -> Result<ServeConfig, ConfigError> {
+        self.validate()?;
+        let backend = match self.backend.as_deref().unwrap_or("pvu") {
+            "pjrt" => BackendChoice::Pjrt,
+            _ => BackendChoice::Pvu {
+                batch: self.batch.unwrap_or(self.default_batch.max(1)) as usize,
+            },
+        };
+        let defaults = ServeConfig::default();
+        let routing = match self.routing.as_deref() {
+            Some(r) => Routing::parse(r).expect("validated above"),
+            None => defaults.routing,
+        };
+        let mut autoscale = AutoscaleConfig {
+            max_shards: self.autoscale_max.unwrap_or(0) as usize,
+            ..AutoscaleConfig::default()
+        };
+        if let Some(min) = self.autoscale_min {
+            autoscale.min_shards = min as usize;
+        }
+        if let Some(ms) = self.scale_interval_ms {
+            autoscale.interval = Duration::from_millis(ms);
+        }
+        let scale_policy = match self.slo_p99_us {
+            Some(target_us) => ScalePolicyChoice::SloP99 { target_us },
+            None => ScalePolicyChoice::Occupancy,
+        };
+        Ok(ServeConfig {
+            backend,
+            routing,
+            autoscale,
+            scale_policy,
+            shards: self.shards.unwrap_or(defaults.shards as u64) as usize,
+            queue_depth: self.queue_depth.unwrap_or(defaults.queue_depth as u64) as usize,
+            intra_batch: self.intra_batch.unwrap_or(1).max(1) as usize,
+            adaptive_wait: self.adaptive_wait,
+            scale_event_cap: self
+                .scale_event_cap
+                .unwrap_or(metrics::MAX_SCALE_EVENTS as u64) as usize,
+            trace: TraceConfig {
+                sample_every: self.trace_sample.unwrap_or(0),
+                slow_us: self.trace_slow_us.unwrap_or(0),
+                path: self.trace_file,
+            },
+            ..defaults
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build_a_native_config() {
+        let cfg = ServeConfig::builder().default_batch(8).build().expect("defaults valid");
+        assert_eq!(cfg.backend, BackendChoice::Pvu { batch: 8 });
+        assert_eq!(cfg.routing, Routing::RoundRobin);
+        assert_eq!(cfg.scale_policy, ScalePolicyChoice::Occupancy);
+        assert_eq!(cfg.scale_event_cap, metrics::MAX_SCALE_EVENTS);
+        assert!(!cfg.autoscale.enabled());
+        assert!(!cfg.trace.enabled());
+    }
+
+    #[test]
+    fn every_flag_lands_in_the_config() {
+        let cfg = ServeConfig::builder()
+            .backend(Some("pvu".into()))
+            .batch(Some(16))
+            .shards(Some(3))
+            .queue_depth(Some(32))
+            .routing(Some("lq".into()))
+            .intra_batch(Some(2))
+            .adaptive_wait(true)
+            .autoscale_min(Some(2))
+            .autoscale_max(Some(5))
+            .scale_interval_ms(Some(10))
+            .slo_p99_us(Some(2_000))
+            .scale_event_cap(Some(64))
+            .trace_sample(Some(4))
+            .trace_file(Some(PathBuf::from("spans.jsonl")))
+            .build()
+            .expect("valid");
+        assert_eq!(cfg.backend, BackendChoice::Pvu { batch: 16 });
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.queue_depth, 32);
+        assert_eq!(cfg.routing, Routing::LeastQueued);
+        assert_eq!(cfg.intra_batch, 2);
+        assert!(cfg.adaptive_wait);
+        assert_eq!(cfg.autoscale.min_shards, 2);
+        assert_eq!(cfg.autoscale.max_shards, 5);
+        assert_eq!(cfg.autoscale.interval, Duration::from_millis(10));
+        assert_eq!(cfg.scale_policy, ScalePolicyChoice::SloP99 { target_us: 2_000 });
+        assert_eq!(cfg.scale_event_cap, 64);
+        assert_eq!(cfg.trace.sample_every, 4);
+        assert_eq!(cfg.trace.path, Some(PathBuf::from("spans.jsonl")));
+    }
+
+    #[test]
+    fn each_cross_flag_rule_has_its_error() {
+        let err = |b: ServeConfigBuilder| b.build().expect_err("must be rejected");
+        assert_eq!(
+            err(ServeConfig::builder().backend(Some("cuda".into()))),
+            ConfigError::UnknownBackend("cuda".into())
+        );
+        assert_eq!(
+            err(ServeConfig::builder().backend(Some("pjrt".into())).batch(Some(4))),
+            ConfigError::BatchWithPjrt
+        );
+        assert_eq!(
+            err(ServeConfig::builder().routing(Some("random".into()))),
+            ConfigError::UnknownRouting("random".into())
+        );
+        assert_eq!(
+            err(ServeConfig::builder().autoscale_min(Some(2))),
+            ConfigError::AutoscaleMinWithoutMax
+        );
+        assert_eq!(
+            err(ServeConfig::builder().autoscale_min(Some(5)).autoscale_max(Some(2))),
+            ConfigError::AutoscaleBounds { min: 5, max: 2 }
+        );
+        assert_eq!(
+            err(ServeConfig::builder().autoscale_max(Some(2)).scale_interval_ms(Some(0))),
+            ConfigError::ScaleIntervalZero
+        );
+        assert_eq!(
+            err(ServeConfig::builder().slo_p99_us(Some(1_000))),
+            ConfigError::SloWithoutAutoscale
+        );
+        assert_eq!(
+            err(ServeConfig::builder().autoscale_max(Some(2)).slo_p99_us(Some(0))),
+            ConfigError::SloZeroTarget
+        );
+        assert_eq!(
+            err(ServeConfig::builder().scale_event_cap(Some(0))),
+            ConfigError::ScaleEventCapZero
+        );
+        assert_eq!(
+            err(ServeConfig::builder().trace_file(Some(PathBuf::from("x.jsonl")))),
+            ConfigError::TraceFileWithoutRule
+        );
+        assert_eq!(err(ServeConfig::builder().rate(Some(10.0))), ConfigError::RateWithoutOpen);
+        assert_eq!(
+            err(ServeConfig::builder().duration_ms(Some(500))),
+            ConfigError::DurationWithoutOpen
+        );
+        assert_eq!(
+            err(ServeConfig::builder().replay(Some("t.jsonl".into())).open(true)),
+            ConfigError::ReplayWithOpen
+        );
+        assert_eq!(
+            err(ServeConfig::builder().replay(Some("t.jsonl".into())).rate(Some(5.0))),
+            ConfigError::ReplayWithOpen
+        );
+        assert_eq!(
+            err(ServeConfig::builder().open(true).rate(Some(-3.0))),
+            ConfigError::RateNotPositive(-3.0)
+        );
+    }
+
+    #[test]
+    fn valid_bench_combinations_pass() {
+        // Open loop with rate + duration.
+        ServeConfig::builder()
+            .open(true)
+            .rate(Some(500.0))
+            .duration_ms(Some(1_000))
+            .build()
+            .expect("open-loop flags are consistent");
+        // Replay on its own.
+        ServeConfig::builder()
+            .replay(Some("bursty:100".into()))
+            .build()
+            .expect("replay alone is consistent");
+        // SLO policy with autoscale headroom.
+        let cfg = ServeConfig::builder()
+            .autoscale_max(Some(3))
+            .slo_p99_us(Some(5_000))
+            .build()
+            .expect("slo with headroom");
+        assert_eq!(cfg.scale_policy, ScalePolicyChoice::SloP99 { target_us: 5_000 });
+        // The error type is displayable and std::error::Error (so `?`
+        // converts into anyhow at the CLI boundary).
+        let e: Box<dyn std::error::Error> = Box::new(ConfigError::SloWithoutAutoscale);
+        assert!(e.to_string().contains("--slo-p99-us"));
+    }
+}

@@ -1,31 +1,48 @@
-//! Closed/open-loop load generator — the measurement harness behind
-//! `repro serve-bench`.
+//! Load generation — the measurement harness behind `repro serve-bench`.
 //!
-//! Drives a running [`Coordinator`] with concurrent clients over a
-//! variant mix and summarizes the run from the coordinator's own
-//! latency sketches: throughput, exact p50/p95/p99/p99.9 latency (to
-//! within the sketch's 3.125% relative error), per-stage breakdown
-//! (queue / batch-wait / encode / execute), rejection counts and mean
-//! batch occupancy, as a human table and as machine-readable JSON (the
-//! `BENCH_*.json` trajectory format `repro bench-compare` diffs).
+//! Drives a running [`Coordinator`] over a variant mix and summarizes
+//! the run from the coordinator's own latency sketches: throughput,
+//! exact p50/p95/p99/p99.9 latency (to within the sketch's 3.125%
+//! relative error), per-stage breakdown (queue / batch-wait / encode /
+//! execute), rejection counts and mean batch occupancy, as a human
+//! table and as machine-readable JSON (the `BENCH_*.json` trajectory
+//! format `repro bench-compare` diffs).
 //!
-//! Two client models:
-//! - **closed loop** — `concurrency` clients per variant, each issuing
-//!   its next request as soon as the previous reply lands (throughput-
-//!   bounded by the serving stack, classic saturation measurement).
-//! - **open loop** — clients fire on a fixed arrival schedule
-//!   (`rate` req/s per variant for `duration`), shedding to the
-//!   rejection counter when every shard queue is full. Arrival timing
-//!   does not wait for the server, so queue growth and rejections are
-//!   visible instead of being absorbed into client think time.
+//! Traffic comes from a [`LoadSource`] — three implementations, all
+//! feeding the same driver ([`run_bench_with`]) so every mode reports
+//! the identical serve-bench JSON schema:
+//!
+//! - **[`ClosedLoop`]** — `concurrency` clients per variant, each
+//!   issuing its next request as soon as the previous reply lands
+//!   (throughput-bounded by the serving stack, classic saturation
+//!   measurement).
+//! - **[`OpenLoop`]** — a fixed-rate arrival schedule (`rate` req/s per
+//!   variant for `duration`), paced by a single hashed
+//!   [`TimerWheel`](super::wheel::TimerWheel) driver thread instead of
+//!   per-connection sleeps: arrival streams are lazy iterators, so a
+//!   multi-million-request schedule never materializes, and rates are
+//!   not throttled by thread count. Arrival timing never waits for the
+//!   server — submits are non-blocking (full queues shed to the
+//!   rejection counter) and replies are reaped by a separate thread, so
+//!   queue growth under overload stays visible (no coordinated
+//!   omission). The driver's fidelity is itself measured and reported
+//!   as [`ArrivalStats`] (max drift vs the schedule, late fires).
+//! - **[`Replay`]** — arrivals from a recorded trace (`--replay FILE`,
+//!   JSONL: one `{"t_us": N[, "variant": "name"][, "sample": K]}` per
+//!   line, non-decreasing `t_us`) or from the built-in synthetic
+//!   generators `bursty:RATE[:DURATION_MS[:PERIOD_MS]]` and
+//!   `diurnal:RATE[:DURATION_MS]` — tail-latency studies under traffic
+//!   shapes a fixed rate cannot express. Replay arrivals ride the same
+//!   timer wheel as the open loop.
 
 use super::metrics::{ScaleEvent, Stage, VariantStats};
 use super::sketch;
-use super::{Coordinator, Reply, Request, Snapshot};
+use super::wheel::TimerWheel;
+use super::{compare, Coordinator, Reply, Request, Snapshot};
 use crate::data::synth::SynthSet;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
+use std::sync::mpsc::{self, sync_channel, Receiver};
 use std::time::{Duration, Instant};
 
 /// Load-generator configuration.
@@ -33,7 +50,7 @@ use std::time::{Duration, Instant};
 pub struct BenchConfig {
     /// Variant mix to drive (empty = every served variant).
     pub variants: Vec<String>,
-    /// Client threads per variant.
+    /// Client threads per variant (closed loop).
     pub concurrency: usize,
     /// Total requests per variant (closed loop).
     pub requests: usize,
@@ -43,6 +60,9 @@ pub struct BenchConfig {
     pub rate: f64,
     /// Run time per variant (open loop).
     pub duration: Duration,
+    /// Replay spec (`--replay`): a JSONL trace path, or a synthetic
+    /// `bursty:`/`diurnal:` spec. Takes precedence over `open_loop`.
+    pub replay: Option<String>,
 }
 
 impl Default for BenchConfig {
@@ -54,8 +74,75 @@ impl Default for BenchConfig {
             open_loop: false,
             rate: 200.0,
             duration: Duration::from_secs(1),
+            replay: None,
         }
     }
+}
+
+impl BenchConfig {
+    /// Build the [`LoadSource`] this config selects (replay wins over
+    /// `open_loop`; otherwise closed loop). Replay specs are parsed
+    /// here, so a malformed trace fails before any traffic is driven.
+    pub fn source(&self) -> Result<Box<dyn LoadSource>> {
+        if let Some(spec) = &self.replay {
+            Ok(Box::new(Replay::from_spec(spec)?))
+        } else if self.open_loop {
+            Ok(Box::new(OpenLoop {
+                rate: self.rate,
+                duration: self.duration,
+            }))
+        } else {
+            Ok(Box::new(ClosedLoop {
+                concurrency: self.concurrency,
+                requests: self.requests,
+            }))
+        }
+    }
+}
+
+/// Client-side tallies for one variant, as produced by a
+/// [`LoadSource::drive`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VariantTally {
+    /// Replies received.
+    pub completed: u64,
+    /// Replies whose predicted class matched the label.
+    pub correct: u64,
+    /// Requests that returned an error.
+    pub errors: u64,
+}
+
+/// Arrival-schedule accounting from the driver. The wheel modes measure
+/// real drift against their schedule; the closed loop has no schedule,
+/// so it reports its submit count with zero drift. Present in every
+/// mode's JSON (`"arrivals"`), keeping the schema identical.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArrivalStats {
+    /// Arrivals the source scheduled (every one is eventually fired).
+    pub scheduled: u64,
+    /// Worst fire lateness vs the schedule, µs (bounded drift: the
+    /// wheel coalesces arrivals within one tick by design; anything
+    /// beyond that is driver lag).
+    pub max_drift_us: u64,
+    /// Fires more than one wheel tick behind schedule.
+    pub late: u64,
+}
+
+/// A traffic source: drives requests at a [`Coordinator`] and returns
+/// per-variant client tallies plus arrival accounting. All
+/// implementations feed the same summary path ([`run_bench_with`]), so
+/// closed, open and replay runs emit schema-identical serve-bench JSON.
+pub trait LoadSource {
+    /// Mode tag for the summary (`"closed"`, `"open"`, `"replay"`).
+    fn mode(&self) -> &'static str;
+    /// Drive the whole mix. `variants` is sorted and deduplicated;
+    /// tallies must be returned in the same order.
+    fn drive(
+        &mut self,
+        coord: &Coordinator,
+        set: &SynthSet,
+        variants: &[String],
+    ) -> Result<(Vec<VariantTally>, ArrivalStats)>;
 }
 
 /// Per-variant results: client-side counts merged with the
@@ -130,7 +217,7 @@ pub struct ShardBench {
 /// Whole-run summary.
 #[derive(Clone, Debug)]
 pub struct BenchSummary {
-    /// "closed" or "open".
+    /// "closed", "open" or "replay" ([`LoadSource::mode`]).
     pub mode: &'static str,
     /// Total wall time for the whole mix.
     pub wall: Duration,
@@ -141,6 +228,9 @@ pub struct BenchSummary {
     /// "neon") — [`Coordinator::simd_backend`], i.e. what CPU feature
     /// detection picked modulo the `PVU_SIMD` override.
     pub simd_backend: &'static str,
+    /// Arrival-schedule fidelity ([`ArrivalStats`]; zero drift for the
+    /// closed loop, which has no schedule).
+    pub arrivals: ArrivalStats,
     /// Per-variant rows, sorted by name.
     pub rows: Vec<VariantBench>,
     /// Per-shard occupancy/exec over the run, sorted by label.
@@ -178,7 +268,8 @@ impl BenchSummary {
     /// in `docs/serving.md`). Percentile keys (`p50_us`, `p99_us`, …)
     /// are **exact** order statistics to within the sketch's relative
     /// error; the top-level `sketch` object records the scheme so a
-    /// snapshot is self-describing.
+    /// snapshot is self-describing. The schema is identical across
+    /// closed/open/replay modes — only the `mode` value differs.
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
@@ -187,6 +278,10 @@ impl BenchSummary {
         out.push_str(&format!(
             "  \"simd_backend\": \"{}\",\n",
             json_escape(self.simd_backend)
+        ));
+        out.push_str(&format!(
+            "  \"arrivals\": {{\"scheduled\": {}, \"max_drift_us\": {}, \"late\": {}}},\n",
+            self.arrivals.scheduled, self.arrivals.max_drift_us, self.arrivals.late,
         ));
         out.push_str(&format!(
             "  \"aggregate_rps\": {:.3},\n",
@@ -202,11 +297,13 @@ impl BenchSummary {
         out.push_str("  \"scale_events\": [\n");
         for (i, e) in self.scale_events.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"variant\": \"{}\", \"from\": {}, \"to\": {}, \"p99_us\": {}}}{}\n",
+                "    {{\"variant\": \"{}\", \"from\": {}, \"to\": {}, \"p99_us\": {}, \
+                 \"reason\": \"{}\"}}{}\n",
                 json_escape(&e.variant),
                 e.from,
                 e.to,
                 e.p99_us,
+                json_escape(&e.reason),
                 if i + 1 == self.scale_events.len() { "" } else { "," }
             ));
         }
@@ -277,6 +374,12 @@ impl BenchSummary {
             self.intra_batch,
             self.simd_backend,
         );
+        if self.mode != "closed" {
+            out.push_str(&format!(
+                "arrivals: {} scheduled, max drift {}us, {} late\n",
+                self.arrivals.scheduled, self.arrivals.max_drift_us, self.arrivals.late,
+            ));
+        }
         out.push_str(
             "variant    done    rej    err    top1    req/s    p50(ms)  p95(ms)  p99(ms)  p99.9(ms) batch  shards\n",
         );
@@ -315,11 +418,12 @@ impl BenchSummary {
                 .iter()
                 .map(|e| {
                     format!(
-                        "{} {}->{} (p99 {:.3}ms)",
+                        "{} {}->{} (p99 {:.3}ms, {})",
                         e.variant,
                         e.from,
                         e.to,
-                        e.p99_us as f64 / 1000.0
+                        e.p99_us as f64 / 1000.0,
+                        e.reason,
                     )
                 })
                 .collect();
@@ -330,7 +434,8 @@ impl BenchSummary {
     }
 }
 
-/// Client-side tallies for one variant.
+/// Client-side tallies for one variant (shared atomics: client pools
+/// and the reply reaper bump them concurrently).
 struct ClientCounts {
     correct: AtomicU64,
     completed: AtomicU64,
@@ -343,6 +448,14 @@ impl ClientCounts {
             correct: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+        }
+    }
+
+    fn tally(&self) -> VariantTally {
+        VariantTally {
+            completed: self.completed.load(Ordering::Relaxed),
+            correct: self.correct.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
         }
     }
 }
@@ -382,90 +495,496 @@ fn closed_loop(
     counts
 }
 
-/// Open loop: each client fires on its own absolute schedule (client j
-/// owns arrivals `j, j+clients, j+2·clients, …` of the variant's
-/// `rate`/s stream), skipping sleeps when behind. Arrivals never wait
-/// for the server: submits are non-blocking (full queues shed to the
-/// rejection counter) and replies are reaped asynchronously, so queue
-/// growth under overload stays visible instead of throttling the
-/// arrival process (no coordinated omission).
-fn open_loop(
+/// Saturation measurement: `concurrency` closed-loop clients per
+/// variant, `requests` requests each variant in total.
+#[derive(Clone, Copy, Debug)]
+pub struct ClosedLoop {
+    /// Client threads per variant.
+    pub concurrency: usize,
+    /// Total requests per variant.
+    pub requests: usize,
+}
+
+impl LoadSource for ClosedLoop {
+    fn mode(&self) -> &'static str {
+        "closed"
+    }
+
+    fn drive(
+        &mut self,
+        coord: &Coordinator,
+        set: &SynthSet,
+        variants: &[String],
+    ) -> Result<(Vec<VariantTally>, ArrivalStats)> {
+        let (clients, total) = (self.concurrency, self.requests);
+        let mut tallies = vec![VariantTally::default(); variants.len()];
+        std::thread::scope(|s| {
+            let handles: Vec<_> = variants
+                .iter()
+                .map(|v| s.spawn(move || closed_loop(coord, set, v, clients, total)))
+                .collect();
+            for (t, h) in tallies.iter_mut().zip(handles) {
+                *t = h.join().expect("bench client pool panicked").tally();
+            }
+        });
+        // No arrival schedule to drift from; `scheduled` still counts
+        // what was issued so the JSON field is meaningful in every mode.
+        let stats = ArrivalStats {
+            scheduled: (total * variants.len()) as u64,
+            ..ArrivalStats::default()
+        };
+        Ok((tallies, stats))
+    }
+}
+
+/// One scheduled arrival: indices into the driven variant mix and the
+/// request set, plus the absolute due time from run start.
+#[derive(Clone, Copy, Debug)]
+struct Arrival {
+    due_us: u64,
+    variant: u32,
+    sample: u32,
+}
+
+/// A lazily-produced, non-decreasing arrival stream. The wheel driver
+/// keeps exactly one pending entry per stream: firing it pulls the
+/// stream's next arrival, so open-loop schedules of any length cost
+/// O(streams) memory.
+type ArrivalStream = Box<dyn Iterator<Item = Arrival>>;
+
+/// An in-flight reply awaiting the reaper: (variant idx, sample idx,
+/// reply channel).
+type PendingReply = (u32, u32, Receiver<Result<Reply>>);
+
+/// Wheel tick granularity: arrivals landing in the same 200µs tick fire
+/// together (the drift accounting makes the coalescing visible).
+const WHEEL_TICK_US: u64 = 200;
+/// Wheel ring size: one revolution covers ~205ms; later deadlines park
+/// on their absolute due tick.
+const WHEEL_SLOTS: usize = 1024;
+
+/// The single-driver arrival engine shared by [`OpenLoop`] and
+/// [`Replay`]: all streams' arrivals merge through one [`TimerWheel`],
+/// one thread fires them (non-blocking submits), and one reaper thread
+/// tallies replies so firing never waits on the server.
+fn drive_wheel(
     coord: &Coordinator,
     set: &SynthSet,
-    variant: &str,
-    clients: usize,
-    rate: f64,
-    duration: Duration,
-) -> ClientCounts {
-    let counts = ClientCounts::new();
-    let clients = clients.max(1);
-    let rate = rate.max(1.0);
-    std::thread::scope(|s| {
-        for j in 0..clients {
-            let counts = &counts;
-            s.spawn(move || {
-                let start = Instant::now();
-                let horizon = duration.as_secs_f64();
-                let tally = |i: usize, res: Result<Reply>| match res {
-                    Ok(reply) => {
-                        counts.completed.fetch_add(1, Ordering::Relaxed);
-                        if reply.class == set.labels[i] as usize {
-                            counts.correct.fetch_add(1, Ordering::Relaxed);
+    variants: &[String],
+    mut streams: Vec<ArrivalStream>,
+) -> Result<(Vec<VariantTally>, ArrivalStats)> {
+    let counts: Vec<ClientCounts> = variants.iter().map(|_| ClientCounts::new()).collect();
+    let mut stats = ArrivalStats::default();
+    std::thread::scope(|s| -> Result<()> {
+        let (ptx, prx) = mpsc::channel::<PendingReply>();
+        let counts_ref = &counts;
+        let reaper = s.spawn(move || {
+            // Pending replies arrive in admission order; blocking on the
+            // oldest is fine because later replies buffer in their own
+            // rendezvous slots meanwhile.
+            for (v, i, rrx) in prx {
+                let c = &counts_ref[v as usize];
+                match rrx.recv() {
+                    Ok(Ok(reply)) => {
+                        c.completed.fetch_add(1, Ordering::Relaxed);
+                        if reply.class == set.labels[i as usize] as usize {
+                            c.correct.fetch_add(1, Ordering::Relaxed);
                         }
                     }
+                    Ok(Err(_)) => {
+                        c.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Disconnect after admission: the worker retired
+                    // mid-drain; count it as an error, not silence.
                     Err(_) => {
-                        counts.errors.fetch_add(1, Ordering::Relaxed);
+                        c.errors.fetch_add(1, Ordering::Relaxed);
                     }
-                };
-                let mut pending: Vec<(usize, Receiver<Result<Reply>>)> = Vec::new();
-                let mut k = 0usize;
+                }
+            }
+        });
+        let start = Instant::now();
+        let fire = |stats: &mut ArrivalStats, a: Arrival, ptx: &mpsc::Sender<PendingReply>| {
+            stats.scheduled += 1;
+            let fire_us = start.elapsed().as_micros() as u64;
+            let drift = fire_us.saturating_sub(a.due_us);
+            stats.max_drift_us = stats.max_drift_us.max(drift);
+            if drift > WHEEL_TICK_US {
+                stats.late += 1;
+            }
+            let (rtx, rrx) = sync_channel(1);
+            let req = Request::new(set.sample(a.sample as usize).to_vec(), rtx);
+            match coord.submit(&variants[a.variant as usize], req, false) {
+                Ok(true) => {
+                    let _ = ptx.send((a.variant, a.sample, rrx));
+                }
+                Ok(false) => {} // shed: counted by the coordinator
+                Err(_) => {
+                    counts[a.variant as usize].errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        };
+        // Prime the wheel with each stream's head arrival, then fire
+        // ticks, refilling a stream as its arrival fires.
+        let mut wheel: TimerWheel<(usize, Arrival)> = TimerWheel::new(WHEEL_TICK_US, WHEEL_SLOTS);
+        for (si, st) in streams.iter_mut().enumerate() {
+            if let Some(a) = st.next() {
+                wheel.schedule(a.due_us, (si, a));
+            }
+        }
+        let mut due: Vec<(usize, Arrival)> = Vec::new();
+        while let Some(tick) = wheel.next_due_tick() {
+            // One sleep straight to the next occupied tick (no periodic
+            // idle wakeups); when behind, fall through and catch up.
+            let due_start_us = tick * WHEEL_TICK_US;
+            let now_us = start.elapsed().as_micros() as u64;
+            if due_start_us > now_us {
+                std::thread::sleep(Duration::from_micros(due_start_us - now_us));
+            }
+            let target = (start.elapsed().as_micros() as u64) / WHEEL_TICK_US;
+            wheel.collect_due(target, &mut due);
+            for (si, a) in due.drain(..) {
+                fire(&mut stats, a, &ptx);
+                // Drain this stream inline while its next arrivals fall
+                // inside the already-collected window: a stream faster
+                // than the tick width must not throttle to one arrival
+                // per tick.
                 loop {
-                    // Arrival j + k·clients of the variant's rate/s stream.
-                    let due = (j as f64 + (k * clients) as f64) / rate;
-                    if due >= horizon || start.elapsed().as_secs_f64() >= horizon {
-                        break;
-                    }
-                    let now = start.elapsed().as_secs_f64();
-                    if due > now {
-                        std::thread::sleep(Duration::from_secs_f64(due - now));
-                    }
-                    // Reap finished replies without blocking the schedule.
-                    pending.retain(|(i, rx)| match rx.try_recv() {
-                        Ok(res) => {
-                            tally(*i, res);
-                            false
+                    match streams[si].next() {
+                        Some(nxt) if nxt.due_us / WHEEL_TICK_US <= target => {
+                            fire(&mut stats, nxt, &ptx);
                         }
-                        Err(TryRecvError::Empty) => true,
-                        Err(TryRecvError::Disconnected) => {
-                            counts.errors.fetch_add(1, Ordering::Relaxed);
-                            false
+                        Some(nxt) => {
+                            wheel.schedule(nxt.due_us, (si, nxt));
+                            break;
                         }
-                    });
-                    let i = (j + k * clients) % set.len();
-                    let (rtx, rrx) = sync_channel(1);
-                    let req = Request::new(set.sample(i).to_vec(), rtx);
-                    match coord.submit(variant, req, false) {
-                        Ok(true) => pending.push((i, rrx)),
-                        Ok(false) => {} // shed: counted by the coordinator
-                        Err(_) => {
-                            counts.errors.fetch_add(1, Ordering::Relaxed);
-                        }
+                        None => break,
                     }
+                }
+            }
+        }
+        // All arrivals fired; closing the pending channel lets the
+        // reaper drain the in-flight tail and exit.
+        drop(ptx);
+        reaper.join().map_err(|_| anyhow!("reply reaper panicked"))?;
+        Ok(())
+    })?;
+    Ok((counts.iter().map(ClientCounts::tally).collect(), stats))
+}
+
+/// Open loop on the timer wheel: each driven variant gets an
+/// independent fixed-`rate` arrival stream (arrival `k` due at
+/// `k/rate` seconds) for `duration`.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoop {
+    /// Target arrivals/s per variant.
+    pub rate: f64,
+    /// Schedule horizon.
+    pub duration: Duration,
+}
+
+impl LoadSource for OpenLoop {
+    fn mode(&self) -> &'static str {
+        "open"
+    }
+
+    fn drive(
+        &mut self,
+        coord: &Coordinator,
+        set: &SynthSet,
+        variants: &[String],
+    ) -> Result<(Vec<VariantTally>, ArrivalStats)> {
+        anyhow::ensure!(
+            self.rate.is_finite() && self.rate > 0.0,
+            "open-loop rate must be positive (got {})",
+            self.rate
+        );
+        let rate = self.rate;
+        let horizon_us = self.duration.as_micros() as u64;
+        let set_len = set.len() as u64;
+        let streams: Vec<ArrivalStream> = (0..variants.len())
+            .map(|v| {
+                let mut k = 0u64;
+                Box::new(std::iter::from_fn(move || {
+                    let due_us = (k as f64 * 1e6 / rate) as u64;
+                    if due_us >= horizon_us {
+                        return None;
+                    }
+                    let a = Arrival {
+                        due_us,
+                        variant: v as u32,
+                        sample: (k % set_len) as u32,
+                    };
                     k += 1;
-                }
-                // Accepted work completes even past the horizon.
-                for (i, rx) in pending {
-                    match rx.recv() {
-                        Ok(res) => tally(i, res),
-                        Err(_) => {
-                            counts.errors.fetch_add(1, Ordering::Relaxed);
-                        }
-                    }
-                }
+                    Some(a)
+                })) as ArrivalStream
+            })
+            .collect();
+        drive_wheel(coord, set, variants, streams)
+    }
+}
+
+/// One parsed replay-trace event, before resolution against the driven
+/// mix: an arrival offset plus optional explicit variant/sample.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Arrival time, µs from run start (non-decreasing across a trace).
+    pub t_us: u64,
+    /// Variant to hit; `None` round-robins over the driven mix.
+    pub variant: Option<String>,
+    /// Request-set sample index; `None` cycles by event position.
+    pub sample: Option<usize>,
+}
+
+/// Parse a recorded JSONL trace: one
+/// `{"t_us": N[, "variant": "name"][, "sample": K]}` object per line,
+/// timestamps in µs from run start, non-decreasing (replay fires them
+/// in file order). Blank lines are skipped; anything else malformed is
+/// an error naming its line. An empty trace is an error — replaying it
+/// would silently bench nothing.
+pub fn parse_replay(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut events = Vec::new();
+    let mut prev = 0u64;
+    for (idx, raw) in text.lines().enumerate() {
+        let ln = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let doc = compare::parse_json(line).map_err(|e| anyhow!("replay line {ln}: {e}"))?;
+        let t = doc
+            .get("t_us")
+            .and_then(|v| v.num())
+            .ok_or_else(|| anyhow!("replay line {ln}: missing numeric \"t_us\""))?;
+        anyhow::ensure!(
+            t >= 0.0 && t.fract() == 0.0,
+            "replay line {ln}: \"t_us\" must be a non-negative integer of microseconds (got {t})"
+        );
+        let t_us = t as u64;
+        anyhow::ensure!(
+            t_us >= prev,
+            "replay line {ln}: out-of-order timestamp {t_us}us after {prev}us (traces must be sorted)"
+        );
+        prev = t_us;
+        let variant = match doc.get("variant") {
+            None => None,
+            Some(v) => Some(
+                v.str_val()
+                    .ok_or_else(|| anyhow!("replay line {ln}: \"variant\" must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let sample = match doc.get("sample") {
+            None => None,
+            Some(v) => {
+                let s = v
+                    .num()
+                    .ok_or_else(|| anyhow!("replay line {ln}: \"sample\" must be a number"))?;
+                anyhow::ensure!(
+                    s >= 0.0 && s.fract() == 0.0,
+                    "replay line {ln}: \"sample\" must be a non-negative integer (got {s})"
+                );
+                Some(s as usize)
+            }
+        };
+        events.push(TraceEvent {
+            t_us,
+            variant,
+            sample,
+        });
+    }
+    anyhow::ensure!(!events.is_empty(), "replay trace is empty (no arrival lines)");
+    Ok(events)
+}
+
+/// Shared `KIND:RATE[:field…]` parsing for the synthetic generators.
+fn synth_params(kind: &str, spec: &str, defaults: &[u64]) -> Result<(f64, Vec<u64>)> {
+    let mut parts = spec.split(':');
+    let rate_s = parts.next().unwrap_or("");
+    let rate: f64 = rate_s
+        .parse()
+        .map_err(|_| anyhow!("{kind} trace: bad rate {rate_s:?} (expected {kind}:RATE[:…])"))?;
+    anyhow::ensure!(
+        rate.is_finite() && rate > 0.0,
+        "{kind} trace: rate must be a positive requests/second (got {rate})"
+    );
+    let mut nums = Vec::with_capacity(defaults.len());
+    for d in defaults {
+        match parts.next() {
+            None => nums.push(*d),
+            Some(v) => nums.push(
+                v.parse()
+                    .map_err(|_| anyhow!("{kind} trace: bad field {v:?} (expected an integer)"))?,
+            ),
+        }
+    }
+    anyhow::ensure!(
+        parts.next().is_none(),
+        "{kind} trace: too many ':'-separated fields"
+    );
+    Ok((rate, nums))
+}
+
+/// `bursty:RATE[:DURATION_MS[:PERIOD_MS]]` — mean `RATE` req/s over
+/// `DURATION_MS` (default 1000), with each `PERIOD_MS` window's
+/// (default 250) arrivals compressed into its first 20%: 5× the mean
+/// rate while the burst lasts, silence between bursts. Deterministic.
+fn synth_bursty(spec: &str) -> Result<Vec<TraceEvent>> {
+    let (rate, nums) = synth_params("bursty", spec, &[1_000, 250])?;
+    let dur_us = nums[0].max(1) * 1_000;
+    let period_us = (nums[1].max(1) * 1_000).min(dur_us);
+    let duty_us = (period_us / 5).max(1); // burst window: first 20%
+    let per_period = rate * period_us as f64 / 1e6;
+    let mut events = Vec::new();
+    let mut acc = 0.0f64;
+    let mut period_start = 0u64;
+    while period_start < dur_us {
+        // Carry fractional arrivals across periods so the mean rate is
+        // honored even when rate × period < 1.
+        acc += per_period;
+        let n = acc as u64;
+        acc -= n as f64;
+        for k in 0..n {
+            let t_us = period_start + k * duty_us / n.max(1);
+            if t_us >= dur_us {
+                break;
+            }
+            events.push(TraceEvent {
+                t_us,
+                variant: None,
+                sample: None,
             });
         }
-    });
-    counts
+        period_start += period_us;
+    }
+    anyhow::ensure!(
+        !events.is_empty(),
+        "bursty trace: rate {rate}/s over {}ms produces no arrivals",
+        dur_us / 1_000
+    );
+    Ok(events)
+}
+
+/// `diurnal:RATE[:DURATION_MS]` — one full sinusoidal "day" compressed
+/// into the run: `rate(t) = RATE·(1 − cos 2πt/D)`, i.e. mean `RATE`,
+/// peak `2·RATE`, trough 0. Deterministic rate-function integration at
+/// 100µs steps (an arrival fires each time the accumulated expectation
+/// crosses 1).
+fn synth_diurnal(spec: &str) -> Result<Vec<TraceEvent>> {
+    let (rate, nums) = synth_params("diurnal", spec, &[1_000])?;
+    let dur_us = nums[0].max(1) * 1_000;
+    let step_us = 100u64;
+    let mut events = Vec::new();
+    let mut acc = 0.0f64;
+    let mut t = 0u64;
+    while t < dur_us {
+        let phase = t as f64 / dur_us as f64;
+        let r = rate * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+        acc += r * step_us as f64 / 1e6;
+        while acc >= 1.0 {
+            acc -= 1.0;
+            events.push(TraceEvent {
+                t_us: t,
+                variant: None,
+                sample: None,
+            });
+        }
+        t += step_us;
+    }
+    anyhow::ensure!(
+        !events.is_empty(),
+        "diurnal trace: rate {rate}/s over {}ms produces no arrivals",
+        dur_us / 1_000
+    );
+    Ok(events)
+}
+
+/// Replay source: arrivals from a recorded JSONL trace or a synthetic
+/// generator, fired through the same timer wheel as the open loop.
+pub struct Replay {
+    /// The spec this source was built from (for error messages).
+    origin: String,
+    events: Vec<TraceEvent>,
+}
+
+impl Replay {
+    /// Build from a `--replay` spec: `bursty:…` / `diurnal:…` for the
+    /// synthetic generators, anything else is read as a JSONL trace
+    /// path and parsed eagerly (a malformed trace fails here, before
+    /// any traffic).
+    pub fn from_spec(spec: &str) -> Result<Replay> {
+        let events = if let Some(rest) = spec.strip_prefix("bursty:") {
+            synth_bursty(rest)?
+        } else if let Some(rest) = spec.strip_prefix("diurnal:") {
+            synth_diurnal(rest)?
+        } else {
+            let text = std::fs::read_to_string(spec)
+                .map_err(|e| anyhow!("replay trace {spec:?}: {e}"))?;
+            parse_replay(&text).map_err(|e| anyhow!("replay trace {spec:?}: {e}"))?
+        };
+        Ok(Replay {
+            origin: spec.to_string(),
+            events,
+        })
+    }
+
+    /// Parsed arrival count.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the trace parsed to no arrivals (never true for a
+    /// [`Replay::from_spec`] result — empty traces are an error there).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl LoadSource for Replay {
+    fn mode(&self) -> &'static str {
+        "replay"
+    }
+
+    fn drive(
+        &mut self,
+        coord: &Coordinator,
+        set: &SynthSet,
+        variants: &[String],
+    ) -> Result<(Vec<VariantTally>, ArrivalStats)> {
+        // Resolve names/samples against the driven mix: explicit
+        // variants must be in it (a trace recorded against a different
+        // mix should fail loudly, not silently skew); omitted ones
+        // round-robin so an anonymous trace still exercises the mix.
+        let mut rr = 0usize;
+        let arrivals: Vec<Arrival> = self
+            .events
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let variant = match &e.variant {
+                    Some(name) => variants.iter().position(|v| v == name).ok_or_else(|| {
+                        anyhow!(
+                            "replay {:?} event {}: variant {name:?} is not in the driven mix {variants:?}",
+                            self.origin,
+                            i + 1
+                        )
+                    })?,
+                    None => {
+                        let v = rr % variants.len();
+                        rr += 1;
+                        v
+                    }
+                };
+                let sample = e.sample.unwrap_or(i) % set.len();
+                Ok(Arrival {
+                    due_us: e.t_us,
+                    variant: variant as u32,
+                    sample: sample as u32,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let streams = vec![Box::new(arrivals.into_iter()) as ArrivalStream];
+        drive_wheel(coord, set, variants, streams)
+    }
 }
 
 /// Pull one variant's histogram stats out of a metrics snapshot.
@@ -477,57 +996,50 @@ fn variant_stats(snap: &Snapshot, variant: &str) -> VariantStats {
         .unwrap_or_default()
 }
 
-/// Drive the full variant mix concurrently and summarize. The mix runs
-/// simultaneously (one client pool per variant), so per-variant numbers
+/// Drive the full variant mix through an explicit [`LoadSource`] and
+/// summarize. The mix runs simultaneously, so per-variant numbers
 /// include cross-variant contention — the serving-stack number that
-/// matters, not an isolated per-variant ideal.
-pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Result<BenchSummary> {
+/// matters, not an isolated per-variant ideal. Every mode reports
+/// through this one path, which is what keeps the serve-bench JSON
+/// schema identical across closed/open/replay.
+pub fn run_bench_with(
+    coord: &Coordinator,
+    set: &SynthSet,
+    variants: &[String],
+    source: &mut dyn LoadSource,
+) -> Result<BenchSummary> {
     anyhow::ensure!(!set.is_empty(), "empty request set");
     let served = coord.variants();
-    let mut variants = if cfg.variants.is_empty() {
+    let mut variants = if variants.is_empty() {
         served.clone()
     } else {
         // Fail fast on a typo'd variant: without this, every request to
         // it errors and the summary still exits 0 — poison for CI.
-        for v in &cfg.variants {
+        for v in variants {
             anyhow::ensure!(
                 served.contains(v),
                 "variant {v:?} is not served (have {served:?})"
             );
         }
-        cfg.variants.clone()
+        variants.to_vec()
     };
     variants.sort();
-    // A repeated variant would spawn duplicate client pools and emit
-    // double-counted rows.
+    // A repeated variant would double-drive and emit double-counted rows.
     variants.dedup();
     let baseline = coord.metrics();
     let t0 = Instant::now();
-    let mut tallies: Vec<(String, ClientCounts)> = Vec::with_capacity(variants.len());
-    std::thread::scope(|s| {
-        let mut joins = Vec::new();
-        for v in &variants {
-            let vname = v.clone();
-            let h = s.spawn(move || {
-                let counts = if cfg.open_loop {
-                    open_loop(coord, set, &vname, cfg.concurrency, cfg.rate, cfg.duration)
-                } else {
-                    closed_loop(coord, set, &vname, cfg.concurrency, cfg.requests)
-                };
-                (vname, counts)
-            });
-            joins.push(h);
-        }
-        for h in joins {
-            tallies.push(h.join().expect("bench client pool panicked"));
-        }
-    });
+    let (tallies, arrivals) = source.drive(coord, set, &variants)?;
+    anyhow::ensure!(
+        tallies.len() == variants.len(),
+        "load source returned {} tallies for {} variants",
+        tallies.len(),
+        variants.len()
+    );
     let wall = t0.elapsed();
     let snap = coord.metrics();
-    let mut rows = Vec::with_capacity(tallies.len());
-    for (variant, counts) in tallies {
-        let completed = counts.completed.load(Ordering::Relaxed);
-        let correct = counts.correct.load(Ordering::Relaxed);
+    let mut rows = Vec::with_capacity(variants.len());
+    for (variant, counts) in variants.into_iter().zip(tallies) {
+        let completed = counts.completed;
         // Stats for this run only: counter-wise delta against the
         // pre-run snapshot, so warm starts subtract out of the means,
         // percentiles and rejection counts alike.
@@ -536,9 +1048,9 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
             variant,
             completed,
             rejected: s.rejected,
-            errors: counts.errors.load(Ordering::Relaxed),
+            errors: counts.errors,
             top1: if completed > 0 {
-                correct as f64 / completed as f64
+                counts.correct as f64 / completed as f64
             } else {
                 0.0
             },
@@ -561,7 +1073,6 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
             shards: s.shards,
         });
     }
-    rows.sort_by(|a, b| a.variant.cmp(&b.variant));
     // Per-shard occupancy over the interval (shards of driven variants
     // only), and the scale events recorded during the run: the lifetime
     // `events_total` counter says how many of the retained events are
@@ -598,17 +1109,25 @@ pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Resu
         })
         .collect();
     let new_events = (snap.events_total - baseline.events_total) as usize;
-    let scale_events =
-        snap.events[snap.events.len().saturating_sub(new_events)..].to_vec();
+    let scale_events = snap.events[snap.events.len().saturating_sub(new_events)..].to_vec();
     Ok(BenchSummary {
-        mode: if cfg.open_loop { "open" } else { "closed" },
+        mode: source.mode(),
         wall,
         intra_batch: coord.intra_batch(),
         simd_backend: coord.simd_backend(),
+        arrivals,
         rows,
         shard_rows,
         scale_events,
     })
+}
+
+/// Drive the mix with the [`LoadSource`] the config selects
+/// (closed/open/replay) and summarize — the `BenchConfig`-shaped
+/// front door over [`run_bench_with`].
+pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Result<BenchSummary> {
+    let mut source = cfg.source()?;
+    run_bench_with(coord, set, &cfg.variants, source.as_mut())
 }
 
 #[cfg(test)]
@@ -649,6 +1168,11 @@ mod tests {
             wall: Duration::from_millis(1500),
             intra_batch: 2,
             simd_backend: "avx2",
+            arrivals: ArrivalStats {
+                scheduled: 190,
+                max_drift_us: 412,
+                late: 3,
+            },
             rows: vec![bench_row("fp32", 100, 0, 2), bench_row("p16", 90, 10, 1)],
             shard_rows: vec![
                 ShardBench {
@@ -675,6 +1199,7 @@ mod tests {
                 from: 1,
                 to: 2,
                 p99_us: 9000,
+                reason: "slo: p99 9000us > target 5000us".into(),
             }],
         };
         let json = summary.to_json();
@@ -688,6 +1213,10 @@ mod tests {
             "\"wall_s\"",
             "\"intra_batch\"",
             "\"simd_backend\"",
+            "\"arrivals\"",
+            "\"scheduled\"",
+            "\"max_drift_us\"",
+            "\"late\"",
             "\"aggregate_rps\"",
             "\"sketch\"",
             "\"sub_bucket_bits\"",
@@ -707,6 +1236,7 @@ mod tests {
             "\"rejected\"",
             "\"mean_batch\"",
             "\"scale_events\"",
+            "\"reason\"",
             "\"scale_ups\"",
             "\"scale_downs\"",
             "\"shards\"",
@@ -725,8 +1255,17 @@ mod tests {
             Some(0.03125),
             "snapshot is sketch-self-describing"
         );
+        assert_eq!(
+            doc.get("arrivals").and_then(|a| a.get("scheduled")).and_then(|v| v.num()),
+            Some(190.0),
+            "arrival accounting rides in every snapshot"
+        );
         assert!(json.contains("\"from\": 1") && json.contains("\"to\": 2"));
         assert!(json.contains("\"p99_us\": 9000"), "scale events carry p99");
+        assert!(
+            json.contains("\"reason\": \"slo: p99 9000us > target 5000us\""),
+            "scale events carry the policy's reason"
+        );
         let want_rps = 100.0 / 1.5 + 90.0 / 1.5;
         assert!((summary.aggregate_rps() - want_rps).abs() < 1e-9);
         let table = summary.render();
@@ -736,7 +1275,17 @@ mod tests {
         assert!(table.contains("stage means"));
         assert!(table.contains("intra-batch 2, simd avx2"));
         assert!(json.contains("\"simd_backend\": \"avx2\""));
-        assert!(table.contains("scale events: fp32 1->2 (p99 9.000ms)"));
+        assert!(table.contains(
+            "scale events: fp32 1->2 (p99 9.000ms, slo: p99 9000us > target 5000us)"
+        ));
+        // Closed mode: no arrivals line in the table (there is no
+        // schedule to drift from), but the JSON still carries the key.
+        assert!(!table.contains("arrivals:"));
+        let open = BenchSummary {
+            mode: "open",
+            ..summary
+        };
+        assert!(open.render().contains("arrivals: 190 scheduled, max drift 412us, 3 late"));
     }
 
     #[test]
@@ -745,5 +1294,151 @@ mod tests {
         assert_eq!(json_escape("p16\"v2"), "p16\\\"v2");
         assert_eq!(json_escape("a\\b"), "a\\\\b");
         assert_eq!(json_escape("x\ny"), "x\\u000ay");
+    }
+
+    #[test]
+    fn bench_config_selects_the_matching_source() {
+        let closed = BenchConfig::default();
+        assert_eq!(closed.source().expect("closed").mode(), "closed");
+        let open = BenchConfig {
+            open_loop: true,
+            ..BenchConfig::default()
+        };
+        assert_eq!(open.source().expect("open").mode(), "open");
+        let replay = BenchConfig {
+            replay: Some("bursty:100:200".into()),
+            // Replay wins even when open_loop is also set (the CLI
+            // layer rejects the combination before it gets here).
+            open_loop: true,
+            ..BenchConfig::default()
+        };
+        assert_eq!(replay.source().expect("replay").mode(), "replay");
+    }
+
+    // --- replay parser ---
+
+    #[test]
+    fn replay_parser_accepts_a_well_formed_trace() {
+        let text = r#"{"t_us": 0, "variant": "fp32", "sample": 3}
+{"t_us": 1500}
+
+{"t_us": 1500, "variant": "p8"}
+{"t_us": 2200, "sample": 7}
+"#;
+        let events = parse_replay(text).expect("valid trace");
+        assert_eq!(events.len(), 4, "blank lines are skipped");
+        assert_eq!(
+            events[0],
+            TraceEvent {
+                t_us: 0,
+                variant: Some("fp32".into()),
+                sample: Some(3),
+            }
+        );
+        assert_eq!(events[1], TraceEvent { t_us: 1500, variant: None, sample: None });
+        assert_eq!(events[2].variant.as_deref(), Some("p8"));
+        assert_eq!(events[2].t_us, 1500, "equal timestamps are in order");
+        assert_eq!(events[3].sample, Some(7));
+    }
+
+    #[test]
+    fn replay_parser_names_the_malformed_line() {
+        let text = "{\"t_us\": 0}\nnot json at all\n";
+        let err = parse_replay(text).expect_err("malformed line").to_string();
+        assert!(err.contains("line 2"), "{err}");
+
+        let err = parse_replay("{\"t_us\": 0}\n{\"variant\": \"p8\"}\n")
+            .expect_err("missing t_us")
+            .to_string();
+        assert!(err.contains("line 2") && err.contains("t_us"), "{err}");
+
+        let err = parse_replay("{\"t_us\": -5}\n").expect_err("negative").to_string();
+        assert!(err.contains("line 1") && err.contains("non-negative"), "{err}");
+
+        let err = parse_replay("{\"t_us\": 0, \"variant\": 7}\n")
+            .expect_err("non-string variant")
+            .to_string();
+        assert!(err.contains("line 1") && err.contains("variant"), "{err}");
+    }
+
+    #[test]
+    fn replay_parser_rejects_out_of_order_timestamps() {
+        let text = "{\"t_us\": 100}\n{\"t_us\": 400}\n{\"t_us\": 300}\n";
+        let err = parse_replay(text).expect_err("out of order").to_string();
+        assert!(
+            err.contains("line 3") && err.contains("out-of-order"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn replay_parser_rejects_an_empty_trace() {
+        for text in ["", "\n\n", "   \n"] {
+            let err = parse_replay(text).expect_err("empty trace").to_string();
+            assert!(err.contains("empty"), "{err}");
+        }
+    }
+
+    #[test]
+    fn replay_from_spec_reports_unreadable_files() {
+        let err = Replay::from_spec("/nonexistent/trace.jsonl")
+            .expect_err("missing file")
+            .to_string();
+        assert!(err.contains("/nonexistent/trace.jsonl"), "{err}");
+    }
+
+    // --- synthetic generators ---
+
+    #[test]
+    fn bursty_trace_compresses_arrivals_into_the_duty_window() {
+        // 400/s over 1s in 250ms periods: 100 arrivals per period, all
+        // inside the period's first 50ms (20% duty).
+        let r = Replay::from_spec("bursty:400").expect("valid spec");
+        assert_eq!(r.mode(), "replay");
+        let events = &r.events;
+        assert_eq!(events.len(), 400);
+        let mut prev = 0;
+        for e in events {
+            assert!(e.t_us >= prev, "arrivals are non-decreasing");
+            assert!(e.t_us < 1_000_000, "inside the duration");
+            let in_period = e.t_us % 250_000;
+            assert!(in_period < 50_000, "arrival at {}us is outside the 20% duty window", e.t_us);
+            prev = e.t_us;
+        }
+    }
+
+    #[test]
+    fn diurnal_trace_concentrates_arrivals_mid_run() {
+        // rate(t) = R(1 − cos 2πt/D): the middle half of the run (the
+        // peak of the sinusoid) must carry most of the arrivals, the
+        // edges (trough) almost none.
+        let r = Replay::from_spec("diurnal:1000:500").expect("valid spec");
+        let events = &r.events;
+        let total = events.len() as f64;
+        assert!(total > 400.0, "mean rate ~1000/s over 500ms, got {total}");
+        let mid: usize = events
+            .iter()
+            .filter(|e| (125_000..375_000).contains(&e.t_us))
+            .count();
+        assert!(
+            mid as f64 / total > 0.7,
+            "middle half carries the sinusoid peak ({mid} of {total})"
+        );
+        let mut prev = 0;
+        for e in events {
+            assert!(e.t_us >= prev);
+            assert!(e.t_us < 500_000);
+            prev = e.t_us;
+        }
+    }
+
+    #[test]
+    fn synthetic_specs_reject_garbage() {
+        for spec in ["bursty:", "bursty:abc", "bursty:0", "bursty:-5", "bursty:100:1:2:3"] {
+            assert!(Replay::from_spec(spec).is_err(), "{spec} must be rejected");
+        }
+        for spec in ["diurnal:", "diurnal:nope", "diurnal:0"] {
+            assert!(Replay::from_spec(spec).is_err(), "{spec} must be rejected");
+        }
     }
 }

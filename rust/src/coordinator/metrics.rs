@@ -205,7 +205,8 @@ impl ShardStats {
     }
 }
 
-/// Cap on the retained scale-event log (oldest evicted first). The
+/// Default cap on the retained scale-event log (oldest evicted first);
+/// `ServeConfig::scale_event_cap` overrides it per server. The
 /// per-variant scale counters stay exact regardless.
 pub const MAX_SCALE_EVENTS: usize = 256;
 
@@ -222,10 +223,14 @@ pub struct ScaleEvent {
     /// transition was recorded — the tail signal the decision answered
     /// to (0 when the variant had served nothing yet).
     pub p99_us: u64,
+    /// The deciding policy's stated reason (e.g. `"slo: p99 4813us >
+    /// target 2000us"`, `"occupancy: 9 in-flight over 2 shards"`, or
+    /// `"manual"` for operator-driven transitions).
+    pub reason: String,
 }
 
 /// Mutable metrics registry.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Metrics {
     per_variant: HashMap<String, VariantStats>,
     per_shard: HashMap<String, ShardStats>,
@@ -236,12 +241,39 @@ pub struct Metrics {
     /// never truncated, so interval consumers can tell how many of the
     /// retained events are theirs even after eviction.
     events_total: u64,
+    /// Retained-event cap for the `events` ring.
+    event_cap: usize,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::with_event_cap(MAX_SCALE_EVENTS)
+    }
 }
 
 impl Metrics {
-    /// Empty registry.
+    /// Empty registry with the default event cap.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Empty registry retaining at most `cap` scale events (clamped to
+    /// at least 1; the lifetime `events_total` counter is unaffected).
+    pub fn with_event_cap(cap: usize) -> Self {
+        Metrics {
+            per_variant: HashMap::new(),
+            per_shard: HashMap::new(),
+            events: VecDeque::new(),
+            events_total: 0,
+            event_cap: cap.max(1),
+        }
+    }
+
+    /// The variant's end-to-end latency sketch, if it has one. The
+    /// controller uses this with [`LatencySketch::delta_since`] to
+    /// derive per-interval p99 observations for the SLO scale policy.
+    pub fn latency_of(&self, variant: &str) -> Option<&LatencySketch> {
+        self.per_variant.get(variant).map(|s| &s.latency)
     }
 
     /// Record one served request: its end-to-end latency, its per-stage
@@ -298,12 +330,12 @@ impl Metrics {
 
     /// Record one autoscaler transition `from -> to` shards, annotated
     /// with the variant's current sketch-derived p99 (the tail the
-    /// decision was answering to). Updates the scale counters, the shard
-    /// gauge, and the event log. The log keeps the most recent
-    /// [`MAX_SCALE_EVENTS`] transitions (the per-variant counters remain
-    /// exact for the full lifetime), so a long-lived flapping server
-    /// cannot grow it without bound.
-    pub fn record_scale(&mut self, variant: &str, from: usize, to: usize) {
+    /// decision was answering to) and the deciding policy's `reason`.
+    /// Updates the scale counters, the shard gauge, and the event log.
+    /// The log keeps the most recent `event_cap` transitions (the
+    /// per-variant counters remain exact for the full lifetime), so a
+    /// long-lived flapping server cannot grow it without bound.
+    pub fn record_scale(&mut self, variant: &str, from: usize, to: usize, reason: &str) {
         let s = self.per_variant.entry(variant.to_string()).or_default();
         let p99_us = s.latency.quantile_us(0.99);
         if to > from {
@@ -312,7 +344,7 @@ impl Metrics {
             s.scale_downs += 1;
         }
         s.shards = to as u64;
-        if self.events.len() >= MAX_SCALE_EVENTS {
+        if self.events.len() >= self.event_cap {
             self.events.pop_front();
         }
         self.events.push_back(ScaleEvent {
@@ -320,6 +352,7 @@ impl Metrics {
             from,
             to,
             p99_us,
+            reason: reason.to_string(),
         });
         self.events_total += 1;
     }
@@ -356,7 +389,8 @@ pub struct Snapshot {
     /// occupancy/exec view.
     pub shard_rows: Vec<(String, ShardStats)>,
     /// Autoscaler transitions, in application order (the most recent
-    /// [`MAX_SCALE_EVENTS`]; older entries are evicted).
+    /// `event_cap` — default [`MAX_SCALE_EVENTS`]; older entries are
+    /// evicted).
     pub events: Vec<ScaleEvent>,
     /// Lifetime scale-event count (never truncated). `events_total -
     /// baseline.events_total` is how many of `events` belong to an
@@ -424,14 +458,19 @@ impl Snapshot {
             }
         }
         if !self.events.is_empty() {
-            out.push_str("scale events:\n");
+            out.push_str(&format!(
+                "scale events: {} retained of {} total\n",
+                self.events.len(),
+                self.events_total
+            ));
             for e in &self.events {
                 out.push_str(&format!(
-                    "  {} {} -> {} shards (p99 {:.3}ms)\n",
+                    "  {} {} -> {} shards (p99 {:.3}ms, {})\n",
                     e.variant,
                     e.from,
                     e.to,
-                    e.p99_us as f64 / 1000.0
+                    e.p99_us as f64 / 1000.0,
+                    e.reason
                 ));
             }
         }
@@ -686,7 +725,7 @@ mod tests {
         let mut m = Metrics::new();
         for i in 0..(MAX_SCALE_EVENTS + 10) {
             let (from, to) = if i % 2 == 0 { (1, 2) } else { (2, 1) };
-            m.record_scale("v", from, to);
+            m.record_scale("v", from, to, "manual");
         }
         let s = m.snapshot();
         assert_eq!(s.events.len(), MAX_SCALE_EVENTS, "log evicts oldest");
@@ -701,6 +740,32 @@ mod tests {
     }
 
     #[test]
+    fn scale_event_cap_is_configurable_and_render_shows_retention() {
+        let mut m = Metrics::with_event_cap(4);
+        for i in 0..10 {
+            m.record_scale("v", i, i + 1, "manual");
+        }
+        let s = m.snapshot();
+        assert_eq!(s.events.len(), 4, "custom cap evicts down to 4");
+        assert_eq!(s.events_total, 10, "lifetime count ignores the cap");
+        // The survivors are the most recent four transitions.
+        assert_eq!(s.events[0].from, 6);
+        assert_eq!(s.events[3].to, 10);
+        let rendered = s.render();
+        assert!(
+            rendered.contains("scale events: 4 retained of 10 total"),
+            "{rendered}"
+        );
+        // A zero cap clamps to one rather than panicking the ring.
+        let mut m = Metrics::with_event_cap(0);
+        m.record_scale("v", 1, 2, "manual");
+        m.record_scale("v", 2, 3, "manual");
+        let s = m.snapshot();
+        assert_eq!(s.events.len(), 1);
+        assert_eq!(s.events_total, 2);
+    }
+
+    #[test]
     fn scale_events_update_counters_gauge_log_and_p99_annotation() {
         let mut m = Metrics::new();
         m.record_shards("p8", 1);
@@ -710,9 +775,9 @@ mod tests {
         for _ in 0..100 {
             m.observe("p8", Duration::from_micros(1_000), &sample(0, 0, 0, 1_000), 1);
         }
-        m.record_scale("p8", 1, 2);
-        m.record_scale("p8", 2, 3);
-        m.record_scale("p8", 3, 2);
+        m.record_scale("p8", 1, 2, "slo: p99 1000us > target 500us");
+        m.record_scale("p8", 2, 3, "occupancy: 9 in-flight over 2 shards");
+        m.record_scale("p8", 3, 2, "manual");
         let s = m.snapshot();
         let p8 = &s.rows[0].1;
         assert_eq!(p8.scale_ups, 2);
@@ -721,14 +786,18 @@ mod tests {
         assert_eq!(s.events.len(), 3);
         assert_eq!(s.events[0].variant, "p8");
         assert_eq!((s.events[0].from, s.events[0].to), (1, 2));
+        assert_eq!(s.events[0].reason, "slo: p99 1000us > target 500us");
         let p99 = s.events[0].p99_us;
         assert!(
             (1_000..=1_032).contains(&p99),
             "event carries the sketch p99 at decision time, got {p99}"
         );
         let rendered = s.render();
-        assert!(rendered.contains("scale events:"));
-        assert!(rendered.contains("p8 1 -> 2 shards (p99 1.000ms)"), "{rendered}");
+        assert!(rendered.contains("scale events: 3 retained of 3 total"), "{rendered}");
+        assert!(
+            rendered.contains("p8 1 -> 2 shards (p99 1.000ms, slo: p99 1000us > target 500us)"),
+            "{rendered}"
+        );
     }
 
     #[test]
@@ -737,11 +806,11 @@ mod tests {
         m.observe("v", Duration::from_micros(200), &sample(100, 50, 10, 40), 2);
         m.observe("v", Duration::from_micros(200), &sample(100, 50, 10, 40), 2);
         m.record_rejected("v");
-        m.record_scale("v", 1, 2);
+        m.record_scale("v", 1, 2, "manual");
         let base = m.snapshot().rows[0].1.clone();
         m.observe("v", Duration::from_micros(2_000), &sample(1_000, 500, 100, 400), 4);
         m.record_rejected("v");
-        m.record_scale("v", 2, 3);
+        m.record_scale("v", 2, 3, "manual");
         let cur = &m.snapshot().rows[0].1;
         let d = cur.delta_since(&base);
         assert_eq!(d.requests, 1);
@@ -758,6 +827,16 @@ mod tests {
         let id = cur.delta_since(&VariantStats::default());
         assert_eq!(id.requests, cur.requests);
         assert_eq!(id.latency, cur.latency);
+    }
+
+    #[test]
+    fn latency_of_exposes_the_live_sketch() {
+        let mut m = Metrics::new();
+        assert!(m.latency_of("v").is_none(), "no sketch before traffic");
+        m.observe("v", Duration::from_micros(500), &sample(0, 0, 0, 500), 1);
+        let sk = m.latency_of("v").expect("sketch after first observe");
+        assert_eq!(sk.count(), 1);
+        assert_eq!(sk.max_us(), 500);
     }
 
     #[test]
@@ -778,7 +857,7 @@ mod tests {
         m.observe("p16", Duration::from_micros(750), &sample(100, 50, 10, 590), 2);
         m.observe_shard("p16#0", 2, Duration::from_micros(590));
         m.record_rejected("p16");
-        m.record_scale("p16", 1, 2);
+        m.record_scale("p16", 1, 2, "manual");
         let prom = m.snapshot().render_prom();
         for needle in [
             "# TYPE posar_requests_total counter",

@@ -35,9 +35,13 @@
 //!    by [`Coordinator::simd_backend`]).
 //! 3. **Autoscaling** — when [`ServeConfig::autoscale`] is enabled, a
 //!    controller thread grows/shrinks each variant's live shard set
-//!    between configured bounds from the in-flight gauges
-//!    ([`autoscale`]); every transition is recorded as a scale event in
-//!    [`Metrics`].
+//!    between configured bounds, driven by a pluggable [`ScalePolicy`]
+//!    ([`ServeConfig::scale_policy`]): occupancy-based [`ShardScaler`]
+//!    (the in-flight gauges) or SLO-based [`SloScaler`] (`--slo-p99-us`,
+//!    holding the sketch-measured interval p99 under a latency
+//!    objective). Every transition is recorded as a scale event in
+//!    [`Metrics`], annotated with the p99 at decision time and the
+//!    policy's reason.
 //!
 //! Worker init failures (e.g. PJRT unavailable) surface as an error from
 //! [`Coordinator::start`] instead of killing the thread silently.
@@ -56,21 +60,31 @@ pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 pub mod compare;
+pub mod config;
 pub mod loadgen;
 pub mod metrics;
 pub mod pool;
 pub mod sketch;
 pub mod trace;
+pub mod wheel;
 
-pub use autoscale::{AutoscaleConfig, ScaleAction, ShardScaler};
+pub use autoscale::{
+    AutoscaleConfig, ScaleAction, ScaleDecision, ScaleObservation, ScalePolicy,
+    ScalePolicyChoice, ShardScaler, SloScaler,
+};
 pub use backend::{InferBackend, PjrtBackend, PvuBackend, NATIVE_VARIANTS};
 pub use batcher::{Batcher, Request};
 pub use compare::{compare_files, compare_json, CompareReport};
-pub use loadgen::{run_bench, BenchConfig, BenchSummary, VariantBench};
+pub use config::{ConfigError, ServeConfigBuilder};
+pub use loadgen::{
+    run_bench, run_bench_with, ArrivalStats, BenchConfig, BenchSummary, ClosedLoop, LoadSource,
+    OpenLoop, Replay, VariantBench, VariantTally,
+};
 pub use metrics::{Metrics, ScaleEvent, Snapshot, Stage, StageSample};
 pub use pool::Pool;
 pub use sketch::LatencySketch;
 pub use trace::{Span, TraceConfig, Tracer};
+pub use wheel::TimerWheel;
 
 use crate::cnn;
 use crate::posit::{PositSpec, P16, P32, P8};
@@ -148,9 +162,16 @@ pub struct ServeConfig {
     /// fill deadline halves when batches fill to capacity (queue
     /// pressure) and recovers toward `max_wait` when idle.
     pub adaptive_wait: bool,
-    /// Shard autoscaler policy. Disabled unless
+    /// Shard autoscaler bounds/cadence. Disabled unless
     /// [`AutoscaleConfig::max_shards`] is non-zero.
     pub autoscale: AutoscaleConfig,
+    /// Which [`ScalePolicy`] the controller runs when autoscaling is
+    /// enabled: occupancy (default) or SLO p99-target (`--slo-p99-us`).
+    pub scale_policy: ScalePolicyChoice,
+    /// Retained scale-event ring size (`--scale-event-cap`, default
+    /// [`metrics::MAX_SCALE_EVENTS`]). The lifetime `events_total`
+    /// counter keeps counting past eviction either way.
+    pub scale_event_cap: usize,
     /// Span-trace sampling (`--trace-sample` / `--trace-slow-us` /
     /// `--trace-file`). Off by default; when enabled the workers emit
     /// one JSONL record per selected request (see [`trace`]).
@@ -169,8 +190,19 @@ impl Default for ServeConfig {
             intra_batch: 1,
             adaptive_wait: false,
             autoscale: AutoscaleConfig::default(),
+            scale_policy: ScalePolicyChoice::default(),
+            scale_event_cap: metrics::MAX_SCALE_EVENTS,
             trace: TraceConfig::default(),
         }
+    }
+}
+
+impl ServeConfig {
+    /// A fresh [`ServeConfigBuilder`]: collect raw CLI-shaped inputs,
+    /// then [`ServeConfigBuilder::build`] validates every cross-flag
+    /// rule at once and produces the config (see [`config`]).
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder::default()
     }
 }
 
@@ -350,21 +382,30 @@ fn reap_finished(handles: &Mutex<Vec<JoinHandle<()>>>) {
     }
 }
 
-/// The autoscale controller loop: one [`ShardScaler`] per variant, fed
-/// from the in-flight gauges every `cfg.interval`; decisions are applied
-/// by spawning or retiring shards and recorded as scale events.
+/// The autoscale controller loop: one [`ScalePolicy`] instance per
+/// variant (built from `policy`), fed one [`ScaleObservation`] every
+/// `cfg.interval` — the in-flight gauges plus the sketch-measured p99
+/// over the tick's interval; decisions are applied by spawning or
+/// retiring shards and recorded as scale events carrying the policy's
+/// stated reason.
 fn controller(
     cfg: AutoscaleConfig,
+    policy: ScalePolicyChoice,
     routes: Arc<HashMap<String, VariantRoute>>,
     metrics: Arc<Mutex<Metrics>>,
     handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
     spawn: ShardSpawn,
     stop: Receiver<()>,
 ) {
-    let mut scalers: HashMap<&String, ShardScaler> = routes
+    let mut scalers: HashMap<&String, Box<dyn ScalePolicy>> = routes
         .keys()
-        .map(|k| (k, ShardScaler::new(cfg.clone())))
+        .map(|k| (k, policy.build(cfg.clone())))
         .collect();
+    // Per-variant sketch baselines: each tick observes the latency delta
+    // since the previous tick, so the policy sees the *interval* p99,
+    // not the lifetime tail (a sketch clone is a few KB — nothing at
+    // controller cadence).
+    let mut baselines: HashMap<&String, LatencySketch> = HashMap::new();
     loop {
         match stop.recv_timeout(cfg.interval) {
             Err(RecvTimeoutError::Timeout) => {}
@@ -383,19 +424,43 @@ fn controller(
             if n == 0 {
                 continue; // shutting down
             }
-            match scalers.get_mut(name).expect("scaler per variant").observe(inflight, n) {
-                Some(ScaleAction::Up) => {
+            let p99_us = {
+                let m = metrics.lock().unwrap();
+                m.latency_of(name).map(|cur| {
+                    let interval = match baselines.get(name) {
+                        Some(base) => cur.delta_since(base),
+                        None => cur.clone(),
+                    };
+                    baselines.insert(name, cur.clone());
+                    interval
+                })
+            }
+            .filter(|interval| interval.count() > 0)
+            .map(|interval| interval.quantile_us(0.99));
+            let obs = ScaleObservation {
+                inflight,
+                shards: n,
+                p99_us,
+            };
+            match scalers.get_mut(name).expect("scaler per variant").observe(&obs) {
+                Some(ScaleDecision {
+                    action: ScaleAction::Up,
+                    reason,
+                }) => {
                     // Transition counts come from spawn_shard's write
                     // lock, not the stale gauge read above — concurrent
                     // manual scaling cannot produce impossible events.
                     match spawn_shard(name, route, &spawn, &metrics, &handles, None) {
-                        Ok(to) => metrics.lock().unwrap().record_scale(name, to - 1, to),
+                        Ok(to) => metrics.lock().unwrap().record_scale(name, to - 1, to, &reason),
                         // The decision is dropped but never silently: the
                         // scaler re-arms after its sustain window.
                         Err(e) => eprintln!("autoscaler: scale-up of {name} failed: {e}"),
                     }
                 }
-                Some(ScaleAction::Down) => {
+                Some(ScaleDecision {
+                    action: ScaleAction::Down,
+                    reason,
+                }) => {
                     let retired_from = {
                         let mut shards = route.shards.write().unwrap();
                         // Re-check the *configured* floor under the write
@@ -413,7 +478,7 @@ fn controller(
                     if let Some(from) = retired_from {
                         // Dropping the Shard closed its queue: the worker
                         // drains what it already accepted, then exits.
-                        metrics.lock().unwrap().record_scale(name, from, from - 1);
+                        metrics.lock().unwrap().record_scale(name, from, from - 1, &reason);
                     }
                     // Retired workers finish asynchronously; reclaim any
                     // that have already exited.
@@ -441,7 +506,7 @@ impl Coordinator {
             BackendChoice::Pvu { .. } => Some(Arc::new(cnn::weights::params_or_analytic().0)),
             BackendChoice::Pjrt => None,
         };
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let metrics = Arc::new(Mutex::new(Metrics::with_event_cap(cfg.scale_event_cap)));
         let handles = Arc::new(Mutex::new(Vec::new()));
         // With autoscaling on, the start-time count must already sit in
         // the [min_shards, max_shards] band — the scaler only moves on
@@ -534,13 +599,14 @@ impl Coordinator {
         if cfg.autoscale.enabled() {
             let (stop_tx, stop_rx) = std::sync::mpsc::channel::<()>();
             let asc = cfg.autoscale.clone();
+            let policy = cfg.scale_policy.clone();
             let routes2 = Arc::clone(&routes);
             let metrics2 = Arc::clone(&metrics);
             let handles2 = Arc::clone(&handles);
             let spawn2 = spawn.clone();
             let h = std::thread::Builder::new()
                 .name("posar-autoscale".into())
-                .spawn(move || controller(asc, routes2, metrics2, handles2, spawn2, stop_rx))
+                .spawn(move || controller(asc, policy, routes2, metrics2, handles2, spawn2, stop_rx))
                 .map_err(|e| anyhow!("spawn autoscaler: {e}"))?;
             scaler_stop = Some(stop_tx);
             scaler_handle = Some(h);
@@ -599,7 +665,7 @@ impl Coordinator {
             .get(variant)
             .ok_or_else(|| anyhow!("unknown variant {variant:?}"))?;
         let to = spawn_shard(variant, route, &self.spawn, &self.metrics, &self.handles, None)?;
-        self.metrics.lock().unwrap().record_scale(variant, to - 1, to);
+        self.metrics.lock().unwrap().record_scale(variant, to - 1, to, "manual");
         Ok(to)
     }
 
@@ -617,7 +683,7 @@ impl Coordinator {
             shards.pop();
             from
         };
-        self.metrics.lock().unwrap().record_scale(variant, from, from - 1);
+        self.metrics.lock().unwrap().record_scale(variant, from, from - 1, "manual");
         reap_finished(&self.handles);
         Ok(from - 1)
     }

@@ -1,0 +1,208 @@
+//! Hashed timer wheel: the arrival scheduler under every paced
+//! [`LoadSource`](super::loadgen::LoadSource).
+//!
+//! The open-loop and replay load sources need to fire arrivals at
+//! microsecond-resolution deadlines — potentially millions per run.
+//! A sleep-per-arrival thread pool (the pre-PR-8 open loop) stops
+//! scaling long before that: thread count couples to rate, and each
+//! wakeup costs a scheduler round-trip. The classic fix is a hashed
+//! timer wheel (Varghese & Lauck): time is quantized into
+//! `tick_us`-wide ticks, a fixed ring of slots hashes each deadline to
+//! `due_tick % slots`, and a **single driver thread** advances the
+//! wheel, firing whole ticks at once. Scheduling is O(1); advancing a
+//! tick touches one slot. Deadlines further out than one ring
+//! revolution simply stay in their slot carrying their absolute due
+//! tick (the textbook "round counter", stored absolute here) and are
+//! skipped until their revolution comes around.
+//!
+//! The wheel itself is deliberately passive — no clock, no thread. The
+//! driver in `loadgen` owns the clock, asks [`TimerWheel::next_due_tick`]
+//! how long it may sleep, then calls [`TimerWheel::collect_due`] with
+//! the tick the clock has reached. That keeps this module pure data
+//! structure: every behavior is unit-testable with integers.
+
+/// A hashed timer wheel over `tick_us`-wide ticks. `T` is the payload
+/// fired at each deadline.
+#[derive(Debug)]
+pub struct TimerWheel<T> {
+    tick_us: u64,
+    /// Ring of slots; an entry lives at `due_tick % slots.len()` and
+    /// carries its absolute due tick.
+    slots: Vec<Vec<(u64, T)>>,
+    /// Next unfired tick: every entry with `due_tick < now_tick` has
+    /// already been collected.
+    now_tick: u64,
+    len: usize,
+}
+
+impl<T> TimerWheel<T> {
+    /// A wheel with the given tick width (µs) and slot count. One
+    /// revolution spans `tick_us * slots` microseconds; both are
+    /// clamped to at least 1.
+    pub fn new(tick_us: u64, slots: usize) -> Self {
+        TimerWheel {
+            tick_us: tick_us.max(1),
+            slots: (0..slots.max(1)).map(|_| Vec::new()).collect(),
+            now_tick: 0,
+            len: 0,
+        }
+    }
+
+    /// Tick width, µs.
+    pub fn tick_us(&self) -> u64 {
+        self.tick_us
+    }
+
+    /// Entries currently scheduled.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no entries are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Schedule `item` at absolute time `due_us`. Deadlines already in
+    /// the wheel's past are clamped to the next unfired tick, so they
+    /// fire on the next [`collect_due`](Self::collect_due) rather than
+    /// waiting a full revolution.
+    pub fn schedule(&mut self, due_us: u64, item: T) {
+        let due_tick = (due_us / self.tick_us).max(self.now_tick);
+        let slot = (due_tick % self.slots.len() as u64) as usize;
+        self.slots[slot].push((due_tick, item));
+        self.len += 1;
+    }
+
+    /// Earliest occupied tick, or `None` when empty. O(slots + len):
+    /// called once per driver wakeup, not per entry, so the scan is
+    /// cheap next to a tick's worth of request firing.
+    pub fn next_due_tick(&self) -> Option<u64> {
+        self.slots
+            .iter()
+            .flat_map(|s| s.iter().map(|(t, _)| *t))
+            .min()
+    }
+
+    /// Advance the wheel through `target` (inclusive), appending every
+    /// entry due by then to `out` in tick order (insertion order within
+    /// a tick). Entries hashed into a visited slot but due on a later
+    /// revolution stay put. A `target` behind the wheel collects
+    /// nothing. When the caller has fallen a full revolution (or more)
+    /// behind, one sweep over all slots replaces the per-tick walk —
+    /// everything due fires, in slot order, without O(ticks-behind)
+    /// work.
+    pub fn collect_due(&mut self, target: u64, out: &mut Vec<T>) {
+        if target < self.now_tick {
+            return;
+        }
+        let n = self.slots.len() as u64;
+        if target - self.now_tick + 1 >= n {
+            // Catch-up sweep: every slot would be visited anyway.
+            for slot in &mut self.slots {
+                let mut i = 0;
+                while i < slot.len() {
+                    if slot[i].0 <= target {
+                        out.push(slot.swap_remove(i).1);
+                        self.len -= 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        } else {
+            for tick in self.now_tick..=target {
+                let slot = &mut self.slots[(tick % n) as usize];
+                let mut i = 0;
+                while i < slot.len() {
+                    // Entries in this slot are ≡ tick (mod n) and ≥
+                    // now_tick, so "due by target" means "due exactly
+                    // this tick".
+                    if slot[i].0 <= target {
+                        out.push(slot.swap_remove(i).1);
+                        self.len -= 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        self.now_tick = target + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(w: &mut TimerWheel<u32>, target: u64) -> Vec<u32> {
+        let mut out = Vec::new();
+        w.collect_due(target, &mut out);
+        out
+    }
+
+    #[test]
+    fn fires_in_tick_order_and_only_when_due() {
+        let mut w = TimerWheel::new(100, 8);
+        w.schedule(250, 2); // tick 2
+        w.schedule(0, 0); // tick 0
+        w.schedule(120, 1); // tick 1
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.next_due_tick(), Some(0));
+        assert_eq!(drain(&mut w, 1), vec![0, 1]);
+        assert_eq!(w.next_due_tick(), Some(2));
+        assert_eq!(drain(&mut w, 1), Vec::<u32>::new(), "no re-fire");
+        assert_eq!(drain(&mut w, 2), vec![2]);
+        assert!(w.is_empty());
+        assert_eq!(w.next_due_tick(), None);
+    }
+
+    #[test]
+    fn entries_beyond_one_revolution_wait_their_round() {
+        // 4 slots × 100µs: deadlines 100µs and 500µs hash to the same
+        // slot (ticks 1 and 5). Only the first may fire at tick 1.
+        let mut w = TimerWheel::new(100, 4);
+        w.schedule(100, 1);
+        w.schedule(500, 5);
+        assert_eq!(drain(&mut w, 1), vec![1]);
+        assert_eq!(w.len(), 1);
+        assert_eq!(drain(&mut w, 4), Vec::<u32>::new());
+        assert_eq!(drain(&mut w, 5), vec![5]);
+    }
+
+    #[test]
+    fn past_deadlines_clamp_to_the_next_collect() {
+        let mut w = TimerWheel::new(100, 8);
+        w.schedule(0, 0);
+        assert_eq!(drain(&mut w, 3), vec![0]);
+        // The wheel is now past tick 3; a stale deadline must not park
+        // until its residue comes around again.
+        w.schedule(50, 9);
+        assert_eq!(w.next_due_tick(), Some(4));
+        assert_eq!(drain(&mut w, 4), vec![9]);
+    }
+
+    #[test]
+    fn catch_up_sweep_fires_everything_due() {
+        // A driver stalled for many revolutions must still fire every
+        // overdue entry exactly once, keeping future ones.
+        let mut w = TimerWheel::new(100, 4);
+        for k in 0..16 {
+            w.schedule(k * 100, k as u32);
+        }
+        w.schedule(10_000, 99); // tick 100: far future
+        let mut fired = drain(&mut w, 50); // 51 ticks > 4 slots: sweep path
+        fired.sort_unstable();
+        assert_eq!(fired, (0..16).collect::<Vec<u32>>());
+        assert_eq!(w.len(), 1);
+        assert_eq!(drain(&mut w, 100), vec![99]);
+    }
+
+    #[test]
+    fn zero_width_config_is_clamped_not_divided_by() {
+        let mut w = TimerWheel::new(0, 0);
+        assert_eq!(w.tick_us(), 1);
+        w.schedule(5, 7);
+        assert_eq!(drain(&mut w, 5), vec![7]);
+    }
+}

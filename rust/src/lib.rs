@@ -33,14 +33,16 @@
 //! - [`coordinator`] — the L3 serving stack: router with sharded
 //!   per-variant workers, dynamic batcher (optionally adaptive
 //!   deadline), a dependency-free scoped worker pool for intra-batch
-//!   parallelism ([`coordinator::Pool`]), a shard autoscaler driven by
-//!   the in-flight gauges ([`coordinator::autoscale`]), pluggable
-//!   inference backends (native PVU — no artifacts needed — or PJRT),
-//!   exact-tail telemetry (log-linear latency sketches with per-stage
-//!   timers — [`coordinator::LatencySketch`] — JSONL span tracing,
-//!   Prometheus exposition, and the `bench-compare` perf-trajectory
-//!   diff), and the closed/open-loop load generator behind
-//!   `repro serve-bench`. See `docs/ARCHITECTURE.md`,
+//!   parallelism ([`coordinator::Pool`]), a shard autoscaler behind a
+//!   pluggable [`coordinator::ScalePolicy`] (occupancy- or SLO-driven
+//!   — [`coordinator::autoscale`]), pluggable inference backends
+//!   (native PVU — no artifacts needed — or PJRT), exact-tail
+//!   telemetry (log-linear latency sketches with per-stage timers —
+//!   [`coordinator::LatencySketch`] — JSONL span tracing, Prometheus
+//!   exposition, and the `bench-compare` perf-trajectory diff), and
+//!   the closed-loop / timer-wheel open-loop / trace-replay load
+//!   sources behind one [`coordinator::LoadSource`] driver
+//!   (`repro serve-bench`). See `docs/ARCHITECTURE.md`,
 //!   `docs/serving.md` and `docs/OBSERVABILITY.md`.
 //! - [`report`] — table/figure renderers that regenerate the paper's
 //!   evaluation section.

@@ -6,8 +6,7 @@
 
 use posar::cnn;
 use posar::coordinator::{
-    compare_files, run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Routing,
-    ServeConfig, TraceConfig,
+    compare_files, run_bench, BenchConfig, Coordinator, ServeConfig, ServeConfigBuilder,
 };
 use posar::report;
 use std::time::{Duration, Instant};
@@ -44,8 +43,9 @@ serving:
   serve [--backend pvu|pjrt] [--requests N] [--variants a,b,..]
         [--shards S] [--routing rr|lq] [--intra-batch P]
         [--adaptive-wait] [--autoscale-max M] [--autoscale-min m]
-        [--scale-interval-ms I] [--trace-sample N] [--trace-slow-us T]
-        [--trace-file PATH] [--prom PATH]
+        [--scale-interval-ms I] [--slo-p99-us T] [--scale-event-cap E]
+        [--trace-sample N] [--trace-slow-us T] [--trace-file PATH]
+        [--prom PATH]
                          batched inference. Backend `pvu` (default) runs
                          the CNN natively on the Posit Vector Unit — no
                          artifacts needed; `pjrt` serves the AOT
@@ -55,6 +55,11 @@ serving:
                          --autoscale-max M lets a controller grow/shrink
                          live shards per variant between m (default 1)
                          and M from the in-flight gauges;
+                         --slo-p99-us T swaps the occupancy policy for
+                         the SLO policy: scale up whenever interval p99
+                         exceeds T µs, shrink (after a cooldown) when
+                         p99 holds under T/2; --scale-event-cap E sets
+                         how many scale events the log retains;
                          --adaptive-wait shrinks the batcher deadline
                          under queue pressure (see docs/serving.md);
                          --trace-sample N emits every Nth request (and
@@ -67,17 +72,26 @@ serving:
               [--queue-depth D] [--routing rr|lq] [--variants a,b,..]
               [--intra-batch P] [--adaptive-wait] [--autoscale-max M]
               [--autoscale-min m] [--scale-interval-ms I]
-              [--open --rate R --duration-ms MS] [--json PATH]
-              [--trace-sample N] [--trace-slow-us T] [--trace-file PATH]
-              [--prom PATH]
-                         closed/open-loop load generator; prints a JSON
-                         summary (throughput, exact p50/p95/p99/p99.9
-                         from the latency sketch, per-stage breakdown,
-                         rejections, scale events, per-shard occupancy —
-                         schema in docs/serving.md) to stdout and a
-                         table to stderr. `--smoke` is the CI
-                         configuration: native backend, small request
-                         count
+              [--slo-p99-us T] [--scale-event-cap E]
+              [--open --rate R --duration-ms MS]
+              [--replay FILE|bursty:RATE[:MS[:PERIOD]]|diurnal:RATE[:MS]]
+              [--json PATH] [--trace-sample N] [--trace-slow-us T]
+              [--trace-file PATH] [--prom PATH]
+                         load generator: closed loop (default), open
+                         loop (--open: timer-wheel paced arrivals at R
+                         req/s per variant), or trace replay (--replay:
+                         a recorded JSONL trace — one
+                         {{\"t_us\": N[, \"variant\": ..][, \"sample\": ..]}}
+                         per line — or a built-in bursty/diurnal
+                         synthetic shape). All modes print the same JSON
+                         summary schema (throughput, exact
+                         p50/p95/p99/p99.9 from the latency sketch,
+                         per-stage breakdown, rejections, arrival drift,
+                         scale events with the policy's reason,
+                         per-shard occupancy — schema in
+                         docs/serving.md) to stdout and a table to
+                         stderr. `--smoke` is the CI configuration:
+                         native backend, small request count
   bench-compare OLD.json NEW.json [--threshold PCT]
                          diff two serve-bench JSON snapshots; flags
                          per-variant throughput/latency/p99/top1
@@ -113,6 +127,19 @@ fn strict_num(args: &[String], name: &str, default: u64) -> anyhow::Result<u64> 
         None => Ok(default),
         Some(v) => v
             .parse()
+            .map_err(|_| anyhow::anyhow!("bad {name} {v:?} (expected an integer)")),
+    }
+}
+
+/// Present-or-absent flag under the strict policy: `None` when absent
+/// (the builder applies the default), an error when unparseable. The
+/// `Option` feeds [`ServeConfigBuilder`]'s setters directly.
+fn opt_num(args: &[String], name: &str) -> anyhow::Result<Option<u64>> {
+    match flag(args, name) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
             .map_err(|_| anyhow::anyhow!("bad {name} {v:?} (expected an integer)")),
     }
 }
@@ -203,82 +230,30 @@ fn main() {
     eprintln!("[{}] done in {:.2?}", cmd, t0.elapsed());
 }
 
-/// Build a `ServeConfig` from the shared CLI flags. The default backend
-/// is the native PVU (runs from a clean checkout); `--backend pjrt`
-/// selects the AOT path.
-fn serve_config(args: &[String], default_batch: usize) -> anyhow::Result<ServeConfig> {
-    let backend = flag(args, "--backend").unwrap_or_else(|| "pvu".to_string());
-    let backend = match backend.as_str() {
-        "pjrt" => {
-            // A flag that silently doesn't apply must error, not measure
-            // the wrong configuration (the strict_num policy).
-            anyhow::ensure!(
-                flag(args, "--batch").is_none(),
-                "--batch applies to the pvu backend only (PJRT batch is baked into the executable)"
-            );
-            BackendChoice::Pjrt
-        }
-        "pvu" => BackendChoice::Pvu {
-            batch: strict_num(args, "--batch", default_batch as u64)? as usize,
-        },
-        other => anyhow::bail!("unknown backend {other:?} (expected pvu or pjrt)"),
-    };
-    let routing = match flag(args, "--routing") {
-        None => Routing::RoundRobin,
-        Some(s) => Routing::parse(&s)
-            .ok_or_else(|| anyhow::anyhow!("unknown routing {s:?} (expected rr or lq)"))?,
-    };
-    // Autoscaling is off unless --autoscale-max is given (max 0 = off).
-    // Inconsistent bounds are errors, not silent no-ops (same policy as
-    // strict_num: a typo'd knob must not measure the wrong config).
-    let autoscale = AutoscaleConfig {
-        min_shards: strict_num(args, "--autoscale-min", 1)? as usize,
-        max_shards: strict_num(args, "--autoscale-max", 0)? as usize,
-        interval: Duration::from_millis(strict_num(args, "--scale-interval-ms", 25)?),
-        ..AutoscaleConfig::default()
-    };
-    if autoscale.max_shards == 0 {
-        anyhow::ensure!(
-            flag(args, "--autoscale-min").is_none(),
-            "--autoscale-min requires --autoscale-max (autoscaling is off without it)"
-        );
-    } else {
-        anyhow::ensure!(
-            (1..=autoscale.max_shards).contains(&autoscale.min_shards),
-            "--autoscale-min {} must be between 1 and --autoscale-max {}",
-            autoscale.min_shards,
-            autoscale.max_shards
-        );
-    }
-    anyhow::ensure!(
-        autoscale.interval >= Duration::from_millis(1),
-        "--scale-interval-ms must be at least 1 (0 would busy-spin the controller)"
-    );
-    // Span tracing: off unless a selection rule (--trace-sample /
-    // --trace-slow-us) is given. A lone --trace-file is an error under
-    // the strict_num policy — it would silently trace nothing.
-    let trace = TraceConfig {
-        sample_every: strict_num(args, "--trace-sample", 0)?,
-        slow_us: strict_num(args, "--trace-slow-us", 0)?,
-        path: flag(args, "--trace-file").map(std::path::PathBuf::from),
-    };
-    if !trace.enabled() {
-        anyhow::ensure!(
-            flag(args, "--trace-file").is_none(),
-            "--trace-file requires --trace-sample or --trace-slow-us (tracing is off without them)"
-        );
-    }
-    Ok(ServeConfig {
-        backend,
-        shards: strict_num(args, "--shards", 1)? as usize,
-        queue_depth: strict_num(args, "--queue-depth", 256)? as usize,
-        routing,
-        intra_batch: strict_num(args, "--intra-batch", 1)? as usize,
-        adaptive_wait: args.iter().any(|a| a == "--adaptive-wait"),
-        autoscale,
-        trace,
-        ..ServeConfig::default()
-    })
+/// Collect the shared serving flags into a [`ServeConfigBuilder`].
+/// Parsing only — every cross-flag rule (batch vs PJRT, autoscale
+/// bounds, SLO without headroom, trace file without a rule, …) lives in
+/// the builder's validation, so `serve`/`serve-bench` are parse → build
+/// → run. Flag values that don't parse are errors here (the strict_num
+/// policy); flags that contradict each other are `ConfigError`s there.
+fn serve_builder(args: &[String], default_batch: u64) -> anyhow::Result<ServeConfigBuilder> {
+    Ok(ServeConfig::builder()
+        .backend(flag(args, "--backend"))
+        .batch(opt_num(args, "--batch")?)
+        .default_batch(default_batch)
+        .shards(opt_num(args, "--shards")?)
+        .queue_depth(opt_num(args, "--queue-depth")?)
+        .routing(flag(args, "--routing"))
+        .intra_batch(opt_num(args, "--intra-batch")?)
+        .adaptive_wait(args.iter().any(|a| a == "--adaptive-wait"))
+        .autoscale_min(opt_num(args, "--autoscale-min")?)
+        .autoscale_max(opt_num(args, "--autoscale-max")?)
+        .scale_interval_ms(opt_num(args, "--scale-interval-ms")?)
+        .slo_p99_us(opt_num(args, "--slo-p99-us")?)
+        .scale_event_cap(opt_num(args, "--scale-event-cap")?)
+        .trace_sample(opt_num(args, "--trace-sample")?)
+        .trace_slow_us(opt_num(args, "--trace-slow-us")?)
+        .trace_file(flag(args, "--trace-file").map(std::path::PathBuf::from)))
 }
 
 /// Shared post-run telemetry emission for `serve`/`serve-bench`: write
@@ -334,7 +309,7 @@ fn bench_compare(args: &[String]) -> anyhow::Result<bool> {
 /// not three), and report Top-1 + latency/throughput.
 fn serve(args: &[String], variants: Option<&str>) -> anyhow::Result<()> {
     let n_requests = strict_num(args, "--requests", 256)? as usize;
-    let cfg = serve_config(args, 8)?;
+    let cfg = serve_builder(args, 8)?.build()?;
     let filter: Option<Vec<&str>> = variants.map(|v| v.split(',').map(str::trim).collect());
     let coord = Coordinator::start(&cfg, filter.as_deref())?;
     println!("serving variants: {:?}", coord.variants());
@@ -361,32 +336,38 @@ fn serve(args: &[String], variants: Option<&str>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The closed/open-loop load generator (`serve-bench`): drive the
-/// serving stack with concurrent clients and emit a machine-readable
-/// JSON summary on stdout (table + progress on stderr, so the JSON can
-/// be piped or captured as a CI artifact).
+/// The load generator (`serve-bench`): drive the serving stack through
+/// the configured [`LoadSource`] — closed loop, timer-wheel open loop,
+/// or trace replay — and emit a machine-readable JSON summary on stdout
+/// (table + progress on stderr, so the JSON can be piped or captured as
+/// a CI artifact). All three modes emit the identical schema.
+///
+/// [`LoadSource`]: posar::coordinator::LoadSource
 fn serve_bench(args: &[String]) -> anyhow::Result<()> {
     let smoke = args.iter().any(|a| a == "--smoke");
     let open = args.iter().any(|a| a == "--open");
-    if !open {
-        anyhow::ensure!(
-            flag(args, "--rate").is_none() && flag(args, "--duration-ms").is_none(),
-            "--rate/--duration-ms apply to the open-loop generator (add --open)"
-        );
-    }
-    let mut cfg = serve_config(args, if smoke { 4 } else { 8 })?;
+    let rate = match flag(args, "--rate") {
+        None => None,
+        Some(v) => Some(v.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("bad --rate {v:?} (expected a number)")
+        })?),
+    };
+    let duration_ms = opt_num(args, "--duration-ms")?;
+    let replay = flag(args, "--replay");
+    // The bench-only knobs join the builder so their cross-flag rules
+    // (rate without --open, replay against --open, …) are validated in
+    // the same pass as the serving ones.
+    let mut cfg = serve_builder(args, if smoke { 4 } else { 8 })?
+        .open(open)
+        .rate(rate)
+        .duration_ms(duration_ms)
+        .replay(replay.clone())
+        .build()?;
     if smoke && !args.iter().any(|a| a == "--shards") {
         cfg.shards = 2; // exercise the sharded router in CI
     }
     let concurrency = strict_num(args, "--concurrency", if smoke { 4 } else { 8 })? as usize;
     let requests = strict_num(args, "--requests", if smoke { 32 } else { 512 })? as usize;
-    let rate = match flag(args, "--rate") {
-        None => 200.0,
-        Some(v) => v
-            .parse::<f64>()
-            .map_err(|_| anyhow::anyhow!("bad --rate {v:?} (expected a number)"))?,
-    };
-    let duration = Duration::from_millis(strict_num(args, "--duration-ms", 1000)?);
     let variants: Vec<String> = match flag(args, "--variants") {
         Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
         // Smoke default: one variant per engine kind (scalar FP32, LUT
@@ -416,8 +397,9 @@ fn serve_bench(args: &[String]) -> anyhow::Result<()> {
         concurrency,
         requests,
         open_loop: open,
-        rate,
-        duration,
+        rate: rate.unwrap_or(200.0),
+        duration: Duration::from_millis(duration_ms.unwrap_or(1000)),
+        replay,
     };
     let summary = run_bench(&coord, &set, &bcfg)?;
     eprintln!("\n{}", summary.render());

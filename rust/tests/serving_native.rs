@@ -5,7 +5,7 @@
 use posar::cnn;
 use posar::coordinator::{
     compare_json, run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Request,
-    Routing, ServeConfig, Stage, TraceConfig,
+    Routing, ScalePolicyChoice, ServeConfig, Stage, TraceConfig,
 };
 use posar::data::synth;
 use posar::posit::{P16, P8};
@@ -481,6 +481,149 @@ fn bench_compare_flags_tampered_snapshot() {
         "a 4x p99 must be flagged:\n{}",
         report.render()
     );
+}
+
+/// The SLO scale policy end-to-end: with a 1µs p99 target every real
+/// request is a breach, so sustained traffic scales the variant up;
+/// idleness scales it back down after the cooldown — and both events
+/// carry the policy's reason string, p99-annotated.
+#[test]
+fn slo_policy_scales_on_p99_and_annotates_events() {
+    let cfg = ServeConfig {
+        backend: BackendChoice::Pvu { batch: 1 },
+        shards: 1,
+        max_wait: Duration::from_millis(1),
+        scale_policy: ScalePolicyChoice::SloP99 { target_us: 1 },
+        autoscale: AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 2,
+            sustain: 1,
+            cooldown: 2,
+            interval: Duration::from_millis(5),
+            ..AutoscaleConfig::default()
+        },
+        ..Default::default()
+    };
+    let coord = Coordinator::start(&cfg, Some(&["p8"])).expect("start");
+    assert_eq!(coord.shard_count("p8"), 1);
+    let set = synth::generate(0x510A, 2);
+    // Phase 1 — traffic: every interval's p99 exceeds the 1µs target,
+    // so the controller scales up as soon as it observes a completion.
+    let stop = AtomicBool::new(false);
+    let mut reached_max = false;
+    std::thread::scope(|s| {
+        for c in 0..4 {
+            let coord = &coord;
+            let set = &set;
+            let stop = &stop;
+            s.spawn(move || {
+                let mut i = c;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = coord.infer("p8", set.sample(i % set.len()).to_vec());
+                    i += 1;
+                }
+            });
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while Instant::now() < deadline {
+            if coord.shard_count("p8") >= 2 {
+                reached_max = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert!(reached_max, "a breached p99 target must scale up");
+    // Phase 2 — idle: no completions means no p99 pressure; after the
+    // cooldown the SLO policy shrinks back to the floor.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while coord.shard_count("p8") > 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(coord.shard_count("p8"), 1, "idle variant returns to min_shards");
+    let snap = coord.metrics();
+    let up = snap
+        .events
+        .iter()
+        .find(|e| e.to > e.from)
+        .expect("scale-up event recorded");
+    assert!(
+        up.reason.starts_with("slo: p99") && up.reason.contains("target 1us"),
+        "up reason names the policy and target: {:?}",
+        up.reason
+    );
+    assert!(up.p99_us > 0, "breach events carry the observed p99");
+    let down = snap
+        .events
+        .iter()
+        .find(|e| e.to < e.from)
+        .expect("scale-down event recorded");
+    assert!(down.reason.starts_with("slo:"), "{:?}", down.reason);
+    coord.shutdown();
+}
+
+/// Trace replay end-to-end: a synthetic bursty trace drives the mix
+/// (round-robined over the driven variants), and the summary carries
+/// the same schema as every other mode — `bench-compare` parses it.
+#[test]
+fn replay_source_drives_the_mix_with_identical_schema() {
+    let coord = Coordinator::start(&native_cfg(2, 1), Some(&["fp32", "p8"])).expect("start");
+    let set = synth::generate(0x5EED, 4);
+    let cfg = BenchConfig {
+        replay: Some("bursty:400:300".into()),
+        ..Default::default()
+    };
+    let summary = run_bench(&coord, &set, &cfg).expect("bench");
+    assert_eq!(summary.mode, "replay");
+    // bursty:400:300 = mean 400/s over 300ms: 200 deterministic
+    // arrivals (two 250ms-period windows, the second truncated).
+    assert_eq!(summary.arrivals.scheduled, 200, "{:?}", summary.arrivals);
+    let total: u64 = summary.rows.iter().map(|r| r.completed).sum();
+    assert!(total > 0, "replayed arrivals complete requests");
+    assert_eq!(summary.rows.len(), 2, "anonymous arrivals cover the mix");
+    for row in &summary.rows {
+        assert_eq!(row.errors, 0, "{}", row.variant);
+    }
+    let json = summary.to_json();
+    assert!(json.contains("\"mode\": \"replay\""));
+    assert!(json.contains("\"arrivals\""));
+    let report = compare_json(&json, &json, 20.0).expect("bench-compare parses replay JSON");
+    assert!(!report.has_regressions());
+    coord.shutdown();
+}
+
+/// The timer-wheel open loop end-to-end: the arrival schedule is exact
+/// (`ceil(rate × duration)` per variant), drift is accounted, and the
+/// summary schema matches the closed loop's.
+#[test]
+fn open_loop_wheel_fires_the_exact_schedule() {
+    let coord = Coordinator::start(&native_cfg(2, 1), Some(&["fp32"])).expect("start");
+    let set = synth::generate(0x09E2, 4);
+    let cfg = BenchConfig {
+        open_loop: true,
+        rate: 300.0,
+        duration: Duration::from_millis(300),
+        ..Default::default()
+    };
+    let summary = run_bench(&coord, &set, &cfg).expect("bench");
+    assert_eq!(summary.mode, "open");
+    assert_eq!(
+        summary.arrivals.scheduled, 90,
+        "300/s × 300ms = 90 arrivals, scheduled exactly"
+    );
+    let row = &summary.rows[0];
+    assert!(row.completed > 0, "open-loop arrivals complete");
+    assert!(
+        row.completed + row.rejected <= 90,
+        "completions + sheds never exceed the schedule"
+    );
+    assert_eq!(row.errors, 0);
+    let json = summary.to_json();
+    assert!(json.contains("\"mode\": \"open\""));
+    let report = compare_json(&json, &json, 20.0).expect("bench-compare parses open JSON");
+    assert!(!report.has_regressions());
+    coord.shutdown();
 }
 
 /// Span tracing end-to-end: a traced coordinator writes JSONL records
