@@ -147,3 +147,92 @@ def exhaustive_values(ps: int, es: int):
     p = pats[keep]
     order = np.argsort(v, kind="stable")
     return v[order], p[order]
+
+
+# ---------------------------------------------------------------------
+# Fixed-posits (Gohil et al., arXiv:2104.04763): the posit anatomy with
+# the regime pinned to a fixed `rf`-bit biased field instead of a
+# run-length code, mirroring `rust/src/posit/fixed.rs`:
+#
+#   [ sign (1) | regime (rf, stored = k + 2^(rf-1)) | exp (es) | frac (fs) ]
+#
+# with fs = ps - 1 - rf - es, two's-complement negatives, 0…0 = zero and
+# 10…0 = NaR. NumPy-only: these feed the golden lockstep tests, not a
+# Pallas kernel, so there is no xp-generic variant.
+# ---------------------------------------------------------------------
+
+
+def fixed_quantize_np(x, ps: int, rf: int, es: int):
+    """f32/f64 array -> fixed-posit bit patterns (int64, low `ps` bits).
+
+    Same contract as the Rust `FixedPositSpec::from_f64`: single
+    round-to-nearest-even on the fraction (the carry ripples through the
+    contiguous exponent/regime fields), regime overflow saturates at
+    maxpos, underflow at minpos, NaN/inf -> NaR.
+    """
+    fs = ps - 1 - rf - es
+    bias = 1 << (rf - 1)
+    maxpos = np.int64((1 << (ps - 1)) - 1)
+    mask = np.int64((1 << ps) - 1)
+
+    xf = np.asarray(x).astype(np.float64)
+    sign = xf < 0
+    is_nar = ~np.isfinite(xf)
+    is_zero = xf == 0
+
+    # Normalize exactly: |x| = (2m) * 2^(E-1) with 2m in [1, 2); the
+    # 53-bit significand 2m * 2^52 is an exact integer. Non-finite lanes
+    # are masked to 1.0 here and overwritten with NaR at the end.
+    m, E = np.frexp(np.abs(np.where(is_nar, 1.0, xf)))
+    scale = E.astype(np.int64) - 1
+    frac = np.rint(m * float(1 << 53)).astype(np.int64)  # [2^52, 2^53)
+
+    k = scale >> es
+    e = scale - (k << es)
+    stored = k + bias
+    base = ((stored << es) | e) << fs
+
+    # Keep the top fs fraction bits (below the hidden bit), RNE on the rest.
+    drop = 52 - fs
+    field = (frac >> drop) & ((np.int64(1) << fs) - 1)
+    mag = base | field
+    guard = (frac >> (drop - 1)) & 1
+    sticky = (frac & ((np.int64(1) << (drop - 1)) - 1)) != 0
+    mag = mag + ((guard == 1) & (sticky | ((mag & 1) == 1))).astype(np.int64)
+
+    # Saturation: regime overflow/underflow and round-up past the top.
+    mag = np.minimum(mag, maxpos)
+    mag = np.where(k >= bias, maxpos, mag)
+    mag = np.where(k < -bias, np.int64(1), mag)
+    mag = np.maximum(mag, np.int64(1))  # magnitude 0 belongs to zero
+
+    pattern = np.where(sign, (-mag) & mask, mag)
+    pattern = np.where(is_zero, np.int64(0), pattern)
+    pattern = np.where(is_nar, np.int64(1) << (ps - 1), pattern)
+    return pattern
+
+
+def fixed_decode_np(pattern, ps: int, rf: int, es: int):
+    """fixed-posit bit patterns (int64) -> exact f64 values (NaR -> NaN)."""
+    fs = ps - 1 - rf - es
+    bias = 1 << (rf - 1)
+    mask = np.int64((1 << ps) - 1)
+    p = np.asarray(pattern, dtype=np.int64) & mask
+    nar_pat = np.int64(1) << (ps - 1)
+    is_zero = p == 0
+    is_nar = p == nar_pat
+    sign = (p >> (ps - 1)) & 1
+    mag = np.where(sign == 1, (-p) & mask, p)
+
+    frac_field = mag & ((np.int64(1) << fs) - 1)
+    e = (mag >> fs) & ((np.int64(1) << es) - 1)
+    stored = mag >> (fs + es)
+    k = stored - bias
+    scale = (k << es) + e
+
+    val = np.ldexp(1.0 + frac_field.astype(np.float64) / float(1 << fs),
+                   scale.astype(np.int32))
+    val = np.where(sign == 1, -val, val)
+    val = np.where(is_zero, 0.0, val)
+    val = np.where(is_nar, np.float64(np.nan), val)
+    return val

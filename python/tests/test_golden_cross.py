@@ -9,11 +9,41 @@ import os
 import numpy as np
 import pytest
 
-from compile.posit_np import decode_np, quantize_np
+from compile.posit_np import (
+    decode_np,
+    fixed_decode_np,
+    fixed_quantize_np,
+    quantize_np,
+)
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden_posit.json")
 GOLDEN_PVU = os.path.join(os.path.dirname(__file__), "golden_pvu.json")
 FMTS = {"p8": (8, 1), "p16": (16, 2), "p32": (32, 3)}
+# Fixed-posit formats: name -> (ps, rf, es); "fixed" is the serving
+# ladder's fixed(16,2) rung.
+FIXED_FMTS = {"fixed": (16, 2, 2)}
+
+
+def _quantize(fmt, x):
+    """Dispatch on the golden row's format family."""
+    if fmt in FIXED_FMTS:
+        ps, rf, es = FIXED_FMTS[fmt]
+        return fixed_quantize_np(x, ps, rf, es)
+    ps, es = FMTS[fmt]
+    return quantize_np(x, ps, es)
+
+
+def _decode(fmt, pattern):
+    if fmt in FIXED_FMTS:
+        ps, rf, es = FIXED_FMTS[fmt]
+        return fixed_decode_np(pattern, ps, rf, es)
+    ps, es = FMTS[fmt]
+    return decode_np(pattern, ps, es)
+
+
+def _nar(fmt):
+    ps = FIXED_FMTS[fmt][0] if fmt in FIXED_FMTS else FMTS[fmt][0]
+    return 1 << (ps - 1)
 
 
 @pytest.fixture(scope="module")
@@ -34,9 +64,11 @@ def golden_pvu():
 
 def test_bits_match_rust(golden):
     assert len(golden) > 100
+    assert any(r["fmt"] == "fixed" for r in golden), (
+        "golden_posit.json predates the fixed-posit rows — rerun `repro golden`"
+    )
     for row in golden:
-        ps, es = FMTS[row["fmt"]]
-        got = int(quantize_np(np.asarray([row["input"]], np.float64), ps, es)[0])
+        got = int(_quantize(row["fmt"], np.asarray([row["input"]], np.float64))[0])
         assert got == row["bits"], (
             f"{row['fmt']}: input {row['input']} -> {got}, rust {row['bits']}"
         )
@@ -44,31 +76,32 @@ def test_bits_match_rust(golden):
 
 def test_values_match_rust(golden):
     for row in golden:
-        ps, es = FMTS[row["fmt"]]
-        v = float(decode_np(np.asarray([row["bits"]], np.int64), ps, es)[0])
+        v = float(_decode(row["fmt"], np.asarray([row["bits"]], np.int64))[0])
         if np.isnan(v):
-            assert np.isnan(row["value"]) or row["bits"] == 1 << (ps - 1)
+            assert np.isnan(row["value"]) or row["bits"] == _nar(row["fmt"])
         else:
             assert v == row["value"], f"{row} -> {v}"
 
 
 def _decode_rows(row):
-    ps, es = FMTS[row["fmt"]]
-    a = decode_np(np.asarray(row["a"], np.int64), ps, es)
-    b = decode_np(np.asarray(row["b"], np.int64), ps, es)
-    return ps, es, a, b
+    a = _decode(row["fmt"], np.asarray(row["a"], np.int64))
+    b = _decode(row["fmt"], np.asarray(row["b"], np.int64))
+    return a, b
 
 
 def test_pvu_elementwise_match_numpy_model(golden_pvu):
-    """vadd/vmul: the golden operands are p8/p16, whose exact sums and
-    products are representable in f64 — so decode, compute exactly, and
-    re-quantize must reproduce the Rust PVU bits exactly."""
+    """vadd/vmul: the golden operands are p8/p16/fixed(16,2), whose exact
+    sums and products are representable in f64 — so decode, compute
+    exactly, and re-quantize must reproduce the Rust PVU bits exactly."""
     rows = [r for r in golden_pvu if r["op"] in ("vadd", "vmul")]
     assert rows, "golden_pvu.json has no elementwise rows"
+    assert any(r["fmt"] == "fixed" for r in rows), (
+        "golden_pvu.json predates the fixed-posit rows — rerun `repro golden`"
+    )
     for row in rows:
-        ps, es, a, b = _decode_rows(row)
+        a, b = _decode_rows(row)
         exact = a + b if row["op"] == "vadd" else a * b
-        got = quantize_np(exact, ps, es)
+        got = _quantize(row["fmt"], exact)
         want = np.asarray(row["out"], np.int64)
         assert np.array_equal(got, want), (
             f"{row['fmt']} {row['op']}: {got.tolist()} != {want.tolist()}"
@@ -82,7 +115,20 @@ def test_pvu_dot_is_single_rounding(golden_pvu):
     rows = [r for r in golden_pvu if r["op"] == "dot"]
     assert rows, "golden_pvu.json has no dot rows"
     for row in rows:
-        ps, es, a, b = _decode_rows(row)
+        a, b = _decode_rows(row)
         exact = float(np.sum(a * b))
-        got = int(quantize_np(np.asarray([exact], np.float64), ps, es)[0])
+        got = int(_quantize(row["fmt"], np.asarray([exact], np.float64))[0])
         assert got == row["out"], f"{row['fmt']} dot: {got} != {row['out']}"
+
+
+def test_fixed_roundtrip_exhaustive():
+    """Self-contained (no golden file): every fixed(16,2) pattern's exact
+    value must re-encode to the same pattern — the bijection the Rust
+    side asserts in `fixed::tests::roundtrip_exhaustive_fixed16`."""
+    ps, rf, es = FIXED_FMTS["fixed"]
+    pats = np.arange(1 << ps, dtype=np.int64)
+    pats = pats[pats != (1 << (ps - 1))]  # NaR has no value
+    vals = fixed_decode_np(pats, ps, rf, es)
+    back = fixed_quantize_np(vals, ps, rf, es)
+    bad = pats[back != pats]
+    assert bad.size == 0, f"roundtrip failed for patterns {bad[:8].tolist()}"

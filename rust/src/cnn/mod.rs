@@ -10,4 +10,4 @@
 pub mod model;
 pub mod weights;
 
-pub use model::{forward, forward_pvu, prepare, reference_forward, PreparedCnn};
+pub use model::{forward, forward_pvu, forward_pvu_fmt, prepare, reference_forward, PreparedCnn};

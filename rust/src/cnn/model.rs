@@ -14,7 +14,7 @@
 
 use crate::data::synth::{CnnParams, CHAN, CLASSES, FEAT, HIDDEN, POOLED, SIDE};
 use crate::isa::FOp;
-use crate::posit::{decode, PositSpec, Quire};
+use crate::posit::{Format, PositSpec, Quire};
 use crate::pvu::{self, PvuCost};
 use crate::sim::{Backend, Machine};
 
@@ -203,35 +203,46 @@ pub fn forward_pvu(
     pc: &PreparedCnn,
     x: &[f32],
 ) -> (usize, Vec<f64>) {
+    forward_pvu_fmt(m, Format::Posit(spec), pc, x)
+}
+
+/// [`forward_pvu`] for any serving format — the fixed-posit rungs of the
+/// precision router run their CNN tail through this entry point.
+pub fn forward_pvu_fmt(
+    m: &mut Machine,
+    fmt: Format,
+    pc: &PreparedCnn,
+    x: &[f32],
+) -> (usize, Vec<f64>) {
     assert_eq!(x.len(), FEAT);
     // Hard assert: with a mismatched backend (wrong format, or Hybrid,
     // whose mem_bits is the storage width) the prepared weights would
     // silently decode as the wrong format.
     assert_eq!(
         m.be.mem_bits(),
-        spec.ps,
-        "forward_pvu needs a Posar backend of the same format"
+        fmt.ps(),
+        "forward_pvu needs a POSAR-family backend of the same width"
     );
-    let cost = PvuCost::new(spec);
+    let cost = PvuCost::for_format(fmt);
     let zero = m.be.load_f64(0.0);
 
     // Input encode: the batch f32→posit converter (packed loads).
-    let xw = pvu::vfrom_f32(spec, x);
+    let xw = pvu::vfrom_f32_fmt(fmt, x);
     m.mem_read(cost.mem_words(FEAT));
     m.cycles += cost.convert(FEAT);
     m.fops += FEAT as u64;
 
     // relu3: one vector op over the whole 64×8×8 feature map.
-    let relu = pvu::vrelu(spec, &xw);
+    let relu = pvu::vrelu_fmt(fmt, &xw);
     m.cycles += cost.vector_op(FOp::Max, FEAT);
     m.fops += FEAT as u64;
 
     // pool3: 3×3 stride-2 average with an exact quire window sum and a
     // single divide per output (one rounding for the sum, one for the
     // mean). The window operands are decoded once for the whole map.
-    let drelu: Vec<_> = relu.iter().map(|&w| decode(spec, w)).collect();
+    let drelu: Vec<_> = relu.iter().map(|&w| fmt.decode(w)).collect();
     let mut pooled = vec![0u32; POOLED];
-    let mut q = Quire::new(spec);
+    let mut q = Quire::for_format(fmt);
     for ch in 0..CHAN {
         for py in 0..4 {
             for px in 0..4 {
@@ -250,7 +261,7 @@ pub fn forward_pvu(
                 }
                 let c = m.lit(cnt as f64);
                 let sum = q.to_posit();
-                pooled[ch * 16 + py * 4 + px] = crate::posit::div(spec, sum, c);
+                pooled[ch * 16 + py * 4 + px] = fmt.div(sum, c);
                 m.cycles += cost.vector_op(FOp::Add, cnt as usize);
                 m.cycles += cost.vector_op(FOp::Div, 1);
                 m.fops += cnt as u64 + 1;
@@ -261,13 +272,13 @@ pub fn forward_pvu(
     }
 
     // ip1/ip2: quire-fused gemv — the PVU as the dense-layer engine.
-    let hidden = pvu::gemv(spec, &pc.w1, &pooled, Some(&pc.b1), HIDDEN, POOLED);
+    let hidden = pvu::gemv_fmt(fmt, &pc.w1, &pooled, Some(&pc.b1), HIDDEN, POOLED);
     m.mem_read(cost.mem_words(HIDDEN * POOLED) + HIDDEN as u64);
     m.cycles += cost.gemv(HIDDEN, POOLED);
     m.fops += (HIDDEN * POOLED) as u64;
     m.int_ops(cost.words(POOLED) * HIDDEN as u64);
 
-    let logits = pvu::gemv(spec, &pc.w2, &hidden, Some(&pc.b2), CLASSES, HIDDEN);
+    let logits = pvu::gemv_fmt(fmt, &pc.w2, &hidden, Some(&pc.b2), CLASSES, HIDDEN);
     m.mem_read(cost.mem_words(CLASSES * HIDDEN) + CLASSES as u64);
     m.cycles += cost.gemv(CLASSES, HIDDEN);
     m.fops += (CLASSES * HIDDEN) as u64;

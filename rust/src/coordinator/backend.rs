@@ -22,9 +22,9 @@
 use super::pool::Pool;
 use crate::cnn::{self, PreparedCnn};
 use crate::data::synth::{CnnParams, CLASSES, FEAT};
-use crate::posit::{PositSpec, P16, P32, P8};
+use crate::posit::{Format, FIXED16, P16, P32, P8};
 use crate::runtime::{Executable, Manifest, Runtime};
-use crate::sim::{Backend, Fpu, Hybrid, Machine, Posar};
+use crate::sim::{Backend, FixedPosar, Fpu, Hybrid, Machine, Posar};
 use anyhow::Result;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -95,9 +95,9 @@ enum Engine {
     /// The scalar simulator (`cnn::forward`): IEEE FP32, or the §V-C
     /// hybrid (P8 storage / P16 compute).
     Scalar(Box<dyn Backend>),
-    /// Posit format on the PVU (`cnn::forward_pvu` — quire-fused
-    /// relu/pool/dense, softmax tail on the scalar core).
-    Pvu(PositSpec, Posar),
+    /// Posit or fixed-posit format on the PVU (`cnn::forward_pvu_fmt` —
+    /// quire-fused relu/pool/dense, softmax tail on the scalar core).
+    Pvu(Format, Box<dyn Backend>),
 }
 
 /// Run one sample through the engine on a fresh [`Machine`], returning
@@ -111,9 +111,9 @@ fn run_sample(engine: &Engine, pc: &PreparedCnn, sample: &[f32]) -> (Vec<f64>, u
             let (_, p) = cnn::forward(&mut m, pc, sample);
             (p, m.cycles)
         }
-        Engine::Pvu(spec, be) => {
-            let mut m = Machine::new(be);
-            let (_, p) = cnn::forward_pvu(&mut m, *spec, pc, sample);
+        Engine::Pvu(fmt, be) => {
+            let mut m = Machine::new(be.as_ref());
+            let (_, p) = cnn::forward_pvu_fmt(&mut m, *fmt, pc, sample);
             (p, m.cycles)
         }
     }
@@ -140,15 +140,16 @@ impl PvuBackend {
     pub fn new(variant: &str, batch: usize, params: &CnnParams) -> Result<Self> {
         let engine = match variant {
             "fp32" => Engine::Scalar(Box::new(Fpu::new())),
-            "p8" => Engine::Pvu(P8, Posar::new(P8)),
-            "p16" => Engine::Pvu(P16, Posar::new(P16)),
-            "p32" => Engine::Pvu(P32, Posar::new(P32)),
+            "p8" => Engine::Pvu(Format::Posit(P8), Box::new(Posar::new(P8))),
+            "p16" => Engine::Pvu(Format::Posit(P16), Box::new(Posar::new(P16))),
+            "p32" => Engine::Pvu(Format::Posit(P32), Box::new(Posar::new(P32))),
+            "fixed" => Engine::Pvu(Format::Fixed(FIXED16), Box::new(FixedPosar::new(FIXED16))),
             "hybrid" => Engine::Scalar(Box::new(Hybrid::new(P16, P8))),
             other => anyhow::bail!("no native PVU engine for variant {other:?}"),
         };
         let pc = match &engine {
             Engine::Scalar(be) => cnn::prepare(be.as_ref(), params),
-            Engine::Pvu(_, be) => cnn::prepare(be, params),
+            Engine::Pvu(_, be) => cnn::prepare(be.as_ref(), params),
         };
         Ok(PvuBackend {
             name: variant.to_string(),
@@ -221,8 +222,9 @@ impl InferBackend for PvuBackend {
     }
 }
 
-/// The native variant list served by [`PvuBackend`].
-pub const NATIVE_VARIANTS: [&str; 5] = ["fp32", "p8", "p16", "p32", "hybrid"];
+/// The native variant list served by [`PvuBackend`]. `fixed` is the
+/// FixedPosit(16,2) rung of the precision router's ladder.
+pub const NATIVE_VARIANTS: [&str; 6] = ["fp32", "p8", "p16", "p32", "fixed", "hybrid"];
 
 #[cfg(test)]
 mod tests {

@@ -2,8 +2,8 @@
 //! regressions beyond a threshold — the in-repo perf-trajectory check.
 //!
 //! The repo commits a baseline (`BENCH_serve.json`); CI re-runs the
-//! smoke bench and compares report-only, so the numbers travel with the
-//! history instead of living only in ephemeral CI artifacts. The
+//! smoke bench and gates on the comparison, so the numbers travel with
+//! the history instead of living only in ephemeral CI artifacts. The
 //! comparison is schema-tolerant: unknown keys are ignored, and the old
 //! file may still use the pre-sketch `p99_le_us` bound field (it is
 //! read as the p99 fallback), so baselines never have to be rewritten
@@ -283,6 +283,13 @@ pub struct Delta {
 pub struct CompareReport {
     /// Regression threshold (percent, in the metric's bad direction).
     pub threshold_pct: f64,
+    /// Absolute Top-1 gate, in accuracy *points* (percentage points):
+    /// when set, `top1` regresses on `old - new > top1_pt/100`
+    /// regardless of the relative threshold. A 0.875 → 0.869 drop is a
+    /// 0.69% relative change — invisible to any sane relative
+    /// threshold — but 0.6 accuracy points, which an accuracy-guardrail
+    /// CI must catch.
+    pub top1_pt: Option<f64>,
     /// Per-variant metric deltas, in baseline variant order.
     pub deltas: Vec<Delta>,
     /// Variants in the baseline but not the candidate (regressions).
@@ -304,6 +311,11 @@ impl CompareReport {
             "bench-compare (threshold ±{:.1}% in the bad direction)\n",
             self.threshold_pct
         );
+        if let Some(t) = self.top1_pt {
+            out.push_str(&format!(
+                "top1 gate: absolute drop > {t:.2} accuracy points\n"
+            ));
+        }
         out.push_str("variant    metric            old           new           change\n");
         for d in &self.deltas {
             out.push_str(&format!(
@@ -365,8 +377,21 @@ fn variants_of(doc: &Json) -> Vec<(String, &Json)> {
 
 /// Compare two serve-bench JSON documents. `threshold_pct` is the
 /// allowed movement in each metric's bad direction before it counts as
-/// a regression.
+/// a regression. Relative thresholds only — the gated front door for
+/// CI is [`compare_json_gated`].
 pub fn compare_json(old_text: &str, new_text: &str, threshold_pct: f64) -> Result<CompareReport> {
+    compare_json_gated(old_text, new_text, threshold_pct, None)
+}
+
+/// [`compare_json`] plus an absolute Top-1 gate: with `top1_pt =
+/// Some(t)`, any variant whose Top-1 accuracy dropped more than `t`
+/// percentage points regresses, however small the relative change.
+pub fn compare_json_gated(
+    old_text: &str,
+    new_text: &str,
+    threshold_pct: f64,
+    top1_pt: Option<f64>,
+) -> Result<CompareReport> {
     let old = parse_json(old_text).context("parsing old snapshot")?;
     let new = parse_json(new_text).context("parsing new snapshot")?;
     let old_vars = variants_of(&old);
@@ -394,13 +419,21 @@ pub fn compare_json(old_text: &str, new_text: &str, threshold_pct: f64) -> Resul
             }
             let change_pct = (n - o) / o * 100.0;
             let bad = if higher_better { -change_pct } else { change_pct };
+            let mut regression = bad > threshold_pct;
+            if metric == "top1" {
+                if let Some(t) = top1_pt {
+                    // top1 rides the JSON as a fraction; the gate is in
+                    // percentage points.
+                    regression = (o - n) * 100.0 > t;
+                }
+            }
             deltas.push(Delta {
                 variant: name.clone(),
                 metric,
                 old: o,
                 new: n,
                 change_pct,
-                regression: bad > threshold_pct,
+                regression,
             });
         }
     }
@@ -411,6 +444,7 @@ pub fn compare_json(old_text: &str, new_text: &str, threshold_pct: f64) -> Resul
         .collect();
     Ok(CompareReport {
         threshold_pct,
+        top1_pt,
         deltas,
         missing,
         added,
@@ -419,11 +453,21 @@ pub fn compare_json(old_text: &str, new_text: &str, threshold_pct: f64) -> Resul
 
 /// File-path front end for [`compare_json`].
 pub fn compare_files(old: &Path, new: &Path, threshold_pct: f64) -> Result<CompareReport> {
+    compare_files_gated(old, new, threshold_pct, None)
+}
+
+/// File-path front end for [`compare_json_gated`].
+pub fn compare_files_gated(
+    old: &Path,
+    new: &Path,
+    threshold_pct: f64,
+    top1_pt: Option<f64>,
+) -> Result<CompareReport> {
     let old_text = std::fs::read_to_string(old)
         .with_context(|| format!("reading {}", old.display()))?;
     let new_text = std::fs::read_to_string(new)
         .with_context(|| format!("reading {}", new.display()))?;
-    compare_json(&old_text, &new_text, threshold_pct)
+    compare_json_gated(&old_text, &new_text, threshold_pct, top1_pt)
 }
 
 #[cfg(test)]
@@ -439,6 +483,46 @@ mod tests {
                    "throughput_rps": 120.0, "top1": 0.71}}
                ]}}"#
         )
+    }
+
+    #[test]
+    fn top1_gate_is_absolute_points_not_relative() {
+        // 0.875 -> 0.869 is 0.6 accuracy points but only ~0.69%
+        // relative: invisible to a 15% relative threshold, caught by
+        // the 0.5-point gate.
+        let old = snapshot(800, 100.0, 0.875);
+        let new = snapshot(800, 100.0, 0.869);
+        let ungated = compare_json(&old, &new, 15.0).unwrap();
+        assert!(
+            !ungated.has_regressions(),
+            "relative threshold alone must miss a small-point drop"
+        );
+        let gated = compare_json_gated(&old, &new, 15.0, Some(0.5)).unwrap();
+        assert!(gated.has_regressions());
+        let d = gated
+            .deltas
+            .iter()
+            .find(|d| d.metric == "top1" && d.variant == "fp32")
+            .expect("top1 delta present");
+        assert!(d.regression);
+        assert!(
+            gated
+                .render()
+                .contains("top1 gate: absolute drop > 0.50 accuracy points"),
+            "{}",
+            gated.render()
+        );
+        // A 0.4-point drop passes the 0.5-point gate.
+        let ok = compare_json_gated(&old, &snapshot(800, 100.0, 0.871), 15.0, Some(0.5)).unwrap();
+        assert!(!ok.deltas.iter().any(|d| d.metric == "top1" && d.regression));
+        // The gate replaces only the top1 rule: latency still regresses
+        // on the relative threshold.
+        let slow = compare_json_gated(&old, &snapshot(2000, 100.0, 0.875), 15.0, Some(0.5)).unwrap();
+        assert!(slow.has_regressions());
+        assert!(slow
+            .deltas
+            .iter()
+            .any(|d| d.metric == "p99_us" && d.regression));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! the same validation pass.
 
 use super::autoscale::{AutoscaleConfig, ScalePolicyChoice};
+use super::router::RouterConfig;
 use super::{metrics, BackendChoice, Routing, ServeConfig, TraceConfig};
 use std::fmt;
 use std::path::PathBuf;
@@ -66,6 +67,20 @@ pub enum ConfigError {
     ReplayWithOpen,
     /// `--rate` must be a positive, finite requests/second.
     RateNotPositive(f64),
+    /// `--route` ladder spec is malformed: needs `auto` or at least two
+    /// distinct comma-separated variant names.
+    BadRouteLadder(String),
+    /// `--route` drives its own sequential loop — it conflicts with
+    /// `--open`/`--rate`/`--duration-ms`/`--replay`.
+    RouteWithOpen,
+    /// `--shadow-sample` / `--guardrail-top1` without `--route` (there
+    /// is no router to configure).
+    ShadowWithoutRoute,
+    /// `--shadow-sample 0` (shadow scores are the router's only
+    /// signal; use no `--route` to serve a fixed mix instead).
+    ShadowSampleZero,
+    /// `--guardrail-top1` must be a percentage in (0, 100].
+    GuardrailRange(f64),
 }
 
 impl fmt::Display for ConfigError {
@@ -118,6 +133,23 @@ impl fmt::Display for ConfigError {
             ConfigError::RateNotPositive(r) => {
                 write!(f, "--rate must be a positive requests/second (got {r})")
             }
+            ConfigError::BadRouteLadder(s) => write!(
+                f,
+                "bad --route {s:?} (expected `auto` or at least two distinct comma-separated variants, cheapest first)"
+            ),
+            ConfigError::RouteWithOpen => write!(
+                f,
+                "--route drives its own request loop; drop --open/--rate/--duration-ms/--replay"
+            ),
+            ConfigError::ShadowWithoutRoute => {
+                write!(f, "--shadow-sample/--guardrail-top1 require --route (they configure the router)")
+            }
+            ConfigError::ShadowSampleZero => {
+                write!(f, "--shadow-sample must be at least 1 (shadow scores are the router's only signal)")
+            }
+            ConfigError::GuardrailRange(g) => {
+                write!(f, "--guardrail-top1 must be a percentage in (0, 100] (got {g})")
+            }
         }
     }
 }
@@ -154,6 +186,9 @@ pub struct ServeConfigBuilder {
     rate: Option<f64>,
     duration_ms: Option<u64>,
     replay: Option<String>,
+    route: Option<String>,
+    shadow_sample: Option<u64>,
+    guardrail_top1: Option<f64>,
 }
 
 impl ServeConfigBuilder {
@@ -277,6 +312,44 @@ impl ServeConfigBuilder {
         self
     }
 
+    /// `--route` (bench-only): `auto` for the default ladder or an
+    /// explicit comma-separated ladder, cheapest first.
+    pub fn route(mut self, v: Option<String>) -> Self {
+        self.route = v;
+        self
+    }
+
+    /// `--shadow-sample` (bench-only): shadow one request in N.
+    pub fn shadow_sample(mut self, v: Option<u64>) -> Self {
+        self.shadow_sample = v;
+        self
+    }
+
+    /// `--guardrail-top1` (bench-only): minimum rolling Top-1 agreement
+    /// percentage before the router promotes.
+    pub fn guardrail_top1(mut self, v: Option<f64>) -> Self {
+        self.guardrail_top1 = v;
+        self
+    }
+
+    /// The [`RouterConfig`] these flags select, or `None` without
+    /// `--route`. Borrowing — call before [`Self::build`] consumes the
+    /// builder; only meaningful after validation passed.
+    pub fn router(&self) -> Option<RouterConfig> {
+        let spec = self.route.as_deref()?;
+        let mut cfg = RouterConfig::default();
+        if spec != "auto" {
+            cfg.ladder = spec.split(',').map(|s| s.trim().to_string()).collect();
+        }
+        if let Some(n) = self.shadow_sample {
+            cfg.shadow_sample = n as u32;
+        }
+        if let Some(g) = self.guardrail_top1 {
+            cfg.guardrail_top1 = g;
+        }
+        Some(cfg)
+    }
+
     /// Check every cross-flag rule; the first violated rule (in the
     /// order documented on [`ConfigError`]) is returned.
     pub fn validate(&self) -> Result<(), ConfigError> {
@@ -321,6 +394,34 @@ impl ServeConfigBuilder {
             && self.trace_slow_us.unwrap_or(0) == 0
         {
             return Err(ConfigError::TraceFileWithoutRule);
+        }
+        if let Some(spec) = self.route.as_deref() {
+            if spec != "auto" {
+                let ladder: Vec<&str> = spec.split(',').map(str::trim).collect();
+                let distinct = ladder
+                    .iter()
+                    .all(|v| ladder.iter().filter(|w| w == &v).count() == 1);
+                if ladder.len() < 2 || !distinct || ladder.iter().any(|v| v.is_empty()) {
+                    return Err(ConfigError::BadRouteLadder(spec.to_string()));
+                }
+            }
+            if self.open
+                || self.rate.is_some()
+                || self.duration_ms.is_some()
+                || self.replay.is_some()
+            {
+                return Err(ConfigError::RouteWithOpen);
+            }
+        } else if self.shadow_sample.is_some() || self.guardrail_top1.is_some() {
+            return Err(ConfigError::ShadowWithoutRoute);
+        }
+        if self.shadow_sample == Some(0) {
+            return Err(ConfigError::ShadowSampleZero);
+        }
+        if let Some(g) = self.guardrail_top1 {
+            if !(g > 0.0 && g <= 100.0) || g.is_nan() {
+                return Err(ConfigError::GuardrailRange(g));
+            }
         }
         if self.replay.is_some() && (self.open || self.rate.is_some() || self.duration_ms.is_some())
         {
@@ -501,6 +602,77 @@ mod tests {
         assert_eq!(
             err(ServeConfig::builder().open(true).rate(Some(-3.0))),
             ConfigError::RateNotPositive(-3.0)
+        );
+    }
+
+    #[test]
+    fn route_flags_validate_and_build_a_router_config() {
+        // `auto` takes the default ladder; explicit knobs override.
+        let b = ServeConfig::builder()
+            .route(Some("auto".into()))
+            .shadow_sample(Some(4))
+            .guardrail_top1(Some(99.5));
+        b.validate().expect("auto route is valid");
+        let r = b.router().expect("route selected");
+        assert_eq!(r.ladder, vec!["p8", "fixed", "p16", "fp32"]);
+        assert_eq!(r.shadow_sample, 4);
+        assert_eq!(r.guardrail_top1, 99.5);
+        // Explicit ladders trim whitespace and keep order.
+        let b = ServeConfig::builder().route(Some("p8, fixed ,fp32".into()));
+        b.validate().expect("explicit ladder is valid");
+        assert_eq!(b.router().unwrap().ladder, vec!["p8", "fixed", "fp32"]);
+        // No --route: no router, and the default knobs stay available.
+        assert!(ServeConfig::builder().router().is_none());
+
+        let err = |b: ServeConfigBuilder| b.build().expect_err("must be rejected");
+        assert_eq!(
+            err(ServeConfig::builder().route(Some("p8".into()))),
+            ConfigError::BadRouteLadder("p8".into()),
+            "a one-rung ladder routes nothing"
+        );
+        assert_eq!(
+            err(ServeConfig::builder().route(Some("p8,p8".into()))),
+            ConfigError::BadRouteLadder("p8,p8".into()),
+            "duplicate rungs"
+        );
+        assert_eq!(
+            err(ServeConfig::builder().route(Some("p8,,fp32".into()))),
+            ConfigError::BadRouteLadder("p8,,fp32".into()),
+            "empty rung"
+        );
+        assert_eq!(
+            err(ServeConfig::builder().route(Some("auto".into())).open(true)),
+            ConfigError::RouteWithOpen
+        );
+        assert_eq!(
+            err(ServeConfig::builder()
+                .route(Some("auto".into()))
+                .replay(Some("bursty:100".into()))),
+            ConfigError::RouteWithOpen
+        );
+        assert_eq!(
+            err(ServeConfig::builder().shadow_sample(Some(8))),
+            ConfigError::ShadowWithoutRoute
+        );
+        assert_eq!(
+            err(ServeConfig::builder().guardrail_top1(Some(99.0))),
+            ConfigError::ShadowWithoutRoute
+        );
+        assert_eq!(
+            err(ServeConfig::builder().route(Some("auto".into())).shadow_sample(Some(0))),
+            ConfigError::ShadowSampleZero
+        );
+        assert_eq!(
+            err(ServeConfig::builder()
+                .route(Some("auto".into()))
+                .guardrail_top1(Some(0.0))),
+            ConfigError::GuardrailRange(0.0)
+        );
+        assert_eq!(
+            err(ServeConfig::builder()
+                .route(Some("auto".into()))
+                .guardrail_top1(Some(150.0))),
+            ConfigError::GuardrailRange(150.0)
         );
     }
 

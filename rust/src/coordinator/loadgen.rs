@@ -35,7 +35,8 @@
 //!   shapes a fixed rate cannot express. Replay arrivals ride the same
 //!   timer wheel as the open loop.
 
-use super::metrics::{ScaleEvent, Stage, VariantStats};
+use super::metrics::{EscalationEvent, ScaleEvent, Stage, VariantStats};
+use super::router::{softmax_divergence, PrecisionRouter, RouterConfig, RouterSnapshot};
 use super::sketch;
 use super::wheel::TimerWheel;
 use super::{compare, Coordinator, Reply, Request, Snapshot};
@@ -63,6 +64,10 @@ pub struct BenchConfig {
     /// Replay spec (`--replay`): a JSONL trace path, or a synthetic
     /// `bursty:`/`diurnal:` spec. Takes precedence over `open_loop`.
     pub replay: Option<String>,
+    /// Mixed-precision routing (`--route auto`): drive the accuracy
+    /// ladder through a [`PrecisionRouter`] instead of a fixed variant
+    /// mix. Takes precedence over `replay` and `open_loop`.
+    pub route: Option<RouterConfig>,
 }
 
 impl Default for BenchConfig {
@@ -75,16 +80,24 @@ impl Default for BenchConfig {
             rate: 200.0,
             duration: Duration::from_secs(1),
             replay: None,
+            route: None,
         }
     }
 }
 
 impl BenchConfig {
-    /// Build the [`LoadSource`] this config selects (replay wins over
-    /// `open_loop`; otherwise closed loop). Replay specs are parsed
-    /// here, so a malformed trace fails before any traffic is driven.
+    /// Build the [`LoadSource`] this config selects (route wins over
+    /// replay, replay over `open_loop`; otherwise closed loop). Replay
+    /// specs are parsed here, so a malformed trace fails before any
+    /// traffic is driven.
     pub fn source(&self) -> Result<Box<dyn LoadSource>> {
-        if let Some(spec) = &self.replay {
+        if let Some(rcfg) = &self.route {
+            Ok(Box::new(Routed {
+                requests: self.requests,
+                router: rcfg.clone(),
+                snapshot: None,
+            }))
+        } else if let Some(spec) = &self.replay {
             Ok(Box::new(Replay::from_spec(spec)?))
         } else if self.open_loop {
             Ok(Box::new(OpenLoop {
@@ -143,6 +156,11 @@ pub trait LoadSource {
         set: &SynthSet,
         variants: &[String],
     ) -> Result<(Vec<VariantTally>, ArrivalStats)>;
+    /// Router state after the drive, for sources that route
+    /// ([`Routed`]); `None` for fixed-mix sources.
+    fn router_snapshot(&self) -> Option<RouterSnapshot> {
+        None
+    }
 }
 
 /// Per-variant results: client-side counts merged with the
@@ -237,6 +255,12 @@ pub struct BenchSummary {
     pub shard_rows: Vec<ShardBench>,
     /// Autoscaler transitions that happened during the run, in order.
     pub scale_events: Vec<ScaleEvent>,
+    /// Precision-router transitions recorded during the run, in order
+    /// (empty unless something escalated — fixed-mix runs never do).
+    pub escalations: Vec<EscalationEvent>,
+    /// Router state at the end of a routed run; `None` in fixed-mix
+    /// modes (the only summary key that is mode-dependent).
+    pub router: Option<RouterSnapshot>,
 }
 
 /// Escape a string for embedding in a JSON string literal. Variant
@@ -308,6 +332,41 @@ impl BenchSummary {
             ));
         }
         out.push_str("  ],\n");
+        out.push_str("  \"escalations\": [\n");
+        for (i, e) in self.escalations.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"from\": \"{}\", \"to\": \"{}\", \"agreement_pct\": {:.3}, \
+                 \"reason\": \"{}\"}}{}\n",
+                json_escape(&e.from),
+                json_escape(&e.to),
+                e.agreement_pct,
+                json_escape(&e.reason),
+                if i + 1 == self.escalations.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ],\n");
+        if let Some(rt) = &self.router {
+            let ladder: Vec<String> = rt
+                .ladder
+                .iter()
+                .map(|v| format!("\"{}\"", json_escape(v)))
+                .collect();
+            out.push_str(&format!(
+                "  \"router\": {{\"serving\": \"{}\", \"ladder\": [{}], \
+                 \"shadow_sample\": {}, \"guardrail_top1\": {:.3}, \"shadows\": {}, \
+                 \"agreement_pct\": {:.3}, \"max_softmax_div\": {:.6}, \
+                 \"escalations\": {}, \"probing\": {}}},\n",
+                json_escape(&rt.serving),
+                ladder.join(", "),
+                rt.shadow_sample,
+                rt.guardrail_top1,
+                rt.shadows,
+                rt.agreement_pct,
+                rt.max_softmax_div,
+                rt.escalations,
+                rt.probing,
+            ));
+        }
         out.push_str("  \"shards\": [\n");
         for (i, sh) in self.shard_rows.iter().enumerate() {
             out.push_str(&format!(
@@ -430,6 +489,33 @@ impl BenchSummary {
             out.push_str(&evs.join(", "));
             out.push('\n');
         }
+        if let Some(rt) = &self.router {
+            out.push_str(&format!(
+                "router: serving {} (ladder {}), {} shadows, agreement {:.1}%, \
+                 max softmax div {:.3}, {} escalations\n",
+                rt.serving,
+                rt.ladder.join(" -> "),
+                rt.shadows,
+                rt.agreement_pct,
+                rt.max_softmax_div,
+                rt.escalations,
+            ));
+        }
+        if !self.escalations.is_empty() {
+            out.push_str("escalation events: ");
+            let evs: Vec<String> = self
+                .escalations
+                .iter()
+                .map(|e| {
+                    format!(
+                        "{} -> {} (top1 agreement {:.1}%, {})",
+                        e.from, e.to, e.agreement_pct, e.reason,
+                    )
+                })
+                .collect();
+            out.push_str(&evs.join(", "));
+            out.push('\n');
+        }
         out
     }
 }
@@ -534,6 +620,111 @@ impl LoadSource for ClosedLoop {
             ..ArrivalStats::default()
         };
         Ok((tallies, stats))
+    }
+}
+
+/// Mixed-precision routed loop: one request at a time through a
+/// [`PrecisionRouter`] — serve on the router's current rung, re-score
+/// every `shadow_sample`-th request on the rung it names, feed the
+/// Top-1/softmax comparison back, and record every rung transition as
+/// an escalation event in the coordinator's metrics registry. Requests
+/// are sequential by design: the router is a single state machine and
+/// the benchmark's point is the escalation trajectory, which must be
+/// reproducible.
+pub struct Routed {
+    /// Total requests to route.
+    pub requests: usize,
+    /// Router policy (ladder, shadow fraction, guardrail).
+    pub router: RouterConfig,
+    /// Router state after the drive (for the summary's `router` object).
+    snapshot: Option<RouterSnapshot>,
+}
+
+impl Routed {
+    /// New routed source over `requests` requests.
+    pub fn new(requests: usize, router: RouterConfig) -> Self {
+        Routed {
+            requests,
+            router,
+            snapshot: None,
+        }
+    }
+}
+
+impl LoadSource for Routed {
+    fn mode(&self) -> &'static str {
+        "routed"
+    }
+
+    fn drive(
+        &mut self,
+        coord: &Coordinator,
+        set: &SynthSet,
+        variants: &[String],
+    ) -> Result<(Vec<VariantTally>, ArrivalStats)> {
+        // Every ladder rung must be in the driven mix — a ladder naming
+        // an unserved variant must fail before traffic, not at the
+        // first escalation into it.
+        let ladder = self.router.ladder.clone();
+        let idx: Vec<usize> = ladder
+            .iter()
+            .map(|name| {
+                variants.iter().position(|v| v == name).ok_or_else(|| {
+                    anyhow!("router ladder rung {name:?} is not in the driven mix {variants:?}")
+                })
+            })
+            .collect::<Result<_>>()?;
+        let mut router = PrecisionRouter::new(self.router.clone());
+        let mut tallies = vec![VariantTally::default(); variants.len()];
+        let mut stats = ArrivalStats::default();
+        for i in 0..self.requests {
+            let k = i % set.len();
+            let route = router.route();
+            stats.scheduled += 1;
+            let serve = &mut tallies[idx[route.serve]];
+            let reply = match coord.infer(&ladder[route.serve], set.sample(k).to_vec()) {
+                Ok(r) => {
+                    serve.completed += 1;
+                    if r.class == set.labels[k] as usize {
+                        serve.correct += 1;
+                    }
+                    Some(r)
+                }
+                Err(_) => {
+                    serve.errors += 1;
+                    None
+                }
+            };
+            let Some(sh) = route.shadow else { continue };
+            stats.scheduled += 1;
+            let shadow = match coord.infer(&ladder[sh], set.sample(k).to_vec()) {
+                Ok(r) => {
+                    tallies[idx[sh]].completed += 1;
+                    if r.class == set.labels[k] as usize {
+                        tallies[idx[sh]].correct += 1;
+                    }
+                    r
+                }
+                Err(_) => {
+                    tallies[idx[sh]].errors += 1;
+                    continue;
+                }
+            };
+            // A failed serving inference leaves nothing to compare; the
+            // shadow score is dropped rather than fabricated.
+            let Some(reply) = reply else { continue };
+            let top1 = reply.class == shadow.class;
+            let div = softmax_divergence(&reply.probs, &shadow.probs);
+            if let Some(e) = router.record_shadow(top1, div) {
+                coord.record_escalation(&e.from, &e.to, e.agreement_pct, &e.reason);
+            }
+        }
+        self.snapshot = Some(router.snapshot());
+        Ok((tallies, stats))
+    }
+
+    fn router_snapshot(&self) -> Option<RouterSnapshot> {
+        self.snapshot.clone()
     }
 }
 
@@ -1110,6 +1301,10 @@ pub fn run_bench_with(
         .collect();
     let new_events = (snap.events_total - baseline.events_total) as usize;
     let scale_events = snap.events[snap.events.len().saturating_sub(new_events)..].to_vec();
+    // Escalation events get the identical delta treatment: the lifetime
+    // counter scopes the retained ring to this run's transitions.
+    let new_esc = (snap.escalations_total - baseline.escalations_total) as usize;
+    let escalations = snap.escalations[snap.escalations.len().saturating_sub(new_esc)..].to_vec();
     Ok(BenchSummary {
         mode: source.mode(),
         wall,
@@ -1119,6 +1314,8 @@ pub fn run_bench_with(
         rows,
         shard_rows,
         scale_events,
+        escalations,
+        router: source.router_snapshot(),
     })
 }
 
@@ -1127,7 +1324,14 @@ pub fn run_bench_with(
 /// front door over [`run_bench_with`].
 pub fn run_bench(coord: &Coordinator, set: &SynthSet, cfg: &BenchConfig) -> Result<BenchSummary> {
     let mut source = cfg.source()?;
-    run_bench_with(coord, set, &cfg.variants, source.as_mut())
+    // A routed run with no explicit mix drives exactly the ladder:
+    // rows for variants the router can never touch would be all-zero
+    // noise in the summary.
+    let variants = match (&cfg.route, cfg.variants.is_empty()) {
+        (Some(rcfg), true) => rcfg.ladder.clone(),
+        _ => cfg.variants.clone(),
+    };
+    run_bench_with(coord, set, &variants, source.as_mut())
 }
 
 #[cfg(test)]
@@ -1201,6 +1405,8 @@ mod tests {
                 p99_us: 9000,
                 reason: "slo: p99 9000us > target 5000us".into(),
             }],
+            escalations: Vec::new(),
+            router: None,
         };
         let json = summary.to_json();
         // Structure: balanced braces/brackets, one object per variant,
@@ -1236,6 +1442,7 @@ mod tests {
             "\"rejected\"",
             "\"mean_batch\"",
             "\"scale_events\"",
+            "\"escalations\"",
             "\"reason\"",
             "\"scale_ups\"",
             "\"scale_downs\"",
@@ -1313,6 +1520,100 @@ mod tests {
             ..BenchConfig::default()
         };
         assert_eq!(replay.source().expect("replay").mode(), "replay");
+        let routed = BenchConfig {
+            route: Some(RouterConfig::default()),
+            replay: Some("bursty:100:200".into()),
+            open_loop: true,
+            ..BenchConfig::default()
+        };
+        // Routing outranks both of the other special modes.
+        assert_eq!(routed.source().expect("routed").mode(), "routed");
+    }
+
+    #[test]
+    fn routed_summary_emits_router_object_and_escalation_events() {
+        let summary = BenchSummary {
+            mode: "routed",
+            wall: Duration::from_millis(900),
+            intra_batch: 1,
+            simd_backend: "scalar",
+            arrivals: ArrivalStats {
+                scheduled: 144,
+                ..ArrivalStats::default()
+            },
+            rows: vec![bench_row("p8", 128, 0, 1), bench_row("fixed", 16, 0, 1)],
+            shard_rows: Vec::new(),
+            scale_events: Vec::new(),
+            escalations: vec![EscalationEvent {
+                from: "p8".into(),
+                to: "fixed".into(),
+                agreement_pct: 93.75,
+                reason:
+                    "guardrail: top1 agreement 93.8% < 99.0% over 16 shadows (posit(8,1) vs fixed(16,2))"
+                        .into(),
+            }],
+            router: Some(RouterSnapshot {
+                serving: "fixed".into(),
+                ladder: vec!["p8".into(), "fixed".into(), "p16".into(), "fp32".into()],
+                shadow_sample: 8,
+                guardrail_top1: 99.0,
+                shadows: 18,
+                agreement_pct: 100.0,
+                max_softmax_div: 0.012,
+                escalations: 1,
+                probing: false,
+            }),
+        };
+        let json = summary.to_json();
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        let doc = super::super::compare::parse_json(&json).expect("valid JSON");
+        // The router object is self-describing: serving rung, ladder,
+        // guardrail, live agreement.
+        assert_eq!(
+            doc.get("router")
+                .and_then(|r| r.get("serving"))
+                .and_then(|v| v.str_val()),
+            Some("fixed")
+        );
+        assert_eq!(
+            doc.get("router")
+                .and_then(|r| r.get("guardrail_top1"))
+                .and_then(|v| v.num()),
+            Some(99.0)
+        );
+        assert!(json.contains("\"ladder\": [\"p8\", \"fixed\", \"p16\", \"fp32\"]"));
+        assert!(json.contains("\"shadow_sample\": 8"));
+        assert!(json.contains("\"probing\": false"));
+        // Escalation events mirror the scale-event record shape.
+        assert!(json.contains("\"from\": \"p8\""), "{json}");
+        assert!(json.contains("\"to\": \"fixed\""), "{json}");
+        assert!(json.contains("\"agreement_pct\": 93.750"), "{json}");
+        assert!(
+            json.contains("(posit(8,1) vs fixed(16,2))"),
+            "reason strings survive JSON escaping: {json}"
+        );
+        let table = summary.render();
+        assert!(
+            table.contains("router: serving fixed (ladder p8 -> fixed -> p16 -> fp32)"),
+            "{table}"
+        );
+        assert!(table.contains("18 shadows"), "{table}");
+        assert!(
+            table.contains("escalation events: p8 -> fixed (top1 agreement 93.8%"),
+            "{table}"
+        );
+        // Fixed-mix summaries keep the escalations array (schema
+        // stability) but omit the router object entirely.
+        let fixed = BenchSummary {
+            mode: "closed",
+            router: None,
+            escalations: Vec::new(),
+            ..summary
+        };
+        let json = fixed.to_json();
+        assert!(json.contains("\"escalations\": [\n  ]"), "{json}");
+        assert!(!json.contains("\"router\""), "{json}");
+        assert!(!fixed.render().contains("router:"));
     }
 
     // --- replay parser ---

@@ -229,6 +229,26 @@ pub struct ScaleEvent {
     pub reason: String,
 }
 
+/// One precision-router transition: the serving format moved along the
+/// accuracy ladder because shadow-scored agreement crossed the
+/// guardrail (demotion to a cheaper rung is an *escalation of risk*
+/// downward; promotion to a costlier rung restores the guardrail).
+/// The router analogue of [`ScaleEvent`]: same capped ring, same
+/// reason-string discipline, same JSON/Prometheus treatment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EscalationEvent {
+    /// Serving variant before the transition ("p8", "fixed", …).
+    pub from: String,
+    /// Serving variant after the transition.
+    pub to: String,
+    /// Shadow-window Top-1 agreement (percent, vs the next rung up) at
+    /// the moment the router decided.
+    pub agreement_pct: f64,
+    /// The router's stated reason (e.g. `"guardrail: top1 agreement
+    /// 93.8% < 99.0% over 16 shadows (p8 vs fixed(16,2))"`).
+    pub reason: String,
+}
+
 /// Mutable metrics registry.
 #[derive(Clone, Debug)]
 pub struct Metrics {
@@ -241,7 +261,12 @@ pub struct Metrics {
     /// never truncated, so interval consumers can tell how many of the
     /// retained events are theirs even after eviction.
     events_total: u64,
-    /// Retained-event cap for the `events` ring.
+    /// Ring of recent precision-router escalation events (same cap
+    /// discipline as `events`).
+    escalations: VecDeque<EscalationEvent>,
+    /// Lifetime escalation count (never truncated).
+    escalations_total: u64,
+    /// Retained-event cap for the `events` and `escalations` rings.
     event_cap: usize,
 }
 
@@ -265,6 +290,8 @@ impl Metrics {
             per_shard: HashMap::new(),
             events: VecDeque::new(),
             events_total: 0,
+            escalations: VecDeque::new(),
+            escalations_total: 0,
             event_cap: cap.max(1),
         }
     }
@@ -357,6 +384,23 @@ impl Metrics {
         self.events_total += 1;
     }
 
+    /// Record one precision-router transition `from -> to` with the
+    /// shadow-agreement figure and the router's stated reason. The ring
+    /// keeps the most recent `event_cap` transitions; the lifetime
+    /// counter stays exact.
+    pub fn record_escalation(&mut self, from: &str, to: &str, agreement_pct: f64, reason: &str) {
+        if self.escalations.len() >= self.event_cap {
+            self.escalations.pop_front();
+        }
+        self.escalations.push_back(EscalationEvent {
+            from: from.to_string(),
+            to: to.to_string(),
+            agreement_pct,
+            reason: reason.to_string(),
+        });
+        self.escalations_total += 1;
+    }
+
     /// Immutable snapshot for reporting.
     pub fn snapshot(&self) -> Snapshot {
         let mut rows: Vec<(String, VariantStats)> = self
@@ -376,6 +420,8 @@ impl Metrics {
             shard_rows,
             events: self.events.iter().cloned().collect(),
             events_total: self.events_total,
+            escalations: self.escalations.iter().cloned().collect(),
+            escalations_total: self.escalations_total,
         }
     }
 }
@@ -396,10 +442,21 @@ pub struct Snapshot {
     /// baseline.events_total` is how many of `events` belong to an
     /// interval, robust to eviction.
     pub events_total: u64,
+    /// Precision-router escalation events, in application order (same
+    /// retention discipline as `events`).
+    pub escalations: Vec<EscalationEvent>,
+    /// Lifetime escalation count (never truncated).
+    pub escalations_total: u64,
 }
 
 /// Escape a label value for the Prometheus text exposition (`\` → `\\`,
-/// `"` → `\"`, newline → `\n`).
+/// `"` → `\"`, newline → `\n`). Format-family names like `fixed(16,2)`
+/// pass through verbatim — parentheses and commas are legal inside a
+/// quoted label *value*, and every interpolation site in this module
+/// routes variant/shard/format text through here (never into a metric
+/// or label *name*, whose charset is `[a-zA-Z_][a-zA-Z0-9_]*`).
+/// Remaining ASCII control characters are replaced with `_` so a
+/// hostile name cannot truncate a line or smuggle a second sample.
 fn prom_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -407,6 +464,7 @@ fn prom_escape(s: &str) -> String {
             '\\' => out.push_str("\\\\"),
             '"' => out.push_str("\\\""),
             '\n' => out.push_str("\\n"),
+            c if c.is_ascii_control() => out.push('_'),
             c => out.push(c),
         }
     }
@@ -471,6 +529,19 @@ impl Snapshot {
                     e.to,
                     e.p99_us as f64 / 1000.0,
                     e.reason
+                ));
+            }
+        }
+        if !self.escalations.is_empty() {
+            out.push_str(&format!(
+                "escalation events: {} retained of {} total\n",
+                self.escalations.len(),
+                self.escalations_total
+            ));
+            for e in &self.escalations {
+                out.push_str(&format!(
+                    "  {} -> {} (top1 agreement {:.1}%, {})\n",
+                    e.from, e.to, e.agreement_pct, e.reason
                 ));
             }
         }
@@ -602,6 +673,35 @@ impl Snapshot {
                 "posar_shard_exec_us_count{{shard=\"{l}\"}} {}\n",
                 sh.exec.count()
             ));
+        }
+        out.push_str(
+            "# HELP posar_escalations_total Precision-router format transitions (lifetime).\n",
+        );
+        out.push_str("# TYPE posar_escalations_total counter\n");
+        out.push_str(&format!("posar_escalations_total {}\n", self.escalations_total));
+        if !self.escalations.is_empty() {
+            out.push_str(
+                "# HELP posar_router_agreement_pct Shadow Top-1 agreement at the last retained transition per edge.\n",
+            );
+            out.push_str("# TYPE posar_router_agreement_pct gauge\n");
+            // Deterministic: last retained event per (from, to) edge, in
+            // sorted edge order.
+            let mut edges: Vec<&EscalationEvent> = Vec::new();
+            for e in &self.escalations {
+                match edges.iter_mut().find(|x| x.from == e.from && x.to == e.to) {
+                    Some(slot) => *slot = e,
+                    None => edges.push(e),
+                }
+            }
+            edges.sort_by(|a, b| (&a.from, &a.to).cmp(&(&b.from, &b.to)));
+            for e in edges {
+                out.push_str(&format!(
+                    "posar_router_agreement_pct{{from=\"{}\",to=\"{}\"}} {:.3}\n",
+                    prom_escape(&e.from),
+                    prom_escape(&e.to),
+                    e.agreement_pct
+                ));
+            }
         }
         out
     }
@@ -883,5 +983,68 @@ mod tests {
         m.record_rejected("a\"b\\c");
         let prom = m.snapshot().render_prom();
         assert!(prom.contains("posar_rejected_total{variant=\"a\\\"b\\\\c\"} 1"));
+    }
+
+    #[test]
+    fn escalation_events_ring_counters_and_render() {
+        let mut m = Metrics::with_event_cap(4);
+        for i in 0..10 {
+            m.record_escalation(
+                "p8",
+                "fixed",
+                93.8,
+                &format!("guardrail: top1 agreement 93.8% < 99.0% over 16 shadows (#{i})"),
+            );
+        }
+        m.record_escalation(
+            "fixed",
+            "p8",
+            99.7,
+            "recovered: top1 agreement 99.7% >= 99.0% over 32 shadows (fixed(16,2) vs p16)",
+        );
+        let s = m.snapshot();
+        assert_eq!(s.escalations.len(), 4, "ring evicts oldest");
+        assert_eq!(s.escalations_total, 11, "lifetime count survives eviction");
+        assert_eq!(s.escalations[3].from, "fixed");
+        assert_eq!(s.escalations[3].to, "p8");
+        let rendered = s.render();
+        assert!(rendered.contains("escalation events: 4 retained of 11 total"), "{rendered}");
+        assert!(rendered.contains("fixed -> p8 (top1 agreement 99.7%"), "{rendered}");
+        // Scale and escalation rings are independent.
+        assert_eq!(s.events.len(), 0);
+        assert_eq!(s.events_total, 0);
+    }
+
+    #[test]
+    fn prometheus_escalation_family_and_format_name_labels() {
+        let mut m = Metrics::new();
+        // Lifetime counter exists (0) even with no events — scrapers can
+        // rate() it from the start.
+        let prom = m.snapshot().render_prom();
+        assert!(prom.contains("posar_escalations_total 0"), "{prom}");
+        m.record_escalation(
+            "p8",
+            "fixed(16,2)",
+            93.8,
+            "guardrail: top1 agreement 93.8% < 99.0% over 16 shadows (p8 vs fixed(16,2))",
+        );
+        m.record_escalation("p8", "fixed(16,2)", 95.1, "guardrail again");
+        let prom = m.snapshot().render_prom();
+        assert!(prom.contains("posar_escalations_total 2"), "{prom}");
+        // Format names with parens/commas are legal quoted label values
+        // and must pass through intact; the gauge keeps the latest
+        // agreement per edge.
+        assert!(
+            prom.contains("posar_router_agreement_pct{from=\"p8\",to=\"fixed(16,2)\"} 95.100"),
+            "{prom}"
+        );
+        // Control characters cannot break a sample line in two.
+        let mut m = Metrics::new();
+        m.record_escalation("a\nb", "c\rd", 1.0, "r");
+        let prom = m.snapshot().render_prom();
+        assert!(prom.contains("from=\"a\\nb\",to=\"c_d\""), "{prom}");
+        for line in prom.lines() {
+            assert!(line.matches('{').count() <= 1, "malformed line {line:?}");
+        }
     }
 }

@@ -64,6 +64,7 @@ pub mod config;
 pub mod loadgen;
 pub mod metrics;
 pub mod pool;
+pub mod router;
 pub mod sketch;
 pub mod trace;
 pub mod wheel;
@@ -74,20 +75,23 @@ pub use autoscale::{
 };
 pub use backend::{InferBackend, PjrtBackend, PvuBackend, NATIVE_VARIANTS};
 pub use batcher::{Batcher, Request};
-pub use compare::{compare_files, compare_json, CompareReport};
+pub use compare::{
+    compare_files, compare_files_gated, compare_json, compare_json_gated, CompareReport,
+};
 pub use config::{ConfigError, ServeConfigBuilder};
 pub use loadgen::{
     run_bench, run_bench_with, ArrivalStats, BenchConfig, BenchSummary, ClosedLoop, LoadSource,
     OpenLoop, Replay, VariantBench, VariantTally,
 };
-pub use metrics::{Metrics, ScaleEvent, Snapshot, Stage, StageSample};
+pub use metrics::{EscalationEvent, Metrics, ScaleEvent, Snapshot, Stage, StageSample};
 pub use pool::Pool;
+pub use router::{Escalation, PrecisionRouter, Route, RouterConfig, RouterSnapshot};
 pub use sketch::LatencySketch;
 pub use trace::{Span, TraceConfig, Tracer};
 pub use wheel::TimerWheel;
 
 use crate::cnn;
-use crate::posit::{PositSpec, P16, P32, P8};
+use crate::posit::{Format, PositSpec, FIXED16, P16, P32, P8};
 use crate::pvu;
 use crate::runtime::Manifest;
 use anyhow::{anyhow, Result};
@@ -789,6 +793,16 @@ impl Coordinator {
         self.metrics.lock().unwrap().snapshot()
     }
 
+    /// Record a precision-router format transition (the router's
+    /// actuation hook — the escalation analogue of the autoscaler's
+    /// [`Metrics::record_scale`]).
+    pub fn record_escalation(&self, from: &str, to: &str, agreement_pct: f64, reason: &str) {
+        self.metrics
+            .lock()
+            .unwrap()
+            .record_escalation(from, to, agreement_pct, reason);
+    }
+
     /// Span records written so far (`None` when tracing is disabled).
     pub fn trace_written(&self) -> Option<u64> {
         self.spawn.tracer.as_ref().map(|t| t.written())
@@ -831,10 +845,21 @@ impl Drop for Coordinator {
 /// its inputs are P16 here — only the pure-posit variants use their own
 /// format.
 pub fn variant_input_spec(name: &str) -> Option<PositSpec> {
+    match variant_input_format(name) {
+        Some(Format::Posit(s)) => Some(s),
+        _ => None,
+    }
+}
+
+/// Input quantization [`Format`] of a serving variant, if it has one —
+/// the [`variant_input_spec`] mapping extended to the fixed-posit
+/// family ("fixed" quantizes inputs at FixedPosit(16,2)).
+pub fn variant_input_format(name: &str) -> Option<Format> {
     match name {
-        "p8" => Some(P8),
-        "p16" | "hybrid" => Some(P16),
-        "p32" => Some(P32),
+        "p8" => Some(Format::Posit(P8)),
+        "p16" | "hybrid" => Some(Format::Posit(P16)),
+        "p32" => Some(Format::Posit(P32)),
+        "fixed" => Some(Format::Fixed(FIXED16)),
         _ => None,
     }
 }
@@ -846,8 +871,13 @@ pub fn variant_input_spec(name: &str) -> Option<PositSpec> {
 /// backends — the batch handed to the executor is guaranteed to be in
 /// the variant's input format even for graphs that omit the q(x) step.
 pub fn encode_batch(spec: PositSpec, x: &[f32]) -> Vec<f32> {
+    encode_batch_fmt(Format::Posit(spec), x)
+}
+
+/// [`encode_batch`] for any serving format.
+pub fn encode_batch_fmt(fmt: Format, x: &[f32]) -> Vec<f32> {
     let (mut bits, mut out) = (Vec::new(), Vec::new());
-    encode_batch_into(spec, x, &mut bits, &mut out);
+    encode_batch_fmt_into(fmt, x, &mut bits, &mut out);
     out
 }
 
@@ -856,8 +886,13 @@ pub fn encode_batch(spec: PositSpec, x: &[f32]) -> Vec<f32> {
 /// refilled, so a serving worker that keeps them across batches pays no
 /// per-batch allocation at steady state.
 pub fn encode_batch_into(spec: PositSpec, x: &[f32], bits: &mut Vec<u32>, out: &mut Vec<f32>) {
-    pvu::vfrom_f32_into(spec, x, bits);
-    pvu::vto_f32_into(spec, bits, out);
+    encode_batch_fmt_into(Format::Posit(spec), x, bits, out)
+}
+
+/// Arena variant of [`encode_batch_fmt`].
+pub fn encode_batch_fmt_into(fmt: Format, x: &[f32], bits: &mut Vec<u32>, out: &mut Vec<f32>) {
+    pvu::vfrom_f32_fmt_into(fmt, x, bits);
+    pvu::vto_f32_fmt_into(fmt, bits, out);
 }
 
 /// Argmax of one probability row (`max_by` semantics: ties resolve to
@@ -904,7 +939,7 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
     let batch_size = be.batch();
     let feat = be.feat();
     let classes = be.classes();
-    let input_spec = variant_input_spec(&variant);
+    let input_fmt = variant_input_format(&variant);
     let mut batcher = if adaptive_wait {
         Batcher::adaptive(batch_size, max_wait)
     } else {
@@ -952,9 +987,9 @@ fn worker(ctx: WorkerCtx, rx: Receiver<Request>) {
         for v in &mut x[n * feat..] {
             *v = 0.0;
         }
-        if let Some(spec) = input_spec {
+        if let Some(fmt) = input_fmt {
             let filled = n * feat;
-            encode_batch_into(spec, &x[..filled], &mut enc_bits, &mut enc);
+            encode_batch_fmt_into(fmt, &x[..filled], &mut enc_bits, &mut enc);
             x[..filled].copy_from_slice(&enc);
         }
         let t0 = Instant::now();
@@ -1048,6 +1083,25 @@ mod tests {
         assert_eq!(variant_input_spec("hybrid"), Some(P16));
         assert_eq!(variant_input_spec("fp32"), None);
         assert_eq!(variant_input_spec("nope"), None);
+        // The fixed-posit rung has an input format but no PositSpec.
+        assert_eq!(variant_input_format("fixed"), Some(Format::Fixed(FIXED16)));
+        assert_eq!(variant_input_spec("fixed"), None);
+    }
+
+    #[test]
+    fn encode_batch_fixed_matches_scalar_roundtrip() {
+        let fmt = Format::Fixed(FIXED16);
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) * 0.37).collect();
+        let once = encode_batch_fmt(fmt, &x);
+        for (i, (&xi, &qi)) in x.iter().zip(&once).enumerate() {
+            let want = fmt.to_f32(fmt.from_f32(xi));
+            assert_eq!(qi.to_bits(), want.to_bits(), "lane {i}");
+        }
+        let twice = encode_batch_fmt(fmt, &once);
+        assert_eq!(
+            once.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            twice.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

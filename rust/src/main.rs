@@ -6,7 +6,7 @@
 
 use posar::cnn;
 use posar::coordinator::{
-    compare_files, run_bench, BenchConfig, Coordinator, ServeConfig, ServeConfigBuilder,
+    compare_files_gated, run_bench, BenchConfig, Coordinator, ServeConfig, ServeConfigBuilder,
 };
 use posar::report;
 use std::time::{Duration, Instant};
@@ -75,6 +75,8 @@ serving:
               [--slo-p99-us T] [--scale-event-cap E]
               [--open --rate R --duration-ms MS]
               [--replay FILE|bursty:RATE[:MS[:PERIOD]]|diurnal:RATE[:MS]]
+              [--route auto|LADDER] [--shadow-sample N]
+              [--guardrail-top1 PCT]
               [--json PATH] [--trace-sample N] [--trace-slow-us T]
               [--trace-file PATH] [--prom PATH]
                          load generator: closed loop (default), open
@@ -91,13 +93,27 @@ serving:
                          per-shard occupancy — schema in
                          docs/serving.md) to stdout and a table to
                          stderr. `--smoke` is the CI configuration:
-                         native backend, small request count
+                         native backend, small request count.
+                         --route enables the mixed-precision router
+                         (docs/ROUTING.md): serve each request on the
+                         cheapest format of the ladder (`auto` =
+                         p8,fixed,p16,fp32; or an explicit
+                         comma-separated list, cheapest first), shadow
+                         one request in N (--shadow-sample, default 8)
+                         on the next rung up, and promote when rolling
+                         Top-1 agreement drops below --guardrail-top1
+                         PCT (default 99); escalation events join the
+                         JSON summary next to scale events
   bench-compare OLD.json NEW.json [--threshold PCT]
+                [--threshold-top1-pt PT]
                          diff two serve-bench JSON snapshots; flags
                          per-variant throughput/latency/p99/top1
                          changes beyond PCT%  (default 20) in the bad
                          direction and exits 1 on regressions (the
-                         in-repo baseline lives at BENCH_serve.json)
+                         in-repo baseline lives at BENCH_serve.json).
+                         --threshold-top1-pt gates top1 on absolute
+                         accuracy points instead of the relative PCT
+                         (0.875 -> 0.869 is 0.69% relative but 0.6 pt)
 
 misc:
   golden [path]          dump posit golden vectors plus PVU golden
@@ -270,8 +286,9 @@ fn emit_telemetry(args: &[String], coord: &Coordinator) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `bench-compare OLD.json NEW.json [--threshold PCT]`: returns
-/// `Ok(false)` when regressions were found (exit 1 at the call site).
+/// `bench-compare OLD.json NEW.json [--threshold PCT]
+/// [--threshold-top1-pt PT]`: returns `Ok(false)` when regressions were
+/// found (exit 1 at the call site).
 fn bench_compare(args: &[String]) -> anyhow::Result<bool> {
     // Positional operands: everything after the subcommand that isn't a
     // flag or a flag's value.
@@ -294,10 +311,17 @@ fn bench_compare(args: &[String]) -> anyhow::Result<bool> {
         paths.len()
     );
     let threshold = strict_num(args, "--threshold", 20)? as f64;
-    let report = compare_files(
+    let top1_pt = match flag(args, "--threshold-top1-pt") {
+        None => None,
+        Some(v) => Some(v.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("bad --threshold-top1-pt {v:?} (expected a number)")
+        })?),
+    };
+    let report = compare_files_gated(
         std::path::Path::new(paths[0]),
         std::path::Path::new(paths[1]),
         threshold,
+        top1_pt,
     )?;
     print!("{}", report.render());
     Ok(!report.has_regressions())
@@ -354,26 +378,44 @@ fn serve_bench(args: &[String]) -> anyhow::Result<()> {
     };
     let duration_ms = opt_num(args, "--duration-ms")?;
     let replay = flag(args, "--replay");
+    let route = flag(args, "--route");
+    let shadow_sample = opt_num(args, "--shadow-sample")?;
+    let guardrail = match flag(args, "--guardrail-top1") {
+        None => None,
+        Some(v) => Some(v.parse::<f64>().map_err(|_| {
+            anyhow::anyhow!("bad --guardrail-top1 {v:?} (expected a number)")
+        })?),
+    };
     // The bench-only knobs join the builder so their cross-flag rules
-    // (rate without --open, replay against --open, …) are validated in
-    // the same pass as the serving ones.
-    let mut cfg = serve_builder(args, if smoke { 4 } else { 8 })?
+    // (rate without --open, replay against --open, shadow sampling
+    // without --route, …) are validated in the same pass as the serving
+    // ones. `router()` borrows, so extract the routing policy before
+    // `build()` consumes the builder.
+    let builder = serve_builder(args, if smoke { 4 } else { 8 })?
         .open(open)
         .rate(rate)
         .duration_ms(duration_ms)
         .replay(replay.clone())
-        .build()?;
+        .route(route)
+        .shadow_sample(shadow_sample)
+        .guardrail_top1(guardrail);
+    let router = builder.router();
+    let mut cfg = builder.build()?;
     if smoke && !args.iter().any(|a| a == "--shards") {
         cfg.shards = 2; // exercise the sharded router in CI
     }
     let concurrency = strict_num(args, "--concurrency", if smoke { 4 } else { 8 })? as usize;
     let requests = strict_num(args, "--requests", if smoke { 32 } else { 512 })? as usize;
-    let variants: Vec<String> = match flag(args, "--variants") {
-        Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+    let variants: Vec<String> = match (flag(args, "--variants"), &router) {
+        (Some(v), _) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        // A routed run drives exactly the ladder: the smoke default
+        // below omits `fixed`, and the router refuses any ladder rung
+        // missing from the driven mix.
+        (None, Some(r)) => r.ladder.clone(),
         // Smoke default: one variant per engine kind (scalar FP32, LUT
         // P8, decode-once P16) keeps CI wall time short.
-        None if smoke => vec!["fp32".into(), "p8".into(), "p16".into()],
-        None => Vec::new(), // every served variant
+        (None, None) if smoke => vec!["fp32".into(), "p8".into(), "p16".into()],
+        (None, None) => Vec::new(), // every served variant
     };
     let filter: Option<Vec<&str>> = if variants.is_empty() {
         None
@@ -400,6 +442,7 @@ fn serve_bench(args: &[String]) -> anyhow::Result<()> {
         rate: rate.unwrap_or(200.0),
         duration: Duration::from_millis(duration_ms.unwrap_or(1000)),
         replay,
+        route: router,
     };
     let summary = run_bench(&coord, &set, &bcfg)?;
     eprintln!("\n{}", summary.render());
@@ -434,10 +477,15 @@ fn serve_bench(args: &[String]) -> anyhow::Result<()> {
 
 /// Dump golden posit vectors for the cross-language tests.
 fn golden(path: &str) {
-    use posar::posit::{from_f64, to_f64, P16, P32, P8};
+    use posar::posit::{Format, FIXED16, P16, P32, P8};
     let mut out = String::from("[\n");
     let mut first = true;
-    for (spec, name) in [(P8, "p8"), (P16, "p16"), (P32, "p32")] {
+    for (fmt, name) in [
+        (Format::Posit(P8), "p8"),
+        (Format::Posit(P16), "p16"),
+        (Format::Posit(P32), "p32"),
+        (Format::Fixed(FIXED16), "fixed"),
+    ] {
         let mut vals = vec![
             0.0f64,
             1.0,
@@ -462,14 +510,14 @@ fn golden(path: &str) {
             vals.push(rng.normal() * 10f64.powi(rng.below(13) as i32 - 6));
         }
         for v in vals {
-            let bits = from_f64(spec, v);
+            let bits = fmt.from_f64(v);
             if !first {
                 out.push_str(",\n");
             }
             first = false;
             out.push_str(&format!(
                 "  {{\"fmt\": \"{name}\", \"input\": {v:e}, \"bits\": {bits}, \"value\": {:e}}}",
-                to_f64(spec, bits)
+                fmt.to_f64(bits)
             ));
         }
     }
@@ -483,12 +531,13 @@ fn golden(path: &str) {
     golden_pvu(&pvu_path);
 }
 
-/// Dump PVU golden vectors: elementwise vadd/vmul slices (p8/p16, where
-/// the f64 oracle is exact) and a quire-fused dot over same-magnitude
-/// operands (so the exact sum fits f64). The python side recomputes each
-/// from the NumPy posit model and must match bit-for-bit.
+/// Dump PVU golden vectors: elementwise vadd/vmul slices (p8/p16/fixed,
+/// where the f64 oracle is exact) and a quire-fused dot over
+/// same-magnitude operands (so the exact sum fits f64). The python side
+/// recomputes each from the NumPy posit model and must match
+/// bit-for-bit.
 fn golden_pvu(path: &std::path::Path) {
-    use posar::posit::{P16, P8};
+    use posar::posit::{Format, FIXED16, P16, P8};
     use posar::pvu;
     let mut out = String::from("[\n");
     let mut first = true;
@@ -503,18 +552,22 @@ fn golden_pvu(path: &std::path::Path) {
         let items: Vec<String> = v.iter().map(|b| b.to_string()).collect();
         format!("[{}]", items.join(", "))
     };
-    for (spec, name) in [(P8, "p8"), (P16, "p16")] {
+    for (fmt, name) in [
+        (Format::Posit(P8), "p8"),
+        (Format::Posit(P16), "p16"),
+        (Format::Fixed(FIXED16), "fixed"),
+    ] {
         let mut rng = posar::data::Rng::new(0xB0B5);
         let n = 32;
         let a: Vec<u32> = (0..n)
-            .map(|_| posar::posit::from_f64(spec, rng.range(-8.0, 8.0)))
+            .map(|_| fmt.from_f64(rng.range(-8.0, 8.0)))
             .collect();
         let b: Vec<u32> = (0..n)
-            .map(|_| posar::posit::from_f64(spec, rng.range(-8.0, 8.0)))
+            .map(|_| fmt.from_f64(rng.range(-8.0, 8.0)))
             .collect();
         for (op, res) in [
-            ("vadd", pvu::vadd(spec, &a, &b)),
-            ("vmul", pvu::vmul(spec, &a, &b)),
+            ("vadd", pvu::vadd_fmt(fmt, &a, &b)),
+            ("vmul", pvu::vmul_fmt(fmt, &a, &b)),
         ] {
             push(
                 format!(
@@ -529,12 +582,12 @@ fn golden_pvu(path: &std::path::Path) {
         }
         // Same-magnitude operands keep the exact dot representable in f64.
         let da: Vec<u32> = (0..8)
-            .map(|_| posar::posit::from_f64(spec, rng.range(0.5, 2.0)))
+            .map(|_| fmt.from_f64(rng.range(0.5, 2.0)))
             .collect();
         let db: Vec<u32> = (0..8)
-            .map(|_| posar::posit::from_f64(spec, rng.range(0.5, 2.0)))
+            .map(|_| fmt.from_f64(rng.range(0.5, 2.0)))
             .collect();
-        let d = pvu::dot(spec, &da, &db);
+        let d = pvu::dot_fmt(fmt, &da, &db);
         push(
             format!(
                 "  {{\"fmt\": \"{name}\", \"op\": \"dot\", \"a\": {}, \"b\": {}, \"out\": {d}}}",

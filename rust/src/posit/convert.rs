@@ -123,9 +123,10 @@ pub fn from_u32(spec: PositSpec, v: u32) -> u32 {
     from_u64(spec, v as u64)
 }
 
-/// Integer conversion core: round a decoded posit to an integer with the
-/// given rounding mode, returning (magnitude, sign).
-fn to_int_parts(r: &Real, rm: RoundMode) -> (u128, bool) {
+/// Integer conversion core: round a decoded value to an integer with the
+/// given rounding mode, returning (magnitude, sign). Format-agnostic (it
+/// works on the unpacked [`Real`]), so the fixed-posit conversions share it.
+pub(crate) fn to_int_parts(r: &Real, rm: RoundMode) -> (u128, bool) {
     let sign = r.sign;
     let (int, frac_nonzero, half, below_half_nonzero) = if r.scale >= r.fs as i64 {
         ((r.frac) << (r.scale - r.fs as i64), false, false, false)

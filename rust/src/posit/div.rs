@@ -10,12 +10,14 @@ use super::decode::decode;
 use super::encode::encode;
 use super::{Decoded, PositSpec, Real};
 
-/// Exact-to-sticky quotient of two unpacked reals.
-pub(crate) fn real_div(spec: PositSpec, a: &Real, b: &Real) -> Real {
+/// Exact-to-sticky quotient of two unpacked reals. `ps` is the target
+/// format width (posit or fixed-posit): the quotient carries `ps + 4`
+/// significant bits, enough for any same-width encode to round correctly.
+pub(crate) fn real_div(ps: u32, a: &Real, b: &Real) -> Real {
     // Widen the dividend so the integer quotient has at least ps+4
     // significant bits: frac_a/2^fs_a ÷ frac_b/2^fs_b = q / 2^(fs_a+w-fs_b)
     // with q = (frac_a << w) / frac_b. Choose w so fs_q = ps + 4.
-    let target = spec.ps + 4;
+    let target = ps + 4;
     let w = (target as i64 + b.fs as i64 - a.fs as i64).max(1) as u32;
     let num = a.frac << w;
     let q = num / b.frac;
@@ -39,7 +41,7 @@ pub(crate) fn div(spec: PositSpec, a: u32, b: u32) -> u32 {
         (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
         (_, Decoded::Zero) => spec.nar(),
         (Decoded::Zero, _) => spec.zero(),
-        (Decoded::Num(ra), Decoded::Num(rb)) => encode(spec, &real_div(spec, &ra, &rb)),
+        (Decoded::Num(ra), Decoded::Num(rb)) => encode(spec, &real_div(spec.ps, &ra, &rb)),
     }
 }
 

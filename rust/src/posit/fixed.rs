@@ -1,0 +1,912 @@
+//! Fixed-posit arithmetic (Gohil et al., arXiv:2104.04763) and the
+//! [`Format`] enum that lets one code path serve both format families.
+//!
+//! A fixed-posit keeps the posit's `(sign, regime, exponent, fraction)`
+//! anatomy but pins the regime to a *fixed* field width `rf` instead of a
+//! run-length encoding. The layout of a `ps`-bit pattern is
+//!
+//! ```text
+//! [ sign (1) | regime (rf bits, biased) | exponent (es) | fraction (fs) ]
+//! ```
+//!
+//! with `fs = ps - 1 - rf - es` and the regime stored biased
+//! (`stored = k + 2^(rf-1)`), so patterns remain totally ordered as
+//! two's-complement integers — exactly the property the posit comparators
+//! and the PVU's flip-compare SIMD kernels rely on. Negative values are
+//! whole-pattern two's complement, pattern `0…0` is zero and `10…0` is
+//! NaR, all as in posits. What changes is the trade: fixed-posits give up
+//! tapered precision for a constant fraction width and a decoder with no
+//! run-length extraction — the "error-resilient applications" point of the
+//! source paper, and the middle rung of this repo's serving ladder between
+//! Posit(8,1) and Posit(16,2).
+
+use super::addsub::real_add;
+use super::convert::{self, ldexp_exact, to_int_parts, RoundMode};
+use super::div::real_div;
+use super::encode::encode as posit_encode;
+use super::mul::real_mul;
+use super::sqrt::uint_sqrt;
+use super::{decode as posit_decode, Decoded, PositSpec, Real};
+
+/// A fixed-posit format: total size `ps`, regime field width `rf`, and
+/// exponent size `es`. The fraction gets the remaining `ps - 1 - rf - es`
+/// bits — fixed, unlike a posit's tapered fraction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FixedPositSpec {
+    /// Total size in bits. 4..=32.
+    pub ps: u32,
+    /// Regime field width in bits (`rf`). 1..=8; stored biased by `2^(rf-1)`.
+    pub rf: u32,
+    /// Exponent field size in bits. 0..=4.
+    pub es: u32,
+}
+
+/// Fixed-posit(16, rf=2, es=2) — the serving ladder's middle rung: the
+/// same word size and exponent granularity as [`super::P16`], but with the
+/// regime pinned to 2 bits the fraction holds a constant 11 bits, so its
+/// accuracy sits between Posit(8,1) and Posit(16,2) on the CNN tail.
+pub const FIXED16: FixedPositSpec = FixedPositSpec { ps: 16, rf: 2, es: 2 };
+
+impl FixedPositSpec {
+    /// New spec; panics on parameters that leave no fraction bit (hardware
+    /// elaboration would equally reject them).
+    pub fn new(ps: u32, rf: u32, es: u32) -> Self {
+        assert!((4..=32).contains(&ps), "fixed-posit size must be in 4..=32");
+        assert!((1..=8).contains(&rf), "regime field must be 1..=8 bits");
+        assert!(es <= 4, "exponent size must be in 0..=4");
+        assert!(1 + rf + es < ps, "no fraction bits left");
+        Self { ps, rf, es }
+    }
+
+    /// Fraction field width (constant, unlike a posit's).
+    #[inline]
+    pub fn fs(&self) -> u32 {
+        self.ps - 1 - self.rf - self.es
+    }
+
+    /// Regime bias: `stored = k + bias`, `k ∈ [-bias, bias-1]`.
+    #[inline]
+    pub fn bias(&self) -> i64 {
+        1i64 << (self.rf - 1)
+    }
+
+    /// Bit mask covering the `ps` valid bits.
+    #[inline]
+    pub fn mask(&self) -> u32 {
+        if self.ps == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.ps) - 1
+        }
+    }
+
+    /// Pattern of zero (`0…0`).
+    #[inline]
+    pub fn zero(&self) -> u32 {
+        0
+    }
+
+    /// Pattern of NaR (`10…0`).
+    #[inline]
+    pub fn nar(&self) -> u32 {
+        1u32 << (self.ps - 1)
+    }
+
+    /// Pattern of the largest finite value (`01…1`): regime and exponent
+    /// saturated, fraction all ones.
+    #[inline]
+    pub fn maxpos(&self) -> u32 {
+        (1u32 << (self.ps - 1)) - 1
+    }
+
+    /// Pattern of the smallest positive value (`0…01`). Note the magnitude
+    /// pattern `0…0` is claimed by zero, so minpos carries fraction LSB 1:
+    /// its value is `(1 + 2^-fs) · 2^min_scale`.
+    #[inline]
+    pub fn minpos(&self) -> u32 {
+        1
+    }
+
+    /// Pattern of 1.0: `k = 0` (stored = bias), `e = 0`, fraction 0.
+    #[inline]
+    pub fn one(&self) -> u32 {
+        (self.bias() as u32) << (self.es + self.fs())
+    }
+
+    /// Largest representable scale: `(bias-1)·2^es + (2^es - 1)`.
+    #[inline]
+    pub fn max_scale(&self) -> i64 {
+        ((self.bias() - 1) << self.es) + ((1i64 << self.es) - 1)
+    }
+
+    /// Smallest representable scale: `-bias·2^es` (the range is asymmetric,
+    /// unlike a posit's).
+    #[inline]
+    pub fn min_scale(&self) -> i64 {
+        -(self.bias() << self.es)
+    }
+
+    /// Two's-complement negation within `ps` bits (same rule as posits).
+    #[inline]
+    pub fn negate(&self, bits: u32) -> u32 {
+        bits.wrapping_neg() & self.mask()
+    }
+
+    /// Sign-extend a pattern to `i32` — fixed-posits order like
+    /// two's-complement integers exactly as posits do.
+    #[inline]
+    pub fn to_i32_pattern(&self, bits: u32) -> i32 {
+        ((bits << (32 - self.ps)) as i32) >> (32 - self.ps)
+    }
+
+    /// Decode a pattern to a special or an exact unpacked [`Real`].
+    pub fn decode(&self, bits: u32) -> Decoded {
+        let bits = bits & self.mask();
+        if bits == self.zero() {
+            return Decoded::Zero;
+        }
+        if bits == self.nar() {
+            return Decoded::NaR;
+        }
+        let sign = (bits >> (self.ps - 1)) & 1 == 1;
+        let mag = if sign { self.negate(bits) } else { bits };
+        let fs = self.fs();
+        let frac_field = mag & ((1u32 << fs) - 1);
+        let e = (mag >> fs) & ((1u32 << self.es) - 1);
+        let stored = mag >> (fs + self.es);
+        let k = stored as i64 - self.bias();
+        let scale = (k << self.es) + e as i64;
+        let r = Real::new(sign, scale, (1u128 << fs) | frac_field as u128, fs, false)
+            .expect("fraction carries the hidden bit");
+        Decoded::Num(r)
+    }
+
+    /// Encode an unpacked [`Real`] with a single round-to-nearest-even,
+    /// saturating at `maxpos`/`minpos` exactly like the posit encoder
+    /// (magnitudes never round to zero or wrap to NaR).
+    pub fn encode(&self, r: &Real) -> u32 {
+        let es = self.es;
+        let fs = self.fs();
+        let k = r.scale >> es;
+        let e = (r.scale - (k << es)) as u32;
+        if k >= self.bias() {
+            let m = self.maxpos();
+            return if r.sign { self.negate(m) } else { m };
+        }
+        if k < -self.bias() {
+            let m = self.minpos();
+            return if r.sign { self.negate(m) } else { m };
+        }
+        let stored = (k + self.bias()) as u32;
+        let base = (((stored << es) | e) as u128) << fs;
+        let mut mag: u128;
+        if r.fs <= fs {
+            // Every fraction bit fits; `sticky` alone sits below the half
+            // ulp and cannot round up under RNE.
+            let field = (r.frac ^ (1u128 << r.fs)) << (fs - r.fs);
+            mag = base | field;
+        } else {
+            let drop = r.fs - fs;
+            let field = (r.frac >> drop) & ((1u128 << fs) - 1);
+            mag = base | field;
+            let b_next = (r.frac >> (drop - 1)) & 1 == 1;
+            let bm = (r.frac & ((1u128 << (drop - 1)) - 1)) != 0 || r.sticky;
+            if b_next && (bm || mag & 1 == 1) {
+                // The carry ripples from the fraction through the exponent
+                // and regime fields naturally (they are contiguous).
+                mag += 1;
+            }
+        }
+        if mag > self.maxpos() as u128 {
+            mag = self.maxpos() as u128; // round-up past the top saturates
+        }
+        if mag == 0 {
+            mag = 1; // magnitude pattern 0 belongs to zero; bump to minpos
+        }
+        let mag = mag as u32;
+        if r.sign {
+            self.negate(mag)
+        } else {
+            mag
+        }
+    }
+
+    /// Exact value of a pattern as `f64` (NaR maps to NaN).
+    pub fn to_f64(&self, bits: u32) -> f64 {
+        match self.decode(bits) {
+            Decoded::Zero => 0.0,
+            Decoded::NaR => f64::NAN,
+            Decoded::Num(r) => r.to_f64(),
+        }
+    }
+
+    /// Round an `f64` to the nearest fixed-posit (NaN/±∞ map to NaR).
+    pub fn from_f64(&self, v: f64) -> u32 {
+        let bits = v.to_bits();
+        let sign = bits >> 63 == 1;
+        let exp_bits = ((bits >> 52) & 0x7ff) as i64;
+        let mant = bits & ((1u64 << 52) - 1);
+        if exp_bits == 0x7ff {
+            return self.nar();
+        }
+        if exp_bits == 0 && mant == 0 {
+            return self.zero();
+        }
+        let r = if exp_bits == 0 {
+            Real::new(sign, -1074 + 52, mant as u128, 52, false).unwrap()
+        } else {
+            Real::new(sign, exp_bits - 1023, (1u128 << 52) | mant as u128, 52, false).unwrap()
+        };
+        self.encode(&r)
+    }
+
+    fn addsub(&self, a: u32, b: u32, sub: bool) -> u32 {
+        if (a & self.mask()) == self.nar() || (b & self.mask()) == self.nar() {
+            return self.nar();
+        }
+        match (self.decode(a), self.decode(b)) {
+            (Decoded::Zero, Decoded::Zero) => self.zero(),
+            (Decoded::Zero, _) => {
+                if sub {
+                    self.negate(b & self.mask())
+                } else {
+                    b & self.mask()
+                }
+            }
+            (_, Decoded::Zero) => a & self.mask(),
+            (Decoded::Num(x), Decoded::Num(y)) => {
+                let ys = Real {
+                    sign: y.sign ^ sub,
+                    ..y
+                };
+                match real_add(&x, &ys) {
+                    Some(r) => self.encode(&r),
+                    None => self.zero(), // exact cancellation
+                }
+            }
+            _ => unreachable!("NaR handled above"),
+        }
+    }
+
+    fn mul(&self, a: u32, b: u32) -> u32 {
+        match (self.decode(a), self.decode(b)) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => self.nar(),
+            (Decoded::Zero, _) | (_, Decoded::Zero) => self.zero(),
+            (Decoded::Num(x), Decoded::Num(y)) => self.encode(&real_mul(&x, &y)),
+        }
+    }
+
+    fn div(&self, a: u32, b: u32) -> u32 {
+        match (self.decode(a), self.decode(b)) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => self.nar(),
+            (_, Decoded::Zero) => self.nar(),
+            (Decoded::Zero, _) => self.zero(),
+            (Decoded::Num(x), Decoded::Num(y)) => self.encode(&real_div(self.ps, &x, &y)),
+        }
+    }
+
+    fn sqrt(&self, a: u32) -> u32 {
+        match self.decode(a) {
+            Decoded::Zero => self.zero(),
+            Decoded::NaR => self.nar(),
+            Decoded::Num(r) if r.sign => self.nar(),
+            Decoded::Num(r) => {
+                // Same shape as the posit Algorithm 7 wrapper: even the
+                // scale, widen the radicand so the root has ps+4 bits.
+                let odd = (r.scale & 1) as u32;
+                let even_scale = r.scale - odd as i64;
+                let fs_q = self.ps + 4;
+                let w = 2 * fs_q - r.fs + odd;
+                let d = r.frac << w;
+                let (q, rem) = uint_sqrt(d);
+                self.encode(
+                    &Real::new(false, even_scale / 2, q, fs_q, rem != 0 || r.sticky)
+                        .expect("sqrt of a positive number is positive"),
+                )
+            }
+        }
+    }
+
+    fn fma_full(&self, a: u32, b: u32, c: u32, negate_product: bool, negate_c: bool) -> u32 {
+        let da = self.decode(a);
+        let db = self.decode(b);
+        let dc = self.decode(c);
+        if da.is_nar() || db.is_nar() || dc.is_nar() {
+            return self.nar();
+        }
+        let prod = match (da, db) {
+            (Decoded::Num(x), Decoded::Num(y)) => {
+                let mut p = real_mul(&x, &y);
+                p.sign ^= negate_product;
+                Some(p)
+            }
+            _ => None,
+        };
+        let addend = match dc {
+            Decoded::Num(z) => Some(Real {
+                sign: z.sign ^ negate_c,
+                ..z
+            }),
+            _ => None,
+        };
+        match (prod, addend) {
+            (None, None) => self.zero(),
+            (Some(p), None) => self.encode(&p),
+            (None, Some(z)) => self.encode(&z),
+            (Some(p), Some(z)) => match real_add(&p, &z) {
+                Some(r) => self.encode(&r),
+                None => self.zero(),
+            },
+        }
+    }
+}
+
+/// A serving number format: a classic `(ps, es)` posit or a fixed-posit.
+///
+/// Everything downstream of the posit core — PVU kernels, decode tables,
+/// the quire, both serving backends, the CNN tail — is format-agnostic at
+/// the pattern level (two's-complement negation, integer-ordered
+/// comparisons, `0…0`/`10…0` specials), so this enum is the single value
+/// that flows where a bare `PositSpec` used to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// A classic run-length-regime posit.
+    Posit(PositSpec),
+    /// A fixed-regime-width posit.
+    Fixed(FixedPositSpec),
+}
+
+impl Format {
+    /// Total pattern size in bits.
+    #[inline]
+    pub fn ps(&self) -> u32 {
+        match self {
+            Format::Posit(s) => s.ps,
+            Format::Fixed(s) => s.ps,
+        }
+    }
+
+    /// A same-size `PositSpec` for *pattern-level* operations only
+    /// (negation, ordering, masks — everything that never reads `es`).
+    #[inline]
+    pub(crate) fn pattern_spec(&self) -> PositSpec {
+        match self {
+            Format::Posit(s) => *s,
+            Format::Fixed(s) => PositSpec { ps: s.ps, es: s.es },
+        }
+    }
+
+    /// Bit mask covering the valid bits.
+    #[inline]
+    pub fn mask(&self) -> u32 {
+        self.pattern_spec().mask()
+    }
+
+    /// Pattern of zero.
+    #[inline]
+    pub fn zero(&self) -> u32 {
+        0
+    }
+
+    /// Pattern of NaR.
+    #[inline]
+    pub fn nar(&self) -> u32 {
+        1u32 << (self.ps() - 1)
+    }
+
+    /// Pattern of the largest finite value.
+    #[inline]
+    pub fn maxpos(&self) -> u32 {
+        (1u32 << (self.ps() - 1)) - 1
+    }
+
+    /// Pattern of the smallest positive value.
+    #[inline]
+    pub fn minpos(&self) -> u32 {
+        1
+    }
+
+    /// Pattern of 1.0.
+    #[inline]
+    pub fn one(&self) -> u32 {
+        match self {
+            Format::Posit(s) => s.one(),
+            Format::Fixed(s) => s.one(),
+        }
+    }
+
+    /// `(lowest bit weight, highest binade)` over all representable values
+    /// — what sizes the quire so sums of products accumulate exactly. For
+    /// posits both bounds are `±max_scale` (minpos is an exact power of
+    /// two); a fixed-posit's minpos carries a full fraction, so its lowest
+    /// bit sits `fs` below `min_scale`.
+    pub fn quire_range(&self) -> (i64, i64) {
+        match self {
+            Format::Posit(s) => (-s.max_scale(), s.max_scale()),
+            Format::Fixed(s) => (s.min_scale() - s.fs() as i64, s.max_scale() + 1),
+        }
+    }
+
+    /// Two's-complement negation within the pattern width.
+    #[inline]
+    pub fn negate(&self, bits: u32) -> u32 {
+        self.pattern_spec().negate(bits)
+    }
+
+    /// Sign-extend a pattern to `i32` (both families order like integers).
+    #[inline]
+    pub fn to_i32_pattern(&self, bits: u32) -> i32 {
+        self.pattern_spec().to_i32_pattern(bits)
+    }
+
+    /// Canonical display name: `posit(ps,es)` or `fixed(ps,rf)`.
+    pub fn name(&self) -> String {
+        match self {
+            Format::Posit(s) => format!("posit({},{})", s.ps, s.es),
+            Format::Fixed(s) => format!("fixed({},{})", s.ps, s.rf),
+        }
+    }
+
+    /// Parse a format name: `p8`/`p16`/`p32`, `posit(ps,es)`,
+    /// `fixed(ps,rf)` (es fixed at 2), or `fixed(ps,rf,es)`.
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "p8" => return Some(Format::Posit(super::P8)),
+            "p16" => return Some(Format::Posit(super::P16)),
+            "p32" => return Some(Format::Posit(super::P32)),
+            "fixed" => return Some(Format::Fixed(FIXED16)),
+            _ => {}
+        }
+        let (family, rest) = s.split_once('(')?;
+        let args = rest.strip_suffix(')')?;
+        let nums: Vec<u32> = args
+            .split(',')
+            .map(|t| t.trim().parse().ok())
+            .collect::<Option<_>>()?;
+        match (family, nums.as_slice()) {
+            ("posit", [ps, es]) if (2..=32).contains(ps) && *es <= 4 => {
+                Some(Format::Posit(PositSpec { ps: *ps, es: *es }))
+            }
+            ("fixed", [ps, rf]) if (4..=32).contains(ps) && (1..=8).contains(rf) && 1 + rf + 2 < *ps => {
+                Some(Format::Fixed(FixedPositSpec { ps: *ps, rf: *rf, es: 2 }))
+            }
+            ("fixed", [ps, rf, es])
+                if (4..=32).contains(ps) && (1..=8).contains(rf) && *es <= 4 && 1 + rf + es < *ps =>
+            {
+                Some(Format::Fixed(FixedPositSpec { ps: *ps, rf: *rf, es: *es }))
+            }
+            _ => None,
+        }
+    }
+
+    /// Decode a pattern.
+    #[inline]
+    pub fn decode(&self, bits: u32) -> Decoded {
+        match self {
+            Format::Posit(s) => posit_decode(*s, bits),
+            Format::Fixed(s) => s.decode(bits),
+        }
+    }
+
+    /// Encode an unpacked [`Real`] with a single rounding.
+    #[inline]
+    pub fn encode(&self, r: &Real) -> u32 {
+        match self {
+            Format::Posit(s) => posit_encode(*s, r),
+            Format::Fixed(s) => s.encode(r),
+        }
+    }
+
+    /// Round an `f64` to this format.
+    pub fn from_f64(&self, v: f64) -> u32 {
+        match self {
+            Format::Posit(s) => convert::from_f64(*s, v),
+            Format::Fixed(s) => s.from_f64(v),
+        }
+    }
+
+    /// Round an `f32` to this format (exact: `f32 ⊂ f64`).
+    pub fn from_f32(&self, v: f32) -> u32 {
+        self.from_f64(v as f64)
+    }
+
+    /// Exact value as `f64`.
+    pub fn to_f64(&self, bits: u32) -> f64 {
+        match self {
+            Format::Posit(s) => convert::to_f64(*s, bits),
+            Format::Fixed(s) => s.to_f64(bits),
+        }
+    }
+
+    /// Value as `f32` (single rounding via the exact `f64`).
+    pub fn to_f32(&self, bits: u32) -> f32 {
+        self.to_f64(bits) as f32
+    }
+
+    /// Addition with a single rounding.
+    pub fn add(&self, a: u32, b: u32) -> u32 {
+        match self {
+            Format::Posit(s) => super::add(*s, a, b),
+            Format::Fixed(s) => s.addsub(a, b, false),
+        }
+    }
+
+    /// Subtraction with a single rounding.
+    pub fn sub(&self, a: u32, b: u32) -> u32 {
+        match self {
+            Format::Posit(s) => super::sub(*s, a, b),
+            Format::Fixed(s) => s.addsub(a, b, true),
+        }
+    }
+
+    /// Multiplication with a single rounding.
+    pub fn mul(&self, a: u32, b: u32) -> u32 {
+        match self {
+            Format::Posit(s) => super::mul(*s, a, b),
+            Format::Fixed(s) => s.mul(a, b),
+        }
+    }
+
+    /// Division with a single rounding.
+    pub fn div(&self, a: u32, b: u32) -> u32 {
+        match self {
+            Format::Posit(s) => super::div(*s, a, b),
+            Format::Fixed(s) => s.div(a, b),
+        }
+    }
+
+    /// Square root with a single rounding.
+    pub fn sqrt(&self, a: u32) -> u32 {
+        match self {
+            Format::Posit(s) => super::sqrt(*s, a),
+            Format::Fixed(s) => s.sqrt(a),
+        }
+    }
+
+    /// Fused multiply-add family `±(a·b) ± c` with a single rounding.
+    pub fn fma_full(&self, a: u32, b: u32, c: u32, negate_product: bool, negate_c: bool) -> u32 {
+        match self {
+            Format::Posit(s) => super::fma_full(*s, a, b, c, negate_product, negate_c),
+            Format::Fixed(s) => s.fma_full(a, b, c, negate_product, negate_c),
+        }
+    }
+
+    /// `a·b + c`, single rounding.
+    pub fn fma(&self, a: u32, b: u32, c: u32) -> u32 {
+        self.fma_full(a, b, c, false, false)
+    }
+
+    /// Equality (bit equality is value equality in both families).
+    pub fn eq(&self, a: u32, b: u32) -> bool {
+        super::eq(self.pattern_spec(), a, b)
+    }
+
+    /// Strict less-than (integer pattern order).
+    pub fn lt(&self, a: u32, b: u32) -> bool {
+        super::lt(self.pattern_spec(), a, b)
+    }
+
+    /// Less-or-equal.
+    pub fn le(&self, a: u32, b: u32) -> bool {
+        super::le(self.pattern_spec(), a, b)
+    }
+
+    /// `FMIN.S` semantics (single NaR yields the other operand).
+    pub fn cmp_min(&self, a: u32, b: u32) -> u32 {
+        super::cmp_min(self.pattern_spec(), a, b)
+    }
+
+    /// `FMAX.S` semantics.
+    pub fn cmp_max(&self, a: u32, b: u32) -> u32 {
+        super::cmp_max(self.pattern_spec(), a, b)
+    }
+
+    /// `FSGNJ.S` (conditional two's-complement negation).
+    pub fn sgnj(&self, a: u32, b: u32) -> u32 {
+        super::sgnj(self.pattern_spec(), a, b)
+    }
+
+    /// `FSGNJN.S`.
+    pub fn sgnjn(&self, a: u32, b: u32) -> u32 {
+        super::sgnjn(self.pattern_spec(), a, b)
+    }
+
+    /// `FSGNJX.S`.
+    pub fn sgnjx(&self, a: u32, b: u32) -> u32 {
+        super::sgnjx(self.pattern_spec(), a, b)
+    }
+
+    /// `FCLASS.S` bit mask.
+    pub fn classify(&self, a: u32) -> u32 {
+        super::classify(self.pattern_spec(), a)
+    }
+
+    /// `FCVT.W.S` — to signed 32-bit integer (NaR saturates to `i32::MIN`).
+    pub fn to_i32(&self, bits: u32, rm: RoundMode) -> i32 {
+        match self {
+            Format::Posit(s) => convert::to_i32(*s, bits, rm),
+            Format::Fixed(s) => match s.decode(bits) {
+                Decoded::Zero => 0,
+                Decoded::NaR => i32::MIN,
+                Decoded::Num(r) => {
+                    let (mag, sign) = to_int_parts(&r, rm);
+                    if sign {
+                        if mag > (i32::MAX as u128) + 1 {
+                            i32::MIN
+                        } else {
+                            (mag as i64).wrapping_neg() as i32
+                        }
+                    } else if mag > i32::MAX as u128 {
+                        i32::MAX
+                    } else {
+                        mag as i32
+                    }
+                }
+            },
+        }
+    }
+
+    /// `FCVT.WU.S` — to unsigned 32-bit integer (negatives clamp to 0).
+    pub fn to_u32(&self, bits: u32, rm: RoundMode) -> u32 {
+        match self {
+            Format::Posit(s) => convert::to_u32(*s, bits, rm),
+            Format::Fixed(s) => match s.decode(bits) {
+                Decoded::Zero => 0,
+                Decoded::NaR => u32::MAX,
+                Decoded::Num(r) => {
+                    let (mag, sign) = to_int_parts(&r, rm);
+                    if sign {
+                        0
+                    } else if mag > u32::MAX as u128 {
+                        u32::MAX
+                    } else {
+                        mag as u32
+                    }
+                }
+            },
+        }
+    }
+
+    /// `FCVT.S.W` — from signed 32-bit integer.
+    pub fn from_i32(&self, v: i32) -> u32 {
+        match self {
+            Format::Posit(s) => convert::from_i32(*s, v),
+            Format::Fixed(s) => {
+                if v == 0 {
+                    return s.zero();
+                }
+                let sign = v < 0;
+                let mag = v.unsigned_abs() as u64;
+                s.encode(&Real::new(sign, 63, (mag as u128) << 11, 63 + 11, false).unwrap())
+            }
+        }
+    }
+
+    /// `FCVT.S.WU` — from unsigned 32-bit integer.
+    pub fn from_u32(&self, v: u32) -> u32 {
+        match self {
+            Format::Posit(s) => convert::from_u32(*s, v),
+            Format::Fixed(s) => {
+                if v == 0 {
+                    return s.zero();
+                }
+                s.encode(&Real::new(false, 63, (v as u128) << 11, 63 + 11, false).unwrap())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed16_constants() {
+        assert_eq!(FIXED16.fs(), 11);
+        assert_eq!(FIXED16.bias(), 2);
+        assert_eq!(FIXED16.nar(), 0x8000);
+        assert_eq!(FIXED16.maxpos(), 0x7fff);
+        assert_eq!(FIXED16.one(), 0x4000);
+        assert_eq!(FIXED16.max_scale(), 7);
+        assert_eq!(FIXED16.min_scale(), -8);
+        assert_eq!(Format::Fixed(FIXED16).name(), "fixed(16,2)");
+    }
+
+    #[test]
+    fn decode_known_patterns() {
+        // 1.0: stored regime = bias = 2, e = 0, frac = 0.
+        assert_eq!(FIXED16.to_f64(FIXED16.one()), 1.0);
+        // maxpos = (2 - 2^-11) · 2^7 = 255.875.
+        assert_eq!(FIXED16.to_f64(FIXED16.maxpos()), (2.0 - ldexp_exact(1.0, -11)) * 128.0);
+        // minpos = (1 + 2^-11) · 2^-8.
+        assert_eq!(
+            FIXED16.to_f64(FIXED16.minpos()),
+            (1.0 + ldexp_exact(1.0, -11)) * ldexp_exact(1.0, -8)
+        );
+        assert!(FIXED16.to_f64(FIXED16.nar()).is_nan());
+        assert_eq!(FIXED16.to_f64(0), 0.0);
+        assert_eq!(FIXED16.to_f64(FIXED16.negate(FIXED16.one())), -1.0);
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_fixed16() {
+        // Every pattern's exact f64 value must re-encode to the same
+        // pattern — the same identity the posit formats guarantee.
+        for bits in 0u32..=0xffff {
+            if bits == FIXED16.nar() {
+                continue;
+            }
+            let v = FIXED16.to_f64(bits);
+            assert_eq!(FIXED16.from_f64(v), bits, "bits={bits:#06x} v={v}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_exhaustive_small_variants() {
+        // Other geometries hold the same identity.
+        for spec in [
+            FixedPositSpec::new(8, 2, 1),
+            FixedPositSpec::new(12, 3, 2),
+            FixedPositSpec::new(16, 4, 0),
+        ] {
+            for bits in 0..=spec.mask() {
+                if bits == spec.nar() {
+                    continue;
+                }
+                let v = spec.to_f64(bits);
+                assert_eq!(spec.from_f64(v), bits, "{spec:?} bits={bits:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturation_never_wraps() {
+        assert_eq!(FIXED16.from_f64(1e30), FIXED16.maxpos());
+        assert_eq!(FIXED16.from_f64(-1e30), FIXED16.negate(FIXED16.maxpos()));
+        assert_eq!(FIXED16.from_f64(1e-30), FIXED16.minpos());
+        assert_eq!(FIXED16.from_f64(-1e-30), FIXED16.negate(FIXED16.minpos()));
+        assert_eq!(FIXED16.from_f64(f64::NAN), FIXED16.nar());
+        assert_eq!(FIXED16.from_f64(f64::INFINITY), FIXED16.nar());
+        // 2^-8 exactly (fraction field 0 at the bottom scale) bumps to
+        // minpos rather than colliding with the zero pattern.
+        assert_eq!(FIXED16.from_f64(ldexp_exact(1.0, -8)), FIXED16.minpos());
+    }
+
+    #[test]
+    fn patterns_order_like_integers() {
+        // Strictly monotone value order over all finite patterns, sorted
+        // by sign-extended integer interpretation.
+        let mut pats: Vec<u32> = (0..=0xffffu32).filter(|&b| b != FIXED16.nar()).collect();
+        pats.sort_by_key(|&b| FIXED16.to_i32_pattern(b));
+        for w in pats.windows(2) {
+            assert!(
+                FIXED16.to_f64(w[0]) < FIXED16.to_f64(w[1]),
+                "order breaks at {:#06x} -> {:#06x}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn arithmetic_vs_f64_oracle_fixed8() {
+        // Exhaustive over an 8-bit variant: products and sums of two
+        // fixed-posits are exact in f64, so round(f64 result) is the
+        // correctly-rounded reference (same argument as the posit tests).
+        let s = FixedPositSpec::new(8, 2, 1);
+        let f = Format::Fixed(s);
+        for a in 0u32..=0xff {
+            for b in 0u32..=0xff {
+                if a == s.nar() || b == s.nar() {
+                    continue;
+                }
+                let (va, vb) = (s.to_f64(a), s.to_f64(b));
+                assert_eq!(f.add(a, b), s.from_f64(va + vb), "add {a:#x} {b:#x}");
+                assert_eq!(f.sub(a, b), s.from_f64(va - vb), "sub {a:#x} {b:#x}");
+                assert_eq!(f.mul(a, b), s.from_f64(va * vb), "mul {a:#x} {b:#x}");
+                if b != 0 {
+                    assert_eq!(f.div(a, b), s.from_f64(va / vb), "div {a:#x} {b:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_vs_f64_oracle_fixed16() {
+        let f = Format::Fixed(FIXED16);
+        for bits in 0u32..=0xffff {
+            if bits == FIXED16.nar() {
+                assert_eq!(f.sqrt(bits), FIXED16.nar());
+                continue;
+            }
+            let v = FIXED16.to_f64(bits);
+            if v < 0.0 {
+                assert_eq!(f.sqrt(bits), FIXED16.nar(), "sqrt(neg) must be NaR");
+            } else {
+                assert_eq!(f.sqrt(bits), FIXED16.from_f64(v.sqrt()), "bits={bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn nar_and_zero_ladders() {
+        let f = Format::Fixed(FIXED16);
+        let one = FIXED16.one();
+        let nar = FIXED16.nar();
+        assert_eq!(f.add(nar, one), nar);
+        assert_eq!(f.add(0, one), one);
+        assert_eq!(f.sub(0, one), FIXED16.negate(one));
+        assert_eq!(f.mul(nar, 0), nar);
+        assert_eq!(f.mul(0, one), 0);
+        assert_eq!(f.div(one, 0), nar);
+        assert_eq!(f.div(0, one), 0);
+        assert_eq!(f.add(one, FIXED16.negate(one)), 0); // exact cancellation
+    }
+
+    #[test]
+    fn fma_single_rounding_fixed() {
+        // a·b + c where the two-step path rounds the product first.
+        let s = FIXED16;
+        let f = Format::Fixed(s);
+        let a = s.from_f64(1.0 + ldexp_exact(1.0, -6));
+        let c = s.from_f64(-1.0);
+        let fused = f.fma(a, a, c);
+        let exact = (1.0 + ldexp_exact(1.0, -6)) * (1.0 + ldexp_exact(1.0, -6)) - 1.0;
+        assert_eq!(fused, s.from_f64(exact));
+        // Variant signs.
+        let x = s.from_f64(3.0);
+        let y = s.from_f64(5.0);
+        let z = s.from_f64(7.0);
+        assert_eq!(s.to_f64(f.fma_full(x, y, z, false, true)), 8.0);
+        assert_eq!(s.to_f64(f.fma_full(x, y, z, true, true)), -22.0);
+        assert_eq!(s.to_f64(f.fma_full(x, y, z, true, false)), -8.0);
+    }
+
+    #[test]
+    fn format_parse_and_names() {
+        assert_eq!(Format::parse("p16"), Some(Format::Posit(super::super::P16)));
+        assert_eq!(Format::parse("fixed"), Some(Format::Fixed(FIXED16)));
+        assert_eq!(Format::parse("fixed(16,2)"), Some(Format::Fixed(FIXED16)));
+        assert_eq!(
+            Format::parse("posit(12,1)"),
+            Some(Format::Posit(PositSpec { ps: 12, es: 1 }))
+        );
+        assert_eq!(
+            Format::parse("fixed(12,3,1)"),
+            Some(Format::Fixed(FixedPositSpec { ps: 12, rf: 3, es: 1 }))
+        );
+        assert_eq!(Format::parse("fixed(4,2)"), None); // no fraction bits
+        assert_eq!(Format::parse("bogus"), None);
+        assert_eq!(Format::parse("fixed(16,2)").unwrap().name(), "fixed(16,2)");
+        assert_eq!(Format::parse("p8").unwrap().name(), "posit(8,1)");
+    }
+
+    #[test]
+    fn format_pattern_ops_delegate() {
+        let f = Format::Fixed(FIXED16);
+        let a = FIXED16.from_f64(2.5);
+        let b = FIXED16.from_f64(-7.0);
+        assert!(f.lt(b, a));
+        assert_eq!(f.cmp_max(a, b), a);
+        assert_eq!(f.cmp_min(a, b), b);
+        assert_eq!(f.sgnj(a, b), f.negate(a));
+        assert_eq!(f.classify(b), 1 << 1);
+        assert_eq!(f.classify(f.nar()), 1 << 9);
+        assert_eq!(f.quire_range(), (-19, 8));
+    }
+
+    #[test]
+    fn format_int_conversions() {
+        let f = Format::Fixed(FIXED16);
+        for v in [0i32, 1, -1, 2, 7, -20, 100] {
+            let p = f.from_i32(v);
+            assert_eq!(f.to_i32(p, RoundMode::Nearest), v, "v={v}");
+        }
+        // Above maxpos=255.875 saturates on encode, converts back clamped.
+        assert_eq!(f.to_f64(f.from_i32(1000)), FIXED16.to_f64(FIXED16.maxpos()));
+        let half = f.from_f64(2.5);
+        assert_eq!(f.to_i32(half, RoundMode::Nearest), 2);
+        assert_eq!(f.to_i32(half, RoundMode::Up), 3);
+        assert_eq!(f.to_u32(f.from_f64(-3.0), RoundMode::Nearest), 0);
+    }
+}

@@ -24,12 +24,14 @@ mod convert;
 mod decode;
 mod div;
 mod encode;
+pub mod fixed;
 mod mul;
 pub mod packed;
 pub mod quire;
 mod sqrt;
 
 pub use cmp::{classify, eq, ge, gt, le, lt, max as cmp_max, min as cmp_min, sgnj, sgnjn, sgnjx, total_cmp};
+pub use fixed::{FixedPositSpec, Format, FIXED16};
 pub use mul::fma_full;
 // Exact-arithmetic internals shared with the PVU's decode-once kernels
 // (crate-private: the unpacked `Real` algebra is not a public API).

@@ -11,18 +11,17 @@
 //! `maxpos²` down to `minpos²` plus 80 guard bits against carries —
 //! the standard's quire, generalized to any `(ps, es)`.
 
-use super::decode::decode;
-use super::encode::encode;
+use super::fixed::Format;
 use super::mul::real_mul;
 use super::{Decoded, PositSpec, Real};
 
 /// Number of carry-guard bits above `maxpos²`.
 const GUARD: u32 = 80;
 
-/// An exact accumulator for one posit format.
+/// An exact accumulator for one number format (posit or fixed-posit).
 #[derive(Clone, Debug)]
 pub struct Quire {
-    spec: PositSpec,
+    fmt: Format,
     /// Two's-complement little-endian limbs.
     limbs: Vec<u64>,
     /// Weight of bit 0 is `2^-offset`.
@@ -31,16 +30,24 @@ pub struct Quire {
 }
 
 impl Quire {
-    /// Fresh zero quire for a format.
+    /// Fresh zero quire for a posit format.
     pub fn new(spec: PositSpec) -> Self {
-        let m = spec.max_scale();
-        // Range: 2^(2m) down to 2^(-2m), plus guard and a sign bit.
-        let bits = (4 * m) as u32 + GUARD + 2;
+        Self::for_format(Format::Posit(spec))
+    }
+
+    /// Fresh zero quire for any serving format. Sized by the format's
+    /// value range: products span twice the lowest bit weight and twice
+    /// the highest binade (fixed-posits have an asymmetric range — their
+    /// minpos carries a full fraction below `min_scale`).
+    pub fn for_format(fmt: Format) -> Self {
+        let (low, high) = fmt.quire_range();
+        let offset = -2 * low;
+        let bits = (2 * high + offset) as u32 + GUARD + 2;
         let limbs = vec![0u64; bits.div_ceil(64) as usize];
         Quire {
-            spec,
+            fmt,
             limbs,
-            offset: 2 * m,
+            offset,
             nar: false,
         }
     }
@@ -116,9 +123,9 @@ impl Quire {
         self.add_shifted(r.frac, shift, r.sign);
     }
 
-    /// Accumulate a posit value exactly (`quire += p`).
+    /// Accumulate a value exactly (`quire += p`).
     pub fn add(&mut self, p: u32) {
-        self.add_decoded(&decode(self.spec, p));
+        self.add_decoded(&self.fmt.decode(p));
     }
 
     /// Accumulate an already-decoded value — the PVU's decode-once path:
@@ -148,8 +155,8 @@ impl Quire {
     /// Fused accumulate of an exact product (`quire += a · b`) — the
     /// quire's raison d'être: no rounding at all.
     pub fn add_product(&mut self, a: u32, b: u32) {
-        let da = decode(self.spec, a);
-        let db = decode(self.spec, b);
+        let da = self.fmt.decode(a);
+        let db = self.fmt.decode(b);
         match (da, db) {
             (Decoded::NaR, _) | (_, Decoded::NaR) => self.nar = true,
             (Decoded::Zero, _) | (_, Decoded::Zero) => {}
@@ -163,8 +170,8 @@ impl Quire {
 
     /// Subtract an exact product (`quire -= a · b`).
     pub fn sub_product(&mut self, a: u32, b: u32) {
-        let da = decode(self.spec, a);
-        let db = decode(self.spec, b);
+        let da = self.fmt.decode(a);
+        let db = self.fmt.decode(b);
         match (da, db) {
             (Decoded::NaR, _) | (_, Decoded::NaR) => self.nar = true,
             (Decoded::Zero, _) | (_, Decoded::Zero) => {}
@@ -180,7 +187,7 @@ impl Quire {
     /// whole accumulation chain.
     pub fn to_posit(&self) -> u32 {
         if self.nar {
-            return self.spec.nar();
+            return self.fmt.nar();
         }
         let negative = self.limbs.last().map(|&l| l >> 63 == 1).unwrap_or(false);
         // Magnitude: two's complement if negative.
@@ -203,7 +210,7 @@ impl Quire {
             }
         }
         let msb = match msb {
-            None => return self.spec.zero(),
+            None => return self.fmt.zero(),
             Some(m) => m,
         };
         // Extract the top <=80 bits as the fraction, OR the rest into sticky.
@@ -225,8 +232,8 @@ impl Quire {
         }
         let scale = msb as i64 - self.offset;
         match Real::new(negative, scale, frac, keep, sticky) {
-            Some(r) => encode(self.spec, &r),
-            None => self.spec.zero(),
+            Some(r) => self.fmt.encode(&r),
+            None => self.fmt.zero(),
         }
     }
 }
@@ -293,6 +300,30 @@ mod tests {
         let mut q = Quire::new(spec);
         q.add_product(spec.minpos(), spec.minpos());
         assert_eq!(q.to_posit(), spec.minpos()); // minpos² rounds up to minpos
+    }
+
+    #[test]
+    fn fixed_posit_quire() {
+        use super::super::fixed::{Format, FIXED16};
+        let f = Format::Fixed(FIXED16);
+        let mut q = Quire::for_format(f);
+        let xs = [1.5f64, -0.25, 100.0, 0.003, -99.0];
+        for &x in &xs {
+            q.add(f.from_f64(x));
+        }
+        // Exact sum of the fixed-posit-rounded inputs.
+        let exact: f64 = xs.iter().map(|&x| f.to_f64(f.from_f64(x))).sum();
+        assert_eq!(q.to_posit(), f.from_f64(exact));
+        // Extremes: maxpos² spam saturates at encode, minpos² (whose low
+        // bits sit below 2·min_scale − 2·fs) rounds up to minpos.
+        let mut q = Quire::for_format(f);
+        for _ in 0..1000 {
+            q.add_product(f.maxpos(), f.maxpos());
+        }
+        assert_eq!(q.to_posit(), f.maxpos());
+        let mut q = Quire::for_format(f);
+        q.add_product(f.minpos(), f.minpos());
+        assert_eq!(q.to_posit(), f.minpos());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! and extends it to whole slices, fused dots, and gemv/gemm shapes.
 
 use crate::isa::{cost, CostModel, FOp};
-use crate::posit::PositSpec;
+use crate::posit::{Format, PositSpec};
 
 /// Cycle model of the PVU for one posit format.
 #[derive(Clone, Copy, Debug)]
@@ -31,6 +31,14 @@ impl PvuCost {
             lanes: (32 / spec.ps).max(1) as u64,
             scalar: cost::posar(spec.ps),
         }
+    }
+
+    /// Cost model for any serving format. Lane count and per-lane
+    /// latency depend only on the bit width, so a fixed-posit costs
+    /// exactly what a same-width posit does (the decoder is regime-free
+    /// but the datapath slot is sized by `ps` either way).
+    pub fn for_format(fmt: Format) -> Self {
+        Self::new(fmt.pattern_spec())
     }
 
     /// Packed words needed for `n` elements.

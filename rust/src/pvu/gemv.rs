@@ -15,12 +15,16 @@
 //! is identical regardless of blocking — and the decode table is built
 //! from the scalar decoder, so every MAC sees byte-identical operands.
 //!
+//! Every kernel has a `*_fmt` variant taking a [`Format`], so fixed-posit
+//! slices get the same fused accumulation (the quire widens to cover the
+//! fixed family's asymmetric scale range — see `Format::quire_range`).
+//!
 //! The scalar-core reference for bit-exactness is a per-output
 //! [`Quire::add_product`] loop (same single rounding, pattern-level
 //! decode per MAC); `rust/tests/pvu_exact.rs` enforces equality.
 
 use super::simd::{self, DecodeLut, SimdBackend};
-use crate::posit::{decode, Decoded, PositSpec, Quire};
+use crate::posit::{Decoded, Format, PositSpec, Quire};
 
 /// Block size for the table-decode pass of the SIMD quire path: small
 /// enough that two blocks of [`Decoded`] stay L1-resident, large enough
@@ -29,24 +33,34 @@ const BLOCK: usize = 64;
 
 /// Quire-fused dot product `Σ a[i]·b[i]`, rounded once.
 pub fn dot(spec: PositSpec, a: &[u32], b: &[u32]) -> u32 {
-    dot_with(simd::active(), spec, a, b)
+    dot_fmt_with(simd::active(), Format::Posit(spec), a, b)
 }
 
 /// [`dot`] on an explicit SIMD backend.
 pub fn dot_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> u32 {
+    dot_fmt_with(be, Format::Posit(spec), a, b)
+}
+
+/// Quire-fused dot product for any serving format.
+pub fn dot_fmt(fmt: Format, a: &[u32], b: &[u32]) -> u32 {
+    dot_fmt_with(simd::active(), fmt, a, b)
+}
+
+/// [`dot_fmt`] on an explicit SIMD backend.
+pub fn dot_fmt_with(be: SimdBackend, fmt: Format, a: &[u32], b: &[u32]) -> u32 {
     assert_eq!(a.len(), b.len(), "dot length mismatch");
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return dot_blocked(spec, &l, a, b);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return dot_blocked(fmt, &l, a, b);
     }
-    let mut q = Quire::new(spec);
+    let mut q = Quire::for_format(fmt);
     for (&x, &y) in a.iter().zip(b) {
-        q.add_product_decoded(&decode(spec, x), &decode(spec, y));
+        q.add_product_decoded(&fmt.decode(x), &fmt.decode(y));
     }
     q.to_posit()
 }
 
-fn dot_blocked(spec: PositSpec, l: &DecodeLut, a: &[u32], b: &[u32]) -> u32 {
-    let mut q = Quire::new(spec);
+fn dot_blocked(fmt: Format, l: &DecodeLut, a: &[u32], b: &[u32]) -> u32 {
+    let mut q = Quire::for_format(fmt);
     let mut da: Vec<Decoded> = Vec::with_capacity(BLOCK);
     let mut db: Vec<Decoded> = Vec::with_capacity(BLOCK);
     for (ca, cb) in a.chunks(BLOCK).zip(b.chunks(BLOCK)) {
@@ -73,7 +87,7 @@ pub fn gemv(
     rows: usize,
     cols: usize,
 ) -> Vec<u32> {
-    gemv_with(simd::active(), spec, w, x, bias, rows, cols)
+    gemv_fmt_with(simd::active(), Format::Posit(spec), w, x, bias, rows, cols)
 }
 
 /// [`gemv`] on an explicit SIMD backend.
@@ -86,25 +100,50 @@ pub fn gemv_with(
     rows: usize,
     cols: usize,
 ) -> Vec<u32> {
+    gemv_fmt_with(be, Format::Posit(spec), w, x, bias, rows, cols)
+}
+
+/// Quire-fused `y = W·x + bias` for any serving format.
+pub fn gemv_fmt(
+    fmt: Format,
+    w: &[u32],
+    x: &[u32],
+    bias: Option<&[u32]>,
+    rows: usize,
+    cols: usize,
+) -> Vec<u32> {
+    gemv_fmt_with(simd::active(), fmt, w, x, bias, rows, cols)
+}
+
+/// [`gemv_fmt`] on an explicit SIMD backend.
+pub fn gemv_fmt_with(
+    be: SimdBackend,
+    fmt: Format,
+    w: &[u32],
+    x: &[u32],
+    bias: Option<&[u32]>,
+    rows: usize,
+    cols: usize,
+) -> Vec<u32> {
     assert_eq!(w.len(), rows * cols, "gemv weight shape mismatch");
     assert_eq!(x.len(), cols, "gemv input length mismatch");
     if let Some(b) = bias {
         assert_eq!(b.len(), rows, "gemv bias length mismatch");
     }
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return gemv_blocked(spec, &l, w, x, bias, rows, cols);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return gemv_blocked(fmt, &l, w, x, bias, rows, cols);
     }
-    let dx: Vec<Decoded> = x.iter().map(|&v| decode(spec, v)).collect();
+    let dx: Vec<Decoded> = x.iter().map(|&v| fmt.decode(v)).collect();
     let mut out = Vec::with_capacity(rows);
-    let mut q = Quire::new(spec);
+    let mut q = Quire::for_format(fmt);
     for r in 0..rows {
         q.clear();
         if let Some(b) = bias {
-            q.add_decoded(&decode(spec, b[r]));
+            q.add_decoded(&fmt.decode(b[r]));
         }
         let row = &w[r * cols..(r + 1) * cols];
         for (wv, xv) in row.iter().zip(&dx) {
-            q.add_product_decoded(&decode(spec, *wv), xv);
+            q.add_product_decoded(&fmt.decode(*wv), xv);
         }
         out.push(q.to_posit());
     }
@@ -112,7 +151,7 @@ pub fn gemv_with(
 }
 
 fn gemv_blocked(
-    spec: PositSpec,
+    fmt: Format,
     l: &DecodeLut,
     w: &[u32],
     x: &[u32],
@@ -122,7 +161,7 @@ fn gemv_blocked(
 ) -> Vec<u32> {
     let dx: Vec<Decoded> = x.iter().map(|&v| l.decoded(v)).collect();
     let mut out = Vec::with_capacity(rows);
-    let mut q = Quire::new(spec);
+    let mut q = Quire::for_format(fmt);
     let mut dw: Vec<Decoded> = Vec::with_capacity(BLOCK);
     for r in 0..rows {
         q.clear();
@@ -148,7 +187,7 @@ fn gemv_blocked(
 /// decode-once amortization at its strongest; SIMD backends run those
 /// two decode passes through the decode table).
 pub fn gemm(spec: PositSpec, a: &[u32], b: &[u32], m: usize, k: usize, n: usize) -> Vec<u32> {
-    gemm_with(simd::active(), spec, a, b, m, k, n)
+    gemm_fmt_with(simd::active(), Format::Posit(spec), a, b, m, k, n)
 }
 
 /// [`gemm`] on an explicit SIMD backend.
@@ -161,20 +200,38 @@ pub fn gemm_with(
     k: usize,
     n: usize,
 ) -> Vec<u32> {
+    gemm_fmt_with(be, Format::Posit(spec), a, b, m, k, n)
+}
+
+/// Quire-fused `C = A·B` for any serving format.
+pub fn gemm_fmt(fmt: Format, a: &[u32], b: &[u32], m: usize, k: usize, n: usize) -> Vec<u32> {
+    gemm_fmt_with(simd::active(), fmt, a, b, m, k, n)
+}
+
+/// [`gemm_fmt`] on an explicit SIMD backend.
+pub fn gemm_fmt_with(
+    be: SimdBackend,
+    fmt: Format,
+    a: &[u32],
+    b: &[u32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<u32> {
     assert_eq!(a.len(), m * k, "gemm A shape mismatch");
     assert_eq!(b.len(), k * n, "gemm B shape mismatch");
-    let (da, db): (Vec<Decoded>, Vec<Decoded>) = match simd::lanes_lut(be, spec) {
+    let (da, db): (Vec<Decoded>, Vec<Decoded>) = match simd::lanes_lut_fmt(be, fmt) {
         Some(l) => (
             a.iter().map(|&v| l.decoded(v)).collect(),
             b.iter().map(|&v| l.decoded(v)).collect(),
         ),
         None => (
-            a.iter().map(|&v| decode(spec, v)).collect(),
-            b.iter().map(|&v| decode(spec, v)).collect(),
+            a.iter().map(|&v| fmt.decode(v)).collect(),
+            b.iter().map(|&v| fmt.decode(v)).collect(),
         ),
     };
     let mut out = Vec::with_capacity(m * n);
-    let mut q = Quire::new(spec);
+    let mut q = Quire::for_format(fmt);
     for i in 0..m {
         let arow = &da[i * k..(i + 1) * k];
         for j in 0..n {
@@ -192,7 +249,7 @@ pub fn gemm_with(
 mod tests {
     use super::*;
     use crate::data::Rng;
-    use crate::posit::{self, P16, P32, P8};
+    use crate::posit::{self, FIXED16, P16, P32, P8};
 
     fn operands(spec: PositSpec, seed: u64, n: usize) -> Vec<u32> {
         let mut rng = Rng::new(seed);
@@ -213,6 +270,22 @@ mod tests {
                 }
                 assert_eq!(dot_with(be, spec, &a, &b), q.to_posit(), "{be:?} {spec:?}");
             }
+        }
+    }
+
+    #[test]
+    fn fixed_dot_matches_scalar_quire_reference_all_backends() {
+        let fmt = Format::Fixed(FIXED16);
+        let mut rng = Rng::new(0xF1D0);
+        let a: Vec<u32> = (0..97).map(|_| fmt.from_f64(rng.range(-2.0, 2.0))).collect();
+        let b: Vec<u32> = (0..97).map(|_| fmt.from_f64(rng.range(-2.0, 2.0))).collect();
+        let mut q = Quire::for_format(fmt);
+        for (&x, &y) in a.iter().zip(&b) {
+            q.add_product_decoded(&fmt.decode(x), &fmt.decode(y));
+        }
+        let want = q.to_posit();
+        for be in simd::available() {
+            assert_eq!(dot_fmt_with(be, fmt, &a, &b), want, "{be:?}");
         }
     }
 

@@ -79,13 +79,19 @@ pub mod simd;
 pub mod vector;
 
 pub use cost::PvuCost;
-pub use gemv::{dot, dot_with, gemm, gemm_with, gemv, gemv_with};
+pub use gemv::{
+    dot, dot_fmt, dot_fmt_with, dot_with, gemm, gemm_fmt, gemm_fmt_with, gemm_with, gemv,
+    gemv_fmt, gemv_fmt_with, gemv_with,
+};
 pub use lut::{p8_tables, verify_p8_luts, P8Tables};
 pub use simd::{SimdBackend, SimdChoice};
 pub use vector::{
-    vadd, vadd_with, vaxpy, vaxpy_with, vdiv, vdiv_with, vfma, vfma_with, vfrom_f32,
-    vfrom_f32_into, vmax, vmax_with, vmul, vmul_with, vrelu, vrelu_with, vscale, vscale_with,
-    vsub, vsub_with, vsubs, vsubs_with, vto_f32, vto_f32_into, vto_f32_with,
+    vadd, vadd_fmt, vadd_fmt_with, vadd_with, vaxpy, vaxpy_with, vdiv, vdiv_fmt, vdiv_fmt_with,
+    vdiv_with, vfma, vfma_fmt, vfma_fmt_with, vfma_with, vfrom_f32, vfrom_f32_fmt,
+    vfrom_f32_fmt_into, vfrom_f32_into, vmax, vmax_fmt, vmax_fmt_with, vmax_with, vmul, vmul_fmt,
+    vmul_fmt_with, vmul_with, vrelu, vrelu_fmt, vrelu_fmt_with, vrelu_with, vscale, vscale_with,
+    vsub, vsub_fmt, vsub_fmt_with, vsub_with, vsubs, vsubs_with, vto_f32, vto_f32_fmt,
+    vto_f32_fmt_into, vto_f32_fmt_with, vto_f32_into, vto_f32_with,
 };
 
 #[cfg(test)]

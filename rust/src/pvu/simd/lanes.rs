@@ -10,20 +10,20 @@
 //! plus the differential fuzz suite).
 
 use super::{real_of, DecEntry, DecodeLut};
-use crate::posit::{encode, real_add, real_div, real_mul, PositSpec};
+use crate::posit::{real_add, real_div, real_mul, Format};
 
 /// One add/sub on table entries — `posit::addsub`'s ladder (raw `a`/`b`
 /// patterns feed the zero cases, exactly like the scalar path).
 #[inline]
-fn addsub_entry(spec: PositSpec, ea: DecEntry, eb: DecEntry, a: u32, b: u32, sub: bool) -> u32 {
+fn addsub_entry(fmt: Format, ea: DecEntry, eb: DecEntry, a: u32, b: u32, sub: bool) -> u32 {
     if ea.is_nar() || eb.is_nar() {
-        return spec.nar();
+        return fmt.nar();
     }
     match (ea.is_zero(), eb.is_zero()) {
-        (true, true) => spec.zero(),
+        (true, true) => fmt.zero(),
         (true, false) => {
             if sub {
-                spec.negate(b)
+                fmt.negate(b)
             } else {
                 b
             }
@@ -34,8 +34,8 @@ fn addsub_entry(spec: PositSpec, ea: DecEntry, eb: DecEntry, a: u32, b: u32, sub
             let mut rb = real_of(eb);
             rb.sign ^= sub;
             match real_add(&ra, &rb) {
-                Some(r) => encode(spec, &r),
-                None => spec.zero(),
+                Some(r) => fmt.encode(&r),
+                None => fmt.zero(),
             }
         }
     }
@@ -43,37 +43,37 @@ fn addsub_entry(spec: PositSpec, ea: DecEntry, eb: DecEntry, a: u32, b: u32, sub
 
 /// One multiply on table entries (`posit::mul`'s ladder).
 #[inline]
-fn mul_entry(spec: PositSpec, ea: DecEntry, eb: DecEntry) -> u32 {
+fn mul_entry(fmt: Format, ea: DecEntry, eb: DecEntry) -> u32 {
     if ea.is_nar() || eb.is_nar() {
-        return spec.nar();
+        return fmt.nar();
     }
     if ea.is_zero() || eb.is_zero() {
-        return spec.zero();
+        return fmt.zero();
     }
-    encode(spec, &real_mul(&real_of(ea), &real_of(eb)))
+    fmt.encode(&real_mul(&real_of(ea), &real_of(eb)))
 }
 
 /// One divide on table entries (`posit::div`'s ladder — `x/0` is NaR).
 #[inline]
-fn div_entry(spec: PositSpec, ea: DecEntry, eb: DecEntry) -> u32 {
+fn div_entry(fmt: Format, ea: DecEntry, eb: DecEntry) -> u32 {
     if ea.is_nar() || eb.is_nar() {
-        return spec.nar();
+        return fmt.nar();
     }
     if eb.is_zero() {
-        return spec.nar();
+        return fmt.nar();
     }
     if ea.is_zero() {
-        return spec.zero();
+        return fmt.zero();
     }
-    encode(spec, &real_div(spec, &real_of(ea), &real_of(eb)))
+    fmt.encode(&real_div(fmt.ps(), &real_of(ea), &real_of(eb)))
 }
 
 /// One fused multiply-add on table entries (`posit::fma_full` with both
 /// negation flags off — single rounding).
 #[inline]
-fn fma_entry(spec: PositSpec, ea: DecEntry, eb: DecEntry, ec: DecEntry) -> u32 {
+fn fma_entry(fmt: Format, ea: DecEntry, eb: DecEntry, ec: DecEntry) -> u32 {
     if ea.is_nar() || eb.is_nar() || ec.is_nar() {
-        return spec.nar();
+        return fmt.nar();
     }
     let prod = if ea.is_num() && eb.is_num() {
         Some(real_mul(&real_of(ea), &real_of(eb)))
@@ -82,66 +82,66 @@ fn fma_entry(spec: PositSpec, ea: DecEntry, eb: DecEntry, ec: DecEntry) -> u32 {
     };
     let addend = if ec.is_num() { Some(real_of(ec)) } else { None };
     match (prod, addend) {
-        (None, None) => spec.zero(),
-        (Some(p), None) => encode(spec, &p),
-        (None, Some(c)) => encode(spec, &c),
+        (None, None) => fmt.zero(),
+        (Some(p), None) => fmt.encode(&p),
+        (None, Some(c)) => fmt.encode(&c),
         (Some(p), Some(c)) => match real_add(&p, &c) {
-            Some(r) => encode(spec, &r),
-            None => spec.zero(),
+            Some(r) => fmt.encode(&r),
+            None => fmt.zero(),
         },
     }
 }
 
 /// Elementwise `a ± b` through the decode table.
-pub(crate) fn vaddsub(spec: PositSpec, l: &DecodeLut, a: &[u32], b: &[u32], sub: bool) -> Vec<u32> {
+pub(crate) fn vaddsub(fmt: Format, l: &DecodeLut, a: &[u32], b: &[u32], sub: bool) -> Vec<u32> {
     a.iter()
         .zip(b)
-        .map(|(&x, &y)| addsub_entry(spec, l.entry(x), l.entry(y), x, y, sub))
+        .map(|(&x, &y)| addsub_entry(fmt, l.entry(x), l.entry(y), x, y, sub))
         .collect()
 }
 
 /// Elementwise `a · b` through the decode table.
-pub(crate) fn vmul(spec: PositSpec, l: &DecodeLut, a: &[u32], b: &[u32]) -> Vec<u32> {
+pub(crate) fn vmul(fmt: Format, l: &DecodeLut, a: &[u32], b: &[u32]) -> Vec<u32> {
     a.iter()
         .zip(b)
-        .map(|(&x, &y)| mul_entry(spec, l.entry(x), l.entry(y)))
+        .map(|(&x, &y)| mul_entry(fmt, l.entry(x), l.entry(y)))
         .collect()
 }
 
 /// Elementwise `a / b` through the decode table.
-pub(crate) fn vdiv(spec: PositSpec, l: &DecodeLut, a: &[u32], b: &[u32]) -> Vec<u32> {
+pub(crate) fn vdiv(fmt: Format, l: &DecodeLut, a: &[u32], b: &[u32]) -> Vec<u32> {
     a.iter()
         .zip(b)
-        .map(|(&x, &y)| div_entry(spec, l.entry(x), l.entry(y)))
+        .map(|(&x, &y)| div_entry(fmt, l.entry(x), l.entry(y)))
         .collect()
 }
 
 /// Elementwise fused `a·b + c` through the decode table.
-pub(crate) fn vfma(spec: PositSpec, l: &DecodeLut, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
+pub(crate) fn vfma(fmt: Format, l: &DecodeLut, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
     (0..a.len())
-        .map(|i| fma_entry(spec, l.entry(a[i]), l.entry(b[i]), l.entry(c[i])))
+        .map(|i| fma_entry(fmt, l.entry(a[i]), l.entry(b[i]), l.entry(c[i])))
         .collect()
 }
 
 /// `alpha·x + y` with the alpha entry loaded once for the whole slice.
-pub(crate) fn vaxpy(spec: PositSpec, l: &DecodeLut, alpha: u32, x: &[u32], y: &[u32]) -> Vec<u32> {
+pub(crate) fn vaxpy(fmt: Format, l: &DecodeLut, alpha: u32, x: &[u32], y: &[u32]) -> Vec<u32> {
     let ea = l.entry(alpha);
     x.iter()
         .zip(y)
-        .map(|(&xi, &yi)| fma_entry(spec, ea, l.entry(xi), l.entry(yi)))
+        .map(|(&xi, &yi)| fma_entry(fmt, ea, l.entry(xi), l.entry(yi)))
         .collect()
 }
 
 /// `alpha·x` with the alpha entry loaded once.
-pub(crate) fn vscale(spec: PositSpec, l: &DecodeLut, alpha: u32, x: &[u32]) -> Vec<u32> {
+pub(crate) fn vscale(fmt: Format, l: &DecodeLut, alpha: u32, x: &[u32]) -> Vec<u32> {
     let ea = l.entry(alpha);
-    x.iter().map(|&xi| mul_entry(spec, ea, l.entry(xi))).collect()
+    x.iter().map(|&xi| mul_entry(fmt, ea, l.entry(xi))).collect()
 }
 
 /// `x - s` with the subtrahend entry loaded once.
-pub(crate) fn vsubs(spec: PositSpec, l: &DecodeLut, x: &[u32], s: u32) -> Vec<u32> {
+pub(crate) fn vsubs(fmt: Format, l: &DecodeLut, x: &[u32], s: u32) -> Vec<u32> {
     let es = l.entry(s);
     x.iter()
-        .map(|&xi| addsub_entry(spec, l.entry(xi), es, xi, s, true))
+        .map(|&xi| addsub_entry(fmt, l.entry(xi), es, xi, s, true))
         .collect()
 }

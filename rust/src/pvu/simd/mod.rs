@@ -28,7 +28,7 @@
 //! as `simd_backend`; `repro pvu --simd-report` prints measured vs
 //! modeled speedups. See `docs/SIMD.md`.
 
-use crate::posit::{decode, Decoded, PositSpec, Real};
+use crate::posit::{Decoded, Format, PositSpec, Real};
 use std::sync::{Arc, Mutex, OnceLock};
 
 #[cfg(target_arch = "x86_64")]
@@ -211,21 +211,21 @@ pub(crate) fn real_of(e: DecEntry) -> Real {
     }
 }
 
-/// A full decode table for one `(ps, es)` spec: pattern → unpacked
-/// fields, built by calling the scalar [`decode`] once per pattern.
+/// A full decode table for one format (posit or fixed-posit): pattern →
+/// unpacked fields, built by calling the scalar decoder once per pattern.
 pub(crate) struct DecodeLut {
-    spec: PositSpec,
+    fmt: Format,
     mask: u32,
     entries: Vec<DecEntry>,
 }
 
 impl DecodeLut {
-    fn build(spec: PositSpec) -> Self {
-        assert!(spec.ps <= MAX_TABLE_PS, "decode LUT capped at ps={MAX_TABLE_PS}");
-        let n = spec.mask() as usize + 1;
+    fn build(fmt: Format) -> Self {
+        assert!(fmt.ps() <= MAX_TABLE_PS, "decode LUT capped at ps={MAX_TABLE_PS}");
+        let n = fmt.mask() as usize + 1;
         let mut entries = Vec::with_capacity(n);
         for bits in 0..n as u32 {
-            entries.push(match decode(spec, bits) {
+            entries.push(match fmt.decode(bits) {
                 Decoded::Zero => DecEntry { frac: 0, scale: 0, fs: 0, tag: TAG_ZERO },
                 Decoded::NaR => DecEntry { frac: 0, scale: 0, fs: 0, tag: TAG_NAR },
                 Decoded::Num(r) => {
@@ -245,7 +245,7 @@ impl DecodeLut {
                 }
             });
         }
-        DecodeLut { spec, mask: spec.mask(), entries }
+        DecodeLut { fmt, mask: fmt.mask(), entries }
     }
 
     /// The decoded fields of `bits` (masked to the spec width, like the
@@ -270,30 +270,40 @@ impl DecodeLut {
 
 static DECODE_LUTS: OnceLock<Mutex<Vec<Arc<DecodeLut>>>> = OnceLock::new();
 
-/// The process-wide decode table for `spec`, built on first use;
+/// The process-wide decode table for a format, built on first use;
 /// `None` for formats wider than [`MAX_TABLE_PS`].
-pub(crate) fn decode_lut(spec: PositSpec) -> Option<Arc<DecodeLut>> {
-    if spec.ps > MAX_TABLE_PS {
+pub(crate) fn decode_lut_fmt(fmt: Format) -> Option<Arc<DecodeLut>> {
+    if fmt.ps() > MAX_TABLE_PS {
         return None;
     }
     let cache = DECODE_LUTS.get_or_init(|| Mutex::new(Vec::new()));
     let mut g = cache.lock().expect("decode LUT cache poisoned");
-    if let Some(l) = g.iter().find(|l| l.spec == spec) {
+    if let Some(l) = g.iter().find(|l| l.fmt == fmt) {
         return Some(Arc::clone(l));
     }
-    let l = Arc::new(DecodeLut::build(spec));
+    let l = Arc::new(DecodeLut::build(fmt));
     g.push(Arc::clone(&l));
     Some(l)
+}
+
+/// The process-wide decode table for a posit spec (see [`decode_lut_fmt`]).
+pub(crate) fn decode_lut(spec: PositSpec) -> Option<Arc<DecodeLut>> {
+    decode_lut_fmt(Format::Posit(spec))
 }
 
 /// The decode table to use for a backend: `None` on the scalar backend
 /// (which is defined as the pure decode-once loops — the measured
 /// baseline) and for wide formats.
-pub(crate) fn lanes_lut(be: SimdBackend, spec: PositSpec) -> Option<Arc<DecodeLut>> {
+pub(crate) fn lanes_lut_fmt(be: SimdBackend, fmt: Format) -> Option<Arc<DecodeLut>> {
     if be == SimdBackend::Scalar {
         return None;
     }
-    decode_lut(spec)
+    decode_lut_fmt(fmt)
+}
+
+/// Posit-spec convenience wrapper over [`lanes_lut_fmt`].
+pub(crate) fn lanes_lut(be: SimdBackend, spec: PositSpec) -> Option<Arc<DecodeLut>> {
+    lanes_lut_fmt(be, Format::Posit(spec))
 }
 
 // ---- dispatched low-level kernels -------------------------------------
@@ -323,11 +333,12 @@ pub(crate) fn lut_map2(be: SimdBackend, table: &[u8], a: &[u32], b: &[u32]) -> V
 }
 
 /// Elementwise `max(x, 0)` as a pure pattern test. The masked pattern
-/// XOR-flipped by the sign bit orders exactly like the posit values, so
-/// `x > 0` is one unsigned compare — no decode on any backend.
-pub(crate) fn relu(be: SimdBackend, spec: PositSpec, x: &[u32]) -> Vec<u32> {
-    let mask = spec.mask();
-    let flip = 1u32 << (spec.ps - 1);
+/// XOR-flipped by the sign bit orders exactly like the values in both
+/// format families, so `x > 0` is one unsigned compare — no decode on
+/// any backend.
+pub(crate) fn relu(be: SimdBackend, fmt: Format, x: &[u32]) -> Vec<u32> {
+    let mask = fmt.mask();
+    let flip = 1u32 << (fmt.ps() - 1);
     let mut out = vec![0u32; x.len()];
     #[cfg(target_arch = "x86_64")]
     if be == SimdBackend::Avx2 {
@@ -351,10 +362,10 @@ pub(crate) fn relu(be: SimdBackend, spec: PositSpec, x: &[u32]) -> Vec<u32> {
 /// Elementwise `max(a, b)` as a pattern compare + blend of the original
 /// lanes (ties and NaR resolve to `b`, exactly like
 /// [`crate::posit::cmp_max`] — NaR is the minimum pattern).
-pub(crate) fn max(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+pub(crate) fn max(be: SimdBackend, fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
     debug_assert_eq!(a.len(), b.len());
-    let mask = spec.mask();
-    let flip = 1u32 << (spec.ps - 1);
+    let mask = fmt.mask();
+    let flip = 1u32 << (fmt.ps() - 1);
     let mut out = vec![0u32; a.len()];
     #[cfg(target_arch = "x86_64")]
     if be == SimdBackend::Avx2 {
@@ -396,7 +407,7 @@ pub(crate) fn p8_to_f32_fill(be: SimdBackend, table: &[f32], x: &[u32], out: &mu
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::posit::{P16, P8};
+    use crate::posit::{decode, P16, P8};
 
     #[test]
     fn choice_parsing_covers_every_documented_spelling() {
@@ -458,20 +469,45 @@ mod tests {
 
     #[test]
     fn pattern_kernels_match_scalar_core_on_every_backend() {
-        let specs = [P8, P16, crate::posit::P32, PositSpec::new(12, 1)];
+        let fmts = [
+            Format::Posit(P8),
+            Format::Posit(P16),
+            Format::Posit(crate::posit::P32),
+            Format::Posit(PositSpec::new(12, 1)),
+            Format::Fixed(crate::posit::FIXED16),
+        ];
         for be in available() {
-            for spec in specs {
-                let mut rng = crate::data::Rng::new(0x51AD + spec.ps as u64);
-                let a: Vec<u32> = (0..257).map(|_| rng.bits32(spec.ps)).collect();
-                let mut b: Vec<u32> = (0..257).map(|_| rng.bits32(spec.ps)).collect();
-                b[0] = spec.nar();
+            for fmt in fmts {
+                let mut rng = crate::data::Rng::new(0x51AD + fmt.ps() as u64);
+                let a: Vec<u32> = (0..257).map(|_| rng.bits32(fmt.ps())).collect();
+                let mut b: Vec<u32> = (0..257).map(|_| rng.bits32(fmt.ps())).collect();
+                b[0] = fmt.nar();
                 b[1] = a[1]; // tie resolves to b on every path
-                let r = relu(be, spec, &a);
-                let m = max(be, spec, &a, &b);
+                let r = relu(be, fmt, &a);
+                let m = max(be, fmt, &a, &b);
                 for i in 0..a.len() {
-                    assert_eq!(r[i], crate::posit::cmp_max(spec, a[i], 0), "{be:?} {spec:?} {i}");
-                    assert_eq!(m[i], crate::posit::cmp_max(spec, a[i], b[i]), "{be:?} {spec:?} {i}");
+                    assert_eq!(r[i], fmt.cmp_max(a[i], 0), "{be:?} {fmt:?} {i}");
+                    assert_eq!(m[i], fmt.cmp_max(a[i], b[i]), "{be:?} {fmt:?} {i}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_decode_lut_matches_scalar_decoder() {
+        let fmt = Format::Fixed(crate::posit::FIXED16);
+        let l = decode_lut_fmt(fmt).expect("16-bit fixed-posit has a decode table");
+        for bits in 0..=fmt.mask() {
+            match (fmt.decode(bits), l.decoded(bits)) {
+                (Decoded::Zero, Decoded::Zero) | (Decoded::NaR, Decoded::NaR) => {}
+                (Decoded::Num(w), Decoded::Num(g)) => {
+                    assert_eq!(
+                        (w.sign, w.scale, w.frac, w.fs, w.sticky),
+                        (g.sign, g.scale, g.frac, g.fs, g.sticky),
+                        "{bits:#06x}"
+                    );
+                }
+                _ => panic!("tag mismatch for fixed(16,2) {bits:#06x}"),
             }
         }
     }

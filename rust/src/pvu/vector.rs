@@ -1,4 +1,5 @@
-//! Decode-once vector kernels for arbitrary `(ps, es)` slices.
+//! Decode-once vector kernels for arbitrary `(ps, es)` and fixed-posit
+//! slices.
 //!
 //! The scalar core's binary ops decode both operands and encode the
 //! result on *every* call. These kernels batch that work over a slice:
@@ -12,95 +13,137 @@
 //! ([`super::simd::active`], overridable with `PVU_SIMD`): Posit(8,1)
 //! slices go to the [`super::lut`] tables (gathered on AVX2 — the §V-C
 //! "four Posit(8,1) per instruction" fast path in software form),
-//! `ps ≤ 16` formats to the table-split decode lanes of
-//! [`super::simd::lanes`], and everything else to the portable
+//! `ps ≤ 16` formats — fixed-posits included — to the table-split decode
+//! lanes of [`super::simd::lanes`], and everything else to the portable
 //! decode-once loops below — which are also, verbatim, the `Scalar`
 //! backend. The `*_with` variants take an explicit backend so benches
-//! and the exactness suite can pin both paths side by side.
+//! and the exactness suite can pin both paths side by side. The `*_fmt`
+//! variants take a [`Format`] and serve both families; the bare-`spec`
+//! entry points are posit conveniences that delegate to them.
 
 use super::lut::p8_tables;
 use super::simd::{self, SimdBackend};
-use crate::posit::{
-    self, decode, encode, real_add, real_div, real_mul, Decoded, PositSpec, Real, P8,
-};
+use crate::posit::{self, real_add, real_div, real_mul, Decoded, Format, PositSpec, Real, P8};
+
+const P8F: Format = Format::Posit(P8);
 
 /// Elementwise `a[i] + b[i]` (bit-identical to [`posit::add`]).
 pub fn vadd(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
-    vadd_with(simd::active(), spec, a, b)
+    vadd_fmt_with(simd::active(), Format::Posit(spec), a, b)
 }
 
 /// [`vadd`] on an explicit SIMD backend.
 pub fn vadd_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vadd_fmt_with(be, Format::Posit(spec), a, b)
+}
+
+/// Elementwise `a[i] + b[i]` for any serving format.
+pub fn vadd_fmt(fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vadd_fmt_with(simd::active(), fmt, a, b)
+}
+
+/// [`vadd_fmt`] on an explicit SIMD backend.
+pub fn vadd_fmt_with(be: SimdBackend, fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vadd length mismatch");
-    if spec == P8 {
+    if fmt == P8F {
         return simd::lut_map2(be, p8_tables().add_raw(), a, b);
     }
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return simd::lanes::vaddsub(spec, &l, a, b, false);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return simd::lanes::vaddsub(fmt, &l, a, b, false);
     }
     a.iter()
         .zip(b)
-        .map(|(&x, &y)| addsub_one(spec, &decode(spec, x), &decode(spec, y), x, y, false))
+        .map(|(&x, &y)| addsub_one(fmt, &fmt.decode(x), &fmt.decode(y), x, y, false))
         .collect()
 }
 
 /// Elementwise `a[i] - b[i]` (bit-identical to [`posit::sub`]).
 pub fn vsub(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
-    vsub_with(simd::active(), spec, a, b)
+    vsub_fmt_with(simd::active(), Format::Posit(spec), a, b)
 }
 
 /// [`vsub`] on an explicit SIMD backend.
 pub fn vsub_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vsub_fmt_with(be, Format::Posit(spec), a, b)
+}
+
+/// Elementwise `a[i] - b[i]` for any serving format.
+pub fn vsub_fmt(fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vsub_fmt_with(simd::active(), fmt, a, b)
+}
+
+/// [`vsub_fmt`] on an explicit SIMD backend.
+pub fn vsub_fmt_with(be: SimdBackend, fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vsub length mismatch");
-    if spec == P8 {
+    if fmt == P8F {
         return simd::lut_map2(be, p8_tables().sub_raw(), a, b);
     }
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return simd::lanes::vaddsub(spec, &l, a, b, true);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return simd::lanes::vaddsub(fmt, &l, a, b, true);
     }
     a.iter()
         .zip(b)
-        .map(|(&x, &y)| addsub_one(spec, &decode(spec, x), &decode(spec, y), x, y, true))
+        .map(|(&x, &y)| addsub_one(fmt, &fmt.decode(x), &fmt.decode(y), x, y, true))
         .collect()
 }
 
 /// Elementwise `a[i] · b[i]` (bit-identical to [`posit::mul`]).
 pub fn vmul(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
-    vmul_with(simd::active(), spec, a, b)
+    vmul_fmt_with(simd::active(), Format::Posit(spec), a, b)
 }
 
 /// [`vmul`] on an explicit SIMD backend.
 pub fn vmul_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vmul_fmt_with(be, Format::Posit(spec), a, b)
+}
+
+/// Elementwise `a[i] · b[i]` for any serving format.
+pub fn vmul_fmt(fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vmul_fmt_with(simd::active(), fmt, a, b)
+}
+
+/// [`vmul_fmt`] on an explicit SIMD backend.
+pub fn vmul_fmt_with(be: SimdBackend, fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vmul length mismatch");
-    if spec == P8 {
+    if fmt == P8F {
         return simd::lut_map2(be, p8_tables().mul_raw(), a, b);
     }
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return simd::lanes::vmul(spec, &l, a, b);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return simd::lanes::vmul(fmt, &l, a, b);
     }
     a.iter()
         .zip(b)
-        .map(|(&x, &y)| mul_one(spec, &decode(spec, x), &decode(spec, y)))
+        .map(|(&x, &y)| mul_one(fmt, &fmt.decode(x), &fmt.decode(y)))
         .collect()
 }
 
 /// Elementwise `a[i] / b[i]` (bit-identical to [`posit::div`]).
 pub fn vdiv(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
-    vdiv_with(simd::active(), spec, a, b)
+    vdiv_fmt_with(simd::active(), Format::Posit(spec), a, b)
 }
 
 /// [`vdiv`] on an explicit SIMD backend.
 pub fn vdiv_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vdiv_fmt_with(be, Format::Posit(spec), a, b)
+}
+
+/// Elementwise `a[i] / b[i]` for any serving format.
+pub fn vdiv_fmt(fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vdiv_fmt_with(simd::active(), fmt, a, b)
+}
+
+/// [`vdiv_fmt`] on an explicit SIMD backend.
+pub fn vdiv_fmt_with(be: SimdBackend, fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vdiv length mismatch");
-    if spec == P8 {
+    if fmt == P8F {
         return simd::lut_map2(be, p8_tables().div_raw(), a, b);
     }
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return simd::lanes::vdiv(spec, &l, a, b);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return simd::lanes::vdiv(fmt, &l, a, b);
     }
     a.iter()
         .zip(b)
-        .map(|(&x, &y)| div_one(spec, &decode(spec, x), &decode(spec, y)))
+        .map(|(&x, &y)| div_one(fmt, &fmt.decode(x), &fmt.decode(y)))
         .collect()
 }
 
@@ -109,22 +152,32 @@ pub fn vdiv_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<
 /// cannot without double rounding — but `ps ≤ 16` formats (Posit(8,1)
 /// included) use the table-split decode lanes on SIMD backends.
 pub fn vfma(spec: PositSpec, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
-    vfma_with(simd::active(), spec, a, b, c)
+    vfma_fmt_with(simd::active(), Format::Posit(spec), a, b, c)
 }
 
 /// [`vfma`] on an explicit SIMD backend.
 pub fn vfma_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
+    vfma_fmt_with(be, Format::Posit(spec), a, b, c)
+}
+
+/// Elementwise fused `a[i]·b[i] + c[i]` for any serving format.
+pub fn vfma_fmt(fmt: Format, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
+    vfma_fmt_with(simd::active(), fmt, a, b, c)
+}
+
+/// [`vfma_fmt`] on an explicit SIMD backend.
+pub fn vfma_fmt_with(be: SimdBackend, fmt: Format, a: &[u32], b: &[u32], c: &[u32]) -> Vec<u32> {
     assert!(a.len() == b.len() && b.len() == c.len(), "vfma length mismatch");
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return simd::lanes::vfma(spec, &l, a, b, c);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return simd::lanes::vfma(fmt, &l, a, b, c);
     }
     (0..a.len())
         .map(|i| {
             fma_one(
-                spec,
-                &decode(spec, a[i]),
-                &decode(spec, b[i]),
-                &decode(spec, c[i]),
+                fmt,
+                &fmt.decode(a[i]),
+                &fmt.decode(b[i]),
+                &fmt.decode(c[i]),
             )
         })
         .collect()
@@ -139,13 +192,14 @@ pub fn vaxpy(spec: PositSpec, alpha: u32, x: &[u32], y: &[u32]) -> Vec<u32> {
 /// [`vaxpy`] on an explicit SIMD backend.
 pub fn vaxpy_with(be: SimdBackend, spec: PositSpec, alpha: u32, x: &[u32], y: &[u32]) -> Vec<u32> {
     assert_eq!(x.len(), y.len(), "vaxpy length mismatch");
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return simd::lanes::vaxpy(spec, &l, alpha, x, y);
+    let fmt = Format::Posit(spec);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return simd::lanes::vaxpy(fmt, &l, alpha, x, y);
     }
-    let da = decode(spec, alpha);
+    let da = fmt.decode(alpha);
     x.iter()
         .zip(y)
-        .map(|(&xi, &yi)| fma_one(spec, &da, &decode(spec, xi), &decode(spec, yi)))
+        .map(|(&xi, &yi)| fma_one(fmt, &da, &fmt.decode(xi), &fmt.decode(yi)))
         .collect()
 }
 
@@ -162,12 +216,13 @@ pub fn vscale_with(be: SimdBackend, spec: PositSpec, alpha: u32, x: &[u32]) -> V
         let t = p8_tables();
         return x.iter().map(|&xi| t.mul(alpha, xi)).collect();
     }
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return simd::lanes::vscale(spec, &l, alpha, x);
+    let fmt = Format::Posit(spec);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return simd::lanes::vscale(fmt, &l, alpha, x);
     }
-    let da = decode(spec, alpha);
+    let da = fmt.decode(alpha);
     x.iter()
-        .map(|&xi| mul_one(spec, &da, &decode(spec, xi)))
+        .map(|&xi| mul_one(fmt, &da, &fmt.decode(xi)))
         .collect()
 }
 
@@ -185,93 +240,135 @@ pub fn vsubs_with(be: SimdBackend, spec: PositSpec, x: &[u32], s: u32) -> Vec<u3
         let t = p8_tables();
         return x.iter().map(|&xi| t.sub(xi, s)).collect();
     }
-    if let Some(l) = simd::lanes_lut(be, spec) {
-        return simd::lanes::vsubs(spec, &l, x, s);
+    let fmt = Format::Posit(spec);
+    if let Some(l) = simd::lanes_lut_fmt(be, fmt) {
+        return simd::lanes::vsubs(fmt, &l, x, s);
     }
-    let ds = decode(spec, s);
+    let ds = fmt.decode(s);
     x.iter()
-        .map(|&xi| addsub_one(spec, &decode(spec, xi), &ds, xi, s, true))
+        .map(|&xi| addsub_one(fmt, &fmt.decode(xi), &ds, xi, s, true))
         .collect()
 }
 
 /// Elementwise `max(x[i], 0)` (bit-identical to
-/// `posit::cmp_max(spec, x[i], 0)`). Pure pattern test — posits order
-/// like two's-complement integers, so no decode at all; SIMD backends
-/// run it 8 (AVX2) or 4 (NEON) lanes at a time.
+/// `posit::cmp_max(spec, x[i], 0)`). Pure pattern test — both format
+/// families order like two's-complement integers, so no decode at all;
+/// SIMD backends run it 8 (AVX2) or 4 (NEON) lanes at a time.
 pub fn vrelu(spec: PositSpec, x: &[u32]) -> Vec<u32> {
-    vrelu_with(simd::active(), spec, x)
+    vrelu_fmt_with(simd::active(), Format::Posit(spec), x)
 }
 
 /// [`vrelu`] on an explicit SIMD backend.
 pub fn vrelu_with(be: SimdBackend, spec: PositSpec, x: &[u32]) -> Vec<u32> {
+    vrelu_fmt_with(be, Format::Posit(spec), x)
+}
+
+/// Elementwise `max(x[i], 0)` for any serving format.
+pub fn vrelu_fmt(fmt: Format, x: &[u32]) -> Vec<u32> {
+    vrelu_fmt_with(simd::active(), fmt, x)
+}
+
+/// [`vrelu_fmt`] on an explicit SIMD backend.
+pub fn vrelu_fmt_with(be: SimdBackend, fmt: Format, x: &[u32]) -> Vec<u32> {
     if be == SimdBackend::Scalar {
         return x
             .iter()
-            .map(|&xi| if spec.to_i32_pattern(xi) > 0 { xi } else { 0 })
+            .map(|&xi| if fmt.to_i32_pattern(xi) > 0 { xi } else { 0 })
             .collect();
     }
-    simd::relu(be, spec, x)
+    simd::relu(be, fmt, x)
 }
 
 /// Elementwise `max(a[i], b[i])` (bit-identical to [`posit::cmp_max`]).
 pub fn vmax(spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
-    vmax_with(simd::active(), spec, a, b)
+    vmax_fmt_with(simd::active(), Format::Posit(spec), a, b)
 }
 
 /// [`vmax`] on an explicit SIMD backend.
 pub fn vmax_with(be: SimdBackend, spec: PositSpec, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vmax_fmt_with(be, Format::Posit(spec), a, b)
+}
+
+/// Elementwise `max(a[i], b[i])` for any serving format.
+pub fn vmax_fmt(fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
+    vmax_fmt_with(simd::active(), fmt, a, b)
+}
+
+/// [`vmax_fmt`] on an explicit SIMD backend.
+pub fn vmax_fmt_with(be: SimdBackend, fmt: Format, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), b.len(), "vmax length mismatch");
     if be == SimdBackend::Scalar {
-        return a
-            .iter()
-            .zip(b)
-            .map(|(&x, &y)| posit::cmp_max(spec, x, y))
-            .collect();
+        return a.iter().zip(b).map(|(&x, &y)| fmt.cmp_max(x, y)).collect();
     }
-    simd::max(be, spec, a, b)
+    simd::max(be, fmt, a, b)
 }
 
 /// Batch f32 → posit conversion (bit-identical to [`posit::from_f32`]).
 /// The coordinator's pad/encode path and the CNN input layer use this.
 pub fn vfrom_f32(spec: PositSpec, x: &[f32]) -> Vec<u32> {
-    x.iter().map(|&v| posit::from_f32(spec, v)).collect()
+    vfrom_f32_fmt(Format::Posit(spec), x)
+}
+
+/// Batch f32 → any serving format.
+pub fn vfrom_f32_fmt(fmt: Format, x: &[f32]) -> Vec<u32> {
+    x.iter().map(|&v| fmt.from_f32(v)).collect()
 }
 
 /// [`vfrom_f32`] into a reusable buffer (cleared first) — the serving
 /// workers' per-worker encode arena path, no per-batch allocation.
 pub fn vfrom_f32_into(spec: PositSpec, x: &[f32], out: &mut Vec<u32>) {
+    vfrom_f32_fmt_into(Format::Posit(spec), x, out)
+}
+
+/// [`vfrom_f32_fmt`] into a reusable buffer (cleared first).
+pub fn vfrom_f32_fmt_into(fmt: Format, x: &[f32], out: &mut Vec<u32>) {
     out.clear();
-    out.extend(x.iter().map(|&v| posit::from_f32(spec, v)));
+    out.extend(x.iter().map(|&v| fmt.from_f32(v)));
 }
 
 /// Batch posit → f32 conversion (bit-identical to [`posit::to_f32`]);
 /// Posit(8,1) reads the 256-entry table (gathered on AVX2).
 pub fn vto_f32(spec: PositSpec, x: &[u32]) -> Vec<f32> {
-    vto_f32_with(simd::active(), spec, x)
+    vto_f32_fmt_with(simd::active(), Format::Posit(spec), x)
 }
 
 /// [`vto_f32`] on an explicit SIMD backend.
 pub fn vto_f32_with(be: SimdBackend, spec: PositSpec, x: &[u32]) -> Vec<f32> {
+    vto_f32_fmt_with(be, Format::Posit(spec), x)
+}
+
+/// Batch any-format → f32 conversion.
+pub fn vto_f32_fmt(fmt: Format, x: &[u32]) -> Vec<f32> {
+    vto_f32_fmt_with(simd::active(), fmt, x)
+}
+
+/// [`vto_f32_fmt`] on an explicit SIMD backend.
+pub fn vto_f32_fmt_with(be: SimdBackend, fmt: Format, x: &[u32]) -> Vec<f32> {
     let mut out = vec![0f32; x.len()];
-    vto_f32_fill(be, spec, x, &mut out);
+    vto_f32_fill(be, fmt, x, &mut out);
     out
 }
 
 /// [`vto_f32`] into a reusable buffer (cleared first) — the serving
 /// workers' per-worker encode arena path, no per-batch allocation.
 pub fn vto_f32_into(spec: PositSpec, x: &[u32], out: &mut Vec<f32>) {
-    out.clear();
-    out.resize(x.len(), 0f32);
-    vto_f32_fill(simd::active(), spec, x, out);
+    vto_f32_fmt_into(Format::Posit(spec), x, out)
 }
 
-fn vto_f32_fill(be: SimdBackend, spec: PositSpec, x: &[u32], out: &mut [f32]) {
-    if spec == P8 {
+/// [`vto_f32_fmt`] into a reusable buffer (cleared first).
+pub fn vto_f32_fmt_into(fmt: Format, x: &[u32], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(x.len(), 0f32);
+    vto_f32_fill(simd::active(), fmt, x, out);
+}
+
+fn vto_f32_fill(be: SimdBackend, fmt: Format, x: &[u32], out: &mut [f32]) {
+    if fmt == P8F {
         simd::p8_to_f32_fill(be, p8_tables().to_f32_raw(), x, out);
         return;
     }
     for (o, &xi) in out.iter_mut().zip(x) {
-        *o = posit::to_f32(spec, xi);
+        *o = fmt.to_f32(xi);
     }
 }
 
@@ -281,7 +378,7 @@ fn vto_f32_fill(be: SimdBackend, spec: PositSpec, x: &[u32], out: &mut [f32]) {
 /// `posit::addsub` verbatim (`a`/`b` raw patterns feed the zero cases).
 #[inline]
 pub(crate) fn addsub_one(
-    spec: PositSpec,
+    fmt: Format,
     da: &Decoded,
     db: &Decoded,
     a: u32,
@@ -289,11 +386,11 @@ pub(crate) fn addsub_one(
     sub: bool,
 ) -> u32 {
     match (da, db) {
-        (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
-        (Decoded::Zero, Decoded::Zero) => spec.zero(),
+        (Decoded::NaR, _) | (_, Decoded::NaR) => fmt.nar(),
+        (Decoded::Zero, Decoded::Zero) => fmt.zero(),
         (Decoded::Zero, Decoded::Num(_)) => {
             if sub {
-                spec.negate(b)
+                fmt.negate(b)
             } else {
                 b
             }
@@ -305,8 +402,8 @@ pub(crate) fn addsub_one(
                 ..*rb
             };
             match real_add(ra, &rb) {
-                Some(r) => encode(spec, &r),
-                None => spec.zero(),
+                Some(r) => fmt.encode(&r),
+                None => fmt.zero(),
             }
         }
     }
@@ -314,31 +411,31 @@ pub(crate) fn addsub_one(
 
 /// One multiply on decoded operands (`posit::mul`'s ladder).
 #[inline]
-pub(crate) fn mul_one(spec: PositSpec, da: &Decoded, db: &Decoded) -> u32 {
+pub(crate) fn mul_one(fmt: Format, da: &Decoded, db: &Decoded) -> u32 {
     match (da, db) {
-        (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
-        (Decoded::Zero, _) | (_, Decoded::Zero) => spec.zero(),
-        (Decoded::Num(ra), Decoded::Num(rb)) => encode(spec, &real_mul(ra, rb)),
+        (Decoded::NaR, _) | (_, Decoded::NaR) => fmt.nar(),
+        (Decoded::Zero, _) | (_, Decoded::Zero) => fmt.zero(),
+        (Decoded::Num(ra), Decoded::Num(rb)) => fmt.encode(&real_mul(ra, rb)),
     }
 }
 
 /// One divide on decoded operands (`posit::div`'s ladder).
 #[inline]
-pub(crate) fn div_one(spec: PositSpec, da: &Decoded, db: &Decoded) -> u32 {
+pub(crate) fn div_one(fmt: Format, da: &Decoded, db: &Decoded) -> u32 {
     match (da, db) {
-        (Decoded::NaR, _) | (_, Decoded::NaR) => spec.nar(),
-        (_, Decoded::Zero) => spec.nar(),
-        (Decoded::Zero, _) => spec.zero(),
-        (Decoded::Num(ra), Decoded::Num(rb)) => encode(spec, &real_div(spec, ra, rb)),
+        (Decoded::NaR, _) | (_, Decoded::NaR) => fmt.nar(),
+        (_, Decoded::Zero) => fmt.nar(),
+        (Decoded::Zero, _) => fmt.zero(),
+        (Decoded::Num(ra), Decoded::Num(rb)) => fmt.encode(&real_div(fmt.ps(), ra, rb)),
     }
 }
 
 /// One fused multiply-add on decoded operands (`posit::fma_full` with
 /// both negation flags off).
 #[inline]
-pub(crate) fn fma_one(spec: PositSpec, da: &Decoded, db: &Decoded, dc: &Decoded) -> u32 {
+pub(crate) fn fma_one(fmt: Format, da: &Decoded, db: &Decoded, dc: &Decoded) -> u32 {
     if da.is_nar() || db.is_nar() || dc.is_nar() {
-        return spec.nar();
+        return fmt.nar();
     }
     let prod = match (da, db) {
         (Decoded::Num(ra), Decoded::Num(rb)) => Some(real_mul(ra, rb)),
@@ -349,12 +446,12 @@ pub(crate) fn fma_one(spec: PositSpec, da: &Decoded, db: &Decoded, dc: &Decoded)
         _ => None,
     };
     match (prod, addend) {
-        (None, None) => spec.zero(),
-        (Some(p), None) => encode(spec, &p),
-        (None, Some(c)) => encode(spec, &c),
+        (None, None) => fmt.zero(),
+        (Some(p), None) => fmt.encode(&p),
+        (None, Some(c)) => fmt.encode(&c),
         (Some(p), Some(c)) => match real_add(&p, &c) {
-            Some(r) => encode(spec, &r),
-            None => spec.zero(),
+            Some(r) => fmt.encode(&r),
+            None => fmt.zero(),
         },
     }
 }
@@ -363,19 +460,19 @@ pub(crate) fn fma_one(spec: PositSpec, da: &Decoded, db: &Decoded, dc: &Decoded)
 mod tests {
     use super::*;
     use crate::data::Rng;
-    use crate::posit::{P16, P32};
+    use crate::posit::{FIXED16, P16, P32};
 
-    fn operands(spec: PositSpec, seed: u64, n: usize) -> Vec<u32> {
+    fn operands(ps: u32, seed: u64, n: usize) -> Vec<u32> {
         let mut rng = Rng::new(seed);
-        (0..n).map(|_| rng.bits32(spec.ps)).collect()
+        (0..n).map(|_| rng.bits32(ps)).collect()
     }
 
     #[test]
     fn elementwise_matches_scalar_all_formats_all_backends() {
         for be in simd::available() {
             for spec in [P8, P16, P32, PositSpec::new(12, 1)] {
-                let a = operands(spec, 0xA0 + spec.ps as u64, 300);
-                let b = operands(spec, 0xB0 + spec.ps as u64, 300);
+                let a = operands(spec.ps, 0xA0 + spec.ps as u64, 300);
+                let b = operands(spec.ps, 0xB0 + spec.ps as u64, 300);
                 let add = vadd_with(be, spec, &a, &b);
                 let sub = vsub_with(be, spec, &a, &b);
                 let mul = vmul_with(be, spec, &a, &b);
@@ -396,12 +493,39 @@ mod tests {
     }
 
     #[test]
+    fn fixed_elementwise_matches_scalar_all_backends() {
+        let fmt = Format::Fixed(FIXED16);
+        for be in simd::available() {
+            let a = operands(fmt.ps(), 0xF1, 300);
+            let b = operands(fmt.ps(), 0xF2, 300);
+            let c = operands(fmt.ps(), 0xF3, 300);
+            let add = vadd_fmt_with(be, fmt, &a, &b);
+            let sub = vsub_fmt_with(be, fmt, &a, &b);
+            let mul = vmul_fmt_with(be, fmt, &a, &b);
+            let div = vdiv_fmt_with(be, fmt, &a, &b);
+            let fma = vfma_fmt_with(be, fmt, &a, &b, &c);
+            let max = vmax_fmt_with(be, fmt, &a, &b);
+            let relu = vrelu_fmt_with(be, fmt, &a);
+            for i in 0..a.len() {
+                let tag = format!("{be:?} {i}");
+                assert_eq!(add[i], fmt.add(a[i], b[i]), "add {tag}");
+                assert_eq!(sub[i], fmt.sub(a[i], b[i]), "sub {tag}");
+                assert_eq!(mul[i], fmt.mul(a[i], b[i]), "mul {tag}");
+                assert_eq!(div[i], fmt.div(a[i], b[i]), "div {tag}");
+                assert_eq!(fma[i], fmt.fma(a[i], b[i], c[i]), "fma {tag}");
+                assert_eq!(max[i], fmt.cmp_max(a[i], b[i]), "max {tag}");
+                assert_eq!(relu[i], fmt.cmp_max(a[i], 0), "relu {tag}");
+            }
+        }
+    }
+
+    #[test]
     fn fused_matches_scalar_fma_all_backends() {
         for be in simd::available() {
             for spec in [P8, P16, P32] {
-                let a = operands(spec, 1, 200);
-                let b = operands(spec, 2, 200);
-                let c = operands(spec, 3, 200);
+                let a = operands(spec.ps, 1, 200);
+                let b = operands(spec.ps, 2, 200);
+                let c = operands(spec.ps, 3, 200);
                 let f = vfma_with(be, spec, &a, &b, &c);
                 let alpha = a[7];
                 let axpy = vaxpy_with(be, spec, alpha, &b, &c);
@@ -436,6 +560,16 @@ mod tests {
                         "{be:?} {spec:?} {i}"
                     );
                 }
+            }
+        }
+        // Fixed-posit conversions take the portable path on every backend.
+        let fmt = Format::Fixed(FIXED16);
+        let w = vfrom_f32_fmt(fmt, &xs);
+        for be in simd::available() {
+            let back = vto_f32_fmt_with(be, fmt, &w);
+            for i in 0..xs.len() {
+                assert_eq!(w[i], fmt.from_f32(xs[i]));
+                assert_eq!(back[i].to_bits(), fmt.to_f32(w[i]).to_bits(), "{be:?} {i}");
             }
         }
     }

@@ -8,7 +8,7 @@
 //! the paper's "near-identical assembly code for FP32 and posit".
 
 use crate::isa::{CostModel, FOp};
-use crate::posit::{self, PositSpec, RoundMode};
+use crate::posit::{self, FixedPositSpec, Format, PositSpec, RoundMode};
 
 /// An arithmetic unit pluggable into the simulated Rocket core.
 pub trait Backend: Sync {
@@ -218,6 +218,78 @@ fn fma_variant(s: PositSpec, a: u32, b: u32, c: u32, neg_prod: bool, neg_c: bool
     crate::posit::fma_full(s, a, b, c, neg_prod, neg_c)
 }
 
+/// The POSAR datapath with a fixed-posit decoder front-end (Gohil et
+/// al.): same issue slot, same latency table as a posit of the same
+/// width — the regime field is fixed, so decode is strictly simpler —
+/// but every op rounds into the `FixedPosit(ps, rf)` lattice. This is
+/// the compute unit behind the router's `fixed` rung.
+pub struct FixedPosar {
+    /// Register/compute format.
+    pub fmt: Format,
+    cost: CostModel,
+}
+
+impl FixedPosar {
+    /// Fixed-posit POSAR for a format, with the same-width latency table.
+    pub fn new(spec: FixedPositSpec) -> Self {
+        FixedPosar {
+            fmt: Format::Fixed(spec),
+            cost: crate::isa::cost::posar(spec.ps),
+        }
+    }
+}
+
+impl Backend for FixedPosar {
+    fn name(&self) -> String {
+        self.fmt.name()
+    }
+
+    fn exec(&self, op: FOp, a: u32, b: u32, c: u32, rm: RoundMode) -> u32 {
+        let f = self.fmt;
+        match op {
+            FOp::Add => f.add(a, b),
+            FOp::Sub => f.sub(a, b),
+            FOp::Mul => f.mul(a, b),
+            FOp::Div => f.div(a, b),
+            FOp::Sqrt => f.sqrt(a),
+            FOp::Madd => f.fma(a, b, c),
+            FOp::Msub => f.fma_full(a, b, c, false, true),
+            FOp::Nmadd => f.fma_full(a, b, c, true, true),
+            FOp::Nmsub => f.fma_full(a, b, c, true, false),
+            FOp::Min => f.cmp_min(a, b),
+            FOp::Max => f.cmp_max(a, b),
+            FOp::SgnJ => f.sgnj(a, b),
+            FOp::SgnJN => f.sgnjn(a, b),
+            FOp::SgnJX => f.sgnjx(a, b),
+            FOp::Eq => f.eq(a, b) as u32,
+            FOp::Lt => f.lt(a, b) as u32,
+            FOp::Le => f.le(a, b) as u32,
+            FOp::Class => f.classify(a),
+            FOp::CvtWS => f.to_i32(a, rm) as u32,
+            FOp::CvtWuS => f.to_u32(a, rm),
+            FOp::CvtSW => f.from_i32(a as i32),
+            FOp::CvtSWu => f.from_u32(a),
+            FOp::Mv => a & f.mask(),
+        }
+    }
+
+    fn load_f64(&self, v: f64) -> u32 {
+        self.fmt.from_f64(v)
+    }
+
+    fn store_f64(&self, w: u32) -> f64 {
+        self.fmt.to_f64(w)
+    }
+
+    fn cost(&self) -> &CostModel {
+        &self.cost
+    }
+
+    fn mem_bits(&self) -> u32 {
+        self.fmt.ps()
+    }
+}
+
 /// The §V-C hybrid configuration: parameters live in memory in a *smaller*
 /// posit format (storage `Posit(8,1)`), while the POSAR computes in a
 /// wider one (`Posit(16,2)`); the load/store path resizes. This is the
@@ -317,11 +389,23 @@ mod tests {
     }
 
     #[test]
+    fn fixed_posar_matches_library() {
+        let p = FixedPosar::new(crate::posit::FIXED16);
+        let a = p.load_f64(1.5);
+        let b = p.load_f64(2.25);
+        let r = p.exec(FOp::Add, a, b, 0, RoundMode::Nearest);
+        assert_eq!(p.store_f64(r), 3.75);
+        assert_eq!(p.mem_bits(), 16);
+        assert_eq!(p.name(), "fixed(16,2)");
+    }
+
+    #[test]
     fn all_backends_run_every_op() {
         let backends: Vec<Box<dyn Backend>> = vec![
             Box::new(Fpu::new()),
             Box::new(Posar::new(P16)),
             Box::new(Hybrid::new(P16, P8)),
+            Box::new(FixedPosar::new(crate::posit::FIXED16)),
         ];
         for be in &backends {
             let a = be.load_f64(2.0);

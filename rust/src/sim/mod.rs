@@ -11,7 +11,7 @@
 pub mod backend;
 pub mod trace;
 
-pub use backend::{Backend, Fpu, Hybrid, Posar};
+pub use backend::{Backend, FixedPosar, Fpu, Hybrid, Posar};
 pub use trace::RangeTracer;
 
 use crate::isa::{cost::ROCKET_INT, FOp, IntCosts};

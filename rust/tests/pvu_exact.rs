@@ -10,7 +10,7 @@
 //! NEON and scalar must agree byte for byte on every `(ps, es)`.
 
 use posar::data::Rng;
-use posar::posit::{self, PositSpec, Quire, P16, P32, P8};
+use posar::posit::{self, FixedPositSpec, Format, PositSpec, Quire, FIXED16, P16, P32, P8};
 use posar::pvu::{self, simd};
 
 fn random_patterns(spec: PositSpec, seed: u64, n: usize) -> Vec<u32> {
@@ -176,6 +176,154 @@ fn property_quire_fused_family_bit_identical() {
                         "gemm {be:?} {spec:?}"
                     );
                 }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixed-posit formats (Gohil et al.): same bit-exactness statement via
+// the `*_fmt` entry points — every SIMD backend vs the scalar `Format`
+// ops, on the default fixed(16,2) plus an odd narrow format that no
+// lane table is tuned for (exercising the scalar fallback too).
+// ---------------------------------------------------------------------
+
+const FIXED_FMTS: [Format; 2] = [
+    Format::Fixed(FIXED16),
+    Format::Fixed(FixedPositSpec { ps: 12, rf: 1, es: 1 }),
+];
+
+fn random_patterns_fmt(fmt: Format, seed: u64, n: usize) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.bits32(fmt.ps())).collect()
+}
+
+#[test]
+fn property_fixed_elementwise_kernels_bit_identical() {
+    for be in simd::available() {
+        for fmt in FIXED_FMTS {
+            let a = random_patterns_fmt(fmt, 0xF100 + fmt.ps() as u64, 513);
+            let b = random_patterns_fmt(fmt, 0xF200 + fmt.ps() as u64, 513);
+            let c = random_patterns_fmt(fmt, 0xF300 + fmt.ps() as u64, 513);
+            let add = pvu::vadd_fmt_with(be, fmt, &a, &b);
+            let sub = pvu::vsub_fmt_with(be, fmt, &a, &b);
+            let mul = pvu::vmul_fmt_with(be, fmt, &a, &b);
+            let div = pvu::vdiv_fmt_with(be, fmt, &a, &b);
+            let fma = pvu::vfma_fmt_with(be, fmt, &a, &b, &c);
+            let max = pvu::vmax_fmt_with(be, fmt, &a, &b);
+            let relu = pvu::vrelu_fmt_with(be, fmt, &a);
+            for i in 0..a.len() {
+                let (x, y, z) = (a[i], b[i], c[i]);
+                let tag = format!("{be:?} {} {x:#x} {y:#x}", fmt.name());
+                assert_eq!(add[i], fmt.add(x, y), "add {tag}");
+                assert_eq!(sub[i], fmt.sub(x, y), "sub {tag}");
+                assert_eq!(mul[i], fmt.mul(x, y), "mul {tag}");
+                assert_eq!(div[i], fmt.div(x, y), "div {tag}");
+                assert_eq!(fma[i], fmt.fma(x, y, z), "fma {tag} {z:#x}");
+                assert_eq!(max[i], fmt.cmp_max(x, y), "max {tag}");
+                assert_eq!(relu[i], fmt.cmp_max(x, 0), "relu {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn property_fixed_converters_bit_identical() {
+    let mut rng = Rng::new(0xF0FFEE);
+    let xs: Vec<f32> = (0..500)
+        .map(|_| (rng.normal() * 10f64.powi(rng.below(13) as i32 - 6)) as f32)
+        .collect();
+    for fmt in FIXED_FMTS {
+        let w = pvu::vfrom_f32_fmt(fmt, &xs);
+        for i in 0..xs.len() {
+            assert_eq!(w[i], fmt.from_f32(xs[i]), "vfrom_f32 {}", fmt.name());
+        }
+        for be in simd::available() {
+            let back = pvu::vto_f32_fmt_with(be, fmt, &w);
+            for i in 0..xs.len() {
+                assert_eq!(
+                    back[i].to_bits(),
+                    fmt.to_f32(w[i]).to_bits(),
+                    "vto_f32 {be:?} {} {:#x}",
+                    fmt.name(),
+                    w[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn property_fixed_quire_fused_family_bit_identical() {
+    for be in simd::available() {
+        for fmt in FIXED_FMTS {
+            let n = 129;
+            let a = random_patterns_fmt(fmt, 0xF600 + fmt.ps() as u64, n);
+            let b = random_patterns_fmt(fmt, 0xF700 + fmt.ps() as u64, n);
+            // dot == scalar quire reference on the asymmetric quire.
+            let mut q = Quire::for_format(fmt);
+            for i in 0..n {
+                q.add_product(a[i], b[i]);
+            }
+            assert_eq!(
+                pvu::dot_fmt_with(be, fmt, &a, &b),
+                q.to_posit(),
+                "dot {be:?} {}",
+                fmt.name()
+            );
+
+            // gemv == per-row scalar quire reference, bias folded in.
+            let (rows, cols) = (7, 18);
+            let w = random_patterns_fmt(fmt, 0xF800 + fmt.ps() as u64, rows * cols);
+            let x = random_patterns_fmt(fmt, 0xF900 + fmt.ps() as u64, cols);
+            let bias = random_patterns_fmt(fmt, 0xFA00 + fmt.ps() as u64, rows);
+            let y = pvu::gemv_fmt_with(be, fmt, &w, &x, Some(&bias), rows, cols);
+            for r in 0..rows {
+                let mut q = Quire::for_format(fmt);
+                q.add(bias[r]);
+                for c in 0..cols {
+                    q.add_product(w[r * cols + c], x[c]);
+                }
+                assert_eq!(y[r], q.to_posit(), "gemv {be:?} {} row {r}", fmt.name());
+            }
+
+            // gemm == dot of (row i of A, column j of B) per output.
+            let (m, k, nn) = (5, 11, 4);
+            let ma = random_patterns_fmt(fmt, 0xFB00 + fmt.ps() as u64, m * k);
+            let mb = random_patterns_fmt(fmt, 0xFC00 + fmt.ps() as u64, k * nn);
+            let mc = pvu::gemm_fmt_with(be, fmt, &ma, &mb, m, k, nn);
+            for i in 0..m {
+                for j in 0..nn {
+                    let row: Vec<u32> = (0..k).map(|kk| ma[i * k + kk]).collect();
+                    let col: Vec<u32> = (0..k).map(|kk| mb[kk * nn + j]).collect();
+                    assert_eq!(
+                        mc[i * nn + j],
+                        pvu::dot_fmt(fmt, &row, &col),
+                        "gemm {be:?} {}",
+                        fmt.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fixed_posit_roundtrip_decodes_to_the_same_pattern() {
+    // encode(decode(p)) == p for every non-NaR pattern of fixed(12,1,1)
+    // (small enough to sweep exhaustively) — the codec is a bijection
+    // on canonical patterns, same statement the posit core makes.
+    let fmt = Format::Fixed(FixedPositSpec { ps: 12, rf: 1, es: 1 });
+    let nar = 1u32 << (fmt.ps() - 1);
+    for p in 0..(1u32 << fmt.ps()) {
+        if p == nar {
+            continue;
+        }
+        match fmt.decode(p) {
+            posit::Decoded::Zero => assert_eq!(p, 0, "only 0…0 decodes to zero"),
+            posit::Decoded::NaR => panic!("non-NaR pattern {p:#x} decoded to NaR"),
+            posit::Decoded::Num(r) => {
+                assert_eq!(fmt.encode(&r), p, "roundtrip {} {p:#x}", fmt.name());
             }
         }
     }
