@@ -121,6 +121,113 @@ def test_pvu_dot_is_single_rounding(golden_pvu):
         assert got == row["out"], f"{row['fmt']} dot: {got} != {row['out']}"
 
 
+KERNEL_REDUCTIONS = ("sumsq", "stencil", "nb-sum")
+
+
+def _ulp_ok(fmt, got, want):
+    """Bit-exact for the formats whose f64 oracle is exact (p8, p16,
+    fixed); one pattern step — i.e. one ulp, away from the sign boundary
+    the golden generator avoids — for p32, whose exact products need up
+    to 55 significand bits and so overflow the f64 oracle."""
+    got = np.asarray(got, np.int64)
+    want = np.asarray(want, np.int64)
+    tol = 1 if fmt == "p32" else 0
+    return np.all(np.abs(got - want) <= tol)
+
+
+def _kernel_rows(golden_pvu, *ops):
+    rows = [r for r in golden_pvu if r["op"] in ops and r["fmt"] != "fp32"]
+    assert rows, "golden_pvu.json predates the kernel rows — rerun `repro golden`"
+    assert any(r["fmt"] == "p32" for r in rows), "kernel rows must cover p32"
+    return rows
+
+
+def test_pvu_kernel_axpy_is_fused(golden_pvu):
+    """axpy (the CG update's lane): fused alpha*x + y, one rounding per
+    lane — decode all three operands, compute exactly, re-quantize."""
+    for row in _kernel_rows(golden_pvu, "axpy"):
+        a, b = _decode_rows(row)
+        c = _decode(row["fmt"], np.asarray(row["c"], np.int64))
+        got = _quantize(row["fmt"], a * b + c)
+        assert _ulp_ok(row["fmt"], got, row["out"]), (
+            f"{row['fmt']} axpy: {got.tolist()} != {row['out']}"
+        )
+
+
+def test_pvu_kernel_reductions_round_once(golden_pvu):
+    """sumsq (EP), stencil (MG), nb-sum (naive Bayes): quire-fused
+    reductions — the exact sum of products, rounded once."""
+    rows = _kernel_rows(golden_pvu, *KERNEL_REDUCTIONS)
+    assert {r["op"] for r in rows} == set(KERNEL_REDUCTIONS)
+    for row in rows:
+        a, b = _decode_rows(row)
+        exact = float(np.sum(a * b))
+        got = int(_quantize(row["fmt"], np.asarray([exact], np.float64))[0])
+        assert _ulp_ok(row["fmt"], [got], [row["out"]]), (
+            f"{row['fmt']} {row['op']}: {got} != {row['out']}"
+        )
+
+
+def test_pvu_kernel_knn_distance_two_roundings(golden_pvu):
+    """knn-d2: a lane subtract (one rounding), then the fused self-dot
+    (one more) — the model quantizes the diff, then the exact sum."""
+    for row in _kernel_rows(golden_pvu, "knn-d2"):
+        a, b = _decode_rows(row)
+        d = _decode(row["fmt"], _quantize(row["fmt"], a - b))
+        exact = float(np.sum(d * d))
+        got = int(_quantize(row["fmt"], np.asarray([exact], np.float64))[0])
+        assert _ulp_ok(row["fmt"], [got], [row["out"]]), (
+            f"{row['fmt']} knn-d2: {got} != {row['out']}"
+        )
+
+
+def test_pvu_kernel_split_max_never_rounds(golden_pvu):
+    """split-max (ctree): a lane max returns one of its (representable)
+    operands, so even p32 must match bit-for-bit."""
+    for row in _kernel_rows(golden_pvu, "split-max"):
+        a, b = _decode_rows(row)
+        got = _quantize(row["fmt"], np.maximum(a, b))
+        want = np.asarray(row["out"], np.int64)
+        assert np.array_equal(got, want), (
+            f"{row['fmt']} split-max: {got.tolist()} != {want.tolist()}"
+        )
+
+
+def _f32(row, key):
+    return np.asarray(row[key], np.uint32).view(np.float32)
+
+
+def test_fp32_kernel_rows_bit_exact(golden_pvu):
+    """The fp32 kernel rows carry IEEE f32 bit patterns: a two-rounding
+    axpy, in-order sequential reductions, lane max. NumPy float32
+    reproduces each operation bit-for-bit."""
+    rows = [r for r in golden_pvu if r["fmt"] == "fp32"]
+    assert rows, "golden_pvu.json predates the fp32 kernel rows — rerun `repro golden`"
+    assert {r["op"] for r in rows} == {
+        "axpy", "knn-d2", "split-max", *KERNEL_REDUCTIONS,
+    }
+    for row in rows:
+        a, b = _f32(row, "a"), _f32(row, "b")
+        if row["op"] == "axpy":
+            got = ((a * b) + _f32(row, "c")).view(np.uint32)
+            want = np.asarray(row["out"], np.uint32)
+            assert np.array_equal(got, want), f"fp32 axpy: {got.tolist()}"
+        elif row["op"] in KERNEL_REDUCTIONS:
+            acc = np.float32(0.0)
+            for p in a * b:
+                acc = np.float32(acc + p)
+            assert int(acc.view(np.uint32)) == row["out"], f"fp32 {row['op']}"
+        elif row["op"] == "knn-d2":
+            acc = np.float32(0.0)
+            for d in a - b:
+                acc = np.float32(acc + np.float32(d * d))
+            assert int(acc.view(np.uint32)) == row["out"], "fp32 knn-d2"
+        else:  # split-max
+            got = np.maximum(a, b).view(np.uint32)
+            want = np.asarray(row["out"], np.uint32)
+            assert np.array_equal(got, want), f"fp32 split-max: {got.tolist()}"
+
+
 def test_fixed_roundtrip_exhaustive():
     """Self-contained (no golden file): every fixed(16,2) pattern's exact
     value must re-encode to the same pattern — the bijection the Rust

@@ -6,6 +6,10 @@
 //! "both the creation (training) and usage (inference)".
 
 use crate::data::iris;
+use crate::isa::cost::ROCKET_INT;
+use crate::isa::FOp;
+use crate::posit::{self, PositSpec, Quire};
+use crate::pvu::PvuCost;
 use crate::sim::Machine;
 
 const K: usize = iris::K;
@@ -148,6 +152,157 @@ fn build(m: &mut Machine, x: &[u32], idx: &[usize], depth: usize, nodes: &mut Ve
     id
 }
 
+/// Gini impurity on the PVU: the `Σ (n_c / n)²` term is a quire-fused
+/// self-dot of the class fractions (one rounding).
+fn gini_pvu(
+    spec: PositSpec,
+    cost: &PvuCost,
+    cycles: &mut u64,
+    counts: &[u32; K],
+    total: u32,
+) -> u32 {
+    let one = posit::from_f64(spec, 1.0);
+    let tf = posit::from_f64(spec, total as f64);
+    let mut q = Quire::new(spec);
+    for &c in counts {
+        let cf = posit::from_f64(spec, c as f64);
+        let frac = posit::div(spec, cf, tf);
+        q.add_product(frac, frac);
+    }
+    *cycles += cost.convert(K + 1)
+        + cost.vector_op(FOp::Div, K)
+        + cost.dot(K)
+        + cost.vector_op(FOp::Sub, 1)
+        + (K as u64) * ROCKET_INT.alu;
+    posit::sub(spec, one, q.to_posit())
+}
+
+fn build_pvu(
+    spec: PositSpec,
+    cost: &PvuCost,
+    cycles: &mut u64,
+    x: &[u32],
+    idx: &[usize],
+    depth: usize,
+    nodes: &mut Vec<Node>,
+) -> usize {
+    let counts = class_counts(idx);
+    let pure = counts.iter().filter(|&&c| c > 0).count() <= 1;
+    if depth >= MAX_DEPTH || pure || idx.len() < 4 {
+        let id = nodes.len();
+        nodes.push(Node::Leaf(majority(idx)));
+        return id;
+    }
+    let mut best: Option<(usize, u32, f64)> = None; // (feat, thr bits, score)
+    for f in 0..M {
+        for &i in idx {
+            let thr = x[i * M + f];
+            let mut lc = [0u32; K];
+            let mut rc = [0u32; K];
+            let mut ln = 0u32;
+            let mut rn = 0u32;
+            for &j in idx {
+                if posit::le(spec, x[j * M + f], thr) {
+                    lc[iris::LABELS[j] as usize] += 1;
+                    ln += 1;
+                } else {
+                    rc[iris::LABELS[j] as usize] += 1;
+                    rn += 1;
+                }
+                *cycles += cost.mem_words(1) * ROCKET_INT.load
+                    + 1
+                    + 2 * ROCKET_INT.alu
+                    + ROCKET_INT.branch;
+            }
+            if ln == 0 || rn == 0 {
+                continue;
+            }
+            // Weighted Gini: `wl·gl + wr·gr` is a quire-fused two-term
+            // dot — one rounding for the whole split score.
+            let gl = gini_pvu(spec, cost, cycles, &lc, ln);
+            let gr = gini_pvu(spec, cost, cycles, &rc, rn);
+            let lf = posit::from_f64(spec, ln as f64);
+            let rf = posit::from_f64(spec, rn as f64);
+            let tf = posit::from_f64(spec, (ln + rn) as f64);
+            let wl = posit::div(spec, lf, tf);
+            let wr = posit::div(spec, rf, tf);
+            let mut q = Quire::new(spec);
+            q.add_product(wl, gl);
+            q.add_product(wr, gr);
+            let score = posit::to_f64(spec, q.to_posit());
+            *cycles += cost.convert(3)
+                + cost.vector_op(FOp::Div, 2)
+                + cost.dot(2)
+                + 3 * ROCKET_INT.alu
+                + ROCKET_INT.branch;
+            if best.map(|(_, _, s)| score < s).unwrap_or(true) {
+                best = Some((f, thr, score));
+            }
+        }
+    }
+    let (f, thr_bits, _) = match best {
+        Some(b) => b,
+        None => {
+            let id = nodes.len();
+            nodes.push(Node::Leaf(majority(idx)));
+            return id;
+        }
+    };
+    let thr_val = posit::to_f64(spec, thr_bits);
+    let (mut li, mut ri) = (Vec::new(), Vec::new());
+    for &j in idx {
+        if posit::le(spec, x[j * M + f], thr_bits) {
+            li.push(j);
+        } else {
+            ri.push(j);
+        }
+        *cycles += 1 + ROCKET_INT.alu + ROCKET_INT.branch;
+    }
+    let id = nodes.len();
+    nodes.push(Node::Leaf(0)); // placeholder
+    let l = build_pvu(spec, cost, cycles, x, &li, depth + 1, nodes);
+    let r = build_pvu(spec, cost, cycles, x, &ri, depth + 1, nodes);
+    nodes[id] = Node::Split(f, thr_val, l, r);
+    id
+}
+
+/// CART on the PVU: training's impurity sums and weighted split scores
+/// are quire-fused dots, and every threshold decision is a packed posit
+/// compare — the comparison-dominated structure that keeps CT correct
+/// even on Posit(8,1) in Table V survives unchanged. Returns the
+/// predictions of the trained tree plus the [`PvuCost`]-modeled cycles.
+pub fn run_pvu(spec: PositSpec) -> (Vec<u8>, u64) {
+    let cost = PvuCost::new(spec);
+    let mut cycles = ROCKET_INT.program_overhead;
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| posit::from_f64(spec, v))
+        .collect();
+    let mut nodes = Vec::new();
+    let all: Vec<usize> = (0..N).collect();
+    build_pvu(spec, &cost, &mut cycles, &x, &all, 0, &mut nodes);
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        let mut cur = 0usize;
+        loop {
+            match &nodes[cur] {
+                Node::Leaf(c) => {
+                    preds.push(*c);
+                    break;
+                }
+                Node::Split(f, thr, l, r) => {
+                    let t = posit::from_f64(spec, *thr);
+                    cycles += cost.mem_words(1) * ROCKET_INT.load + 1 + ROCKET_INT.branch;
+                    cur = if posit::le(spec, x[i * M + f], t) { *l } else { *r };
+                }
+            }
+        }
+        cycles += 2 * ROCKET_INT.alu;
+    }
+    (preds, cycles)
+}
+
 /// Classify every sample with a trained tree (F-comparisons per level).
 pub fn infer(m: &mut Machine, nodes: &[Node]) -> Vec<u8> {
     let x: Vec<u32> = iris::FEATURES
@@ -284,6 +439,19 @@ mod tests {
             .filter(|(a, b)| a == b)
             .count();
         assert!(acc >= 140, "acc {acc}/150");
+    }
+
+    #[test]
+    fn pvu_predicts_like_reference_down_to_p8() {
+        // Table V: CT stays correct even on Posit(8,1); the PVU path's
+        // packed compares preserve exactly that property.
+        let want = reference();
+        for spec in [P32, P16, P8] {
+            let (got, cycles) = run_pvu(spec);
+            let agree = got.iter().zip(&want).filter(|(a, b)| a == b).count();
+            assert!(agree >= 140, "PVU {spec:?} agree {agree}/150");
+            assert!(cycles > crate::isa::cost::ROCKET_INT.program_overhead);
+        }
     }
 
     #[test]

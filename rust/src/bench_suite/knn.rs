@@ -5,6 +5,10 @@
 //! 1.05–1.10× posit speedups come from, POSAR's sqrt being faster).
 
 use crate::data::iris;
+use crate::isa::cost::ROCKET_INT;
+use crate::isa::FOp;
+use crate::posit::{self, PositSpec};
+use crate::pvu::{self, PvuCost};
 use crate::sim::Machine;
 
 const K: usize = 5;
@@ -69,6 +73,140 @@ pub fn run(m: &mut Machine) -> Vec<u8> {
         m.int_ops(4);
     }
     preds
+}
+
+/// Classify one external query against the full Iris dataset with 5-NN
+/// on the simulated core — the serving kernel behind `--workload knn`.
+/// Returns the vote count per class (sums to `K`), so callers get a
+/// score vector rather than just the argmax.
+pub fn votes_machine(m: &mut Machine, query: &[f64]) -> [u32; iris::K] {
+    assert_eq!(query.len(), M, "query must have {M} features");
+    m.program_start();
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| m.be.load_f64(v))
+        .collect();
+    let q: Vec<u32> = query.iter().map(|&v| m.be.load_f64(v)).collect();
+    let mut dist: Vec<(u32, usize)> = Vec::with_capacity(N);
+    for j in 0..N {
+        let mut d = m.be.load_f64(0.0);
+        for f in 0..M {
+            m.mem_read(2);
+            let diff = m.sub(q[f], x[j * M + f]);
+            d = m.madd(diff, diff, d);
+            m.int_ops(2);
+        }
+        let d = m.sqrt(d);
+        dist.push((d, j));
+        m.int_ops(2);
+        m.branch();
+    }
+    for a in 0..K {
+        let mut min = a;
+        for b in (a + 1)..dist.len() {
+            if m.flt(dist[b].0, dist[min].0) {
+                min = b;
+            }
+            m.int_ops(1);
+            m.branch();
+        }
+        dist.swap(a, min);
+        m.int_ops(3);
+    }
+    let mut votes = [0u32; iris::K];
+    for d in dist.iter().take(K) {
+        votes[iris::LABELS[d.1] as usize] += 1;
+        m.int_ops(2);
+    }
+    votes
+}
+
+/// f64 reference of [`votes_machine`] (identical algorithm).
+pub fn votes_reference(query: &[f64]) -> [u32; iris::K] {
+    assert_eq!(query.len(), M, "query must have {M} features");
+    let x: Vec<f64> = iris::FEATURES.iter().flatten().cloned().collect();
+    let mut dist: Vec<(f64, usize)> = Vec::with_capacity(N);
+    for j in 0..N {
+        let mut d = 0.0;
+        for f in 0..M {
+            let diff = query[f] - x[j * M + f];
+            d += diff * diff;
+        }
+        dist.push((d.sqrt(), j));
+    }
+    for a in 0..K {
+        let mut min = a;
+        for b in (a + 1)..dist.len() {
+            if dist[b].0 < dist[min].0 {
+                min = b;
+            }
+        }
+        dist.swap(a, min);
+    }
+    let mut votes = [0u32; iris::K];
+    for d in dist.iter().take(K) {
+        votes[iris::LABELS[d.1] as usize] += 1;
+    }
+    votes
+}
+
+/// LOO 5-NN on the PVU: each pairwise distance is a `vsub` plus a
+/// quire-fused self-dot (one rounding per squared distance) followed by a
+/// scalar FSQRT; the k-selection compares packed posit patterns and the
+/// vote reuses the scalar kernel's integer stream. Returns the
+/// predictions and the [`PvuCost`]-modeled cycle count.
+pub fn run_pvu(spec: PositSpec) -> (Vec<u8>, u64) {
+    let cost = PvuCost::new(spec);
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| posit::from_f64(spec, v))
+        .collect();
+    let mut cycles = ROCKET_INT.program_overhead;
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        let mut dist: Vec<(u32, usize)> = Vec::with_capacity(N - 1);
+        for j in 0..N {
+            if j == i {
+                continue;
+            }
+            let diff = pvu::vsub(spec, &x[i * M..(i + 1) * M], &x[j * M..(j + 1) * M]);
+            let d2 = pvu::dot(spec, &diff, &diff);
+            let d = posit::sqrt(spec, d2);
+            cycles += cost.mem_words(2 * M) * ROCKET_INT.load
+                + cost.vector_op(FOp::Sub, M)
+                + cost.dot(M)
+                + cost.vector_op(FOp::Sqrt, 1);
+            dist.push((d, j));
+            cycles += 2 * ROCKET_INT.alu + ROCKET_INT.branch;
+        }
+        for a in 0..K {
+            let mut min = a;
+            for b in (a + 1)..dist.len() {
+                if posit::lt(spec, dist[b].0, dist[min].0) {
+                    min = b;
+                }
+                cycles += 1 + ROCKET_INT.alu + ROCKET_INT.branch;
+            }
+            dist.swap(a, min);
+            cycles += 3 * ROCKET_INT.alu;
+        }
+        let mut votes = [0u8; iris::K];
+        for d in dist.iter().take(K) {
+            votes[iris::LABELS[d.1] as usize] += 1;
+            cycles += 2 * ROCKET_INT.alu;
+        }
+        let best = votes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .unwrap()
+            .0;
+        preds.push(best as u8);
+        cycles += 4 * ROCKET_INT.alu;
+    }
+    (preds, cycles)
 }
 
 /// f64 reference predictions (same algorithm).
@@ -142,6 +280,34 @@ mod tests {
             let mut m = Machine::new(&be);
             assert_eq!(run(&mut m), want, "{spec:?}");
         }
+    }
+
+    #[test]
+    fn query_votes_match_reference_on_wide_formats() {
+        // A held-out-style query: an iris sample nudged off the grid.
+        let q = [5.9, 3.1, 4.8, 1.7];
+        let want = votes_reference(&q);
+        assert_eq!(want.iter().sum::<u32>(), K as u32);
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        assert_eq!(votes_machine(&mut m, &q), want, "FP32");
+        let be = Posar::new(P32);
+        let mut m = Machine::new(&be);
+        assert_eq!(votes_machine(&mut m, &q), want, "P32");
+    }
+
+    #[test]
+    fn pvu_matches_reference_on_wide_formats() {
+        let want = reference();
+        let (got, cycles) = run_pvu(P32);
+        assert_eq!(got, want, "PVU P32 KNN");
+        assert!(cycles > crate::isa::cost::ROCKET_INT.program_overhead);
+        // P16: the quire-fused distances may round differently from the
+        // scalar madd chain on near-ties, so require near-total agreement
+        // rather than bit-identical selections.
+        let (got16, _) = run_pvu(P16);
+        let agree = got16.iter().zip(&want).filter(|(a, b)| a == b).count();
+        assert!(agree >= 145, "PVU P16 agree {agree}/150");
     }
 
     #[test]

@@ -8,6 +8,10 @@
 
 use crate::cnn::model::m_exp;
 use crate::data::iris;
+use crate::isa::cost::ROCKET_INT;
+use crate::isa::FOp;
+use crate::posit::{self, PositSpec, Quire};
+use crate::pvu::{self, PvuCost};
 use crate::sim::Machine;
 
 const K: usize = iris::K;
@@ -103,6 +107,125 @@ pub fn run(m: &mut Machine) -> Vec<u8> {
     preds
 }
 
+/// Scalar-posit `exp` with the same range-reduced Horner scheme as the
+/// simulated core's [`m_exp`], so tiny-posit saturation behaves
+/// identically on both paths. Adds the modeled cycles to `cycles`.
+fn p_exp(spec: PositSpec, cost: &PvuCost, cycles: &mut u64, x: u32) -> u32 {
+    let k = (posit::to_f64(spec, x) * std::f64::consts::LOG2_E).round() as i32;
+    let kf = posit::from_f64(spec, k as f64);
+    let ln2 = posit::from_f64(spec, std::f64::consts::LN_2);
+    let kl = posit::mul(spec, kf, ln2);
+    let r = posit::sub(spec, x, kl);
+    let one = posit::from_f64(spec, 1.0);
+    let mut acc = one;
+    for d in [7.0f64, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0] {
+        let c = posit::from_f64(spec, 1.0 / d);
+        let rc = posit::mul(spec, r, c);
+        acc = posit::fma(spec, rc, acc, one);
+    }
+    let shifts = k.unsigned_abs().min(300) as usize;
+    let factor = posit::from_f64(spec, if k >= 0 { 2.0 } else { 0.5 });
+    for _ in 0..shifts {
+        acc = posit::mul(spec, acc, factor);
+    }
+    *cycles += cost.convert(2)
+        + cost.vector_op(FOp::Mul, 2 + shifts)
+        + cost.vector_op(FOp::Sub, 1)
+        + cost.vector_op(FOp::Madd, 7)
+        + (7 + shifts as u64) * ROCKET_INT.alu;
+    acc
+}
+
+/// Gaussian NB on the PVU: the training sums behind each mean and the
+/// squared-deviation sums behind each variance are quire-fused (exact
+/// until one terminal rounding per statistic); inference multiplies the
+/// four densities with scalar posit ops, the `exp` running the same
+/// Horner scheme as the simulated core — so tiny-posit underflow in the
+/// probability layer still shows up exactly as in Table V. Returns the
+/// predictions and the [`PvuCost`]-modeled cycle count.
+pub fn run_pvu(spec: PositSpec) -> (Vec<u8>, u64) {
+    let cost = PvuCost::new(spec);
+    let mut cycles = ROCKET_INT.program_overhead;
+    let x: Vec<u32> = iris::FEATURES
+        .iter()
+        .flatten()
+        .map(|&v| posit::from_f64(spec, v))
+        .collect();
+    let zero = posit::from_f64(spec, 0.0);
+    let half = posit::from_f64(spec, 0.5);
+    let two_pi = posit::from_f64(spec, std::f64::consts::TAU);
+    let one = posit::from_f64(spec, 1.0);
+
+    // Training: quire-fused mean and variance per (class, feature).
+    let mut mean = vec![zero; K * M];
+    let mut var = vec![zero; K * M];
+    for c in 0..K {
+        let members: Vec<usize> = (0..N).filter(|&i| iris::LABELS[i] as usize == c).collect();
+        let cf = posit::from_f64(spec, members.len() as f64);
+        cycles +=
+            cost.vector_op(FOp::CvtSW, 1) + (N as u64) * (2 * ROCKET_INT.alu + ROCKET_INT.branch);
+        for j in 0..M {
+            let col: Vec<u32> = members.iter().map(|&i| x[i * M + j]).collect();
+            let mut q = Quire::new(spec);
+            for &v in &col {
+                q.add(v);
+            }
+            let mj = posit::div(spec, q.to_posit(), cf);
+            mean[c * M + j] = mj;
+            cycles += cost.mem_words(col.len()) * ROCKET_INT.load
+                + cost.vector_op(FOp::Add, col.len())
+                + cost.vector_op(FOp::Div, 1);
+            let diff = pvu::vsubs(spec, &col, mj);
+            let ss = pvu::dot(spec, &diff, &diff);
+            var[c * M + j] = posit::div(spec, ss, cf);
+            cycles += cost.vector_op(FOp::Sub, col.len())
+                + cost.dot(col.len())
+                + cost.vector_op(FOp::Div, 1)
+                + cost.mem_words(2) * ROCKET_INT.store;
+        }
+    }
+
+    // Inference: argmax_c prior · Π_j N(x_j; μ, σ²), scalar posit ops.
+    let kf = posit::from_f64(spec, K as f64);
+    let prior = posit::div(spec, one, kf);
+    cycles += cost.vector_op(FOp::Div, 1);
+    let mut preds = Vec::with_capacity(N);
+    for i in 0..N {
+        let mut best = 0usize;
+        let mut best_p = zero;
+        for c in 0..K {
+            let mut p = prior;
+            for j in 0..M {
+                let v = var[c * M + j];
+                let d = posit::sub(spec, x[i * M + j], mean[c * M + j]);
+                let d2 = posit::mul(spec, d, d);
+                let tv = posit::mul(spec, two_pi, v);
+                let norm = posit::sqrt(spec, tv);
+                let e_arg = posit::div(spec, d2, v);
+                let e_arg = posit::mul(spec, e_arg, half);
+                let e_arg = posit::neg(spec, e_arg);
+                let num = p_exp(spec, &cost, &mut cycles, e_arg);
+                let dens = posit::div(spec, num, norm);
+                p = posit::mul(spec, p, dens);
+                cycles += cost.mem_words(3) * ROCKET_INT.load
+                    + cost.vector_op(FOp::Sub, 1)
+                    + cost.vector_op(FOp::Mul, 4)
+                    + cost.vector_op(FOp::Sqrt, 1)
+                    + cost.vector_op(FOp::Div, 2)
+                    + 2 * ROCKET_INT.alu;
+            }
+            if c == 0 || posit::lt(spec, best_p, p) {
+                best = c;
+                best_p = p;
+            }
+            cycles += 1 + ROCKET_INT.branch;
+        }
+        preds.push(best as u8);
+        cycles += 3 * ROCKET_INT.alu;
+    }
+    (preds, cycles)
+}
+
 /// f64 reference (same algorithm).
 pub fn reference() -> Vec<u8> {
     let x: Vec<f64> = iris::FEATURES.iter().flatten().cloned().collect();
@@ -170,6 +293,22 @@ mod tests {
             let mut m = Machine::new(&be);
             assert_eq!(run(&mut m), want, "{spec:?}");
         }
+    }
+
+    #[test]
+    fn pvu_wide_formats_match_and_p8_still_underflows() {
+        let want = reference();
+        let (got32, cycles) = run_pvu(P32);
+        assert_eq!(got32, want, "PVU P32 NB");
+        assert!(cycles > crate::isa::cost::ROCKET_INT.program_overhead);
+        // P16: quire-fused statistics may perturb borderline samples.
+        let (got16, _) = run_pvu(P16);
+        let agree = got16.iter().zip(&want).filter(|(a, b)| a == b).count();
+        assert!(agree >= 145, "PVU P16 agree {agree}/150");
+        // The quire fixes the training sums but not the density-product
+        // underflow, so P8 stays wrong (Table V).
+        let (got8, _) = run_pvu(P8);
+        assert_ne!(got8, want, "PVU P8 NB should still underflow");
     }
 
     #[test]

@@ -175,12 +175,13 @@ pub fn run_level_two(mm_n: usize) -> Vec<Level2Result> {
 }
 
 /// Level-two run on the PVU (selectable alternative to the scalar
-/// [`run_level_two`]): MM, k-means and linear regression execute through
-/// the `pvu` subsystem's LUT/decode-once/quire-fused kernels, per posit
-/// format. Rows carry the [`crate::pvu::PvuCost`]-modeled cycles, so
-/// pairing them with the scalar rows (same benchmark, same format)
-/// yields the §V-C packed-lane speedup — the `repro pvu` report does
-/// exactly that.
+/// [`run_level_two`]): all six Table V kernels — MM, k-means, KNN,
+/// linear regression, naive Bayes and the classification tree — execute
+/// through the `pvu` subsystem's LUT/decode-once/quire-fused kernels,
+/// per posit format. Rows carry the [`crate::pvu::PvuCost`]-modeled
+/// cycles, so pairing them with the scalar rows (same benchmark, same
+/// format) yields the §V-C packed-lane speedup — the `repro pvu` report
+/// does exactly that.
 pub fn run_level_two_pvu(mm_n: usize) -> Vec<Level2Result> {
     let mut out = Vec::new();
     let specs = [P8, P16, P32];
@@ -210,6 +211,18 @@ pub fn run_level_two_pvu(mm_n: usize) -> Vec<Level2Result> {
         });
     }
 
+    let knn_ref = knn::reference();
+    for spec in specs {
+        let (got, cycles) = knn::run_pvu(spec);
+        out.push(Level2Result {
+            bench: "k Nearest Neighbours (KNN)".into(),
+            backend: format!("PVU Posit({},{})", spec.ps, spec.es),
+            input: "Iris".into(),
+            cycles,
+            correct: got == knn_ref,
+        });
+    }
+
     let (lr_ref, _) = linreg::reference();
     for spec in specs {
         let (got, cycles) = linreg::run_pvu(spec);
@@ -219,6 +232,31 @@ pub fn run_level_two_pvu(mm_n: usize) -> Vec<Level2Result> {
             input: "Iris".into(),
             cycles,
             correct: linreg::coefficients_match(&got, &lr_ref),
+        });
+    }
+
+    let nb_ref = naivebayes::reference();
+    for spec in specs {
+        let (got, cycles) = naivebayes::run_pvu(spec);
+        out.push(Level2Result {
+            bench: "Naive Bayes (NB)".into(),
+            backend: format!("PVU Posit({},{})", spec.ps, spec.es),
+            input: "Iris".into(),
+            cycles,
+            correct: got == nb_ref,
+        });
+    }
+
+    let ct_ref = ctree::reference();
+    for spec in specs {
+        let (got, cycles) = ctree::run_pvu(spec);
+        let agree = got.iter().zip(&ct_ref).filter(|(a, b)| a == b).count();
+        out.push(Level2Result {
+            bench: "Classification Tree (CT)".into(),
+            backend: format!("PVU Posit({},{})", spec.ps, spec.es),
+            input: "Iris".into(),
+            cycles,
+            correct: agree * 100 >= ct_ref.len() * 95,
         });
     }
 
@@ -276,7 +314,7 @@ mod tests {
     #[test]
     fn pvu_level_two_rows() {
         let rows = run_level_two_pvu(10);
-        assert_eq!(rows.len(), 3 * 3);
+        assert_eq!(rows.len(), 6 * 3);
         // Quire-fused P32 must be correct on every kernel.
         for r in rows.iter().filter(|r| r.backend.contains("32")) {
             assert!(r.correct, "{} wrong on PVU P32", r.bench);

@@ -48,7 +48,11 @@ pub fn load_set(path: &Path) -> io::Result<SynthSet> {
     let features = read_f32s(&mut f, n * FEAT)?;
     let mut labels = vec![0u8; n];
     f.read_exact(&mut labels)?;
-    Ok(SynthSet { features, labels })
+    Ok(SynthSet {
+        features,
+        labels,
+        feat: FEAT,
+    })
 }
 
 /// Save a test set.

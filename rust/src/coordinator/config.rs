@@ -36,6 +36,11 @@ pub enum ConfigError {
     /// `--batch` given with the PJRT backend (batch size is baked into
     /// the AOT executables).
     BatchWithPjrt,
+    /// `--workload` named neither `cnn` nor a registered bench kernel.
+    UnknownWorkload(String),
+    /// A kernel `--workload` with the PJRT backend (kernels execute on
+    /// the simulated core — there are no AOT kernel artifacts).
+    WorkloadWithPjrt(String),
     /// `--autoscale-min` without `--autoscale-max` (a floor alone
     /// cannot enable the controller).
     AutoscaleMinWithoutMax,
@@ -95,6 +100,13 @@ impl fmt::Display for ConfigError {
             ConfigError::BatchWithPjrt => write!(
                 f,
                 "--batch applies to the native pvu backend; PJRT batch sizes are baked into the artifacts"
+            ),
+            ConfigError::UnknownWorkload(w) => {
+                write!(f, "unknown --workload {w:?} (expected cnn or a registered kernel)")
+            }
+            ConfigError::WorkloadWithPjrt(w) => write!(
+                f,
+                "--workload {w:?} requires the native pvu backend (kernels have no AOT artifacts)"
             ),
             ConfigError::AutoscaleMinWithoutMax => {
                 write!(f, "--autoscale-min requires --autoscale-max (the ceiling enables the controller)")
@@ -163,6 +175,7 @@ impl std::error::Error for ConfigError {}
 #[derive(Clone, Debug, Default)]
 pub struct ServeConfigBuilder {
     backend: Option<String>,
+    workload: Option<String>,
     batch: Option<u64>,
     /// Per-command default batch when `--batch` is absent (serve uses
     /// 8, smoke benches 4). Zero falls back to 1.
@@ -195,6 +208,12 @@ impl ServeConfigBuilder {
     /// `--backend` (pvu | pjrt; default pvu).
     pub fn backend(mut self, v: Option<String>) -> Self {
         self.backend = v;
+        self
+    }
+
+    /// `--workload` (cnn | a registered kernel name; default cnn).
+    pub fn workload(mut self, v: Option<String>) -> Self {
+        self.workload = v;
         self
     }
 
@@ -363,6 +382,16 @@ impl ServeConfigBuilder {
             }
             other => return Err(ConfigError::UnknownBackend(other.to_string())),
         }
+        if let Some(w) = self.workload.as_deref() {
+            if w != "cnn" {
+                if super::workload::lookup(w).is_none() {
+                    return Err(ConfigError::UnknownWorkload(w.to_string()));
+                }
+                if backend == "pjrt" {
+                    return Err(ConfigError::WorkloadWithPjrt(w.to_string()));
+                }
+            }
+        }
         if let Some(r) = self.routing.as_deref() {
             if Routing::parse(r).is_none() {
                 return Err(ConfigError::UnknownRouting(r.to_string()));
@@ -489,6 +518,7 @@ impl ServeConfigBuilder {
                 slow_us: self.trace_slow_us.unwrap_or(0),
                 path: self.trace_file,
             },
+            workload: self.workload.unwrap_or_else(|| defaults.workload.clone()),
             ..defaults
         })
     }
@@ -513,6 +543,7 @@ mod tests {
     fn every_flag_lands_in_the_config() {
         let cfg = ServeConfig::builder()
             .backend(Some("pvu".into()))
+            .workload(Some("npb-cg".into()))
             .batch(Some(16))
             .shards(Some(3))
             .queue_depth(Some(32))
@@ -541,6 +572,10 @@ mod tests {
         assert_eq!(cfg.scale_event_cap, 64);
         assert_eq!(cfg.trace.sample_every, 4);
         assert_eq!(cfg.trace.path, Some(PathBuf::from("spans.jsonl")));
+        assert_eq!(cfg.workload, "npb-cg");
+        // Absent flag: the CNN tail, like ServeConfig::default().
+        let cfg = ServeConfig::builder().default_batch(4).build().unwrap();
+        assert_eq!(cfg.workload, "cnn");
     }
 
     #[test]
@@ -558,6 +593,21 @@ mod tests {
             err(ServeConfig::builder().routing(Some("random".into()))),
             ConfigError::UnknownRouting("random".into())
         );
+        assert_eq!(
+            err(ServeConfig::builder().workload(Some("npb-xx".into()))),
+            ConfigError::UnknownWorkload("npb-xx".into())
+        );
+        assert_eq!(
+            err(ServeConfig::builder()
+                .backend(Some("pjrt".into()))
+                .workload(Some("knn".into()))),
+            ConfigError::WorkloadWithPjrt("knn".into())
+        );
+        ServeConfig::builder()
+            .backend(Some("pjrt".into()))
+            .workload(Some("cnn".into()))
+            .build()
+            .expect("cnn workload is fine on pjrt");
         assert_eq!(
             err(ServeConfig::builder().autoscale_min(Some(2))),
             ConfigError::AutoscaleMinWithoutMax

@@ -237,6 +237,11 @@ pub struct ShardBench {
 pub struct BenchSummary {
     /// "closed", "open" or "replay" ([`LoadSource::mode`]).
     pub mode: &'static str,
+    /// What was served: "cnn" for the CNN tail, or a registered kernel
+    /// name ("npb-cg", "knn", …) from [`super::workload`]. Lets a saved
+    /// snapshot say what it measured — two schema-identical JSONs are
+    /// only comparable when this matches.
+    pub workload: String,
     /// Total wall time for the whole mix.
     pub wall: Duration,
     /// Intra-batch parallelism the stack ran with (read from the
@@ -297,6 +302,10 @@ impl BenchSummary {
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
+        out.push_str(&format!(
+            "  \"workload\": \"{}\",\n",
+            json_escape(&self.workload)
+        ));
         out.push_str(&format!("  \"wall_s\": {:.6},\n", self.wall.as_secs_f64()));
         out.push_str(&format!("  \"intra_batch\": {},\n", self.intra_batch));
         out.push_str(&format!(
@@ -426,7 +435,9 @@ impl BenchSummary {
     /// mean breakdown.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "serve-bench ({} loop, {:.2?} wall, {:.0} req/s aggregate, intra-batch {}, simd {})\n",
+            "serve-bench ({}, {} loop, {:.2?} wall, {:.0} req/s aggregate, intra-batch {}, \
+             simd {})\n",
+            self.workload,
             self.mode,
             self.wall,
             self.aggregate_rps(),
@@ -1307,6 +1318,7 @@ pub fn run_bench_with(
     let escalations = snap.escalations[snap.escalations.len().saturating_sub(new_esc)..].to_vec();
     Ok(BenchSummary {
         mode: source.mode(),
+        workload: coord.workload().to_string(),
         wall,
         intra_batch: coord.intra_batch(),
         simd_backend: coord.simd_backend(),
@@ -1369,6 +1381,7 @@ mod tests {
     fn json_summary_is_well_formed_and_complete() {
         let summary = BenchSummary {
             mode: "closed",
+            workload: "cnn".into(),
             wall: Duration::from_millis(1500),
             intra_batch: 2,
             simd_backend: "avx2",
@@ -1416,6 +1429,7 @@ mod tests {
         let doc = super::super::compare::parse_json(&json).expect("valid JSON");
         for key in [
             "\"mode\"",
+            "\"workload\"",
             "\"wall_s\"",
             "\"intra_batch\"",
             "\"simd_backend\"",
@@ -1481,6 +1495,8 @@ mod tests {
         assert!(!table.contains('≤'), "no bound labels remain");
         assert!(table.contains("stage means"));
         assert!(table.contains("intra-batch 2, simd avx2"));
+        assert!(table.starts_with("serve-bench (cnn, closed loop"), "{table}");
+        assert!(json.contains("\"workload\": \"cnn\""));
         assert!(json.contains("\"simd_backend\": \"avx2\""));
         assert!(table.contains(
             "scale events: fp32 1->2 (p99 9.000ms, slo: p99 9000us > target 5000us)"
@@ -1534,6 +1550,7 @@ mod tests {
     fn routed_summary_emits_router_object_and_escalation_events() {
         let summary = BenchSummary {
             mode: "routed",
+            workload: "npb-cg".into(),
             wall: Duration::from_millis(900),
             intra_batch: 1,
             simd_backend: "scalar",
@@ -1581,6 +1598,7 @@ mod tests {
                 .and_then(|v| v.num()),
             Some(99.0)
         );
+        assert!(json.contains("\"workload\": \"npb-cg\""), "{json}");
         assert!(json.contains("\"ladder\": [\"p8\", \"fixed\", \"p16\", \"fp32\"]"));
         assert!(json.contains("\"shadow_sample\": 8"));
         assert!(json.contains("\"probing\": false"));

@@ -68,6 +68,7 @@ pub mod router;
 pub mod sketch;
 pub mod trace;
 pub mod wheel;
+pub mod workload;
 
 pub use autoscale::{
     AutoscaleConfig, ScaleAction, ScaleDecision, ScaleObservation, ScalePolicy,
@@ -89,6 +90,7 @@ pub use router::{Escalation, PrecisionRouter, Route, RouterConfig, RouterSnapsho
 pub use sketch::LatencySketch;
 pub use trace::{Span, TraceConfig, Tracer};
 pub use wheel::TimerWheel;
+pub use workload::{KernelBackend, KernelDef};
 
 use crate::cnn;
 use crate::posit::{Format, PositSpec, FIXED16, P16, P32, P8};
@@ -180,6 +182,13 @@ pub struct ServeConfig {
     /// `--trace-file`). Off by default; when enabled the workers emit
     /// one JSONL record per selected request (see [`trace`]).
     pub trace: TraceConfig,
+    /// What the workers execute (`--workload`): `"cnn"` (the default
+    /// CNN tail) or a registered bench kernel name from
+    /// [`workload::KERNELS`] ("npb-cg", "npb-ep", "knn"). Kernel
+    /// workloads require the native backend; each variant then serves
+    /// the kernel through a [`KernelBackend`] with the kernel's own
+    /// request/response shape.
+    pub workload: String,
 }
 
 impl Default for ServeConfig {
@@ -197,6 +206,7 @@ impl Default for ServeConfig {
             scale_policy: ScalePolicyChoice::default(),
             scale_event_cap: metrics::MAX_SCALE_EVENTS,
             trace: TraceConfig::default(),
+            workload: "cnn".to_string(),
         }
     }
 }
@@ -301,6 +311,8 @@ pub struct Coordinator {
     /// Dropping this stops the autoscale controller.
     scaler_stop: Option<Sender<()>>,
     scaler_handle: Option<JoinHandle<()>>,
+    /// What the workers execute ("cnn" or a kernel registry name).
+    workload: String,
     /// Manifest the workers were built from (synthesized for the
     /// native backend).
     pub manifest: Manifest,
@@ -501,14 +513,39 @@ impl Coordinator {
     /// the coordinator down and is returned here, so callers fail fast
     /// instead of discovering a dead variant at `infer` time.
     pub fn start(cfg: &ServeConfig, only: Option<&[&str]>) -> Result<Self> {
-        let manifest = match &cfg.backend {
+        // Kernel workloads resolve once here; an unknown name fails fast.
+        let kernel = if cfg.workload == "cnn" {
+            None
+        } else {
+            let names: Vec<&str> = workload::kernels().iter().map(|k| k.name).collect();
+            let k = workload::lookup(&cfg.workload).ok_or_else(|| {
+                anyhow!("unknown workload {:?} (kernels: {names:?})", cfg.workload)
+            })?;
+            anyhow::ensure!(
+                matches!(cfg.backend, BackendChoice::Pvu { .. }),
+                "workload {:?} requires the native backend (kernels have no AOT artifacts)",
+                cfg.workload
+            );
+            Some(k)
+        };
+        let mut manifest = match &cfg.backend {
             BackendChoice::Pjrt => Manifest::load(&cfg.artifacts)?,
             BackendChoice::Pvu { batch } => Manifest::native(*batch),
         };
-        let params = match &cfg.backend {
+        if let Some(k) = kernel {
+            // The manifest advertises the kernel's request/response
+            // shape; everything downstream (batcher, loadgen, metrics)
+            // reads shapes from here or from the backends.
+            manifest.feat = k.feat;
+            manifest.classes = k.classes;
+        }
+        let params = match (&cfg.backend, kernel) {
             // Loaded once; each worker encodes its own format view.
-            BackendChoice::Pvu { .. } => Some(Arc::new(cnn::weights::params_or_analytic().0)),
-            BackendChoice::Pjrt => None,
+            // Kernel workloads carry their own inputs — no CNN weights.
+            (BackendChoice::Pvu { .. }, None) => {
+                Some(Arc::new(cnn::weights::params_or_analytic().0))
+            }
+            _ => None,
         };
         let metrics = Arc::new(Mutex::new(Metrics::with_event_cap(cfg.scale_event_cap)));
         let handles = Arc::new(Mutex::new(Vec::new()));
@@ -551,14 +588,21 @@ impl Coordinator {
                     })
                 }
                 BackendChoice::Pvu { batch } => {
-                    let params = Arc::clone(params.as_ref().expect("params loaded for PVU"));
                     let vname = name.clone();
                     let batch = *batch;
-                    let intra = cfg.intra_batch.max(1);
-                    Arc::new(move || {
-                        let be = PvuBackend::new(&vname, batch, &params)?.with_intra(intra);
-                        Ok(Box::new(be) as Box<dyn InferBackend>)
-                    })
+                    if let Some(k) = kernel {
+                        Arc::new(move || {
+                            let be = KernelBackend::new(k, &vname, batch)?;
+                            Ok(Box::new(be) as Box<dyn InferBackend>)
+                        })
+                    } else {
+                        let params = Arc::clone(params.as_ref().expect("params loaded for PVU"));
+                        let intra = cfg.intra_batch.max(1);
+                        Arc::new(move || {
+                            let be = PvuBackend::new(&vname, batch, &params)?.with_intra(intra);
+                            Ok(Box::new(be) as Box<dyn InferBackend>)
+                        })
+                    }
                 }
             };
             let route = VariantRoute {
@@ -625,8 +669,16 @@ impl Coordinator {
             intra_batch: cfg.intra_batch.max(1),
             scaler_stop,
             scaler_handle,
+            workload: cfg.workload.clone(),
             manifest,
         })
+    }
+
+    /// What the workers execute: `"cnn"` or a bench-kernel registry name
+    /// ("npb-cg", …). Reported in the serve-bench summary so a snapshot
+    /// says what it measured.
+    pub fn workload(&self) -> &str {
+        &self.workload
     }
 
     /// Intra-batch pool width the native workers run with (1 =

@@ -1,0 +1,393 @@
+//! Servable bench-kernel registry — `--workload npb-cg|npb-ep|knn`.
+//!
+//! The CNN tail is one workload the serving stack can carry; the bench
+//! suite and the NPB matrix provide more. This module wraps any
+//! registered kernel behind [`KernelBackend`], an
+//! [`InferBackend`](super::backend::InferBackend) implementation, so a
+//! kernel request flows through exactly the same shards, autoscaler,
+//! precision router and serve-bench JSON as a CNN inference:
+//!
+//! - A **request** is a fixed-size f32 vector (`feat` values — the
+//!   right-hand side for CG, a deviate-pair stream for EP, a query point
+//!   for KNN).
+//! - A **response** is a fixed-size score vector (`classes` values);
+//!   Top-1 over the scores is the accuracy the metrics pipeline already
+//!   measures, so format-induced score flips show up for kernels the
+//!   same way Top-1 loss does for the CNN.
+//!
+//! Kernels are registered by name in [`KERNELS`]; `repro serve-bench
+//! --workload <name>` resolves them through [`lookup`]. Request
+//! encodings and the how-to for adding a kernel live in
+//! `docs/WORKLOADS.md`.
+
+use super::backend::InferBackend;
+use crate::bench_suite::knn;
+use crate::data::iris;
+use crate::data::synth::SynthSet;
+use crate::data::Rng;
+use crate::npb::{cg, ep};
+use crate::posit::{FIXED16, P16, P32, P8};
+use crate::sim::{Backend, FixedPosar, Fpu, Hybrid, Machine, Posar};
+use anyhow::Result;
+
+/// One servable kernel: a name, its fixed request/response shape, and
+/// the simulated-core body plus its f64 reference. The function pointers
+/// make the definition `Copy + Send + Sync`, so factory closures can
+/// capture it by value and ship it into worker threads.
+#[derive(Clone, Copy)]
+pub struct KernelDef {
+    /// Registry key (`--workload` value).
+    pub name: &'static str,
+    /// f32 values per request.
+    pub feat: usize,
+    /// Score values per response.
+    pub classes: usize,
+    /// Kernel body on the simulated core (one request → scores).
+    run: fn(&mut Machine, &[f32]) -> Vec<f64>,
+    /// f64 reference of the identical algorithm (ground-truth labels).
+    reference: fn(&[f32]) -> Vec<f64>,
+}
+
+impl KernelDef {
+    /// The f64 reference scores for one request (used for ground-truth
+    /// labels and conformance tests).
+    pub fn reference(&self, x: &[f32]) -> Vec<f64> {
+        (self.reference)(x)
+    }
+}
+
+// ---------------------------------------------------------------------
+// npb-cg: one CG solve per request.
+// ---------------------------------------------------------------------
+
+/// The fixed serving operator behind `npb-cg` — a 16×16 instance of the
+/// class-S matrix family, solved with 4 CG steps per request.
+fn cg_serve_problem() -> cg::CgProblem {
+    cg::CgProblem {
+        n: 16,
+        row_nz: 3,
+        niter: 1,
+        cgitmax: 4,
+        shift: 10.0,
+        seed: 0xC6,
+    }
+}
+
+/// Bin the solution into `classes` contiguous L1 masses — a stable
+/// score vector whose argmax says *where* the solve put its energy.
+fn bin_abs(z: &[f64], classes: usize) -> Vec<f64> {
+    let w = z.len() / classes;
+    (0..classes)
+        .map(|c| z[c * w..(c + 1) * w].iter().map(|v| v.abs()).sum())
+        .collect()
+}
+
+fn cg_run(m: &mut Machine, x: &[f32]) -> Vec<f64> {
+    let p = cg_serve_problem();
+    let x0: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    bin_abs(&cg::solve_machine(m, &p, &x0), 4)
+}
+
+fn cg_reference(x: &[f32]) -> Vec<f64> {
+    let p = cg_serve_problem();
+    let x0: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    bin_abs(&cg::solve_reference(&p, &x0), 4)
+}
+
+// ---------------------------------------------------------------------
+// npb-ep: one deviate-pair stream per request.
+// ---------------------------------------------------------------------
+
+fn ep_pairs(x: &[f32]) -> Vec<(f64, f64)> {
+    x.chunks_exact(2)
+        .map(|c| (c[0] as f64, c[1] as f64))
+        .collect()
+}
+
+fn ep_run(m: &mut Machine, x: &[f32]) -> Vec<f64> {
+    ep::run_stream_machine(m, &ep_pairs(x)).to_vec()
+}
+
+fn ep_reference(x: &[f32]) -> Vec<f64> {
+    ep::run_stream_reference(&ep_pairs(x)).to_vec()
+}
+
+// ---------------------------------------------------------------------
+// knn: one query point per request.
+// ---------------------------------------------------------------------
+
+fn knn_run(m: &mut Machine, x: &[f32]) -> Vec<f64> {
+    let q: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    knn::votes_machine(m, &q).iter().map(|&v| v as f64).collect()
+}
+
+fn knn_reference(x: &[f32]) -> Vec<f64> {
+    let q: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    knn::votes_reference(&q).iter().map(|&v| v as f64).collect()
+}
+
+/// Every servable bench kernel, keyed by `--workload` name.
+pub const KERNELS: [KernelDef; 3] = [
+    KernelDef {
+        name: "npb-cg",
+        feat: 16,
+        classes: 4,
+        run: cg_run,
+        reference: cg_reference,
+    },
+    KernelDef {
+        name: "npb-ep",
+        feat: 16,
+        classes: 2,
+        run: ep_run,
+        reference: ep_reference,
+    },
+    KernelDef {
+        name: "knn",
+        feat: iris::M,
+        classes: iris::K,
+        run: knn_run,
+        reference: knn_reference,
+    },
+];
+
+/// Resolve a kernel by its registry name.
+pub fn lookup(name: &str) -> Option<KernelDef> {
+    KERNELS.iter().copied().find(|k| k.name == name)
+}
+
+/// All registered kernels (for help text and the workload matrix).
+pub fn kernels() -> &'static [KernelDef] {
+    &KERNELS
+}
+
+/// The simulation backend a serving variant maps to for kernel
+/// workloads (the same variant names as
+/// [`NATIVE_VARIANTS`](super::backend::NATIVE_VARIANTS)).
+fn engine_for(variant: &str) -> Result<Box<dyn Backend>> {
+    Ok(match variant {
+        "fp32" => Box::new(Fpu::new()),
+        "p8" => Box::new(Posar::new(P8)),
+        "p16" => Box::new(Posar::new(P16)),
+        "p32" => Box::new(Posar::new(P32)),
+        "fixed" => Box::new(FixedPosar::new(FIXED16)),
+        "hybrid" => Box::new(Hybrid::new(P16, P8)),
+        other => anyhow::bail!("no kernel engine for variant {other:?}"),
+    })
+}
+
+/// An [`InferBackend`] that serves a registered bench kernel: each
+/// filled batch row runs the kernel body on a fresh [`Machine`] over the
+/// variant's backend, and the scores come back as the probability row.
+/// The modeled cycles accumulate exactly like [`super::backend::PvuBackend`]'s.
+pub struct KernelBackend {
+    def: KernelDef,
+    variant: String,
+    be: Box<dyn Backend>,
+    batch: usize,
+    /// Modeled cycles accumulated over every request served.
+    pub cycles: u64,
+}
+
+impl KernelBackend {
+    /// Build the kernel engine for one serving variant.
+    pub fn new(def: KernelDef, variant: &str, batch: usize) -> Result<Self> {
+        Ok(KernelBackend {
+            def,
+            variant: variant.to_string(),
+            be: engine_for(variant)?,
+            batch: batch.max(1),
+            cycles: 0,
+        })
+    }
+}
+
+impl InferBackend for KernelBackend {
+    fn variant(&self) -> &str {
+        &self.variant
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn feat(&self) -> usize {
+        self.def.feat
+    }
+    fn classes(&self) -> usize {
+        self.def.classes
+    }
+
+    fn run(&mut self, x: &[f32], n: usize, out: &mut Vec<f32>) -> Result<()> {
+        let (feat, classes) = (self.def.feat, self.def.classes);
+        anyhow::ensure!(
+            x.len() == self.batch * feat,
+            "expected {}·{feat} inputs, got {}",
+            self.batch,
+            x.len()
+        );
+        anyhow::ensure!(n <= self.batch, "{n} filled rows > batch {}", self.batch);
+        out.clear();
+        out.reserve(n * classes);
+        let run = self.def.run;
+        for i in 0..n {
+            let mut m = Machine::new(self.be.as_ref());
+            let scores = run(&mut m, &x[i * feat..(i + 1) * feat]);
+            debug_assert_eq!(scores.len(), classes);
+            out.extend(scores.iter().map(|&v| v as f32));
+            self.cycles += m.cycles;
+        }
+        Ok(())
+    }
+}
+
+/// A seeded request set for a kernel: `n` requests shaped for
+/// `def.feat`, labelled by the argmax of the f64 reference scores — so
+/// serve-bench Top-1 measures format-induced score flips for kernels
+/// exactly like it measures misclassification for the CNN tail.
+pub fn request_set(def: &KernelDef, seed: u64, n: usize) -> SynthSet {
+    let mut rng = Rng::new(seed);
+    let mut features = Vec::with_capacity(n * def.feat);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f32> = match def.name {
+            // Positive, well-conditioned right-hand sides: the serving
+            // operator is diagonally dominant, so the solve stays tame.
+            "npb-cg" => (0..def.feat)
+                .map(|_| (1.0 + 0.5 * rng.range(0.0, 1.0)) as f32)
+                .collect(),
+            // EP consumes pairs in (-1,1)².
+            "npb-ep" => (0..def.feat).map(|_| rng.range(-1.0, 1.0) as f32).collect(),
+            // A jittered Iris sample: a plausible query near the data.
+            "knn" => {
+                let r = rng.below(iris::N as u64) as usize;
+                (0..def.feat)
+                    .map(|f| (iris::FEATURES[r][f] + 0.1 * rng.normal()).max(0.0) as f32)
+                    .collect()
+            }
+            _ => (0..def.feat).map(|_| rng.range(0.0, 1.0) as f32).collect(),
+        };
+        let scores = def.reference(&row);
+        let label = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        features.extend_from_slice(&row);
+        labels.push(label as u8);
+    }
+    SynthSet {
+        features,
+        labels,
+        feat: def.feat,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NATIVE_VARIANTS;
+
+    fn argmax(row: &[f32]) -> usize {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        for k in kernels() {
+            assert!(k.feat > 0 && k.classes > 0, "{}: degenerate shape", k.name);
+            let found = lookup(k.name).expect(k.name);
+            assert_eq!(found.name, k.name);
+            assert_eq!((found.feat, found.classes), (k.feat, k.classes));
+        }
+        let mut names: Vec<&str> = kernels().iter().map(|k| k.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), kernels().len(), "duplicate kernel names");
+        assert!(lookup("cnn").is_none(), "cnn is not a kernel workload");
+        assert!(lookup("nope").is_none());
+    }
+
+    #[test]
+    fn kernel_backend_serves_every_variant_for_every_kernel() {
+        let batch = 2;
+        let mut out = Vec::new();
+        for def in kernels() {
+            let set = request_set(def, 0x5E12, batch);
+            let mut x = vec![0f32; batch * def.feat];
+            for i in 0..batch {
+                x[i * def.feat..(i + 1) * def.feat].copy_from_slice(set.sample(i));
+            }
+            for v in NATIVE_VARIANTS {
+                let mut be = KernelBackend::new(*def, v, batch).expect(v);
+                assert_eq!(be.variant(), v);
+                assert_eq!(
+                    (be.batch(), be.feat(), be.classes()),
+                    (batch, def.feat, def.classes),
+                    "{}: shape on {v}",
+                    def.name
+                );
+                be.run(&x, batch, &mut out).expect(v);
+                assert_eq!(out.len(), batch * def.classes, "{}: {v}", def.name);
+                assert!(be.cycles > 0, "{}: {v} must accumulate cycles", def.name);
+            }
+            assert!(KernelBackend::new(*def, "nope", 1).is_err());
+        }
+    }
+
+    #[test]
+    fn fp32_scores_agree_with_the_reference_argmax() {
+        for def in kernels() {
+            let n = 8;
+            let set = request_set(def, 0xF32A, n);
+            let mut be = KernelBackend::new(*def, "fp32", 1).unwrap();
+            let mut out = Vec::new();
+            for i in 0..n {
+                be.run(set.sample(i), 1, &mut out).unwrap();
+                assert_eq!(
+                    argmax(&out),
+                    set.labels[i] as usize,
+                    "{}: request {i} flipped on fp32",
+                    def.name
+                );
+                for v in &out {
+                    assert!(v.is_finite(), "{}: non-finite fp32 score", def.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_batches_and_bad_shapes() {
+        let def = lookup("knn").unwrap();
+        let set = request_set(&def, 0xBAD, 1);
+        let mut x = vec![0f32; 4 * def.feat];
+        x[..def.feat].copy_from_slice(set.sample(0));
+        let mut be = KernelBackend::new(def, "p16", 4).unwrap();
+        let mut out = vec![1f32; 99]; // stale arena contents must be cleared
+        be.run(&x, 1, &mut out).unwrap();
+        assert_eq!(out.len(), def.classes);
+        assert!(be.run(&x[..def.feat], 1, &mut out).is_err());
+        assert!(be.run(&x, 5, &mut out).is_err());
+    }
+
+    #[test]
+    fn request_sets_are_deterministic_and_shaped() {
+        for def in kernels() {
+            let a = request_set(def, 7, 5);
+            let b = request_set(def, 7, 5);
+            assert_eq!(a.features, b.features, "{}", def.name);
+            assert_eq!(a.labels, b.labels, "{}", def.name);
+            assert_eq!(a.feat, def.feat, "{}", def.name);
+            assert_eq!(a.features.len(), 5 * def.feat, "{}", def.name);
+            assert!(
+                a.labels.iter().all(|&l| (l as usize) < def.classes),
+                "{}: label out of range",
+                def.name
+            );
+        }
+    }
+}

@@ -32,12 +32,16 @@ pub const HIDDEN: usize = 64;
 /// Flattened size after the 3×3/2 average pool (64 × 4 × 4).
 pub const POOLED: usize = CHAN * 4 * 4;
 
-/// A synthetic inference workload: features in `relu3` input layout.
+/// A synthetic inference workload: row-major feature matrix + labels.
+/// The CNN tail uses `feat == FEAT` rows; servable bench kernels
+/// (`coordinator::workload`) build sets with their own request widths.
 pub struct SynthSet {
-    /// `n × FEAT` feature values (row-major).
+    /// `n × feat` feature values (row-major).
     pub features: Vec<f32>,
     /// Ground-truth labels.
     pub labels: Vec<u8>,
+    /// Features per sample (row stride).
+    pub feat: usize,
 }
 
 impl SynthSet {
@@ -51,7 +55,7 @@ impl SynthSet {
     }
     /// One sample's features.
     pub fn sample(&self, i: usize) -> &[f32] {
-        &self.features[i * FEAT..(i + 1) * FEAT]
+        &self.features[i * self.feat..(i + 1) * self.feat]
     }
 }
 
@@ -101,7 +105,11 @@ pub fn generate(seed: u64, n: usize) -> SynthSet {
             features.push((v * 2.0) as f32);
         }
     }
-    SynthSet { features, labels }
+    SynthSet {
+        features,
+        labels,
+        feat: FEAT,
+    }
 }
 
 /// Analytic matched-filter head: `ip1` inverts the expansion (scaled

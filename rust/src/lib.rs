@@ -22,8 +22,12 @@
 //!   FPU, POSAR, hybrid storage/compute, runtime-conversion unit), cycle
 //!   accounting, and the dynamic-range tracer.
 //! - [`bench_suite`] — the paper's level-1/level-2 benchmark programs,
-//!   plus PVU-backed variants of MM, k-means and linear regression.
-//! - [`npb`] — the NPB BT (block tri-diagonal) level-3 substrate.
+//!   plus PVU-backed variants of MM, k-means, linear regression, KNN,
+//!   naive Bayes and decision-tree splits.
+//! - [`npb`] — the NPB level-3 kernel matrix: BT, CG, EP and MG over
+//!   [`sim::Backend`] with PVU-native quire paths, validated by the
+//!   shared class-ε verifier ([`npb::verify`]) that names every
+//!   breached quantity (`repro npb`).
 //! - [`cnn`] — the Cifar-10 CNN tail (level-3 ML inference); dense
 //!   layers and pooling have a PVU execution path ([`cnn::forward_pvu`]).
 //! - [`data`] — embedded Iris dataset + synthetic Cifar-like workload.
@@ -36,7 +40,10 @@
 //!   parallelism ([`coordinator::Pool`]), a shard autoscaler behind a
 //!   pluggable [`coordinator::ScalePolicy`] (occupancy- or SLO-driven
 //!   — [`coordinator::autoscale`]), pluggable inference backends
-//!   (native PVU — no artifacts needed — or PJRT), exact-tail
+//!   (native PVU — no artifacts needed — or PJRT) plus a servable
+//!   bench-kernel registry ([`coordinator::workload`]: `--workload
+//!   npb-cg|npb-ep|knn` serves NPB/KNN requests through the same
+//!   stack), exact-tail
 //!   telemetry (log-linear latency sketches with per-stage timers —
 //!   [`coordinator::LatencySketch`] — JSONL span tracing, Prometheus
 //!   exposition, and the `bench-compare` perf-trajectory diff), and

@@ -6,8 +6,11 @@
 
 use posar::cnn;
 use posar::coordinator::{
-    compare_files_gated, run_bench, BenchConfig, Coordinator, ServeConfig, ServeConfigBuilder,
+    compare_files_gated, run_bench, workload, BenchConfig, Coordinator, ServeConfig,
+    ServeConfigBuilder,
 };
+use posar::data::synth::SynthSet;
+use posar::npb::verify::{Class, Kernel};
 use posar::report;
 use std::time::{Duration, Instant};
 
@@ -26,6 +29,11 @@ paper reproduction:
   fig3                   runtime-conversion accuracy loss (Figure 3)
   fig5                   e accuracy/cycles vs iterations (Figure 5)
   bt [--n N] [--steps S] NPB BT epsilon-validation (default 6^3, 3)
+  npb [--kernel bt,cg,..] [--class S|W]
+                         NPB kernel matrix: class-eps verification for
+                         the listed kernels (default all four) across
+                         FP32/P8/P16/P32, one greppable PASS/FAIL line
+                         per kernel x backend (docs/WORKLOADS.md)
   cnn [--samples N]      CNN Top-1 + cycles on the simulator (default 64)
   power [--scale N]      power/energy model (S V-F)
   ablation               quire vs sequential accumulation
@@ -40,7 +48,8 @@ paper reproduction:
   all                    everything above at quick-run sizes
 
 serving:
-  serve [--backend pvu|pjrt] [--requests N] [--variants a,b,..]
+  serve [--backend pvu|pjrt] [--workload cnn|npb-cg|npb-ep|knn]
+        [--requests N] [--variants a,b,..]
         [--shards S] [--routing rr|lq] [--intra-batch P]
         [--adaptive-wait] [--autoscale-max M] [--autoscale-min m]
         [--scale-interval-ms I] [--slo-p99-us T] [--scale-event-cap E]
@@ -50,6 +59,11 @@ serving:
                          the CNN natively on the Posit Vector Unit — no
                          artifacts needed; `pjrt` serves the AOT
                          executables (needs `make artifacts`).
+                         --workload swaps the CNN tail for a registered
+                         bench kernel (npb-cg, npb-ep, knn — see
+                         docs/WORKLOADS.md); kernels need the native
+                         pvu backend and generate their own encoded
+                         request sets.
                          --intra-batch fans each batch's samples across
                          P cores (bit-identical to sequential);
                          --autoscale-max M lets a controller grow/shrink
@@ -67,7 +81,8 @@ serving:
                          as a JSONL span record to --trace-file
                          (default trace_spans.jsonl); --prom PATH writes
                          the Prometheus text exposition at exit
-  serve-bench [--smoke] [--backend pvu|pjrt] [--requests N]
+  serve-bench [--smoke] [--backend pvu|pjrt]
+              [--workload cnn|npb-cg|npb-ep|knn] [--requests N]
               [--concurrency C] [--batch B] [--shards S]
               [--queue-depth D] [--routing rr|lq] [--variants a,b,..]
               [--intra-batch P] [--adaptive-wait] [--autoscale-max M]
@@ -86,8 +101,8 @@ serving:
                          {{\"t_us\": N[, \"variant\": ..][, \"sample\": ..]}}
                          per line — or a built-in bursty/diurnal
                          synthetic shape). All modes print the same JSON
-                         summary schema (throughput, exact
-                         p50/p95/p99/p99.9 from the latency sketch,
+                         summary schema (served workload, throughput,
+                         exact p50/p95/p99/p99.9 from the latency sketch,
                          per-stage breakdown, rejections, arrival drift,
                          scale events with the policy's reason,
                          per-shard occupancy — schema in
@@ -180,6 +195,13 @@ fn main() {
                 num(&args, "--steps", 3) as usize
             )
         ),
+        "npb" => match npb(&args) {
+            Ok(out) => print!("{out}"),
+            Err(e) => {
+                eprintln!("npb failed: {e}");
+                std::process::exit(2);
+            }
+        },
         "cnn" => print!("{}", report::cnn_report(num(&args, "--samples", 64) as usize)),
         "power" => print!("{}", report::power_report(num(&args, "--scale", 100))),
         "ablation" => print!("{}", report::quire_ablation()),
@@ -200,6 +222,7 @@ fn main() {
             print!("\n{}", report::fig3());
             print!("\n{}", report::fig5());
             print!("\n{}", report::bt_report(6, 3));
+            print!("\n{}", report::npb_report(&Kernel::all(), Class::S));
             print!("\n{}", report::cnn_report(64));
             print!("\n{}", report::power_report(100));
             print!("\n{}", report::quire_ablation());
@@ -252,9 +275,54 @@ fn main() {
 /// the builder's validation, so `serve`/`serve-bench` are parse → build
 /// → run. Flag values that don't parse are errors here (the strict_num
 /// policy); flags that contradict each other are `ConfigError`s there.
+/// `npb [--kernel bt,cg,..] [--class S|W]`: parse the kernel list and
+/// class letter, then render the verification matrix. Unknown names are
+/// errors — CI greps these PASS lines, so a typo'd kernel must not
+/// silently shrink the matrix.
+fn npb(args: &[String]) -> anyhow::Result<String> {
+    let kernels: Vec<Kernel> = match flag(args, "--kernel") {
+        None => Kernel::all().to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                Kernel::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("unknown kernel {s:?} (expected bt, cg, ep, mg)")
+                })
+            })
+            .collect::<anyhow::Result<_>>()?,
+    };
+    let class = match flag(args, "--class") {
+        None => Class::S,
+        Some(c) => Class::parse(&c)
+            .ok_or_else(|| anyhow::anyhow!("unknown class {c:?} (expected S or W)"))?,
+    };
+    Ok(report::npb_report(&kernels, class))
+}
+
+/// The request stream for a run: the CNN tail reads the canonical
+/// artifact test set (or the synthetic fallback), kernel workloads
+/// generate their own encoded request rows (`workload::request_set`,
+/// labelled by the f64 reference so Top-1 measures format-induced score
+/// flips). Returns the set plus a provenance label for the banner.
+fn request_set_for(cfg: &ServeConfig, n: usize) -> anyhow::Result<(SynthSet, String)> {
+    if cfg.workload == "cnn" {
+        let (set, canonical) = cnn::weights::set_or_generate(n);
+        let label = if canonical { "canonical test set" } else { "generated data" };
+        return Ok((set, label.to_string()));
+    }
+    // The builder validated the name; this lookup only fails if a
+    // config was assembled by hand around it.
+    let def = workload::lookup(&cfg.workload)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {:?}", cfg.workload))?;
+    let set = workload::request_set(&def, 0xC6AB, n);
+    Ok((set, format!("{} kernel requests", def.name)))
+}
+
 fn serve_builder(args: &[String], default_batch: u64) -> anyhow::Result<ServeConfigBuilder> {
     Ok(ServeConfig::builder()
         .backend(flag(args, "--backend"))
+        .workload(flag(args, "--workload"))
         .batch(opt_num(args, "--batch")?)
         .default_batch(default_batch)
         .shards(opt_num(args, "--shards")?)
@@ -337,16 +405,8 @@ fn serve(args: &[String], variants: Option<&str>) -> anyhow::Result<()> {
     let filter: Option<Vec<&str>> = variants.map(|v| v.split(',').map(str::trim).collect());
     let coord = Coordinator::start(&cfg, filter.as_deref())?;
     println!("serving variants: {:?}", coord.variants());
-    let (set, canonical) = cnn::weights::set_or_generate(n_requests);
-    println!(
-        "request stream: {} requests per variant ({})",
-        n_requests,
-        if canonical {
-            "canonical test set"
-        } else {
-            "generated"
-        }
-    );
+    let (set, origin) = request_set_for(&cfg, n_requests)?;
+    println!("request stream: {n_requests} requests per variant ({origin})");
     let bcfg = BenchConfig {
         concurrency: 1, // sequential per variant: the `serve` shape
         requests: n_requests,
@@ -423,16 +483,17 @@ fn serve_bench(args: &[String]) -> anyhow::Result<()> {
         Some(variants.iter().map(|s| s.as_str()).collect())
     };
     let coord = Coordinator::start(&cfg, filter.as_deref())?;
-    let (set, canonical) = cnn::weights::set_or_generate(requests.clamp(64, 256));
+    let (set, origin) = request_set_for(&cfg, requests.clamp(64, 256))?;
     eprintln!(
-        "serve-bench: {:?} shards={} intra-batch={} routing={:?} autoscale-max={} variants={:?} ({})",
+        "serve-bench: {:?} workload={} shards={} intra-batch={} routing={:?} autoscale-max={} \
+         variants={:?} ({origin})",
         cfg.backend,
+        cfg.workload,
         cfg.shards.max(1),
         cfg.intra_batch.max(1),
         cfg.routing,
         cfg.autoscale.max_shards,
         coord.variants(),
-        if canonical { "canonical test set" } else { "generated data" }
     );
     let bcfg = BenchConfig {
         variants,
@@ -532,10 +593,12 @@ fn golden(path: &str) {
 }
 
 /// Dump PVU golden vectors: elementwise vadd/vmul slices (p8/p16/fixed,
-/// where the f64 oracle is exact) and a quire-fused dot over
-/// same-magnitude operands (so the exact sum fits f64). The python side
-/// recomputes each from the NumPy posit model and must match
-/// bit-for-bit.
+/// where the f64 oracle is exact), a quire-fused dot over
+/// same-magnitude operands (so the exact sum fits f64), and
+/// kernel-flavored rows for the servable bench kernels' inner loops
+/// (CG axpy, EP sum-of-squares, MG stencil, knn squared distance,
+/// naive-Bayes accumulate, ctree split max). The python side recomputes
+/// each from the NumPy posit model and must match bit-for-bit.
 fn golden_pvu(path: &std::path::Path) {
     use posar::posit::{Format, FIXED16, P16, P8};
     use posar::pvu;
@@ -593,6 +656,169 @@ fn golden_pvu(path: &std::path::Path) {
                 "  {{\"fmt\": \"{name}\", \"op\": \"dot\", \"a\": {}, \"b\": {}, \"out\": {d}}}",
                 fmt_list(&da),
                 fmt_list(&db)
+            ),
+            &mut first,
+            &mut out,
+        );
+    }
+    // Kernel-flavored rows: the inner loops of the servable bench
+    // kernels (docs/WORKLOADS.md), so the conformance suite locks the
+    // kernels' arithmetic and not just the generic vector ops. All
+    // operands are drawn from [0.5, 2): for p8/p16/fixed the exact
+    // results then fit f64 and the python model matches bit-for-bit;
+    // p32 products need up to 55 significand bits, so its rows are
+    // checked to one unit in the last place instead (the positive
+    // range keeps patterns away from the sign boundary, where a ±1
+    // pattern distance stops meaning one ulp).
+    for (fmt, name) in [
+        (Format::Posit(P8), "p8"),
+        (Format::Posit(P16), "p16"),
+        (Format::Fixed(FIXED16), "fixed"),
+        (Format::Posit(P32), "p32"),
+    ] {
+        let mut rng = posar::data::Rng::new(0x6E55);
+        let gen = |rng: &mut posar::data::Rng, n: usize| -> Vec<u32> {
+            (0..n).map(|_| fmt.from_f64(rng.range(0.5, 2.0))).collect()
+        };
+        // CG update: fused alpha·x + y, one rounding per lane.
+        let av = vec![fmt.from_f64(rng.range(0.5, 2.0)); 8];
+        let ax = gen(&mut rng, 8);
+        let ay = gen(&mut rng, 8);
+        let r = pvu::vfma_fmt(fmt, &av, &ax, &ay);
+        push(
+            format!(
+                "  {{\"fmt\": \"{name}\", \"op\": \"axpy\", \"a\": {}, \"b\": {}, \"c\": {}, \
+                 \"out\": {}}}",
+                fmt_list(&av),
+                fmt_list(&ax),
+                fmt_list(&ay),
+                fmt_list(&r)
+            ),
+            &mut first,
+            &mut out,
+        );
+        // Quire-fused reductions: EP's sum of squares, MG's 7-point
+        // stencil, naive Bayes' per-class log-likelihood accumulate.
+        for (op, len) in [("sumsq", 8usize), ("stencil", 7), ("nb-sum", 8)] {
+            let u = gen(&mut rng, len);
+            let w = if op == "sumsq" { u.clone() } else { gen(&mut rng, len) };
+            let d = pvu::dot_fmt(fmt, &u, &w);
+            push(
+                format!(
+                    "  {{\"fmt\": \"{name}\", \"op\": \"{op}\", \"a\": {}, \"b\": {}, \
+                     \"out\": {d}}}",
+                    fmt_list(&u),
+                    fmt_list(&w)
+                ),
+                &mut first,
+                &mut out,
+            );
+        }
+        // knn: squared distance — a lane subtract, then the fused
+        // self-dot (two roundings total, both modelled).
+        let qa = gen(&mut rng, 4);
+        let qb = gen(&mut rng, 4);
+        let diff = pvu::vsub_fmt(fmt, &qa, &qb);
+        let d2 = pvu::dot_fmt(fmt, &diff, &diff);
+        push(
+            format!(
+                "  {{\"fmt\": \"{name}\", \"op\": \"knn-d2\", \"a\": {}, \"b\": {}, \"out\": {d2}}}",
+                fmt_list(&qa),
+                fmt_list(&qb)
+            ),
+            &mut first,
+            &mut out,
+        );
+        // ctree: the split comparison as a lane max (never rounds —
+        // the result is always one of the operands, every format).
+        let ca = gen(&mut rng, 8);
+        let cb = gen(&mut rng, 8);
+        let mx = pvu::vmax_fmt(fmt, &ca, &cb);
+        push(
+            format!(
+                "  {{\"fmt\": \"{name}\", \"op\": \"split-max\", \"a\": {}, \"b\": {}, \
+                 \"out\": {}}}",
+                fmt_list(&ca),
+                fmt_list(&cb),
+                fmt_list(&mx)
+            ),
+            &mut first,
+            &mut out,
+        );
+    }
+    // FP32 kernel rows: IEEE f32 lanes (two-rounding axpy, in-order
+    // sequential reductions), bits = `f32::to_bits`. NumPy float32
+    // reproduces each bit-for-bit.
+    {
+        let mut rng = posar::data::Rng::new(0xF32A);
+        let bits = |v: &[f32]| -> String {
+            let items: Vec<String> = v.iter().map(|x| x.to_bits().to_string()).collect();
+            format!("[{}]", items.join(", "))
+        };
+        let gen = |rng: &mut posar::data::Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.range(0.5, 2.0) as f32).collect()
+        };
+        let a = gen(&mut rng, 8);
+        let x = gen(&mut rng, 8);
+        let y = gen(&mut rng, 8);
+        let r: Vec<f32> = (0..8).map(|i| a[i] * x[i] + y[i]).collect();
+        push(
+            format!(
+                "  {{\"fmt\": \"fp32\", \"op\": \"axpy\", \"a\": {}, \"b\": {}, \"c\": {}, \
+                 \"out\": {}}}",
+                bits(&a),
+                bits(&x),
+                bits(&y),
+                bits(&r)
+            ),
+            &mut first,
+            &mut out,
+        );
+        for (op, len) in [("sumsq", 8usize), ("stencil", 7), ("nb-sum", 8)] {
+            let u = gen(&mut rng, len);
+            let w = if op == "sumsq" { u.clone() } else { gen(&mut rng, len) };
+            let mut acc = 0f32;
+            for i in 0..len {
+                acc += u[i] * w[i];
+            }
+            push(
+                format!(
+                    "  {{\"fmt\": \"fp32\", \"op\": \"{op}\", \"a\": {}, \"b\": {}, \"out\": {}}}",
+                    bits(&u),
+                    bits(&w),
+                    acc.to_bits()
+                ),
+                &mut first,
+                &mut out,
+            );
+        }
+        let qa = gen(&mut rng, 4);
+        let qb = gen(&mut rng, 4);
+        let mut acc = 0f32;
+        for i in 0..4 {
+            let d = qa[i] - qb[i];
+            acc += d * d;
+        }
+        push(
+            format!(
+                "  {{\"fmt\": \"fp32\", \"op\": \"knn-d2\", \"a\": {}, \"b\": {}, \"out\": {}}}",
+                bits(&qa),
+                bits(&qb),
+                acc.to_bits()
+            ),
+            &mut first,
+            &mut out,
+        );
+        let ca = gen(&mut rng, 8);
+        let cb = gen(&mut rng, 8);
+        let mx: Vec<f32> = (0..8).map(|i| ca[i].max(cb[i])).collect();
+        push(
+            format!(
+                "  {{\"fmt\": \"fp32\", \"op\": \"split-max\", \"a\": {}, \"b\": {}, \
+                 \"out\": {}}}",
+                bits(&ca),
+                bits(&cb),
+                bits(&mx)
             ),
             &mut first,
             &mut out,

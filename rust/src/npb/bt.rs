@@ -39,6 +39,15 @@ impl BtProblem {
             seed: 0xB7,
         }
     }
+
+    /// Class W: one grid refinement up from S.
+    pub fn class_w() -> Self {
+        BtProblem {
+            n: 10,
+            steps: 4,
+            seed: 0xB7,
+        }
+    }
 }
 
 /// Smooth, diagonally-dominant block coefficients at a grid cell. Pure

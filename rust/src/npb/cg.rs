@@ -1,0 +1,489 @@
+//! NPB CG — Conjugate Gradient (level three, §V-C).
+//!
+//! CG estimates the smallest eigenvalue of a sparse symmetric
+//! positive-definite matrix by inverse power iteration: each outer
+//! iteration solves `A z = x` with a fixed number of unpreconditioned CG
+//! steps, updates the eigenvalue estimate `ζ = shift + 1/(x·z)`, and
+//! normalizes `z` into the next `x`. The op mix is the benchmark's
+//! numerical heart: sparse mat-vec, dot products, and AXPY updates —
+//! long accumulations where posit's tapered precision (and the quire on
+//! the PVU path) earns its accuracy edge.
+//!
+//! The matrix is a seeded, symmetric, diagonally-dominant sparse
+//! operator (dominance stands in for NPB's `makea` SPD construction).
+//! Verification compares `ζ` and the L1 norm of the final normalized
+//! iterate against an f64 reference run of the identical algorithm.
+
+use crate::data::Rng;
+use crate::isa::cost::ROCKET_INT;
+use crate::isa::FOp;
+use crate::posit::{self, PositSpec};
+use crate::pvu::{self, PvuCost};
+use crate::sim::Machine;
+
+/// Number of verification quantities (`ζ`, final `‖x‖₁`).
+pub const NQ: usize = 2;
+
+/// Names of the verification quantities, in output order.
+pub const QUANTITIES: [&str; NQ] = ["zeta", "xnorm"];
+
+/// Problem definition shared by the machine run, the PVU path, and the
+/// f64 reference.
+pub struct CgProblem {
+    /// Matrix order.
+    pub n: usize,
+    /// Off-diagonal entries generated per row (symmetrized, so actual
+    /// row occupancy is about twice this plus the diagonal).
+    pub row_nz: usize,
+    /// Outer (inverse power) iterations.
+    pub niter: usize,
+    /// CG steps per outer iteration.
+    pub cgitmax: usize,
+    /// Eigenvalue shift in `ζ = shift + 1/(x·z)`.
+    pub shift: f64,
+    /// Seed for the sparse operator.
+    pub seed: u64,
+}
+
+impl CgProblem {
+    /// Class S (kept modest: the simulator executes every F-op in
+    /// software posit arithmetic).
+    pub fn class_s() -> Self {
+        CgProblem {
+            n: 64,
+            row_nz: 4,
+            niter: 3,
+            cgitmax: 6,
+            shift: 10.0,
+            seed: 0xC6,
+        }
+    }
+
+    /// Class W: larger operator, more iterations.
+    pub fn class_w() -> Self {
+        CgProblem {
+            n: 128,
+            row_nz: 6,
+            niter: 4,
+            cgitmax: 8,
+            shift: 12.0,
+            seed: 0xC6,
+        }
+    }
+}
+
+/// Seeded sparse SPD-like operator: symmetric with a dominant diagonal
+/// (`makea` analog). Row entries are `(col, value)` with the diagonal
+/// last. Pure f64 — these are the offline-encoded inputs every run
+/// shares.
+fn matrix(p: &CgProblem) -> Vec<Vec<(usize, f64)>> {
+    let n = p.n;
+    let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    let mut rng = Rng::new(p.seed);
+    for i in 0..n {
+        for _ in 0..p.row_nz {
+            let j = rng.below(n as u64) as usize;
+            let v = 0.125 * rng.range(-1.0, 1.0);
+            if j == i {
+                continue;
+            }
+            rows[i].push((j, v));
+            rows[j].push((i, v));
+        }
+    }
+    for i in 0..n {
+        let dom: f64 = rows[i].iter().map(|(_, v)| v.abs()).sum();
+        rows[i].push((i, 2.0 + dom));
+    }
+    rows
+}
+
+/// Initial iterate: smooth positive field (CG's `x = 1` analog with a
+/// gradient so the verification norms are not trivially symmetric).
+fn initial(p: &CgProblem, i: usize) -> f64 {
+    1.0 + 0.3 * (i as f64 / p.n as f64)
+}
+
+// ---------------------------------------------------------------------
+// Simulated-core implementation (generic over backend via Machine).
+// ---------------------------------------------------------------------
+
+/// Machine dot product: sequential multiply-accumulate (the scalar core
+/// has no quire — that is the PVU path's edge).
+fn dot_machine(m: &mut Machine, a: &[u32], b: &[u32]) -> u32 {
+    let mut acc = m.be.load_f64(0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        m.mem_read(2);
+        let prod = m.mul(x, y);
+        acc = m.add(acc, prod);
+        m.int_ops(2);
+    }
+    acc
+}
+
+/// Machine AXPY: `y[i] += alpha * x[i]` in place.
+fn axpy_machine(m: &mut Machine, alpha: u32, x: &[u32], y: &mut [u32]) {
+    for (xi, yi) in x.iter().zip(y.iter_mut()) {
+        m.mem_read(2);
+        let prod = m.mul(alpha, *xi);
+        *yi = m.add(*yi, prod);
+        m.mem_write(1);
+        m.int_ops(2);
+    }
+}
+
+/// Machine sparse mat-vec: `q = A p` one row at a time.
+fn spmv_machine(m: &mut Machine, rows: &[Vec<(usize, u32)>], p: &[u32], q: &mut [u32]) {
+    for (row, qi) in rows.iter().zip(q.iter_mut()) {
+        let mut acc = m.be.load_f64(0.0);
+        for &(j, v) in row {
+            m.mem_read(2);
+            let prod = m.mul(v, p[j]);
+            acc = m.add(acc, prod);
+            m.int_ops(3);
+        }
+        *qi = acc;
+        m.mem_write(1);
+        m.branch();
+    }
+}
+
+/// One CG solve `A z ≈ x0` on the simulated core — the serving kernel
+/// behind `--workload npb-cg`: the caller supplies the right-hand side
+/// (one request), and the solution comes back as f64 values read out of
+/// the backend's arithmetic. Uses `p.cgitmax` CG steps on the seeded
+/// operator; `p.niter` is not consulted.
+pub fn solve_machine(m: &mut Machine, p: &CgProblem, x0: &[f64]) -> Vec<f64> {
+    assert_eq!(x0.len(), p.n, "rhs length must match the operator order");
+    m.program_start();
+    let rows: Vec<Vec<(usize, u32)>> = matrix(p)
+        .into_iter()
+        .map(|r| r.into_iter().map(|(j, v)| (j, m.be.load_f64(v))).collect())
+        .collect();
+    let x: Vec<u32> = x0.iter().map(|&v| m.be.load_f64(v)).collect();
+    let mut z = vec![m.be.load_f64(0.0); p.n];
+    let mut q = vec![m.be.load_f64(0.0); p.n];
+    let mut r = x.clone();
+    let mut pd = x;
+    let mut rho = dot_machine(m, &r, &r);
+    for _cgit in 0..p.cgitmax {
+        spmv_machine(m, &rows, &pd, &mut q);
+        let pq = dot_machine(m, &pd, &q);
+        let alpha = m.div(rho, pq);
+        axpy_machine(m, alpha, &pd, &mut z);
+        let neg_alpha = m.fneg(alpha);
+        axpy_machine(m, neg_alpha, &q, &mut r);
+        let rho0 = rho;
+        rho = dot_machine(m, &r, &r);
+        let beta = m.div(rho, rho0);
+        for (pi, ri) in pd.iter_mut().zip(&r) {
+            m.mem_read(2);
+            let scaled = m.mul(beta, *pi);
+            *pi = m.add(*ri, scaled);
+            m.mem_write(1);
+            m.int_ops(2);
+        }
+        m.branch();
+    }
+    z.iter().map(|&w| m.val(w)).collect()
+}
+
+/// f64 reference of [`solve_machine`] (identical algorithm).
+pub fn solve_reference(p: &CgProblem, x0: &[f64]) -> Vec<f64> {
+    assert_eq!(x0.len(), p.n, "rhs length must match the operator order");
+    let rows = matrix(p);
+    let mut z = vec![0.0; p.n];
+    let mut r = x0.to_vec();
+    let mut pd = x0.to_vec();
+    let mut rho: f64 = r.iter().map(|v| v * v).sum();
+    for _cgit in 0..p.cgitmax {
+        let q: Vec<f64> = rows
+            .iter()
+            .map(|row| row.iter().map(|&(j, v)| v * pd[j]).sum())
+            .collect();
+        let pq: f64 = pd.iter().zip(&q).map(|(a, b)| a * b).sum();
+        let alpha = rho / pq;
+        for i in 0..p.n {
+            z[i] += alpha * pd[i];
+            r[i] -= alpha * q[i];
+        }
+        let rho0 = rho;
+        rho = r.iter().map(|v| v * v).sum();
+        let beta = rho / rho0;
+        for i in 0..p.n {
+            pd[i] = r[i] + beta * pd[i];
+        }
+    }
+    z
+}
+
+/// Run the full CG benchmark on the simulated core; returns
+/// `[ζ, ‖x‖₁]` (the verification quantities).
+pub fn run_machine(m: &mut Machine, p: &CgProblem) -> [f64; NQ] {
+    m.program_start();
+    let n = p.n;
+    let rows: Vec<Vec<(usize, u32)>> = matrix(p)
+        .into_iter()
+        .map(|r| r.into_iter().map(|(j, v)| (j, m.be.load_f64(v))).collect())
+        .collect();
+    let mut x: Vec<u32> = (0..n).map(|i| m.be.load_f64(initial(p, i))).collect();
+    let shift = m.be.load_f64(p.shift);
+    let one = m.be.load_f64(1.0);
+    let mut zeta = m.be.load_f64(0.0);
+
+    let mut q = vec![m.be.load_f64(0.0); n];
+    for _outer in 0..p.niter {
+        // CG solve: z ≈ A⁻¹ x, starting from z = 0, r = p = x.
+        let mut z = vec![m.be.load_f64(0.0); n];
+        let mut r = x.clone();
+        let mut pd = x.clone();
+        let mut rho = dot_machine(m, &r, &r);
+        for _cgit in 0..p.cgitmax {
+            spmv_machine(m, &rows, &pd, &mut q);
+            let pq = dot_machine(m, &pd, &q);
+            let alpha = m.div(rho, pq);
+            axpy_machine(m, alpha, &pd, &mut z);
+            let neg_alpha = m.fneg(alpha);
+            axpy_machine(m, neg_alpha, &q, &mut r);
+            let rho0 = rho;
+            rho = dot_machine(m, &r, &r);
+            let beta = m.div(rho, rho0);
+            // p = r + beta·p, in place.
+            for (pi, ri) in pd.iter_mut().zip(&r) {
+                m.mem_read(2);
+                let scaled = m.mul(beta, *pi);
+                *pi = m.add(*ri, scaled);
+                m.mem_write(1);
+                m.int_ops(2);
+            }
+            m.branch();
+        }
+        let xz = dot_machine(m, &x, &z);
+        let inv_xz = m.div(one, xz);
+        zeta = m.add(shift, inv_xz);
+        // x = z / ‖z‖₂ for the next power iteration.
+        let zz = dot_machine(m, &z, &z);
+        let znorm = m.sqrt(zz);
+        let inv = m.div(one, znorm);
+        for (xi, zi) in x.iter_mut().zip(&z) {
+            m.mem_read(1);
+            *xi = m.mul(inv, *zi);
+            m.mem_write(1);
+            m.int_ops(1);
+        }
+        m.branch();
+    }
+
+    let mut xnorm = m.be.load_f64(0.0);
+    for &xi in &x {
+        m.mem_read(1);
+        let a = m.fabs(xi);
+        xnorm = m.add(xnorm, a);
+        m.int_ops(2);
+    }
+    [m.val(zeta), m.val(xnorm)]
+}
+
+// ---------------------------------------------------------------------
+// PVU-native path: quire-fused dots and sparse mat-vec.
+// ---------------------------------------------------------------------
+
+/// Run CG on the PVU: every dot product and sparse row reduction is a
+/// single quire-fused [`pvu::dot`] (one rounding per reduction instead
+/// of one per term — the accuracy edge §V-B models). Returns the
+/// verification quantities and the modeled cycle count.
+pub fn run_pvu(spec: PositSpec, p: &CgProblem) -> ([f64; NQ], u64) {
+    let cost = PvuCost::new(spec);
+    let mut cycles = ROCKET_INT.program_overhead;
+    let n = p.n;
+    let enc = |v: f64| posit::from_f64(spec, v);
+    let rows: Vec<(Vec<usize>, Vec<u32>)> = matrix(p)
+        .into_iter()
+        .map(|r| {
+            let cols: Vec<usize> = r.iter().map(|&(j, _)| j).collect();
+            let vals: Vec<u32> = r.iter().map(|&(_, v)| enc(v)).collect();
+            (cols, vals)
+        })
+        .collect();
+    let mut x: Vec<u32> = (0..n).map(|i| enc(initial(p, i))).collect();
+    let shift = enc(p.shift);
+    let one = enc(1.0);
+    let mut zeta = enc(0.0);
+
+    let dot = |cyc: &mut u64, a: &[u32], b: &[u32]| -> u32 {
+        *cyc += cost.dot(a.len()) + cost.mem_words(2 * a.len()) * ROCKET_INT.load;
+        pvu::dot(spec, a, b)
+    };
+    for _outer in 0..p.niter {
+        let mut z = vec![enc(0.0); n];
+        let mut r = x.clone();
+        let mut pd = x.clone();
+        let mut rho = dot(&mut cycles, &r, &r);
+        for _cgit in 0..p.cgitmax {
+            // Sparse mat-vec: gather each row's operand lanes, then one
+            // quire-fused reduction per row.
+            let q: Vec<u32> = rows
+                .iter()
+                .map(|(cols, vals)| {
+                    let gathered: Vec<u32> = cols.iter().map(|&j| pd[j]).collect();
+                    cycles += cost.mem_words(gathered.len()) * ROCKET_INT.load
+                        + gathered.len() as u64 * ROCKET_INT.alu;
+                    dot(&mut cycles, vals, &gathered)
+                })
+                .collect();
+            let pq = dot(&mut cycles, &pd, &q);
+            let alpha = posit::div(spec, rho, pq);
+            cycles += cost.vector_op(FOp::Div, 1);
+            z = pvu::vaxpy(spec, alpha, &pd, &z);
+            r = pvu::vaxpy(spec, posit::neg(spec, alpha), &q, &r);
+            cycles += 2 * (cost.vector_op(FOp::Madd, n) + cost.mem_words(3 * n) * ROCKET_INT.load);
+            let rho0 = rho;
+            rho = dot(&mut cycles, &r, &r);
+            let beta = posit::div(spec, rho, rho0);
+            cycles += cost.vector_op(FOp::Div, 1);
+            pd = pvu::vaxpy(spec, beta, &pd, &r);
+            cycles += cost.vector_op(FOp::Madd, n) + cost.mem_words(3 * n) * ROCKET_INT.load;
+        }
+        let xz = dot(&mut cycles, &x, &z);
+        zeta = posit::add(spec, shift, posit::div(spec, one, xz));
+        cycles += cost.vector_op(FOp::Div, 1) + cost.vector_op(FOp::Add, 1);
+        let znorm = posit::sqrt(spec, dot(&mut cycles, &z, &z));
+        let inv = posit::div(spec, one, znorm);
+        cycles += cost.vector_op(FOp::Sqrt, 1) + cost.vector_op(FOp::Div, 1);
+        x = pvu::vscale(spec, inv, &z);
+        cycles += cost.vector_op(FOp::Mul, n) + cost.mem_words(2 * n) * ROCKET_INT.load;
+    }
+    // ‖x‖₁ as a quire-fused dot of |x| with ones.
+    let absx: Vec<u32> = x.iter().map(|&w| posit::abs(spec, w)).collect();
+    let ones = vec![one; n];
+    cycles += cost.vector_op(FOp::SgnJX, n);
+    let xnorm = dot(&mut cycles, &absx, &ones);
+    (
+        [posit::to_f64(spec, zeta), posit::to_f64(spec, xnorm)],
+        cycles,
+    )
+}
+
+// ---------------------------------------------------------------------
+// f64 reference (identical algorithm).
+// ---------------------------------------------------------------------
+
+/// f64 reference quantities `[ζ, ‖x‖₁]`.
+pub fn run_reference(p: &CgProblem) -> [f64; NQ] {
+    let n = p.n;
+    let rows = matrix(p);
+    let mut x: Vec<f64> = (0..n).map(|i| initial(p, i)).collect();
+    let mut zeta = 0.0;
+    for _outer in 0..p.niter {
+        let mut z = vec![0.0; n];
+        let mut r = x.clone();
+        let mut pd = x.clone();
+        let mut rho: f64 = r.iter().map(|v| v * v).sum();
+        for _cgit in 0..p.cgitmax {
+            let q: Vec<f64> = rows
+                .iter()
+                .map(|row| row.iter().map(|&(j, v)| v * pd[j]).sum())
+                .collect();
+            let pq: f64 = pd.iter().zip(&q).map(|(a, b)| a * b).sum();
+            let alpha = rho / pq;
+            for i in 0..n {
+                z[i] += alpha * pd[i];
+                r[i] -= alpha * q[i];
+            }
+            let rho0 = rho;
+            rho = r.iter().map(|v| v * v).sum();
+            let beta = rho / rho0;
+            for i in 0..n {
+                pd[i] = r[i] + beta * pd[i];
+            }
+        }
+        let xz: f64 = x.iter().zip(&z).map(|(a, b)| a * b).sum();
+        zeta = p.shift + 1.0 / xz;
+        let znorm = z.iter().map(|v| v * v).sum::<f64>().sqrt();
+        for i in 0..n {
+            x[i] = z[i] / znorm;
+        }
+    }
+    let xnorm = x.iter().map(|v| v.abs()).sum();
+    [zeta, xnorm]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::P32;
+    use crate::sim::{Fpu, Machine, Posar};
+
+    fn tiny() -> CgProblem {
+        CgProblem {
+            n: 16,
+            row_nz: 3,
+            niter: 2,
+            cgitmax: 4,
+            shift: 10.0,
+            seed: 0xC6,
+        }
+    }
+
+    #[test]
+    fn reference_is_finite_and_stable() {
+        let q = run_reference(&tiny());
+        for v in q {
+            assert!(v.is_finite() && v > 0.0 && v < 1e4, "quantity {v}");
+        }
+    }
+
+    #[test]
+    fn fp32_tracks_reference() {
+        let p = tiny();
+        let want = run_reference(&p);
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let got = run_machine(&mut m, &p);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() / w < 1e-3, "got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn p32_no_less_accurate_than_fp32() {
+        let p = tiny();
+        let want = run_reference(&p);
+        let err = |be: &dyn crate::sim::Backend| -> f64 {
+            let mut m = Machine::new(be);
+            let got = run_machine(&mut m, &p);
+            got.iter()
+                .zip(&want)
+                .map(|(g, w)| ((g - w) / w).abs())
+                .fold(0.0, f64::max)
+        };
+        let ef = err(&Fpu::new());
+        let ep = err(&Posar::new(P32));
+        assert!(ep <= ef, "P32 err {ep} should not exceed FP32 err {ef}");
+    }
+
+    #[test]
+    fn serving_solve_tracks_its_reference() {
+        let p = tiny();
+        let x0: Vec<f64> = (0..p.n).map(|i| 1.0 + 0.05 * i as f64).collect();
+        let want = solve_reference(&p, &x0);
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let got = solve_machine(&mut m, &p, &x0);
+        assert!(m.cycles > ROCKET_INT.program_overhead);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn pvu_path_tracks_reference_and_counts_cycles() {
+        let p = tiny();
+        let want = run_reference(&p);
+        let (got, cycles) = run_pvu(P32, &p);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() / w < 1e-4, "PVU got {g} want {w}");
+        }
+        assert!(cycles > ROCKET_INT.program_overhead);
+    }
+}

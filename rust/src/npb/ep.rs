@@ -1,0 +1,253 @@
+//! NPB EP — Embarrassingly Parallel (level three, §V-C).
+//!
+//! EP generates independent pseudorandom pairs in `(-1,1)²`, accepts the
+//! pairs inside the unit circle, scales each accepted pair by a
+//! sqrt-shaped deviate factor, and accumulates the deviate sums — a long
+//! independent-term reduction, which is the precision stress EP
+//! contributes to the suite: thousands of same-sign additions where a
+//! narrow format starts absorbing addends long before the f64 reference
+//! does.
+//!
+//! The deviate factor is `s(t) = sqrt((2−t)/(t+½))` — the same
+//! FMUL/FDIV/FSQRT mix as EP's Box–Muller step but expressible on the
+//! simulated core's ISA (which has no logarithm). Verification compares
+//! the absolute deviate sums `sx = Σ|x·s|`, `sy = Σ|y·s|` against the
+//! f64 reference (absolute sums keep the quantities well-conditioned;
+//! the signed NPB sums are near-zero by symmetry, which would make the
+//! relative-error scan meaningless for every backend).
+
+use crate::data::Rng;
+use crate::isa::cost::ROCKET_INT;
+use crate::isa::FOp;
+use crate::posit::{self, PositSpec, Quire};
+use crate::pvu::{self, PvuCost};
+use crate::sim::Machine;
+
+/// Number of verification quantities (`sx`, `sy`).
+pub const NQ: usize = 2;
+
+/// Names of the verification quantities, in output order.
+pub const QUANTITIES: [&str; NQ] = ["sx", "sy"];
+
+/// Problem definition shared by the machine run, the PVU path, and the
+/// f64 reference.
+pub struct EpProblem {
+    /// Pairs generated (accepted count depends on the seed only).
+    pub pairs: usize,
+    /// Seed for the pair stream.
+    pub seed: u64,
+}
+
+impl EpProblem {
+    /// Class S.
+    pub fn class_s() -> Self {
+        EpProblem {
+            pairs: 2048,
+            seed: 0xE9,
+        }
+    }
+
+    /// Class W: four times the stream.
+    pub fn class_w() -> Self {
+        EpProblem {
+            pairs: 8192,
+            seed: 0xE9,
+        }
+    }
+}
+
+/// The seeded pair stream in `(-1,1)²` (offline inputs both runs share).
+fn pair_stream(p: &EpProblem) -> Vec<(f64, f64)> {
+    let mut rng = Rng::new(p.seed);
+    (0..p.pairs)
+        .map(|_| (rng.range(-1.0, 1.0), rng.range(-1.0, 1.0)))
+        .collect()
+}
+
+/// Run EP on the simulated core; returns `[sx, sy]`.
+pub fn run_machine(m: &mut Machine, p: &EpProblem) -> [f64; NQ] {
+    run_stream_machine(m, &pair_stream(p))
+}
+
+/// EP's deviate-sum body over a caller-supplied pair stream — the
+/// serving kernel behind `--workload npb-ep` (one request = one small
+/// stream) and the body [`run_machine`] runs over the seeded stream.
+pub fn run_stream_machine(m: &mut Machine, stream: &[(f64, f64)]) -> [f64; NQ] {
+    m.program_start();
+    let one = m.be.load_f64(1.0);
+    let two = m.be.load_f64(2.0);
+    let half = m.be.load_f64(0.5);
+    let mut sx = m.be.load_f64(0.0);
+    let mut sy = m.be.load_f64(0.0);
+    for &(xv, yv) in stream {
+        let x = m.be.load_f64(xv);
+        let y = m.be.load_f64(yv);
+        m.mem_read(2);
+        let xx = m.mul(x, x);
+        let t = m.madd(y, y, xx);
+        m.branch();
+        // Accept pairs inside the unit circle; the acceptance decision
+        // itself runs in the backend's arithmetic, so a narrow format
+        // also misclassifies borderline pairs.
+        if m.fle(t, one) {
+            let num = m.sub(two, t);
+            let den = m.add(half, t);
+            let ratio = m.div(num, den);
+            let s = m.sqrt(ratio);
+            let dx = m.mul(x, s);
+            let dy = m.mul(y, s);
+            let ax = m.fabs(dx);
+            let ay = m.fabs(dy);
+            sx = m.add(sx, ax);
+            sy = m.add(sy, ay);
+            m.int_ops(2);
+        }
+        m.int_ops(2);
+    }
+    [m.val(sx), m.val(sy)]
+}
+
+/// Run EP on the PVU: elementwise vector ops build `t = x² + y²` and the
+/// deviates for the whole stream, and the final reductions are
+/// quire-fused (exact until the single terminal rounding — the narrow
+/// formats' absorption error disappears, which is the paper's case for
+/// the quire). Returns the quantities and the modeled cycle count.
+pub fn run_pvu(spec: PositSpec, p: &EpProblem) -> ([f64; NQ], u64) {
+    let cost = PvuCost::new(spec);
+    let mut cycles = ROCKET_INT.program_overhead;
+    let stream = pair_stream(p);
+    let n = stream.len();
+    let enc = |v: f64| posit::from_f64(spec, v);
+    let x: Vec<u32> = stream.iter().map(|&(a, _)| enc(a)).collect();
+    let y: Vec<u32> = stream.iter().map(|&(_, b)| enc(b)).collect();
+    let one = enc(1.0);
+    let two = enc(2.0);
+    let half = enc(0.5);
+
+    let xx = pvu::vmul(spec, &x, &x);
+    let t = pvu::vfma(spec, &y, &y, &xx);
+    cycles += cost.vector_op(FOp::Mul, n)
+        + cost.vector_op(FOp::Madd, n)
+        + cost.mem_words(4 * n) * ROCKET_INT.load;
+    // Deviate factor s(t) per element, then the accepted |x·s| terms go
+    // through the quire.
+    let twos = vec![two; n];
+    let halves = vec![half; n];
+    let num = pvu::vsub(spec, &twos, &t);
+    let den = pvu::vadd(spec, &halves, &t);
+    let ratio = pvu::vdiv(spec, &num, &den);
+    cycles += cost.vector_op(FOp::Sub, n)
+        + cost.vector_op(FOp::Add, n)
+        + cost.vector_op(FOp::Div, n)
+        + cost.mem_words(4 * n) * ROCKET_INT.load;
+    let mut qx = Quire::new(spec);
+    let mut qy = Quire::new(spec);
+    let mut accepted = 0u64;
+    for i in 0..n {
+        if posit::to_f64(spec, posit::sub(spec, t[i], one)) <= 0.0 {
+            let s = posit::sqrt(spec, ratio[i]);
+            qx.add_product(posit::abs(spec, x[i]), s);
+            qy.add_product(posit::abs(spec, y[i]), s);
+            accepted += 1;
+        }
+    }
+    cycles += cost.vector_op(FOp::Le, n)
+        + cost.vector_op(FOp::Sqrt, accepted as usize)
+        + 2 * cost.dot(accepted as usize);
+    let sx = qx.to_posit();
+    let sy = qy.to_posit();
+    ([posit::to_f64(spec, sx), posit::to_f64(spec, sy)], cycles)
+}
+
+/// f64 reference quantities `[sx, sy]` (identical algorithm).
+pub fn run_reference(p: &EpProblem) -> [f64; NQ] {
+    run_stream_reference(&pair_stream(p))
+}
+
+/// f64 reference of [`run_stream_machine`] over a caller's stream.
+pub fn run_stream_reference(stream: &[(f64, f64)]) -> [f64; NQ] {
+    let mut sx = 0.0;
+    let mut sy = 0.0;
+    for &(x, y) in stream {
+        let t = y.mul_add(y, x * x);
+        if t <= 1.0 {
+            let s = ((2.0 - t) / (0.5 + t)).sqrt();
+            sx += (x * s).abs();
+            sy += (y * s).abs();
+        }
+    }
+    [sx, sy]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::P32;
+    use crate::sim::{Fpu, Machine, Posar};
+
+    fn tiny() -> EpProblem {
+        EpProblem {
+            pairs: 256,
+            seed: 0xE9,
+        }
+    }
+
+    #[test]
+    fn reference_is_finite_and_stable() {
+        let q = run_reference(&tiny());
+        for v in q {
+            assert!(v.is_finite() && v > 0.0 && v < 1e5, "quantity {v}");
+        }
+    }
+
+    #[test]
+    fn fp32_tracks_reference() {
+        let p = tiny();
+        let want = run_reference(&p);
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let got = run_machine(&mut m, &p);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() / w < 1e-3, "got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn p32_no_less_accurate_than_fp32() {
+        let p = tiny();
+        let want = run_reference(&p);
+        let err = |be: &dyn crate::sim::Backend| -> f64 {
+            let mut m = Machine::new(be);
+            let got = run_machine(&mut m, &p);
+            got.iter()
+                .zip(&want)
+                .map(|(g, w)| ((g - w) / w).abs())
+                .fold(0.0, f64::max)
+        };
+        let ef = err(&Fpu::new());
+        let ep = err(&Posar::new(P32));
+        assert!(ep <= ef, "P32 err {ep} should not exceed FP32 err {ef}");
+    }
+
+    #[test]
+    fn pvu_quire_beats_the_scalar_machine_on_narrow_formats() {
+        // The quire removes the absorption error of the running scalar
+        // sum, so the PVU path on P16 must be at least as accurate as
+        // the scalar P16 machine run.
+        use crate::posit::P16;
+        let p = tiny();
+        let want = run_reference(&p);
+        let rel = |got: [f64; NQ]| -> f64 {
+            got.iter()
+                .zip(&want)
+                .map(|(g, w)| ((g - w) / w).abs())
+                .fold(0.0, f64::max)
+        };
+        let be = Posar::new(P16);
+        let mut m = Machine::new(&be);
+        let scalar_err = rel(run_machine(&mut m, &p));
+        let (q, cycles) = run_pvu(P16, &p);
+        assert!(rel(q) <= scalar_err, "quire {:?} vs scalar {scalar_err}", rel(q));
+        assert!(cycles > ROCKET_INT.program_overhead);
+    }
+}

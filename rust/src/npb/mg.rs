@@ -1,0 +1,590 @@
+//! NPB MG — MultiGrid (level three, §V-C).
+//!
+//! MG solves a 3-D Poisson problem with V-cycles: weighted-Jacobi
+//! smoothing with a 7-point stencil on each level, full-weighting
+//! restriction of the residual to the next-coarser grid, a recursive
+//! coarse solve, and piecewise-constant prolongation back up. The RHS is
+//! NPB-style: zero everywhere except a few seeded ±1 point charges, so
+//! the solve mixes large local values with small smoothed ones — the
+//! dynamic-range stress that separates the formats.
+//!
+//! Verification compares the L1 residual norm `‖v − Au‖₁` and the L1
+//! solution norm `‖u‖₁` after the configured V-cycles against an f64
+//! reference run of the identical algorithm.
+
+use crate::data::Rng;
+use crate::isa::cost::ROCKET_INT;
+use crate::isa::FOp;
+use crate::posit::{self, PositSpec};
+use crate::pvu::{self, PvuCost};
+use crate::sim::Machine;
+
+/// Number of verification quantities (`rnorm`, `unorm`).
+pub const NQ: usize = 2;
+
+/// Names of the verification quantities, in output order.
+pub const QUANTITIES: [&str; NQ] = ["rnorm", "unorm"];
+
+/// Jacobi relaxation weight (under-relaxed, like MG's smoother).
+const OMEGA: f64 = 0.8;
+
+/// Problem definition shared by the machine run, the PVU path, and the
+/// f64 reference.
+pub struct MgProblem {
+    /// Fine-grid side (power of two; the V-cycle coarsens to side 2).
+    pub n: usize,
+    /// V-cycles to run.
+    pub vcycles: usize,
+    /// Jacobi smoothing sweeps per level (pre- and post-).
+    pub smooth: usize,
+    /// Point charges of each sign in the RHS.
+    pub charges: usize,
+    /// Seed for the charge positions.
+    pub seed: u64,
+}
+
+impl MgProblem {
+    /// Class S.
+    pub fn class_s() -> Self {
+        MgProblem {
+            n: 8,
+            vcycles: 2,
+            smooth: 2,
+            charges: 4,
+            seed: 0x36,
+        }
+    }
+
+    /// Class W: one refinement level up.
+    pub fn class_w() -> Self {
+        MgProblem {
+            n: 16,
+            vcycles: 2,
+            smooth: 2,
+            charges: 8,
+            seed: 0x36,
+        }
+    }
+}
+
+/// NPB-style RHS: zero except `charges` cells at +1 and `charges` at −1,
+/// positions seeded (offline inputs both runs share).
+fn rhs(p: &MgProblem) -> Vec<f64> {
+    let n = p.n;
+    let mut v = vec![0.0; n * n * n];
+    let mut rng = Rng::new(p.seed);
+    for sign in [1.0, -1.0] {
+        let mut placed = 0;
+        while placed < p.charges {
+            let cell = rng.below((n * n * n) as u64) as usize;
+            if v[cell] == 0.0 {
+                v[cell] = sign;
+                placed += 1;
+            }
+        }
+    }
+    v
+}
+
+/// Flat index on a side-`n` grid.
+fn idx(n: usize, x: usize, y: usize, z: usize) -> usize {
+    x + y * n + z * n * n
+}
+
+/// The six face neighbors of a cell, skipping out-of-range ones
+/// (homogeneous Dirichlet boundary: missing neighbors contribute zero).
+fn neighbors(n: usize, x: usize, y: usize, z: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(6);
+    if x > 0 {
+        out.push(idx(n, x - 1, y, z));
+    }
+    if x + 1 < n {
+        out.push(idx(n, x + 1, y, z));
+    }
+    if y > 0 {
+        out.push(idx(n, x, y - 1, z));
+    }
+    if y + 1 < n {
+        out.push(idx(n, x, y + 1, z));
+    }
+    if z > 0 {
+        out.push(idx(n, x, y, z - 1));
+    }
+    if z + 1 < n {
+        out.push(idx(n, x, y, z + 1));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Simulated-core implementation (generic over backend via Machine).
+// ---------------------------------------------------------------------
+
+/// `Au` at one cell: `6·u[c] − Σ neighbors` (7-point Laplacian).
+fn apply_machine(
+    m: &mut Machine,
+    n: usize,
+    u: &[u32],
+    six: u32,
+    cell: (usize, usize, usize),
+) -> u32 {
+    let (x, y, z) = cell;
+    m.mem_read(1);
+    let mut acc = m.mul(six, u[idx(n, x, y, z)]);
+    for nb in neighbors(n, x, y, z) {
+        m.mem_read(1);
+        acc = m.sub(acc, u[nb]);
+        m.int_ops(2);
+    }
+    acc
+}
+
+/// One weighted-Jacobi sweep: `u += ω·(v − Au)/6`.
+fn smooth_machine(m: &mut Machine, n: usize, u: &mut [u32], v: &[u32], six: u32, wos: u32) {
+    let mut next = u.to_vec();
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let au = apply_machine(m, n, u, six, (x, y, z));
+                m.mem_read(1);
+                let r = m.sub(v[idx(n, x, y, z)], au);
+                let upd = m.mul(wos, r);
+                next[idx(n, x, y, z)] = m.add(u[idx(n, x, y, z)], upd);
+                m.mem_write(1);
+                m.int_ops(3);
+                m.branch();
+            }
+        }
+    }
+    u.copy_from_slice(&next);
+}
+
+/// Residual `r = v − Au` on the machine.
+fn residual_machine(m: &mut Machine, n: usize, u: &[u32], v: &[u32]) -> Vec<u32> {
+    let six = m.be.load_f64(6.0);
+    let mut r = vec![0u32; n * n * n];
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let au = apply_machine(m, n, u, six, (x, y, z));
+                m.mem_read(1);
+                r[idx(n, x, y, z)] = m.sub(v[idx(n, x, y, z)], au);
+                m.mem_write(1);
+                m.int_ops(2);
+            }
+        }
+    }
+    r
+}
+
+/// Full-weighting restriction: each coarse cell averages its 2³ fine
+/// children (`×⅛`).
+fn restrict_machine(m: &mut Machine, n: usize, fine: &[u32]) -> Vec<u32> {
+    let nc = n / 2;
+    let eighth = m.be.load_f64(0.125);
+    let mut coarse = vec![0u32; nc * nc * nc];
+    for z in 0..nc {
+        for y in 0..nc {
+            for x in 0..nc {
+                let mut acc = m.be.load_f64(0.0);
+                for (dx, dy, dz) in CHILDREN {
+                    m.mem_read(1);
+                    acc = m.add(acc, fine[idx(n, 2 * x + dx, 2 * y + dy, 2 * z + dz)]);
+                    m.int_ops(2);
+                }
+                coarse[idx(nc, x, y, z)] = m.mul(eighth, acc);
+                m.mem_write(1);
+                m.branch();
+            }
+        }
+    }
+    coarse
+}
+
+/// The 2³ child offsets of a coarse cell.
+const CHILDREN: [(usize, usize, usize); 8] = [
+    (0, 0, 0),
+    (1, 0, 0),
+    (0, 1, 0),
+    (1, 1, 0),
+    (0, 0, 1),
+    (1, 0, 1),
+    (0, 1, 1),
+    (1, 1, 1),
+];
+
+/// Piecewise-constant prolongation: add each coarse correction to its
+/// 2³ fine children.
+fn prolong_machine(m: &mut Machine, n: usize, u: &mut [u32], coarse: &[u32]) {
+    let nc = n / 2;
+    for z in 0..nc {
+        for y in 0..nc {
+            for x in 0..nc {
+                let c = coarse[idx(nc, x, y, z)];
+                for (dx, dy, dz) in CHILDREN {
+                    let f = idx(n, 2 * x + dx, 2 * y + dy, 2 * z + dz);
+                    m.mem_read(2);
+                    u[f] = m.add(u[f], c);
+                    m.mem_write(1);
+                    m.int_ops(2);
+                }
+                m.branch();
+            }
+        }
+    }
+}
+
+/// One V-cycle level: smooth, restrict the residual, recurse, prolongate
+/// the correction, smooth again. Bottoms out at side 2.
+fn vcycle_machine(m: &mut Machine, p: &MgProblem, n: usize, u: &mut [u32], v: &[u32]) {
+    let six = m.be.load_f64(6.0);
+    let wos = m.be.load_f64(OMEGA / 6.0);
+    for _ in 0..p.smooth {
+        smooth_machine(m, n, u, v, six, wos);
+    }
+    if n > 2 {
+        let r = residual_machine(m, n, u, v);
+        let rc = restrict_machine(m, n, &r);
+        let nc = n / 2;
+        let mut ec = vec![m.be.load_f64(0.0); nc * nc * nc];
+        vcycle_machine(m, p, nc, &mut ec, &rc);
+        prolong_machine(m, n, u, &ec);
+    }
+    for _ in 0..p.smooth {
+        smooth_machine(m, n, u, v, six, wos);
+    }
+}
+
+/// Run MG on the simulated core; returns `[‖v − Au‖₁, ‖u‖₁]`.
+pub fn run_machine(m: &mut Machine, p: &MgProblem) -> [f64; NQ] {
+    m.program_start();
+    let n = p.n;
+    let v: Vec<u32> = rhs(p).into_iter().map(|w| m.be.load_f64(w)).collect();
+    let mut u = vec![m.be.load_f64(0.0); n * n * n];
+    for _ in 0..p.vcycles {
+        vcycle_machine(m, p, n, &mut u, &v);
+    }
+    let r = residual_machine(m, n, &u, &v);
+    let mut rnorm = m.be.load_f64(0.0);
+    let mut unorm = m.be.load_f64(0.0);
+    for cell in 0..n * n * n {
+        m.mem_read(2);
+        let ra = m.fabs(r[cell]);
+        rnorm = m.add(rnorm, ra);
+        let ua = m.fabs(u[cell]);
+        unorm = m.add(unorm, ua);
+        m.int_ops(2);
+    }
+    [m.val(rnorm), m.val(unorm)]
+}
+
+// ---------------------------------------------------------------------
+// PVU-native path: the stencil and the norms are quire-fused dots.
+// ---------------------------------------------------------------------
+
+/// PVU state for one grid level: encoded field plus cycle accounting.
+struct PvuGrid {
+    spec: PositSpec,
+    cost: PvuCost,
+    cycles: u64,
+}
+
+impl PvuGrid {
+    /// `Au` over the whole grid: one quire-fused dot per cell (stencil
+    /// weights × gathered neighborhood).
+    fn apply(&mut self, n: usize, u: &[u32]) -> Vec<u32> {
+        let six = posit::from_f64(self.spec, 6.0);
+        let minus_one = posit::from_f64(self.spec, -1.0);
+        let mut out = vec![0u32; n * n * n];
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let nbs = neighbors(n, x, y, z);
+                    let mut weights = Vec::with_capacity(1 + nbs.len());
+                    let mut vals = Vec::with_capacity(1 + nbs.len());
+                    weights.push(six);
+                    vals.push(u[idx(n, x, y, z)]);
+                    for nb in nbs {
+                        weights.push(minus_one);
+                        vals.push(u[nb]);
+                    }
+                    self.cycles += self.cost.dot(vals.len())
+                        + self.cost.mem_words(2 * vals.len()) * ROCKET_INT.load;
+                    out[idx(n, x, y, z)] = pvu::dot(self.spec, &weights, &vals);
+                }
+            }
+        }
+        out
+    }
+
+    /// One weighted-Jacobi sweep on the PVU: `u = u + (ω/6)·(v − Au)`
+    /// as vector ops over the whole level.
+    fn smooth(&mut self, n: usize, u: &mut Vec<u32>, v: &[u32]) {
+        let au = self.apply(n, u);
+        let r = pvu::vsub(self.spec, v, &au);
+        let wos = posit::from_f64(self.spec, OMEGA / 6.0);
+        *u = pvu::vaxpy(self.spec, wos, &r, u);
+        let cells = n * n * n;
+        self.cycles += self.cost.vector_op(FOp::Sub, cells)
+            + self.cost.vector_op(FOp::Madd, cells)
+            + self.cost.mem_words(4 * cells) * ROCKET_INT.load;
+    }
+
+    /// Full-weighting restriction: one quire-fused 8-term dot per
+    /// coarse cell.
+    fn restrict(&mut self, n: usize, fine: &[u32]) -> Vec<u32> {
+        let nc = n / 2;
+        let eighth = posit::from_f64(self.spec, 0.125);
+        let weights = vec![eighth; 8];
+        let mut coarse = vec![0u32; nc * nc * nc];
+        for z in 0..nc {
+            for y in 0..nc {
+                for x in 0..nc {
+                    let vals: Vec<u32> = CHILDREN
+                        .iter()
+                        .map(|&(dx, dy, dz)| fine[idx(n, 2 * x + dx, 2 * y + dy, 2 * z + dz)])
+                        .collect();
+                    self.cycles +=
+                        self.cost.dot(8) + self.cost.mem_words(16) * ROCKET_INT.load;
+                    coarse[idx(nc, x, y, z)] = pvu::dot(self.spec, &weights, &vals);
+                }
+            }
+        }
+        coarse
+    }
+
+    fn prolong(&mut self, n: usize, u: &mut [u32], coarse: &[u32]) {
+        let nc = n / 2;
+        for z in 0..nc {
+            for y in 0..nc {
+                for x in 0..nc {
+                    let c = coarse[idx(nc, x, y, z)];
+                    for (dx, dy, dz) in CHILDREN {
+                        let f = idx(n, 2 * x + dx, 2 * y + dy, 2 * z + dz);
+                        u[f] = posit::add(self.spec, u[f], c);
+                    }
+                    self.cycles += self.cost.vector_op(FOp::Add, 8)
+                        + self.cost.mem_words(16) * ROCKET_INT.load;
+                }
+            }
+        }
+    }
+
+    fn vcycle(&mut self, p: &MgProblem, n: usize, u: &mut Vec<u32>, v: &[u32]) {
+        for _ in 0..p.smooth {
+            self.smooth(n, u, v);
+        }
+        if n > 2 {
+            let au = self.apply(n, u);
+            let r = pvu::vsub(self.spec, v, &au);
+            self.cycles += self.cost.vector_op(FOp::Sub, n * n * n);
+            let rc = self.restrict(n, &r);
+            let nc = n / 2;
+            let mut ec = vec![posit::from_f64(self.spec, 0.0); nc * nc * nc];
+            self.vcycle(p, nc, &mut ec, &rc);
+            self.prolong(n, u, &ec);
+        }
+        for _ in 0..p.smooth {
+            self.smooth(n, u, v);
+        }
+    }
+}
+
+/// Run MG on the PVU; returns the verification quantities and the
+/// modeled cycle count.
+pub fn run_pvu(spec: PositSpec, p: &MgProblem) -> ([f64; NQ], u64) {
+    let mut g = PvuGrid {
+        spec,
+        cost: PvuCost::new(spec),
+        cycles: ROCKET_INT.program_overhead,
+    };
+    let n = p.n;
+    let v: Vec<u32> = rhs(p)
+        .into_iter()
+        .map(|w| posit::from_f64(spec, w))
+        .collect();
+    let mut u = vec![posit::from_f64(spec, 0.0); n * n * n];
+    for _ in 0..p.vcycles {
+        g.vcycle(p, n, &mut u, &v);
+    }
+    let au = g.apply(n, &u);
+    let r = pvu::vsub(spec, &v, &au);
+    let one = posit::from_f64(spec, 1.0);
+    let cells = n * n * n;
+    let ones = vec![one; cells];
+    let absr: Vec<u32> = r.iter().map(|&w| posit::abs(spec, w)).collect();
+    let absu: Vec<u32> = u.iter().map(|&w| posit::abs(spec, w)).collect();
+    g.cycles += g.cost.vector_op(FOp::Sub, cells)
+        + 2 * g.cost.vector_op(FOp::SgnJX, cells)
+        + 2 * g.cost.dot(cells)
+        + g.cost.mem_words(4 * cells) * ROCKET_INT.load;
+    let rnorm = pvu::dot(spec, &absr, &ones);
+    let unorm = pvu::dot(spec, &absu, &ones);
+    (
+        [posit::to_f64(spec, rnorm), posit::to_f64(spec, unorm)],
+        g.cycles,
+    )
+}
+
+// ---------------------------------------------------------------------
+// f64 reference (identical algorithm).
+// ---------------------------------------------------------------------
+
+fn apply_ref(n: usize, u: &[f64], x: usize, y: usize, z: usize) -> f64 {
+    let mut acc = 6.0 * u[idx(n, x, y, z)];
+    for nb in neighbors(n, x, y, z) {
+        acc -= u[nb];
+    }
+    acc
+}
+
+fn smooth_ref(n: usize, u: &mut [f64], v: &[f64]) {
+    let mut next = u.to_vec();
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                let r = v[idx(n, x, y, z)] - apply_ref(n, u, x, y, z);
+                next[idx(n, x, y, z)] = u[idx(n, x, y, z)] + (OMEGA / 6.0) * r;
+            }
+        }
+    }
+    u.copy_from_slice(&next);
+}
+
+fn residual_ref(n: usize, u: &[f64], v: &[f64]) -> Vec<f64> {
+    let mut r = vec![0.0; n * n * n];
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                r[idx(n, x, y, z)] = v[idx(n, x, y, z)] - apply_ref(n, u, x, y, z);
+            }
+        }
+    }
+    r
+}
+
+fn vcycle_ref(p: &MgProblem, n: usize, u: &mut [f64], v: &[f64]) {
+    for _ in 0..p.smooth {
+        smooth_ref(n, u, v);
+    }
+    if n > 2 {
+        let r = residual_ref(n, u, v);
+        let nc = n / 2;
+        let mut rc = vec![0.0; nc * nc * nc];
+        for z in 0..nc {
+            for y in 0..nc {
+                for x in 0..nc {
+                    let mut acc = 0.0;
+                    for (dx, dy, dz) in CHILDREN {
+                        acc += r[idx(n, 2 * x + dx, 2 * y + dy, 2 * z + dz)];
+                    }
+                    rc[idx(nc, x, y, z)] = 0.125 * acc;
+                }
+            }
+        }
+        let mut ec = vec![0.0; nc * nc * nc];
+        vcycle_ref(p, nc, &mut ec, &rc);
+        for z in 0..nc {
+            for y in 0..nc {
+                for x in 0..nc {
+                    let c = ec[idx(nc, x, y, z)];
+                    for (dx, dy, dz) in CHILDREN {
+                        u[idx(n, 2 * x + dx, 2 * y + dy, 2 * z + dz)] += c;
+                    }
+                }
+            }
+        }
+    }
+    for _ in 0..p.smooth {
+        smooth_ref(n, u, v);
+    }
+}
+
+/// f64 reference quantities `[rnorm, unorm]`.
+pub fn run_reference(p: &MgProblem) -> [f64; NQ] {
+    let n = p.n;
+    let v = rhs(p);
+    let mut u = vec![0.0; n * n * n];
+    for _ in 0..p.vcycles {
+        vcycle_ref(p, n, &mut u, &v);
+    }
+    let r = residual_ref(n, &u, &v);
+    let rnorm = r.iter().map(|x| x.abs()).sum();
+    let unorm = u.iter().map(|x| x.abs()).sum();
+    [rnorm, unorm]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::P32;
+    use crate::sim::{Fpu, Machine, Posar};
+
+    fn tiny() -> MgProblem {
+        MgProblem {
+            n: 4,
+            vcycles: 1,
+            smooth: 2,
+            charges: 2,
+            seed: 0x36,
+        }
+    }
+
+    #[test]
+    fn reference_is_finite_and_stable() {
+        let q = run_reference(&tiny());
+        for v in q {
+            assert!(v.is_finite() && v > 0.0 && v < 1e4, "quantity {v}");
+        }
+    }
+
+    #[test]
+    fn vcycle_actually_reduces_the_residual() {
+        let p = tiny();
+        let n = p.n;
+        let v = rhs(&p);
+        let r0: f64 = v.iter().map(|x| x.abs()).sum();
+        let [rnorm, _] = run_reference(&p);
+        assert!(rnorm < r0, "V-cycle did not reduce ‖r‖: {rnorm} vs {r0}");
+    }
+
+    #[test]
+    fn fp32_tracks_reference() {
+        let p = tiny();
+        let want = run_reference(&p);
+        let fpu = Fpu::new();
+        let mut m = Machine::new(&fpu);
+        let got = run_machine(&mut m, &p);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() / w < 1e-3, "got {g} want {w}");
+        }
+    }
+
+    #[test]
+    fn p32_no_less_accurate_than_fp32() {
+        let p = tiny();
+        let want = run_reference(&p);
+        let err = |be: &dyn crate::sim::Backend| -> f64 {
+            let mut m = Machine::new(be);
+            let got = run_machine(&mut m, &p);
+            got.iter()
+                .zip(&want)
+                .map(|(g, w)| ((g - w) / w).abs())
+                .fold(0.0, f64::max)
+        };
+        let ef = err(&Fpu::new());
+        let ep = err(&Posar::new(P32));
+        assert!(ep <= ef, "P32 err {ep} should not exceed FP32 err {ef}");
+    }
+
+    #[test]
+    fn pvu_path_tracks_reference_and_counts_cycles() {
+        let p = tiny();
+        let want = run_reference(&p);
+        let (got, cycles) = run_pvu(P32, &p);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() / w < 1e-3, "PVU got {g} want {w}");
+        }
+        assert!(cycles > ROCKET_INT.program_overhead);
+    }
+}

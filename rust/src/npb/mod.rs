@@ -1,3 +1,14 @@
-//! NPB BT (Block Tri-diagonal) — level-three scientific substrate.
+//! NPB kernel matrix — the level-three scientific substrate (§V-C).
+//!
+//! Four NAS Parallel Benchmarks reproduced at their numerical heart,
+//! each with a simulated-core path (generic over [`crate::sim::Backend`]),
+//! a PVU-native path (quire-fused reductions), and an identical-algorithm
+//! f64 reference: [`bt`] (block tri-diagonal ADI sweeps), [`cg`]
+//! (conjugate gradient inverse power iteration), [`ep`] (embarrassingly
+//! parallel deviate sums), and [`mg`] (multigrid V-cycles). [`verify`]
+//! holds the shared class-ε validation harness.
 pub mod bt;
+pub mod cg;
+pub mod ep;
+pub mod mg;
 pub mod verify;

@@ -1,26 +1,247 @@
-//! NPB-style ε-validation (§V-C level three).
+//! NPB-style ε-validation (§V-C level three), shared by all kernels.
 //!
 //! NPB's `verify()` accepts a run when every verification quantity is
 //! within a class-specific relative threshold ε of the reference. The
 //! paper's finding: BT validates at ε = 10⁻⁴ with Posit(32,3) but needs
-//! ε = 10⁻³ with FP32. This module scans ε decades and reports the
-//! tightest passing threshold per backend.
+//! ε = 10⁻³ with FP32, and Posit(8,1) cannot validate at all. This
+//! module scans ε decades, reports the tightest passing threshold per
+//! backend, and — against the class table in [`CLASS_EPS`] — reports
+//! **every** breached quantity by name rather than the first failure.
 
-use super::bt::{run_machine, run_reference, BtProblem, NC};
+use super::bt::BtProblem;
+use super::cg::CgProblem;
+use super::ep::EpProblem;
+use super::mg::MgProblem;
+use super::{bt, cg, ep, mg};
 use crate::sim::{Backend, Machine};
+
+/// NPB problem class. Classes size the problem *and* index the shared
+/// acceptance threshold table ([`CLASS_EPS`]) — one ε per class for all
+/// four kernels, as in NPB itself (per-kernel thresholds were the
+/// hard-coded state this table replaced).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Sample class: smallest verified size.
+    S,
+    /// Workstation class: larger grids/streams, looser ε (longer
+    /// accumulations drift further even in a correct run).
+    W,
+}
+
+impl Class {
+    /// Class letter for tables and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Class::S => "S",
+            Class::W => "W",
+        }
+    }
+
+    /// Parse a CLI class letter (case-insensitive).
+    pub fn parse(s: &str) -> Option<Class> {
+        match s.to_ascii_uppercase().as_str() {
+            "S" => Some(Class::S),
+            "W" => Some(Class::W),
+            _ => None,
+        }
+    }
+}
+
+/// The class-indexed acceptance table shared by BT, CG, EP, and MG: a
+/// run passes when every verification quantity's relative error is
+/// below the class ε.
+pub const CLASS_EPS: [(Class, f64); 2] = [(Class::S, 1e-2), (Class::W, 3e-2)];
+
+/// Acceptance ε for a class (lookup in [`CLASS_EPS`]).
+pub fn epsilon(class: Class) -> f64 {
+    CLASS_EPS
+        .iter()
+        .find(|(c, _)| *c == class)
+        .map(|&(_, e)| e)
+        .expect("every Class has a CLASS_EPS row")
+}
+
+/// The four NPB kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Block tri-diagonal solver.
+    Bt,
+    /// Conjugate gradient.
+    Cg,
+    /// Embarrassingly parallel.
+    Ep,
+    /// Multigrid V-cycle.
+    Mg,
+}
+
+impl Kernel {
+    /// Kernel name for tables and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Bt => "bt",
+            Kernel::Cg => "cg",
+            Kernel::Ep => "ep",
+            Kernel::Mg => "mg",
+        }
+    }
+
+    /// Parse a CLI kernel name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s.to_ascii_lowercase().as_str() {
+            "bt" => Some(Kernel::Bt),
+            "cg" => Some(Kernel::Cg),
+            "ep" => Some(Kernel::Ep),
+            "mg" => Some(Kernel::Mg),
+            _ => None,
+        }
+    }
+
+    /// All kernels, in report order.
+    pub fn all() -> [Kernel; 4] {
+        [Kernel::Bt, Kernel::Cg, Kernel::Ep, Kernel::Mg]
+    }
+}
+
+/// A kernel instance the shared verifier can run: one problem, one
+/// machine path, one identical-algorithm f64 reference.
+pub trait NpbKernel {
+    /// Kernel name (`"bt"`, `"cg"`, …).
+    fn kernel_name(&self) -> &'static str;
+    /// Names of the verification quantities, in output order.
+    fn quantity_names(&self) -> &'static [&'static str];
+    /// Run on the simulated core.
+    fn run_machine(&self, m: &mut Machine) -> Vec<f64>;
+    /// Run the f64 reference.
+    fn run_reference(&self) -> Vec<f64>;
+}
+
+impl NpbKernel for BtProblem {
+    fn kernel_name(&self) -> &'static str {
+        "bt"
+    }
+    fn quantity_names(&self) -> &'static [&'static str] {
+        &["norm0", "norm1", "norm2", "norm3", "norm4"]
+    }
+    fn run_machine(&self, m: &mut Machine) -> Vec<f64> {
+        bt::run_machine(m, self).to_vec()
+    }
+    fn run_reference(&self) -> Vec<f64> {
+        bt::run_reference(self).to_vec()
+    }
+}
+
+impl NpbKernel for CgProblem {
+    fn kernel_name(&self) -> &'static str {
+        "cg"
+    }
+    fn quantity_names(&self) -> &'static [&'static str] {
+        &cg::QUANTITIES
+    }
+    fn run_machine(&self, m: &mut Machine) -> Vec<f64> {
+        cg::run_machine(m, self).to_vec()
+    }
+    fn run_reference(&self) -> Vec<f64> {
+        cg::run_reference(self).to_vec()
+    }
+}
+
+impl NpbKernel for EpProblem {
+    fn kernel_name(&self) -> &'static str {
+        "ep"
+    }
+    fn quantity_names(&self) -> &'static [&'static str] {
+        &ep::QUANTITIES
+    }
+    fn run_machine(&self, m: &mut Machine) -> Vec<f64> {
+        ep::run_machine(m, self).to_vec()
+    }
+    fn run_reference(&self) -> Vec<f64> {
+        ep::run_reference(self).to_vec()
+    }
+}
+
+impl NpbKernel for MgProblem {
+    fn kernel_name(&self) -> &'static str {
+        "mg"
+    }
+    fn quantity_names(&self) -> &'static [&'static str] {
+        &mg::QUANTITIES
+    }
+    fn run_machine(&self, m: &mut Machine) -> Vec<f64> {
+        mg::run_machine(m, self).to_vec()
+    }
+    fn run_reference(&self) -> Vec<f64> {
+        mg::run_reference(self).to_vec()
+    }
+}
+
+/// The class-sized problem for a kernel.
+pub fn problem(kernel: Kernel, class: Class) -> Box<dyn NpbKernel> {
+    match (kernel, class) {
+        (Kernel::Bt, Class::S) => Box::new(BtProblem::class_s()),
+        (Kernel::Bt, Class::W) => Box::new(BtProblem::class_w()),
+        (Kernel::Cg, Class::S) => Box::new(CgProblem::class_s()),
+        (Kernel::Cg, Class::W) => Box::new(CgProblem::class_w()),
+        (Kernel::Ep, Class::S) => Box::new(EpProblem::class_s()),
+        (Kernel::Ep, Class::W) => Box::new(EpProblem::class_w()),
+        (Kernel::Mg, Class::S) => Box::new(MgProblem::class_s()),
+        (Kernel::Mg, Class::W) => Box::new(MgProblem::class_w()),
+    }
+}
+
+/// One verification quantity whose relative error exceeded the class ε.
+#[derive(Clone, Debug)]
+pub struct Breach {
+    /// Quantity name (kernel-specific, e.g. `"zeta"`, `"norm2"`).
+    pub quantity: &'static str,
+    /// Its relative error against the f64 reference.
+    pub rel_err: f64,
+}
 
 /// Outcome of a verification run on one backend.
 #[derive(Clone, Debug)]
 pub struct VerifyResult {
     /// Backend name.
     pub backend: String,
-    /// Maximum relative deviation across the NC verification norms.
+    /// Kernel name (`"bt"`, `"cg"`, …).
+    pub kernel: &'static str,
+    /// Problem class the thresholds were taken for.
+    pub class: Class,
+    /// The class ε the run was judged against.
+    pub eps: f64,
+    /// Maximum relative deviation across the verification quantities.
     pub max_rel_err: f64,
     /// Tightest passing ε as a power of ten (e.g. -4 means 10⁻⁴), or
     /// `None` if even 10⁰ fails.
     pub tightest_eps_pow10: Option<i32>,
     /// Cycles for the solve.
     pub cycles: u64,
+    /// Every quantity over the class ε (empty = the run verifies).
+    /// NPB's first-failure reporting hid multi-quantity breaches; this
+    /// names them all.
+    pub breaches: Vec<Breach>,
+}
+
+impl VerifyResult {
+    /// Whether the run verifies at the class ε (no breached quantity).
+    pub fn passed(&self) -> bool {
+        self.breaches.is_empty()
+    }
+
+    /// `PASS` / `FAIL (quantity: err > eps, …)` — one line per backend,
+    /// greppable by CI.
+    pub fn status(&self) -> String {
+        if self.passed() {
+            "PASS".to_string()
+        } else {
+            let parts: Vec<String> = self
+                .breaches
+                .iter()
+                .map(|b| format!("{}: {:.2e} > {:.0e}", b.quantity, b.rel_err, self.eps))
+                .collect();
+            format!("FAIL ({})", parts.join(", "))
+        }
+    }
 }
 
 /// Tightest power-of-ten ε that `max_rel_err` passes.
@@ -40,31 +261,58 @@ pub fn tightest_eps(max_rel_err: f64) -> Option<i32> {
     pow
 }
 
-/// Run BT on a backend and validate against the f64 reference.
-pub fn verify(be: &dyn Backend, p: &BtProblem) -> VerifyResult {
-    let reference = run_reference(p);
+/// Run a kernel on a backend and validate every verification quantity
+/// against the f64 reference at the class ε.
+pub fn verify_kernel(be: &dyn Backend, k: &dyn NpbKernel, class: Class) -> VerifyResult {
+    let eps = epsilon(class);
+    let reference = k.run_reference();
     let mut m = Machine::new(be);
-    let got = run_machine(&mut m, p);
-    let max_rel_err = got
-        .iter()
-        .zip(reference.iter())
-        .map(|(g, w)| ((g - w) / w).abs())
-        .fold(0.0f64, f64::max);
+    let got = k.run_machine(&mut m);
+    let names = k.quantity_names();
+    debug_assert_eq!(got.len(), names.len());
+    debug_assert_eq!(reference.len(), names.len());
+    let mut max_rel_err = 0.0f64;
+    let mut has_nan = false;
+    let mut breaches = Vec::new();
+    for i in 0..names.len() {
+        let rel = ((got[i] - reference[i]) / reference[i]).abs();
+        // NaN poisons the max (and always breaches): a NaR norm must
+        // not read as "verified" because `f64::max` ignores NaN.
+        has_nan |= rel.is_nan();
+        max_rel_err = max_rel_err.max(rel);
+        if rel.is_nan() || rel >= eps {
+            breaches.push(Breach {
+                quantity: names[i],
+                rel_err: rel,
+            });
+        }
+    }
+    let max_rel_err = if has_nan { f64::NAN } else { max_rel_err };
     VerifyResult {
         backend: be.name(),
+        kernel: k.kernel_name(),
+        class,
+        eps,
         max_rel_err,
         tightest_eps_pow10: tightest_eps(max_rel_err),
         cycles: m.cycles,
+        breaches,
     }
 }
 
-/// Validate all NC norms individually (diagnostics).
-pub fn per_component_errors(be: &dyn Backend, p: &BtProblem) -> [f64; NC] {
-    let reference = run_reference(p);
+/// Run BT on a backend and validate against the f64 reference (the
+/// original single-kernel entry point; judged at class-S thresholds).
+pub fn verify(be: &dyn Backend, p: &BtProblem) -> VerifyResult {
+    verify_kernel(be, p, Class::S)
+}
+
+/// Validate all of BT's norms individually (diagnostics).
+pub fn per_component_errors(be: &dyn Backend, p: &BtProblem) -> [f64; bt::NC] {
+    let reference = bt::run_reference(p);
     let mut m = Machine::new(be);
-    let got = run_machine(&mut m, p);
-    let mut out = [0f64; NC];
-    for i in 0..NC {
+    let got = bt::run_machine(&mut m, p);
+    let mut out = [0f64; bt::NC];
+    for i in 0..bt::NC {
         out[i] = ((got[i] - reference[i]) / reference[i]).abs();
     }
     out
@@ -83,6 +331,23 @@ mod tests {
         assert_eq!(tightest_eps(5e-5), Some(-4));
         assert_eq!(tightest_eps(2.0), None);
         assert_eq!(tightest_eps(f64::NAN), None);
+    }
+
+    #[test]
+    fn class_table_has_every_class() {
+        assert!(epsilon(Class::S) > 0.0);
+        assert!(epsilon(Class::W) >= epsilon(Class::S));
+        assert_eq!(Class::parse("s"), Some(Class::S));
+        assert_eq!(Class::parse("W"), Some(Class::W));
+        assert_eq!(Class::parse("A"), None);
+    }
+
+    #[test]
+    fn kernel_parse_round_trips() {
+        for k in Kernel::all() {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::parse("lu"), None);
     }
 
     #[test]
@@ -113,5 +378,35 @@ mod tests {
             "P8 unexpectedly accurate: {:?}",
             r
         );
+    }
+
+    #[test]
+    fn breaches_name_every_offending_quantity() {
+        // A tiny BT run on FP32 verifies (no breaches); the same result
+        // judged against an impossible ε breaches every norm by name.
+        let p = BtProblem {
+            n: 4,
+            steps: 2,
+            seed: 0xB7,
+        };
+        let r = verify(&Fpu::new(), &p);
+        assert!(r.passed(), "FP32 should verify class S: {:?}", r.breaches);
+        assert_eq!(r.status(), "PASS");
+        // Rebuild the judgment with ε below FP32's achievable error.
+        let names: &[&str] = p.quantity_names();
+        let mut rigged = r.clone();
+        rigged.eps = 1e-15;
+        rigged.breaches = names
+            .iter()
+            .map(|q| Breach {
+                quantity: q,
+                rel_err: rigged.max_rel_err.max(1e-12),
+            })
+            .collect();
+        assert!(!rigged.passed());
+        let s = rigged.status();
+        for q in names {
+            assert!(s.contains(q), "status {s:?} should name {q}");
+        }
     }
 }

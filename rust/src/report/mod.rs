@@ -9,7 +9,7 @@ use crate::bench_suite::mathconst::{
 use crate::bench_suite::runner::{run_level_one, run_level_two, run_level_two_pvu};
 use crate::cnn;
 use crate::npb::bt::BtProblem;
-use crate::npb::verify::verify;
+use crate::npb::verify::{epsilon, problem, verify, verify_kernel, Class, Kernel};
 use crate::posit::{self, P16, P32, P8};
 use crate::sim::{Backend, Fpu, Hybrid, Machine, Posar};
 
@@ -271,6 +271,40 @@ pub fn bt_report(n: usize, steps: usize) -> String {
             r.cycles,
             fp_cycles as f64 / r.cycles as f64
         ));
+    }
+    out
+}
+
+/// §V-C NPB kernel matrix — class-ε verification for the requested
+/// kernels across the backend matrix. Each row ends in a greppable
+/// `PASS` / `FAIL (quantity: err > eps, …)` status (`VerifyResult::
+/// status`), which is what the CI workload-matrix job asserts on.
+pub fn npb_report(kernels: &[Kernel], class: Class) -> String {
+    let mut out = format!(
+        "NPB kernel matrix, class {} (eps {:.0e})\n",
+        class.name(),
+        epsilon(class)
+    );
+    out.push_str("kernel  backend       max_rel_err    cycles        status\n");
+    for &k in kernels {
+        let p = problem(k, class);
+        let backends: Vec<Box<dyn Backend>> = vec![
+            Box::new(Fpu::new()),
+            Box::new(Posar::new(P8)),
+            Box::new(Posar::new(P16)),
+            Box::new(Posar::new(P32)),
+        ];
+        for be in &backends {
+            let r = verify_kernel(be.as_ref(), p.as_ref(), class);
+            out.push_str(&format!(
+                "{:<7} {:<13} {:<14.3e} {:<13} {}\n",
+                r.kernel,
+                r.backend,
+                r.max_rel_err,
+                r.cycles,
+                r.status()
+            ));
+        }
     }
     out
 }

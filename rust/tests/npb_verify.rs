@@ -1,0 +1,93 @@
+//! NPB verification property tests: the paper's §V-C/§VI accuracy
+//! claims pinned as regression tests rather than prose. FP32 and
+//! Posit(32,3) must pass class-S verification on all four kernels
+//! (BT, CG, EP, MG); Posit(8,1) must fail — loudly, with a
+//! [`VerifyResult`] that names every breached quantity.
+//!
+//! [`VerifyResult`]: posar::npb::verify::VerifyResult
+
+use posar::npb::verify::{epsilon, problem, verify_kernel, Class, Kernel};
+use posar::posit::{P32, P8};
+use posar::sim::{Backend, Fpu, Posar};
+
+/// FP32 and p32 verify every kernel at class S — the paper's "32-bit
+/// posit is at least as accurate as FP32 on NPB" claim, kernel by
+/// kernel.
+#[test]
+fn fp32_and_p32_pass_class_s_on_all_four_kernels() {
+    for k in Kernel::all() {
+        let p = problem(k, Class::S);
+        let backends: [Box<dyn Backend>; 2] = [Box::new(Fpu::new()), Box::new(Posar::new(P32))];
+        for be in &backends {
+            let r = verify_kernel(be.as_ref(), p.as_ref(), Class::S);
+            assert!(
+                r.passed(),
+                "{} on {} must verify class S: {}",
+                r.kernel,
+                r.backend,
+                r.status()
+            );
+            assert_eq!(r.status(), "PASS", "{} on {}", r.kernel, r.backend);
+            assert!(r.max_rel_err.is_finite(), "{} on {}", r.kernel, r.backend);
+            assert!(
+                r.max_rel_err < epsilon(Class::S),
+                "{} on {}: max_rel_err {} under the class eps",
+                r.kernel,
+                r.backend,
+                r.max_rel_err
+            );
+            assert!(r.cycles > 0, "{} on {}: the solve was simulated", r.kernel, r.backend);
+        }
+    }
+}
+
+/// Posit(8,1) cannot validate any NPB kernel at class S, and the
+/// failure names the breached quantities — "8-bit posits give wrong
+/// results" must stay a checked fact, not prose.
+#[test]
+fn p8_fails_class_s_loudly_naming_breached_quantities() {
+    for k in Kernel::all() {
+        let p = problem(k, Class::S);
+        let r = verify_kernel(&Posar::new(P8), p.as_ref(), Class::S);
+        assert!(
+            !r.passed(),
+            "{}: Posit(8,1) must not verify class S (max_rel_err {})",
+            r.kernel,
+            r.max_rel_err
+        );
+        assert!(!r.breaches.is_empty(), "{}: breaches list the failures", r.kernel);
+        let s = r.status();
+        assert!(s.starts_with("FAIL ("), "{}: greppable status, got {s:?}", r.kernel);
+        let names = p.quantity_names();
+        for b in &r.breaches {
+            assert!(
+                names.contains(&b.quantity),
+                "{}: breach {:?} is a known quantity",
+                r.kernel,
+                b.quantity
+            );
+            assert!(s.contains(b.quantity), "{}: status {s:?} must name {}", r.kernel, b.quantity);
+            assert!(
+                b.rel_err.is_nan() || b.rel_err >= r.eps,
+                "{}: {} breached with rel_err {} under eps {}",
+                r.kernel,
+                b.quantity,
+                b.rel_err,
+                r.eps
+            );
+        }
+    }
+}
+
+/// Class W exists for every kernel and is judged at its own (looser)
+/// threshold from the shared table — FP32 still verifies there.
+#[test]
+fn fp32_passes_class_w_at_the_table_threshold() {
+    assert!(epsilon(Class::W) >= epsilon(Class::S), "W is the looser class");
+    for k in Kernel::all() {
+        let p = problem(k, Class::W);
+        let r = verify_kernel(&Fpu::new(), p.as_ref(), Class::W);
+        assert_eq!(r.eps, epsilon(Class::W), "{}: judged at the class-W eps", r.kernel);
+        assert!(r.passed(), "{} on {} class W: {}", r.kernel, r.backend, r.status());
+    }
+}

@@ -4,8 +4,8 @@
 
 use posar::cnn;
 use posar::coordinator::{
-    compare_json, run_bench, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator, Request,
-    Routing, ScalePolicyChoice, ServeConfig, Stage, TraceConfig,
+    compare_json, run_bench, workload, AutoscaleConfig, BackendChoice, BenchConfig, Coordinator,
+    Request, RouterConfig, Routing, ScalePolicyChoice, ServeConfig, Stage, TraceConfig,
 };
 use posar::data::synth;
 use posar::posit::{P16, P8};
@@ -623,6 +623,104 @@ fn open_loop_wheel_fires_the_exact_schedule() {
     assert!(json.contains("\"mode\": \"open\""));
     let report = compare_json(&json, &json, 20.0).expect("bench-compare parses open JSON");
     assert!(!report.has_regressions());
+    coord.shutdown();
+}
+
+/// Registered bench kernels served end-to-end: npb-cg and knn through
+/// 2 shards each with the auto router ladder. The summary must carry
+/// the schema-identical serve-bench JSON (including the `workload`
+/// field), and router escalations must record for non-CNN workloads
+/// exactly as they do for the CNN tail.
+#[test]
+fn kernel_workloads_serve_through_shards_with_router() {
+    for wl in ["npb-cg", "knn"] {
+        let cfg = ServeConfig {
+            workload: wl.to_string(),
+            ..native_cfg(2, 2)
+        };
+        let coord = Coordinator::start(&cfg, None).expect("start");
+        assert_eq!(coord.workload(), wl);
+        let def = workload::lookup(wl).expect("registered kernel");
+        let set = workload::request_set(&def, 0x5E0A, 12);
+        assert_eq!(set.feat, def.feat, "{wl}: request width matches the registry");
+        // A guardrail above 100% breaches on every shadow score, so the
+        // router must escalate no matter how well the formats agree —
+        // the recording mechanism is what's under test here, not the
+        // kernels' accuracy.
+        let route = RouterConfig {
+            shadow_sample: 1,
+            guardrail_top1: 100.5,
+            window: 4,
+            min_samples: 1,
+            sustain: 1,
+            cooldown: 1000,
+            ..RouterConfig::default()
+        };
+        let bcfg = BenchConfig {
+            concurrency: 3,
+            requests: 12,
+            route: Some(route),
+            ..Default::default()
+        };
+        let summary = run_bench(&coord, &set, &bcfg).expect("bench");
+        assert_eq!(summary.mode, "routed");
+        assert_eq!(summary.workload, wl);
+        let total: u64 = summary.rows.iter().map(|r| r.completed).sum();
+        assert!(total > 0, "{wl}: routed arrivals complete requests");
+        for row in &summary.rows {
+            assert_eq!(row.errors, 0, "{wl} {}", row.variant);
+        }
+        let router = summary.router.as_ref().expect("routed run snapshots the router");
+        assert!(router.shadows > 0, "{wl}: shadow scoring ran");
+        assert!(
+            router.escalations >= 1 && !summary.escalations.is_empty(),
+            "{wl}: an impossible guardrail must record an escalation"
+        );
+        assert_ne!(
+            router.serving, router.ladder[0],
+            "{wl}: serving climbed off rung 0"
+        );
+        // Two shards per driven variant, and at least one second shard
+        // actually exists in the occupancy rows.
+        assert!(
+            summary.shard_rows.iter().any(|s| s.label.ends_with("#1")),
+            "{wl}: sharded serving ({:?})",
+            summary.shard_rows
+        );
+        let json = summary.to_json();
+        assert!(
+            json.contains(&format!("\"workload\": \"{wl}\"")),
+            "workload field in JSON: {json}"
+        );
+        // Schema-identical with CNN runs: bench-compare parses it and a
+        // self-compare is clean.
+        let report = compare_json(&json, &json, 20.0).expect("bench-compare parses kernel JSON");
+        assert!(!report.has_regressions());
+        coord.shutdown();
+    }
+}
+
+/// A kernel workload's replies agree with the kernel's own f64
+/// reference on the FP32 variant: the coordinator path (encode, batch,
+/// shard, decode) adds no numerics of its own.
+#[test]
+fn kernel_workload_fp32_replies_match_reference_argmax() {
+    let cfg = ServeConfig {
+        workload: "knn".to_string(),
+        ..native_cfg(2, 1)
+    };
+    let coord = Coordinator::start(&cfg, Some(&["fp32"])).expect("start");
+    let def = workload::lookup("knn").expect("registered kernel");
+    let set = workload::request_set(&def, 0xFEED, 8);
+    for i in 0..set.len() {
+        let reply = coord.infer("fp32", set.sample(i).to_vec()).expect("infer");
+        assert_eq!(reply.probs.len(), def.classes, "sample {i}");
+        assert_eq!(
+            reply.class,
+            set.labels[i] as usize,
+            "sample {i}: served argmax matches the f64 reference label"
+        );
+    }
     coord.shutdown();
 }
 
